@@ -1,0 +1,63 @@
+//! Edge-deployment serving demo: a quantized Deep Positron model behind the
+//! dynamic-batching inference server, under open-loop load.
+//!
+//! Run (sim engine needs no artifacts; xla engine needs `make artifacts`):
+//!   cargo run --release --example edge_serve -- [dataset] [format] [requests] [engine]
+//! Defaults: iris posit8es1 500 xla
+
+use std::time::Duration;
+
+use deep_positron::coordinator::{experiments, server, Engine};
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("iris").to_string();
+    let format = args.get(1).map(String::as_str).unwrap_or("posit8es1");
+    let requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let engine = match args.get(3).map(String::as_str) {
+        Some("sim") => Engine::Sim,
+        _ => Engine::Xla,
+    };
+    let spec = FormatSpec::parse(format).expect("bad format name");
+
+    println!("== edge serving: {dataset} on {format}, {requests} requests, {engine:?} engine ==\n");
+    let ds = datasets::load(&dataset, 7, Scale::Small);
+    println!("training the model (Rust substrate trainer)…");
+    let mlp = experiments::train_model(&ds, 7);
+    let baseline = mlp.accuracy(&ds);
+
+    let cfg = server::ServeConfig { engine, spec, max_batch_wait: Duration::from_millis(1) };
+    let handle = server::serve(&ds, mlp, cfg)?;
+
+    // Paced open-loop load (~70% of the fast path's measured capacity) in
+    // bursts of 32, with a bounded in-flight window so reported latency
+    // reflects batching + compute rather than unbounded queueing.
+    let mut correct = 0usize;
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..requests {
+        let row = i % ds.test_len();
+        pending.push_back((row, handle.submit(ds.test_row(row).to_vec())));
+        if i % 32 == 31 {
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        while pending.len() > 512 {
+            let (row, rx) = pending.pop_front().unwrap();
+            if rx.recv()?.class == ds.y_test[row] as usize {
+                correct += 1;
+            }
+        }
+    }
+    for (row, rx) in pending {
+        let reply = rx.recv()?;
+        if reply.class == ds.y_test[row] as usize {
+            correct += 1;
+        }
+    }
+    let metrics = handle.shutdown();
+    println!("\n{}", metrics.render());
+    println!("\nserved accuracy : {:.2}% (f64 baseline {:.2}%)", correct as f64 / requests as f64 * 100.0, baseline * 100.0);
+    println!("batch sizes     : {:?}…", &metrics.batch_sizes[..metrics.batch_sizes.len().min(12)]);
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Format explorer: dump the value lattice, dynamic range, tapered-precision
+//! profile, and Eq.(2) quire width of any format — the numeric-format
+//! domain's "show me the representation" tool.
+//!
+//! Run: `cargo run --release --example format_explorer -- posit8es1 [k]`
+
+use deep_positron::formats::{quire_width_bits, Format, FormatSpec, Quantizer};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(String::as_str).unwrap_or("posit8es0");
+    let k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(784);
+    let Some(spec) = FormatSpec::parse(name) else {
+        eprintln!("unparseable format {name}; try posit8es1 / float8we4 / fixed8q5");
+        std::process::exit(1);
+    };
+    let fmt = spec.build();
+    let q = Quantizer::new(fmt.as_ref());
+
+    println!("=== {} ===", fmt.name());
+    println!("bit-width          : {}", fmt.n());
+    println!("distinct values    : {}", q.len());
+    println!("dynamic range      : {:.3e} .. {:.3e}", fmt.min_pos(), fmt.max_value());
+    println!("decades            : {:.1}", (fmt.max_value() / fmt.min_pos()).log10());
+    println!("quire width (k={k}): {} bits  [paper Eq. (2)]", quire_width_bits(k, fmt.max_value(), fmt.min_pos()));
+
+    // Tapered precision: relative gap between adjacent values by magnitude.
+    println!("\ntapered-precision profile (relative step at each decade):");
+    let mut mag = fmt.min_pos();
+    while mag <= fmt.max_value() {
+        let (_, v) = q.quantize_f64(mag);
+        let idx = q.values().partition_point(|&u| u < v);
+        if idx + 1 < q.len() {
+            let gap = q.values()[idx + 1] - v;
+            if v > 0.0 {
+                println!("  near {:>12.4e}: step {:>12.4e}  ({:.2} significant digits)", v, gap, -(gap / v).log10());
+            }
+        }
+        mag *= 10.0;
+    }
+
+    // Density histogram (Fig 1a's story).
+    println!("\nvalue density over [-2, 2] (the DNN-parameter range):");
+    let hist = deep_positron::util::stats::histogram(q.values(), -2.0, 2.0, 16);
+    for (i, h) in hist.iter().enumerate() {
+        let lo = -2.0 + 4.0 * i as f64 / 16.0;
+        println!("  {lo:>6.2} | {}", "#".repeat(*h));
+    }
+
+    // The first few positive values.
+    println!("\nsmallest positive values:");
+    let zero = q.values().partition_point(|&u| u < 0.0);
+    for &v in q.values().iter().skip(zero + 1).take(8) {
+        let (code, _) = q.quantize_f64(v);
+        println!("  {code:#06x} -> {v:.6e}");
+    }
+}

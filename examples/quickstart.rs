@@ -1,0 +1,41 @@
+//! Quickstart: the pure-Rust core API in ~60 lines — formats, quantization,
+//! and the exact multiply-and-accumulate. Needs no artifacts.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use deep_positron::formats::{Emac, Format, FormatSpec, Quantizer};
+
+fn main() {
+    // 1. Pick a format the paper studies: 8-bit posit with es=1.
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let fmt = spec.build();
+    let q = Quantizer::new(fmt.as_ref());
+    println!("format        : {}", fmt.name());
+    println!("values        : {} distinct", q.len());
+    println!("max / minpos  : {} / {}", fmt.max_value(), fmt.min_pos());
+
+    // 2. Quantize a real number (round-to-nearest, ties to even code).
+    let (code, value) = q.quantize_f64(0.3);
+    println!("quantize(0.3) : code {code:#04x} -> {value}");
+
+    // 3. An exact dot product through the EMAC (Kulisch quire): products
+    //    accumulate without rounding; ONE deferred round at the end.
+    let xs = [0.5, -0.25, 0.125, 1.5];
+    let ws = [1.0, 0.75, -2.0, 0.5];
+    let (xc, _): (Vec<u16>, Vec<f64>) = q.quantize_slice(&xs);
+    let (wc, _): (Vec<u16>, Vec<f64>) = q.quantize_slice(&ws);
+    let mut emac = Emac::new(fmt.as_ref(), &q, xs.len());
+    let out = emac.dot(&wc, &xc, None, false);
+    let exact: f64 = xs.iter().zip(&ws).map(|(x, w)| x * w).sum();
+    println!("EMAC dot      : {} (exact {})", q.decode(out).unwrap().to_f64(), exact);
+
+    // 4. Compare format families at the same bit-width (the paper's point).
+    println!("\n8-bit format comparison:");
+    println!("{:<12} {:>10} {:>14} {:>8}", "format", "values", "max", "minpos");
+    for name in ["posit8es0", "posit8es1", "posit8es2", "float8we4", "fixed8q5"] {
+        let spec = FormatSpec::parse(name).unwrap();
+        let f = spec.build();
+        let q = Quantizer::new(f.as_ref());
+        println!("{:<12} {:>10} {:>14.3e} {:>8.1e}", name, q.len(), f.max_value(), f.min_pos());
+    }
+}

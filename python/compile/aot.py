@@ -1,0 +1,125 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out ../artifacts [--small]
+
+Emits, per dataset topology:
+  q_infer_<ds>_b<B>.hlo.txt   quantized datapath, B ∈ {1, 64, 256}
+  f32_infer_<ds>_b256.hlo.txt 32-bit baseline, eval batch
+  train_<ds>_b128.hlo.txt     SGD-momentum train step
+plus ``manifest.txt`` describing every artifact (parsed by rust/src/runtime).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: dataset -> full layer dims (input, hidden..., classes). Must match
+#: rust/src/datasets::hidden_layers.
+TOPOLOGIES = {
+    "wdbc": (30, 16, 8, 2),
+    "iris": (4, 10, 8, 3),
+    "mushroom": (117, 32, 2),
+    "mnist": (784, 100, 10),
+    "fashion": (784, 100, 10),
+}
+
+#: Batch sizes for the quantized-inference artifacts. The Rust coordinator
+#: pads/chunks request batches to one of these.
+Q_BATCHES = (1, 64, 256)
+EVAL_BATCH = 256
+TRAIN_BATCH = 128
+TABLE = 256
+
+
+def to_hlo_text(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def q_infer_specs(dims, batch):
+    specs = [f64(batch, dims[0])]
+    for i in range(len(dims) - 1):
+        specs += [f64(dims[i], dims[i + 1]), f64(dims[i + 1])]
+    specs += [f64(TABLE), f64(TABLE), f64(TABLE), f64(2)]
+    return specs
+
+
+def f32_infer_specs(dims, batch):
+    specs = [f32(batch, dims[0])]
+    for i in range(len(dims) - 1):
+        specs += [f32(dims[i], dims[i + 1]), f32(dims[i + 1])]
+    return specs
+
+
+def train_specs(dims, batch):
+    specs = [f32(batch, dims[0]), f32(batch, dims[-1]), f32(), f32()]
+    params = []
+    for i in range(len(dims) - 1):
+        params += [f32(dims[i], dims[i + 1]), f32(dims[i + 1])]
+    return specs + params + params  # params then velocities
+
+
+def emit(out_dir, fname, text, manifest, desc):
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"{desc} file={fname}")
+    print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default=",".join(TOPOLOGIES))
+    ap.add_argument(
+        "--small", action="store_true", help="only emit the b=64 quantized artifacts (quick smoke builds)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for ds in args.datasets.split(","):
+        dims = TOPOLOGIES[ds]
+        dim_str = "-".join(map(str, dims))
+        print(f"[{ds}] dims={dim_str}")
+        q_batches = (64,) if args.small else Q_BATCHES
+        for b in q_batches:
+            text = to_hlo_text(model.make_quantized_infer(dims), q_infer_specs(dims, b))
+            emit(args.out, f"q_infer_{ds}_b{b}.hlo.txt", text, manifest,
+                 f"kind=q_infer dataset={ds} batch={b} dims={dim_str}")
+        if not args.small:
+            text = to_hlo_text(model.make_f32_infer(dims), f32_infer_specs(dims, EVAL_BATCH))
+            emit(args.out, f"f32_infer_{ds}_b{EVAL_BATCH}.hlo.txt", text, manifest,
+                 f"kind=f32_infer dataset={ds} batch={EVAL_BATCH} dims={dim_str}")
+            text = to_hlo_text(model.make_train_step(dims), train_specs(dims, TRAIN_BATCH))
+            emit(args.out, f"train_{ds}_b{TRAIN_BATCH}.hlo.txt", text, manifest,
+                 f"kind=train dataset={ds} batch={TRAIN_BATCH} dims={dim_str}")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

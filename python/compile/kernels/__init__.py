@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT'd HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+real-TPU Mosaic custom-calls (see /opt/xla-example/README.md). Correctness is
+pinned against the pure-jnp oracles in :mod:`ref` by the pytest suite.
+"""
+
+from .emac_matmul import emac_matmul
+from .quantize_lut import quantize_lut
+
+__all__ = ["emac_matmul", "quantize_lut"]

@@ -1,0 +1,65 @@
+"""EMAC matmul kernel: the paper's compute hot-spot (§4.1) on the TPU model.
+
+The FPGA EMAC accumulates every product of a neuron's weighted sum exactly in
+a wide Kulisch quire and rounds once at the end. On the accelerator model
+this maps to: operands are (dequantized) format values — exactly
+representable in f64 — and the dot product accumulates in f64, which is
+error-free whenever the format's quire width fits f64's 53-bit window
+(every swept format except posit8 es=2; DESIGN.md §2). The terminal
+rounding lives in the companion ``quantize_lut`` kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA's
+three-stage pipeline (multiply / accumulate / round) becomes a tiled GEMM —
+the grid streams (block_m × K) activation tiles and the full (K × N) weight
+panel through VMEM, accumulating per-tile in registers, i.e. the
+HBM↔VMEM schedule replaces the FPGA's operand registers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    # One grid step: (bm, K) @ (K, N) + b -> (bm, N), all in f64.
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float64)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_m"))
+def emac_matmul(x, w, b, *, relu: bool = False, block_m: int = 64):
+    """Exact-accumulation dense layer: ``relu?(x @ w + b)`` in f64.
+
+    Args:
+      x: (batch, k) activations (dequantized format values).
+      w: (k, n) weights (dequantized format values).
+      b: (n,) bias (dequantized format values).
+      relu: apply the hidden-layer ReLU stage.
+      block_m: activation rows per grid step (must divide batch, or exceed it).
+
+    Returns:
+      (batch, n) exact pre-round sums.
+    """
+    batch, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch: {x.shape} @ {w.shape}"
+    bm = min(block_m, batch)
+    assert batch % bm == 0, f"batch {batch} not divisible by block_m {bm}"
+    grid = (batch // bm,)
+    return pl.pallas_call(
+        functools.partial(_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float64),
+        interpret=True,
+    )(x, w, b)

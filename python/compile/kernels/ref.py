@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These implement the same mathematics with none of the tiling/kernel
+machinery: ``ref_emac_matmul`` is a plain f64 einsum; ``ref_quantize`` uses
+``jnp.searchsorted`` (a completely different algorithm from the kernel's
+broadcast compare-and-sum, which makes the pytest agreement a strong
+cross-check).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_emac_matmul(x, w, b, *, relu: bool = False):
+    """f64 dense layer: relu?(x @ w + b)."""
+    acc = jnp.dot(x.astype(jnp.float64), w.astype(jnp.float64), preferred_element_type=jnp.float64)
+    acc = acc + b[None, :]
+    return jnp.maximum(acc, 0.0) if relu else acc
+
+
+def ref_quantize(x, values, bounds, ties, flags):
+    """Round-to-nearest (ties by table) via binary search.
+
+    ``searchsorted(side='left')`` counts bounds strictly below x;
+    ``side='right'`` also counts exact hits. They differ only on ties, where
+    the ``ties`` table arbitrates.
+    """
+    lo = jnp.searchsorted(bounds, x, side="left")
+    hi = jnp.searchsorted(bounds, x, side="right")
+    tie = hi > lo  # x exactly equals bounds[lo]
+    tie_up = jnp.take(ties, jnp.clip(lo, 0, ties.shape[0] - 1)) > 0.5
+    idx = jnp.where(tie & tie_up, lo + 1, lo)
+    q = jnp.take(values, idx)
+    is_posit, minpos = flags[0], flags[1]
+    clamp = jnp.sign(x) * minpos
+    return jnp.where((is_posit > 0.5) & (x != 0.0) & (q == 0.0), clamp, q)

@@ -1,0 +1,118 @@
+"""L2: the Deep Positron network graphs, composed from the L1 kernels.
+
+Two graph families, both AOT-lowered to HLO text by :mod:`aot`:
+
+* ``make_quantized_infer(dims)`` — the accelerator datapath: quantize input →
+  per layer (EMAC matmul → deferred round → ReLU) → logits. The numeric
+  format arrives **as data** (value/boundary/tie tables + flags), so one
+  artifact per topology serves every format (DESIGN.md §2).
+* ``make_train_step(dims)`` / ``make_f32_infer(dims)`` — the 32-bit-float
+  baseline: standard f32 forward and an SGD-with-momentum training step
+  (softmax cross-entropy), run from the Rust coordinator's training loop.
+
+Python never runs at inference time; these functions exist to be lowered.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import emac_matmul, quantize_lut  # noqa: E402
+
+#: Weight-decay used by the baseline trainer (matches the Rust substrate).
+WEIGHT_DECAY = 1e-4
+
+
+def make_quantized_infer(dims):
+    """Quantized-inference graph for an MLP with layer sizes ``dims``.
+
+    Flat signature (AOT-friendly):
+      fn(x, w1, b1, ..., wL, bL, values, bounds, ties, flags) -> (logits,)
+
+    where ``x`` is (batch, dims[0]) f64, each ``wi`` is the **dequantized**
+    (dims[i], dims[i+1]) weight matrix, and the last four args are the format
+    tables from ``Quantizer::padded_tables`` plus ``[is_posit, minpos]``.
+    """
+    n_layers = len(dims) - 1
+
+    def fn(x, *rest):
+        params = rest[: 2 * n_layers]
+        values, bounds, ties, flags = rest[2 * n_layers :]
+        act = quantize_lut(x, values, bounds, ties, flags)
+        for i in range(n_layers):
+            w, b = params[2 * i], params[2 * i + 1]
+            hidden = i + 1 < n_layers
+            # EMAC: exact f64 accumulation, then one deferred round. The
+            # ReLU stage clamps after rounding (ordering is equivalent on
+            # the zero boundary; see accel::positron).
+            z = emac_matmul(act, w, b, relu=False)
+            act = quantize_lut(z, values, bounds, ties, flags)
+            if hidden:
+                act = jnp.maximum(act, 0.0)
+        return (act,)
+
+    return fn
+
+
+def make_f32_infer(dims):
+    """Standard 32-bit float forward pass (the paper's baseline column)."""
+    n_layers = len(dims) - 1
+
+    def fn(x, *params):
+        act = x
+        for i in range(n_layers):
+            w, b = params[2 * i], params[2 * i + 1]
+            act = act @ w + b[None, :]
+            if i + 1 < n_layers:
+                act = jnp.maximum(act, 0.0)
+        return (act,)
+
+    return fn
+
+
+def _forward_f32(params, x, n_layers):
+    act = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = act @ w + b[None, :]
+        if i + 1 < n_layers:
+            act = jnp.maximum(act, 0.0)
+    return act
+
+
+def make_train_step(dims):
+    """One SGD-with-momentum step on softmax cross-entropy.
+
+    Flat signature:
+      fn(x, y_onehot, lr, momentum,
+         w1, b1, ..., wL, bL, vw1, vb1, ..., vwL, vbL)
+        -> (loss, w1', b1', ..., vw1', vb1', ...)
+
+    Update rule (matches the Rust trainer in accel::mlp):
+      v ← momentum·v − lr·(∇ + decay·w);  w ← w + v
+    """
+    n_layers = len(dims) - 1
+    n_params = 2 * n_layers
+
+    def loss_fn(params, x, y):
+        logits = _forward_f32(params, x, n_layers)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+        ll = jnp.sum(y * (logits - logz), axis=-1)
+        return -jnp.mean(ll)
+
+    def fn(x, y, lr, momentum, *state):
+        params = list(state[:n_params])
+        vels = list(state[n_params:])
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        out_params = []
+        out_vels = []
+        for i, (p, v, g) in enumerate(zip(params, vels, grads)):
+            decay = WEIGHT_DECAY if i % 2 == 0 else 0.0  # no decay on biases
+            v_new = momentum * v - lr * (g + decay * p)
+            out_params.append(p + v_new)
+            out_vels.append(v_new)
+        return tuple([loss] + out_params + out_vels)
+
+    return fn

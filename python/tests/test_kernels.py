@@ -1,0 +1,164 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles.
+
+hypothesis sweeps shapes and value distributions; exact agreement
+(assert_allclose with rtol=0) is required — both paths compute in f64 and
+must round identically.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import emac_matmul, quantize_lut
+from compile.kernels.ref import ref_emac_matmul, ref_quantize
+
+TABLE = 256
+
+
+def make_tables(seed=0, kind="posit8es0"):
+    """Build (values, bounds, ties, flags) the way the Rust Quantizer does,
+    for a posit(8,0)-like value set (enough structure for kernel tests; the
+    Rust integration tests cover every real format)."""
+    if kind == "posit8es0":
+        # A tapered, posit-like value set: ±1.f × 2^k with fewer fraction
+        # steps so the whole set fits the 256-entry table (the Rust
+        # integration tests cover the true per-format tables).
+        vals = {0.0}
+        for k in range(-6, 7):
+            for frac in range(0, 8):
+                v = (1 + frac / 8) * 2.0**k
+                vals.add(v)
+                vals.add(-v)
+        vals = sorted(vals)
+        assert len(vals) <= TABLE
+        is_posit, minpos = 1.0, min(v for v in vals if v > 0)
+    else:
+        step = 2.0**-4
+        vals = [i * step for i in range(-128, 128)]
+        is_posit, minpos = 0.0, step
+    values = np.array(vals, dtype=np.float64)
+    values = np.pad(values, (0, TABLE - len(values)), mode="edge")
+    bounds = (values[:-1] + values[1:]) / 2.0
+    bounds = np.append(bounds, np.inf)
+    # ties: round up iff the upper candidate has even index (proxy for even
+    # code; the Rust side supplies real code parity).
+    ties = np.array([(i + 1) % 2 == 0 for i in range(TABLE)], dtype=np.float64)
+    flags = np.array([is_posit, minpos], dtype=np.float64)
+    return values, bounds, ties, flags
+
+
+class TestEmacMatmul:
+    @given(
+        batch=st.sampled_from([1, 2, 4, 8]),
+        k=st.integers(1, 40),
+        n=st.integers(1, 24),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_ref(self, batch, k, n, relu, seed):
+        # Operands are dyadic format values (the deployment domain): every
+        # product and partial sum is exact in f64, so kernel and oracle must
+        # agree BIT-EXACTLY regardless of accumulation order or FMA fusion.
+        # (With arbitrary reals the two XLA fusions differ by 1 ulp.)
+        rng = np.random.default_rng(seed)
+        dyadic = lambda shape: np.round(rng.normal(size=shape) * 16.0) / 16.0
+        x = dyadic((batch, k))
+        w = dyadic((k, n))
+        b = dyadic((n,))
+        got = emac_matmul(x, w, b, relu=relu, block_m=batch)
+        want = ref_emac_matmul(x, w, b, relu=relu)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tiled_equals_untiled(self):
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(64, 30))
+        w = rng.normal(size=(30, 16))
+        b = rng.normal(size=(16,))
+        a = emac_matmul(x, w, b, block_m=16)
+        c = emac_matmul(x, w, b, block_m=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_relu_clamps(self):
+        x = -np.ones((1, 4))
+        w = np.eye(4)
+        b = np.zeros(4)
+        out = emac_matmul(x, w, b, relu=True)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros((1, 4)))
+
+    def test_accumulation_is_exact(self):
+        # 64 products of 2^-12 must survive: 64 × 2^-12 = 2^-6 exactly.
+        x = np.full((1, 64), 2.0**-6)
+        w = np.full((64, 1), 2.0**-6)
+        b = np.zeros(1)
+        out = np.asarray(emac_matmul(x, w, b))
+        assert out[0, 0] == 2.0**-6
+
+    def test_f64_dtype(self):
+        out = emac_matmul(np.ones((1, 3)), np.ones((3, 2)), np.zeros(2))
+        assert out.dtype == jnp.float64
+
+
+class TestQuantizeLut:
+    @given(
+        batch=st.sampled_from([1, 2, 4]),
+        d=st.integers(1, 50),
+        kind=st.sampled_from(["posit8es0", "fixed8q4"]),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_ref(self, batch, d, kind, seed):
+        values, bounds, ties, flags = make_tables(kind=kind)
+        rng = np.random.default_rng(seed)
+        # Mix of smooth values and exact ties (midpoints).
+        x = rng.normal(scale=2.0, size=(batch, d))
+        mids = (values[:-1] + values[1:]) / 2.0
+        tie_picks = rng.choice(mids, size=(batch, d))
+        use_tie = rng.random((batch, d)) < 0.3
+        x = np.where(use_tie, tie_picks, x)
+        got = quantize_lut(x, values, bounds, ties, flags, block_m=batch)
+        want = ref_quantize(x, values, bounds, ties, flags)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_representable_is_identity(self):
+        values, bounds, ties, flags = make_tables()
+        x = np.unique(values)[None, :]
+        out = np.asarray(quantize_lut(x, values, bounds, ties, flags, block_m=1))
+        np.testing.assert_array_equal(out, x)
+
+    def test_posit_never_underflows_to_zero(self):
+        values, bounds, ties, flags = make_tables(kind="posit8es0")
+        x = np.array([[1e-12, -1e-12, 0.0]])
+        out = np.asarray(quantize_lut(x, values, bounds, ties, flags, block_m=1))
+        minpos = flags[1]
+        np.testing.assert_array_equal(out, [[minpos, -minpos, 0.0]])
+
+    def test_fixed_underflows_to_zero(self):
+        values, bounds, ties, flags = make_tables(kind="fixed8q4")
+        x = np.array([[1e-12, -1e-12]])
+        out = np.asarray(quantize_lut(x, values, bounds, ties, flags, block_m=1))
+        np.testing.assert_array_equal(out, [[0.0, 0.0]])
+
+    def test_saturates_at_extremes(self):
+        values, bounds, ties, flags = make_tables()
+        x = np.array([[1e30, -1e30]])
+        out = np.asarray(quantize_lut(x, values, bounds, ties, flags, block_m=1))
+        assert out[0, 0] == values.max()
+        assert out[0, 1] == values.min()
+
+    def test_tiled_equals_untiled(self):
+        values, bounds, ties, flags = make_tables()
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(64, 10))
+        a = quantize_lut(x, values, bounds, ties, flags, block_m=8)
+        c = quantize_lut(x, values, bounds, ties, flags, block_m=64)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,116 @@
+"""L2 graph tests: quantized MLP composition, train step semantics, and AOT
+lowering round-trips (HLO text parses and mentions the right shapes)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.ref import ref_emac_matmul, ref_quantize
+from tests.test_kernels import make_tables
+
+
+def rand_params(dims, seed=0, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(len(dims) - 1):
+        params.append(rng.normal(scale=0.4, size=(dims[i], dims[i + 1])).astype(dtype))
+        params.append(rng.normal(scale=0.1, size=(dims[i + 1],)).astype(dtype))
+    return params
+
+
+class TestQuantizedInfer:
+    def test_matches_layerwise_reference(self):
+        dims = (6, 5, 3)
+        fn = model.make_quantized_infer(dims)
+        params = rand_params(dims, seed=1)
+        values, bounds, ties, flags = make_tables()
+        # Quantize params onto the table first (as the Rust side does).
+        qparams = [np.asarray(ref_quantize(p, values, bounds, ties, flags)) for p in params]
+        x = np.random.default_rng(2).normal(size=(4, 6))
+        (got,) = fn(x, *qparams, values, bounds, ties, flags)
+        # Layer-by-layer oracle.
+        act = ref_quantize(x, values, bounds, ties, flags)
+        for i in range(2):
+            z = ref_emac_matmul(act, qparams[2 * i], qparams[2 * i + 1])
+            act = ref_quantize(z, values, bounds, ties, flags)
+            if i == 0:
+                act = jnp.maximum(act, 0.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(act))
+
+    def test_outputs_are_representable(self):
+        dims = (4, 8, 3)
+        fn = model.make_quantized_infer(dims)
+        params = rand_params(dims, seed=3)
+        values, bounds, ties, flags = make_tables()
+        x = np.random.default_rng(4).normal(size=(2, 4))
+        (out,) = fn(x, *params, values, bounds, ties, flags)
+        out = np.asarray(out).ravel()
+        vset = set(np.asarray(values).tolist())
+        assert all(v in vset for v in out), "logits must be format values"
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        dims = (8, 6, 3)
+        step = jax.jit(model.make_train_step(dims))
+        rng = np.random.default_rng(5)
+        params = rand_params(dims, seed=5, dtype=np.float32)
+        vels = [np.zeros_like(p) for p in params]
+        x = rng.normal(size=(32, 8)).astype(np.float32)
+        labels = rng.integers(0, 3, size=32)
+        y = np.eye(3, dtype=np.float32)[labels]
+        lr = np.float32(0.1)
+        mom = np.float32(0.9)
+        losses = []
+        for _ in range(30):
+            out = step(x, y, lr, mom, *params, *vels)
+            loss, rest = out[0], out[1:]
+            params = [np.asarray(p) for p in rest[: len(params)]]
+            vels = [np.asarray(v) for v in rest[len(params) :]]
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5, f"loss barely moved: {losses[0]} -> {losses[-1]}"
+
+    def test_momentum_zero_is_plain_sgd(self):
+        dims = (4, 2)
+        step = jax.jit(model.make_train_step(dims))
+        rng = np.random.default_rng(6)
+        params = rand_params(dims, seed=6, dtype=np.float32)
+        vels = [np.zeros_like(p) for p in params]
+        x = rng.normal(size=(8, 4)).astype(np.float32)
+        y = np.eye(2, dtype=np.float32)[rng.integers(0, 2, size=8)]
+        out = step(x, y, np.float32(0.05), np.float32(0.0), *params, *vels)
+        new_w, new_vw = np.asarray(out[1]), np.asarray(out[3])
+        # v' = -lr * (grad + decay*w), w' = w + v'
+        np.testing.assert_allclose(new_w, params[0] + new_vw, rtol=1e-6)
+
+
+class TestAot:
+    def test_hlo_text_emits_and_mentions_shapes(self):
+        dims = (4, 3, 2)
+        text = aot.to_hlo_text(model.make_quantized_infer(dims), aot.q_infer_specs(dims, 8))
+        assert "HloModule" in text
+        assert "f64[8,4]" in text  # input
+        assert "f64[8,2]" in text  # logits
+        text32 = aot.to_hlo_text(model.make_f32_infer(dims), aot.f32_infer_specs(dims, 8))
+        assert "f32[8,4]" in text32
+
+    def test_train_specs_arity(self):
+        dims = (4, 3, 2)
+        specs = aot.train_specs(dims, 16)
+        # x, y, lr, mom + 2 layers × (w,b) × (param+vel)
+        assert len(specs) == 4 + 4 + 4
+
+    def test_topologies_match_rust_registry(self):
+        # Input/output dims implied by the dataset definitions.
+        assert aot.TOPOLOGIES["mnist"] == (784, 100, 10)
+        assert aot.TOPOLOGIES["wdbc"][0] == 30 and aot.TOPOLOGIES["wdbc"][-1] == 2
+        assert aot.TOPOLOGIES["mushroom"][0] == 117
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,65 @@
+//! Ablation bench (DESIGN.md design-choice studies):
+//!
+//! 1. **EMAC vs conventional MAC** — the paper's central premise (§4.1):
+//!    per-step rounding "accumulates error that becomes substantial at
+//!    low precision". We instantiate the same quantized networks on both
+//!    datapaths and measure the accuracy gap per format and bit-width.
+//! 2. **Quire-width sensitivity** — Eq. (2) sizes the accumulator; an
+//!    undersized register wraps. Sweeping the width shows the accuracy
+//!    knee exactly where Eq. (2) predicts.
+
+use deep_positron::accel::{Datapath, DeepPositron};
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::{quire_width_bits, Format, FormatSpec};
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    println!("== ablation 1: EMAC vs per-step-rounded MAC ==\n");
+    let mut timer = BenchTimer::new("ablation/emac-vs-inexact");
+    timer.sample(|| {
+        for name in ["iris", "wdbc"] {
+            let ds = datasets::load(name, 7, Scale::Small);
+            let mlp = experiments::train_model(&ds, 7);
+            println!("{name} (baseline {:.1}%):", mlp.accuracy(&ds) * 100.0);
+            println!("{:<12} {:>8} {:>8} {:>8}", "config", "EMAC", "inexact", "gap");
+            for n in [5u32, 6, 8] {
+                for spec in [FormatSpec::Posit { n, es: 1 }, FormatSpec::Float { n, we: 3.min(n - 2) }, FormatSpec::Fixed { n, q: n / 2 }] {
+                    let dp = DeepPositron::compile(&mlp, spec);
+                    let exact = dp.accuracy_with(&ds, Datapath::Emac);
+                    let inexact = dp.accuracy_with(&ds, Datapath::InexactMac);
+                    println!(
+                        "{:<12} {:>7.1}% {:>7.1}% {:>+7.1}%",
+                        spec.name(),
+                        exact * 100.0,
+                        inexact * 100.0,
+                        (exact - inexact) * 100.0
+                    );
+                }
+            }
+            println!();
+        }
+    });
+    println!("{}\n", timer.report());
+
+    println!("== ablation 2: quire width vs Eq.(2) ==\n");
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = experiments::train_model(&ds, 7);
+    let spec = FormatSpec::Posit { n: 8, es: 1 };
+    let fmt = spec.build();
+    let eq2 = quire_width_bits(10, fmt.max_value(), fmt.min_pos()); // iris fan-in ≤ 10
+    let dp = DeepPositron::compile(&mlp, spec);
+    let full = dp.accuracy_with(&ds, Datapath::Emac);
+    println!("posit8es1 on iris; Eq.(2) width for k=10: {eq2} bits; full-quire accuracy {:.1}%", full * 100.0);
+    println!("{:<10} {:>10}", "width", "accuracy");
+    let mut timer2 = BenchTimer::new("ablation/quire-width-sweep");
+    timer2.sample(|| {
+        for w in [16u32, 24, 32, 40, 48, 56, 64, 80] {
+            let acc = dp.accuracy_with(&ds, Datapath::NarrowQuire(w));
+            let marker = if w >= eq2 { " (≥ Eq.2)" } else { "" };
+            println!("{w:<10} {:>9.1}%{marker}", acc * 100.0);
+        }
+    });
+    println!("\nexpected shape: accuracy recovers to the full-quire value at/above Eq.(2)'s width.");
+    println!("{}", timer2.report());
+}

@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation): Rust EMAC MAC
+//! throughput, quantizer throughput, full Deep Positron sample latency, and
+//! the XLA fast path (when artifacts exist). These are the numbers the
+//! performance pass iterates on (EXPERIMENTS.md §Perf).
+
+use deep_positron::accel::DeepPositron;
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::{Emac, FormatSpec, Quantizer};
+use deep_positron::runtime::{artifacts_dir, FormatTables, Runtime};
+use deep_positron::util::stats::{fmt_time, mean, BenchTimer};
+use deep_positron::util::Rng;
+
+fn main() {
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let fmt = spec.build();
+    let q = Quantizer::new(fmt.as_ref());
+
+    // --- EMAC MAC ops/s ---
+    let mut rng = Rng::new(1);
+    let codes: Vec<u16> = (0..784).map(|_| q.codes()[rng.below(q.len())]).collect();
+    let weights: Vec<u16> = (0..784).map(|_| q.codes()[rng.below(q.len())]).collect();
+    let mut emac = Emac::new(fmt.as_ref(), &q, 785);
+    let mut timer = BenchTimer::new("emac/dot-784 (posit8es1)");
+    let mut sink = 0u32;
+    timer.run(0.5, || {
+        sink = sink.wrapping_add(emac.dot(&weights, &codes, None, false) as u32);
+    });
+    let per_mac = mean(timer.samples()) / 784.0;
+    println!("{}", timer.report());
+    println!("  -> {:.1} M MAC/s ({}/MAC)  [sink {sink}]", 1e-6 / per_mac, fmt_time(per_mac));
+
+    // --- quantizer throughput ---
+    let xs: Vec<f64> = (0..4096).map(|_| rng.normal(0.0, 0.5)).collect();
+    let mut timer = BenchTimer::new("quantizer/4096-f64 (posit8es1)");
+    let mut acc = 0u32;
+    timer.run(0.5, || {
+        for &x in &xs {
+            acc = acc.wrapping_add(q.quantize_f64(x).0 as u32);
+        }
+    });
+    println!("{}", timer.report());
+    println!("  -> {:.1} M quantize/s  [sink {acc}]", 4096.0 / mean(timer.samples()) / 1e6);
+
+    // --- whole-sample accelerator latency (iris net) ---
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = experiments::train_model(&ds, 7);
+    let dp = DeepPositron::compile(&mlp, spec);
+    let row = ds.test_row(0).to_vec();
+    let mut timer = BenchTimer::new("positron/iris-sample (sim)");
+    let mut hits = 0usize;
+    timer.run(0.5, || {
+        hits += dp.predict(&row);
+    });
+    println!("{}", timer.report());
+
+    // --- mnist-scale sample (the real hot path) ---
+    let dsm = datasets::load("mnist", 7, Scale::Small);
+    let mlpm = experiments::train_model(&dsm, 7);
+    let dpm = DeepPositron::compile(&mlpm, spec);
+    let rowm = dsm.test_row(0).to_vec();
+    let mut timer = BenchTimer::new("positron/mnist-sample (sim)");
+    timer.run(1.0, || {
+        hits += dpm.predict(&rowm);
+    });
+    let sim_per_sample = mean(timer.samples());
+    println!("{}", timer.report());
+    println!("  -> {:.1} samples/s  [sink {hits}]", 1.0 / sim_per_sample);
+
+    // --- XLA fast path, when artifacts exist ---
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        let rt = Runtime::new(&dir).expect("runtime");
+        let tables = FormatTables::new(spec, dpm.quantizer());
+        let wq = dpm.dequantized_weights();
+        let bq = dpm.dequantized_biases();
+        let mut weights = Vec::new();
+        for (l, w) in mlpm.layers.iter().zip(&wq) {
+            let mut wio = vec![0.0; l.in_dim * l.out_dim];
+            for o in 0..l.out_dim {
+                for i in 0..l.in_dim {
+                    wio[i * l.out_dim + o] = w[o * l.in_dim + i];
+                }
+            }
+            weights.push(wio);
+        }
+        let exe = rt.quantized_infer("mnist", 256).expect("exe");
+        let x: Vec<f64> = dsm.x_test[..256 * 784].to_vec();
+        // warm-up (compile)
+        let _ = exe.run(&x, 256, &weights, &bq, &tables).expect("run");
+        let mut timer = BenchTimer::new("xla/q_infer mnist b256 (fast path)");
+        let mut total = 0.0f64;
+        timer.run(2.0, || {
+            let logits = exe.run(&x, 256, &weights, &bq, &tables).expect("run");
+            total += logits[0];
+        });
+        let per_sample = mean(timer.samples()) / 256.0;
+        println!("{}", timer.report());
+        println!("  -> {:.0} samples/s via XLA ({}/sample)  [sink {total:.1}]", 1.0 / per_sample, fmt_time(per_sample));
+        println!("  -> fast-path speedup over sim: {:.1}×", sim_per_sample / per_sample);
+    } else {
+        println!("(no artifacts — XLA fast-path bench skipped; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench E8/E9 — the EMAC synthesis study (§5 prose + Table 2 context):
+//! resources, latency, Fmax, energy, and EDP for every format configuration
+//! at bit-widths 5–8 on the modeled Virtex-7 fabric.
+//!
+//! Paper shape: fixed uncontested in resources/latency; posit competitive
+//! with float in energy & EDP while using more LUTs at equal precision;
+//! posit offers a superior Fmax to float.
+
+use deep_positron::coordinator::report::render_table2;
+use deep_positron::formats::FormatSpec;
+use deep_positron::hw;
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    println!("== bench: EMAC synthesis sweep (k = {}) ==\n", hw::DEFAULT_K);
+    let mut timer = BenchTimer::new("emac-synth/sweep-5..8");
+    let reports = timer.sample(|| hw::sweep(&[5, 6, 7, 8], hw::DEFAULT_K));
+    println!("{}", hw::render_table(&reports));
+
+    // Shape checks at n=8.
+    let get = |name: &str| reports.iter().find(|r| r.spec == FormatSpec::parse(name).unwrap()).unwrap();
+    let (p1, f4, x5) = (get("posit8es1"), get("float8we4"), get("fixed8q5"));
+    println!("fixed fewest LUTs           : {}", if x5.luts < f4.luts && x5.luts < p1.luts { "OK" } else { "VIOLATED" });
+    println!("posit more LUTs than float  : {}", if p1.luts > f4.luts { "OK" } else { "VIOLATED" });
+    println!("posit Fmax ≥ float Fmax     : {}", if p1.fmax_mhz >= f4.fmax_mhz { "OK" } else { "VIOLATED (model)" });
+    println!("posit EDP within 2× of float: {}", if p1.edp_pj_ns < 2.0 * f4.edp_pj_ns { "OK" } else { "VIOLATED" });
+
+    println!("\n== Table 2 (posit hardware implementations) ==\n");
+    println!("{}", render_table2());
+    println!("{}", timer.report());
+}

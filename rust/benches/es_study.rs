@@ -1,0 +1,22 @@
+//! Bench E7 — regenerates §5.1: the posit es-parameter trade-off.
+//!
+//! Paper claims: EDP(es=0) is ≈3× and ≈1.4× smaller than es=2 / es=1; DNN
+//! accuracy with es=1 is ~2% / ~4% better than es=2 / es=0 over [5,7]-bit;
+//! hence es=1 is the energy-accuracy sweet spot below 8 bits.
+
+use deep_positron::coordinator::{experiments, report, Engine};
+use deep_positron::datasets::Scale;
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    let scale = if std::env::var("BENCH_FULL").is_ok() { Scale::Full } else { Scale::Small };
+    println!("== bench: §5.1 es study (scale={scale:?}) ==\n");
+    let tasks = ["wdbc", "iris", "mushroom", "mnist", "fashion"];
+    let mut timer = BenchTimer::new("es-study/5-tasks");
+    let study = timer.sample(|| experiments::es_study(Engine::Sim, None, scale, 7, &tasks).expect("es study"));
+    println!("{}", report::render_es_study(&study));
+    let best_es = (0..3).max_by(|&a, &b| study.avg_acc[a].partial_cmp(&study.avg_acc[b]).unwrap()).unwrap();
+    println!("accuracy-best es over [5,7] bits: {best_es} (paper: 1)");
+    println!("EDP ordering es0 < es1 < es2   : {}", if study.edp_ratio[1] > 1.0 && study.edp_ratio[2] > study.edp_ratio[1] { "OK" } else { "VIOLATED" });
+    println!("{}", timer.report());
+}

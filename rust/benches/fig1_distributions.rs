@@ -1,0 +1,46 @@
+//! Bench E1/E2 — regenerates Fig. 1: (a) the posit8(es=0) value
+//! distribution; (b) a trained network's parameter distribution overlaid
+//! with squared quantization error. Paper claim: both are dense in
+//! [-0.5, +0.5], making posit a natural fit for DNN parameters.
+
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::quant;
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    println!("== bench: Fig 1 ==\n");
+    let spec = FormatSpec::Posit { n: 8, es: 0 };
+    let mut timer = BenchTimer::new("fig1/value-distribution");
+    let hist = timer.sample(|| quant::value_distribution(spec, 4.0, 16));
+    println!("(a) posit8 es=0 value histogram over [-4,4]:");
+    for (i, h) in hist.iter().enumerate() {
+        println!("{:>6.2} | {}", -4.0 + 8.0 * i as f64 / 16.0, "#".repeat(*h));
+    }
+    let central: usize = hist[6..10].iter().sum();
+    let total: usize = hist.iter().sum();
+    println!("\ndensity in central [-0.5,1.5) band: {central}/{total} in-range values");
+
+    let ds = datasets::load("wdbc", 7, Scale::Small);
+    let mlp = experiments::train_model(&ds, 7);
+    let params = mlp.named_tensors().last().unwrap().data.clone();
+    let mut timer2 = BenchTimer::new("fig1/param-error-profile");
+    let (ph, pe) = timer2.sample(|| quant::param_error_profile(spec, &params, 1.5, 20));
+    println!("\n(b) trained parameter histogram | squared error per bucket:");
+    let maxh = *ph.iter().max().unwrap() as f64;
+    let maxe = pe.iter().cloned().fold(1e-300, f64::max);
+    for i in 0..ph.len() {
+        println!(
+            "{:>6.2} | {:<20} | {}",
+            -1.5 + 3.0 * i as f64 / 20.0,
+            "#".repeat((ph[i] as f64 / maxh * 20.0) as usize),
+            "*".repeat((pe[i] / maxe * 20.0) as usize)
+        );
+    }
+    // Shape check: most parameters fall in [-0.5, 0.5].
+    let in_band: usize = ph[6..14].iter().sum();
+    let all: usize = ph.iter().sum();
+    println!("\nparams in [-0.6,0.6]: {:.0}% (paper: 'high density in [-0.5,+0.5]')", in_band as f64 / all as f64 * 100.0);
+    println!("{}\n{}", timer.report(), timer2.report());
+}

@@ -1,0 +1,29 @@
+//! Bench E3 — regenerates Fig. 5: layer-wise best-of-sweep quantization-MSE
+//! heatmaps for the MNIST and Fashion-MNIST networks, bits 5–8, as
+//! MSE_posit − MSE_fixed and MSE_posit − MSE_float.
+//!
+//! Paper shape: posit suffers the least quantization error, most visibly at
+//! ≤5-bit precision (differences increasingly negative as bits shrink).
+
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::Scale;
+use deep_positron::quant::{self, HeatCell};
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    let ns = [5u32, 6, 7, 8];
+    for dataset in ["mnist", "fashion"] {
+        println!("== bench: Fig 5 — {dataset} ==\n");
+        let mut timer = BenchTimer::new("fig5/train+heatmap");
+        let cells = timer.sample(|| experiments::fig5(dataset, Scale::Small, 7));
+        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_fixed, &format!("{dataset}: MSE_posit − MSE_fixed (negative ⇒ posit better)")));
+        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_float, &format!("{dataset}: MSE_posit − MSE_float (negative ⇒ posit better)")));
+        // Shape checks on the MNIST-scale network (peaked weights).
+        let avg5 = cells.iter().find(|c| c.layer == "avg" && c.n == 5).unwrap();
+        let avg8 = cells.iter().find(|c| c.layer == "avg" && c.n == 8).unwrap();
+        println!("posit beats fixed on avg @5bit: {}", if avg5.posit_minus_fixed() < 0.0 { "OK" } else { "VIOLATED" });
+        println!("posit ≤ float on avg @5bit   : {}", if avg5.posit_minus_float() <= 1e-12 { "OK" } else { "VIOLATED" });
+        println!("error shrinks with bits      : {}", if avg8.mse_posit < avg5.mse_posit { "OK" } else { "VIOLATED" });
+        println!("{}\n", timer.report());
+    }
+}

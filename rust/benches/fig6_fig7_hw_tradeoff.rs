@@ -1,0 +1,42 @@
+//! Bench E5/E6 — regenerates Figs. 6 and 7: average accuracy degradation
+//! (five tasks) vs the EMAC's energy-delay product (Fig 6), delay and
+//! dynamic power (Fig 7), per format family × bit-width 5–8.
+//!
+//! Paper shape: posit lowest degradation (stars) at a slight power cost;
+//! fixed lowest delay/EDP but worst accuracy; posit lower latency than
+//! float; posit ≈ float EDP.
+
+use deep_positron::coordinator::{experiments, report, Engine};
+use deep_positron::datasets::Scale;
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    let scale = if std::env::var("BENCH_FULL").is_ok() { Scale::Full } else { Scale::Small };
+    println!("== bench: Figs 6 & 7 (scale={scale:?}) ==\n");
+    let tasks = ["wdbc", "iris", "mushroom", "mnist", "fashion"];
+    let mut timer = BenchTimer::new("fig6-7/tradeoff-sweep");
+    let points = timer.sample(|| experiments::tradeoff_sweep(Engine::Sim, None, scale, 7, &tasks).expect("sweep"));
+
+    println!("{}", report::render_tradeoff(&points, "edp"));
+    println!("{}", report::render_tradeoff(&points, "delay"));
+    println!("{}", report::render_tradeoff(&points, "power"));
+
+    // Shape checks.
+    let by = |fam: &str, n: u32| points.iter().find(|p| p.spec.family() == fam && p.spec.n() == n).unwrap();
+    let mut ok = true;
+    for n in 5..=8u32 {
+        let (p, f, x) = (by("posit", n), by("float", n), by("fixed", n));
+        if !(x.delay_ns < f.delay_ns && x.delay_ns < p.delay_ns) {
+            println!("!! fixed not fastest at n={n}");
+            ok = false;
+        }
+        if p.avg_degradation > x.avg_degradation + 1e-9 {
+            println!("!! posit degrades more than fixed at n={n}");
+            ok = false;
+        }
+    }
+    let stars_posit = points.iter().filter(|p| p.star && p.spec.family() == "posit").count();
+    println!("stars won by posit: {stars_posit}/4 bit-widths");
+    println!("shape: {}", if ok { "OK" } else { "VIOLATED" });
+    println!("{}", timer.report());
+}

@@ -1,0 +1,36 @@
+//! Bench E4 — regenerates Table 1: 8-bit EMAC inference accuracy on the five
+//! tasks (best sub-parameter per family) vs the high-precision baseline.
+//!
+//! Paper reference rows (accuracy, sub-parameter):
+//!   WDBC     posit 85.9 (2) | float 77.4 (4) | fixed 57.8 (5) | base 90.1
+//!   Iris     posit 98.0 (1) | float 96.0 (3) | fixed 92.0 (4) | base 98.0
+//!   Mushroom posit 96.4 (1) | float 96.4 (4) | fixed 95.9 (5) | base 96.8
+//!   MNIST    posit 98.5 (1) | float 98.4 (4) | fixed 98.3 (5) | base 98.5
+//!   Fashion  posit 89.6 (1) | float 89.6 (4) | fixed 89.2 (4) | base 89.5
+//!
+//! Our absolute numbers differ (synthetic data, own training); the SHAPE to
+//! check: posit ≥ float ≥ fixed at 8 bits, posit near baseline.
+
+use deep_positron::coordinator::{experiments, report, Engine};
+use deep_positron::datasets::Scale;
+use deep_positron::util::stats::BenchTimer;
+
+fn main() {
+    let scale = if std::env::var("BENCH_FULL").is_ok() { Scale::Full } else { Scale::Small };
+    println!("== bench: Table 1 (engine=sim, scale={scale:?}; BENCH_FULL=1 for paper-sized) ==\n");
+    let mut timer = BenchTimer::new("table1/all-five-tasks");
+    let rows = timer.sample(|| experiments::table1(Engine::Sim, None, scale, 7).expect("table1"));
+    println!("{}", report::render_table1(&rows));
+    let mut shape_ok = true;
+    for r in &rows {
+        // At 8 bits the paper's posit-vs-fixed gaps are sub-1% on the easy
+        // tasks (e.g. 98.5 vs 98.3 on MNIST) — allow that noise band, but a
+        // real collapse (WDBC-style 57.8 vs 85.9) must show posit ahead.
+        if r.posit.0 + 0.01 < r.fixed.0 {
+            println!("!! SHAPE VIOLATION: {} posit {:.3} < fixed {:.3}", r.dataset, r.posit.0, r.fixed.0);
+            shape_ok = false;
+        }
+    }
+    println!("shape (posit ≥ fixed − 1% on every task): {}", if shape_ok { "OK" } else { "VIOLATED" });
+    println!("{}", timer.report());
+}

@@ -1,0 +1,327 @@
+//! Plain feedforward MLP substrate: 64-bit float reference forward pass and
+//! an SGD-with-momentum trainer (softmax cross-entropy).
+//!
+//! This is the "trained with 32-bit floating point" baseline of the paper's
+//! Table 1 (we train in f64 — bit-identical conclusions at these scales, and
+//! the quantization experiments only consume the resulting weights). The
+//! same training math is AOT-compiled to HLO by `python/compile/model.py`;
+//! the Rust trainer is the dependency-free substrate used by tests and the
+//! tabular tasks, and cross-validates the artifact path.
+
+use crate::datasets::Dataset;
+use crate::util::Rng;
+
+/// One dense layer: row-major `w[out][in]`, bias `b[out]`.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+/// A feedforward network with ReLU hidden activations and linear output
+/// (softmax applied in the loss), matching Deep Positron's dataflow.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+impl Mlp {
+    /// He-initialized network: dims = [in, h1, ..., out].
+    pub fn new(dims: &[usize], rng: &mut Rng) -> Mlp {
+        assert!(dims.len() >= 2);
+        let layers = dims
+            .windows(2)
+            .map(|d| {
+                let (fan_in, fan_out) = (d[0], d[1]);
+                let std = (2.0 / fan_in as f64).sqrt();
+                Layer {
+                    in_dim: fan_in,
+                    out_dim: fan_out,
+                    w: (0..fan_in * fan_out).map(|_| rng.normal(0.0, std)).collect(),
+                    b: vec![0.0; fan_out],
+                }
+            })
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = vec![self.layers[0].in_dim];
+        d.extend(self.layers.iter().map(|l| l.out_dim));
+        d
+    }
+
+    /// Forward pass of one sample; returns the pre-softmax logits.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut act = x.to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut next = vec![0.0; layer.out_dim];
+            for o in 0..layer.out_dim {
+                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                let mut acc = layer.b[o];
+                for (wi, ai) in row.iter().zip(&act) {
+                    acc += wi * ai;
+                }
+                next[o] = if li + 1 < self.layers.len() { acc.max(0.0) } else { acc };
+            }
+            act = next;
+        }
+        act
+    }
+
+    /// Classification accuracy on the test split.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..ds.test_len() {
+            let logits = self.forward(ds.test_row(i));
+            if argmax(&logits) == ds.y_test[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.test_len() as f64
+    }
+
+    /// All parameter tensors, named, for the quantization-error analysis
+    /// (Fig. 5's rows; "dense" = fully-connected layer, per the paper).
+    pub fn named_tensors(&self) -> Vec<crate::quant::NamedTensor> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            let mut data = l.w.clone();
+            data.extend_from_slice(&l.b);
+            out.push(crate::quant::NamedTensor { name: format!("dense{}", i + 1), data });
+        }
+        // The paper's "avg" column: all parameters pooled.
+        let mut all = Vec::new();
+        for l in &self.layers {
+            all.extend_from_slice(&l.w);
+            all.extend_from_slice(&l.b);
+        }
+        out.push(crate::quant::NamedTensor { name: "avg".into(), data: all });
+        out
+    }
+}
+
+/// Fold a z-score input normalization into the first layer so the deployed
+/// network consumes RAW features:
+/// `Σ w·(x−μ)/σ + b  =  Σ (w/σ)·x + (b − Σ (w/σ)·μ)`.
+/// This is the standard deployment transform — and the source of the
+/// paper's WDBC dynamic-range stress: raw-scale inputs force tiny
+/// first-layer weights that narrow formats cannot represent.
+pub fn fold_input_normalization(mlp: &mut Mlp, means: &[f64], stds: &[f64]) {
+    let l0 = &mut mlp.layers[0];
+    assert_eq!(means.len(), l0.in_dim);
+    for o in 0..l0.out_dim {
+        let row = &mut l0.w[o * l0.in_dim..(o + 1) * l0.in_dim];
+        let mut shift = 0.0;
+        for i in 0..row.len() {
+            row[i] /= stds[i];
+            shift += row[i] * means[i];
+        }
+        l0.b[o] -= shift;
+    }
+}
+
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    /// L2 weight decay.
+    pub decay: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 60, batch: 32, lr: 0.05, momentum: 0.9, decay: 1e-4, seed: 7 }
+    }
+}
+
+/// Train with SGD + momentum on softmax cross-entropy. Returns the
+/// per-epoch mean training loss (the "loss curve").
+pub fn train(mlp: &mut Mlp, ds: &Dataset, cfg: &TrainConfig) -> Vec<f64> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut vel: Vec<Layer> = mlp
+        .layers
+        .iter()
+        .map(|l| Layer { in_dim: l.in_dim, out_dim: l.out_dim, w: vec![0.0; l.w.len()], b: vec![0.0; l.b.len()] })
+        .collect();
+    let n = ds.train_len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut curve = Vec::with_capacity(cfg.epochs);
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        for chunk in order.chunks(cfg.batch) {
+            epoch_loss += train_batch(mlp, ds, chunk, cfg, &mut vel) * chunk.len() as f64;
+        }
+        curve.push(epoch_loss / n as f64);
+    }
+    curve
+}
+
+fn train_batch(mlp: &mut Mlp, ds: &Dataset, idx: &[usize], cfg: &TrainConfig, vel: &mut [Layer]) -> f64 {
+    let nl = mlp.layers.len();
+    // Accumulated gradients.
+    let mut gw: Vec<Vec<f64>> = mlp.layers.iter().map(|l| vec![0.0; l.w.len()]).collect();
+    let mut gb: Vec<Vec<f64>> = mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+    let mut loss = 0.0;
+    for &s in idx {
+        // Forward, keeping activations.
+        let mut acts: Vec<Vec<f64>> = vec![ds.train_row(s).to_vec()];
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let prev = &acts[li];
+            let mut next = vec![0.0; layer.out_dim];
+            for o in 0..layer.out_dim {
+                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                let mut acc = layer.b[o];
+                for (wi, ai) in row.iter().zip(prev) {
+                    acc += wi * ai;
+                }
+                next[o] = if li + 1 < nl { acc.max(0.0) } else { acc };
+            }
+            acts.push(next);
+        }
+        // Softmax CE backward.
+        let logits = acts.last().unwrap();
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|&z| (z - m).exp()).collect();
+        let zsum: f64 = exps.iter().sum();
+        let label = ds.y_train[s] as usize;
+        loss += zsum.ln() + m - logits[label];
+        let mut delta: Vec<f64> = exps.iter().map(|&e| e / zsum).collect();
+        delta[label] -= 1.0;
+        for li in (0..nl).rev() {
+            let layer = &mlp.layers[li];
+            let prev = &acts[li];
+            for o in 0..layer.out_dim {
+                let d = delta[o];
+                gb[li][o] += d;
+                let grow = &mut gw[li][o * layer.in_dim..(o + 1) * layer.in_dim];
+                for (g, &a) in grow.iter_mut().zip(prev) {
+                    *g += d * a;
+                }
+            }
+            if li > 0 {
+                let mut next_delta = vec![0.0; layer.in_dim];
+                for o in 0..layer.out_dim {
+                    let d = delta[o];
+                    let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                    for (nd, &w) in next_delta.iter_mut().zip(row) {
+                        *nd += d * w;
+                    }
+                }
+                // ReLU mask on the pre-layer activation.
+                for (nd, &a) in next_delta.iter_mut().zip(&acts[li]) {
+                    if a <= 0.0 {
+                        *nd = 0.0;
+                    }
+                }
+                delta = next_delta;
+            }
+        }
+    }
+    // SGD + momentum step.
+    let scale = 1.0 / idx.len() as f64;
+    for li in 0..nl {
+        let layer = &mut mlp.layers[li];
+        for (i, g) in gw[li].iter().enumerate() {
+            let v = &mut vel[li].w[i];
+            *v = cfg.momentum * *v - cfg.lr * (g * scale + cfg.decay * layer.w[i]);
+            layer.w[i] += *v;
+        }
+        for (i, g) in gb[li].iter().enumerate() {
+            let v = &mut vel[li].b[i];
+            *v = cfg.momentum * *v - cfg.lr * g * scale;
+            layer.b[i] += *v;
+        }
+    }
+    loss / idx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, Scale};
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&[4, 10, 3], &mut rng);
+        assert_eq!(mlp.forward(&[0.1, -0.2, 0.3, 0.0]).len(), 3);
+        assert_eq!(mlp.dims(), vec![4, 10, 3]);
+    }
+
+    #[test]
+    fn training_reduces_loss_and_fits_iris() {
+        let (ds, _, _) = datasets::load("iris", 5, Scale::Small).normalized();
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&[4, 10, 8, 3], &mut rng);
+        let curve = train(&mut mlp, &ds, &TrainConfig { epochs: 80, ..Default::default() });
+        assert!(curve.last().unwrap() < &(curve[0] * 0.5), "loss barely moved: {curve:?}");
+        let acc = mlp.accuracy(&ds);
+        assert!(acc >= 0.9, "iris accuracy only {acc}");
+    }
+
+    #[test]
+    fn training_fits_wdbc() {
+        let (ds, _, _) = datasets::load("wdbc", 5, Scale::Small).normalized();
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&[30, 16, 8, 2], &mut rng);
+        train(&mut mlp, &ds, &TrainConfig { epochs: 40, ..Default::default() });
+        let acc = mlp.accuracy(&ds);
+        assert!(acc >= 0.85, "wdbc accuracy only {acc}");
+    }
+
+    #[test]
+    fn folding_normalization_preserves_outputs() {
+        let raw = datasets::load("wdbc", 5, Scale::Small);
+        let (norm, means, stds) = raw.normalized();
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&[30, 16, 8, 2], &mut rng);
+        train(&mut mlp, &norm, &TrainConfig { epochs: 10, ..Default::default() });
+        let before: Vec<f64> = norm.test_row(0).to_vec();
+        let out_norm = mlp.forward(&before);
+        fold_input_normalization(&mut mlp, &means, &stds);
+        let out_raw = mlp.forward(raw.test_row(0));
+        for (a, b) in out_norm.iter().zip(&out_raw) {
+            assert!((a - b).abs() < 1e-9, "folding changed outputs: {a} vs {b}");
+        }
+        // And accuracy on RAW inputs matches accuracy on the normalized view.
+        assert_eq!(mlp.accuracy(&raw), {
+            let mut m2 = Mlp::new(&[30, 16, 8, 2], &mut Rng::new(3));
+            train(&mut m2, &norm, &TrainConfig { epochs: 10, ..Default::default() });
+            m2.accuracy(&norm)
+        });
+    }
+
+    #[test]
+    fn named_tensors_include_avg() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::new(&[4, 5, 3], &mut rng);
+        let t = mlp.named_tensors();
+        assert_eq!(t.len(), 3); // dense1, dense2, avg
+        assert_eq!(t.last().unwrap().name, "avg");
+        assert_eq!(t[2].data.len(), t[0].data.len() + t[1].data.len());
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0, -3.0]), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! The Deep Positron accelerator (paper §4) and its substrates: a plain
+//! f64 MLP (training + baseline inference) and the bit-exact EMAC datapath
+//! simulator the low-precision results are measured on.
+
+pub mod mlp;
+pub mod positron;
+
+pub use mlp::{argmax, train, Mlp, TrainConfig};
+pub use positron::{Datapath, DeepPositron};

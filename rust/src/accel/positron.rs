@@ -1,0 +1,269 @@
+//! The Deep Positron accelerator simulator (paper §4).
+//!
+//! Bit-exact software model of the FPGA datapath: a trained network's
+//! weights/biases and all inter-layer activations live as n-bit format
+//! codes; every neuron's weighted sum runs through the format's EMAC
+//! (exact quire accumulation, single deferred round, ReLU stage for hidden
+//! layers). This is the golden path Table 1's low-precision columns are
+//! measured on; the AOT/XLA fast path is validated against it.
+
+use super::mlp::{argmax, Mlp};
+use crate::datasets::Dataset;
+use crate::formats::ops::ScalarAlu;
+use crate::formats::{Emac, Exact, Format, FormatSpec, Quantizer};
+
+/// Which multiply-accumulate datapath the accelerator uses (ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Datapath {
+    /// The paper's EMAC: exact quire accumulation, one deferred round.
+    Emac,
+    /// A conventional unit: round after EVERY multiply and EVERY add —
+    /// what the EMAC is designed to beat (§4.1).
+    InexactMac,
+    /// EMAC with an artificially narrowed quire (wraps at `bits`) —
+    /// quantifies why Eq. (2)'s sizing matters.
+    NarrowQuire(u32),
+}
+
+/// A network instantiated on Deep Positron with one numeric format.
+pub struct DeepPositron {
+    spec: FormatSpec,
+    fmt: Box<dyn Format + Send + Sync>,
+    quantizer: Quantizer,
+    /// Per-layer weight codes, row-major `[out][in]`.
+    weights: Vec<Vec<u16>>,
+    /// Per-layer bias values, kept exact (the accelerator feeds biases into
+    /// the quire directly, after their own quantization to the format).
+    biases: Vec<Vec<Exact>>,
+    dims: Vec<usize>,
+}
+
+impl DeepPositron {
+    /// Quantize a trained f64 network onto the accelerator.
+    pub fn compile(mlp: &Mlp, spec: FormatSpec) -> DeepPositron {
+        let fmt = spec.build();
+        let quantizer = Quantizer::new(fmt.as_ref());
+        let mut weights = Vec::with_capacity(mlp.layers.len());
+        let mut biases = Vec::with_capacity(mlp.layers.len());
+        for layer in &mlp.layers {
+            let (codes, _) = quantizer.quantize_slice(&layer.w);
+            weights.push(codes);
+            let bias_exact = layer
+                .b
+                .iter()
+                .map(|&b| {
+                    let (code, _) = quantizer.quantize_f64(b);
+                    quantizer.decode(code).unwrap_or(Exact::ZERO)
+                })
+                .collect();
+            biases.push(bias_exact);
+        }
+        DeepPositron { spec, fmt, quantizer, weights, biases, dims: mlp.dims() }
+    }
+
+    pub fn spec(&self) -> FormatSpec {
+        self.spec
+    }
+
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.quantizer
+    }
+
+    /// The dequantized weight values per layer (what the XLA fast path
+    /// consumes as its `weights` input).
+    pub fn dequantized_weights(&self) -> Vec<Vec<f64>> {
+        self.weights.iter().map(|codes| self.quantizer.dequantize_slice(codes)).collect()
+    }
+
+    pub fn dequantized_biases(&self) -> Vec<Vec<f64>> {
+        self.biases.iter().map(|bs| bs.iter().map(|b| b.to_f64()).collect()).collect()
+    }
+
+    /// Run one sample through the EMAC datapath; returns the output-layer
+    /// codes (pre-argmax "logits" in format space).
+    pub fn forward_codes(&self, x: &[f64]) -> Vec<u16> {
+        self.forward_codes_with(x, Datapath::Emac)
+    }
+
+    /// Run one sample through a selected datapath (ablation studies).
+    pub fn forward_codes_with(&self, x: &[f64], mode: Datapath) -> Vec<u16> {
+        assert_eq!(x.len(), self.dims[0]);
+        let (mut act, _) = self.quantizer.quantize_slice(x);
+        let max_k = *self.dims.iter().max().unwrap();
+        let mut emac = Emac::new(self.fmt.as_ref(), &self.quantizer, max_k + 1);
+        if let Datapath::NarrowQuire(bits) = mode {
+            emac.set_width_limit(bits);
+        }
+        let alu = ScalarAlu::new(&self.quantizer);
+        let zero = self.quantizer.quantize_f64(0.0).0;
+        let last = self.weights.len() - 1;
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let in_dim = self.dims[li];
+            let out_dim = self.dims[li + 1];
+            let relu = li < last;
+            let mut next = Vec::with_capacity(out_dim);
+            for o in 0..out_dim {
+                let row = &w[o * in_dim..(o + 1) * in_dim];
+                let code = match mode {
+                    Datapath::Emac | Datapath::NarrowQuire(_) => emac.dot(row, &act, Some(b[o]), relu),
+                    Datapath::InexactMac => {
+                        // Conventional pipeline: round after every op.
+                        let mut acc = alu.inexact_dot(row, &act);
+                        let (bcode, _) = self.quantizer.quantize_exact(&b[o]);
+                        acc = alu.add(acc, bcode);
+                        let v = self.quantizer.decode(acc).unwrap();
+                        if relu && v.sign {
+                            zero
+                        } else {
+                            acc
+                        }
+                    }
+                };
+                next.push(code);
+            }
+            act = next;
+        }
+        act
+    }
+
+    /// Test accuracy under a selected datapath.
+    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..ds.test_len() {
+            let out = self.forward_codes_with(ds.test_row(i), mode);
+            let vals: Vec<f64> =
+                out.iter().map(|&c| self.quantizer.decode(c).map_or(f64::NAN, |e| e.to_f64())).collect();
+            if argmax(&vals) == ds.y_test[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.test_len() as f64
+    }
+
+    /// Predicted class for one sample: argmax over the decoded output codes.
+    /// Posit codes could be compared as signed integers directly (the posit
+    /// monotonicity property); decoding keeps this uniform across formats.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let out = self.forward_codes(x);
+        let vals: Vec<f64> = out.iter().map(|&c| self.quantizer.decode(c).map_or(f64::NAN, |e| e.to_f64())).collect();
+        argmax(&vals)
+    }
+
+    /// Test-set accuracy on the EMAC datapath.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..ds.test_len() {
+            if self.predict(ds.test_row(i)) == ds.y_test[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.test_len() as f64
+    }
+
+    /// Reference forward pass with *dequantized* weights and table-rounded
+    /// activations in f64 — the semantics of the XLA artifact. Where f64
+    /// accumulation is exact (every format here except the widest posit
+    /// quires), this matches [`Self::forward_codes`] bit for bit.
+    pub fn forward_dequantized(&self, x: &[f64]) -> Vec<f64> {
+        let (_, mut act) = self.quantizer.quantize_slice(x);
+        let last = self.weights.len() - 1;
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let in_dim = self.dims[li];
+            let out_dim = self.dims[li + 1];
+            let wv = self.quantizer.dequantize_slice(w);
+            let mut next = Vec::with_capacity(out_dim);
+            for o in 0..out_dim {
+                let mut acc = b[o].to_f64();
+                for i in 0..in_dim {
+                    acc += wv[o * in_dim + i] * act[i];
+                }
+                let (_, rounded) = self.quantizer.quantize_f64(acc);
+                next.push(if li < last { rounded.max(0.0) } else { rounded });
+            }
+            act = next;
+        }
+        act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::mlp::{train, TrainConfig};
+    use crate::datasets::{self, Scale};
+    use crate::util::Rng;
+
+    fn trained_iris() -> (Mlp, crate::datasets::Dataset) {
+        let ds = datasets::load("iris", 5, Scale::Small);
+        let (norm, means, stds) = ds.normalized();
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&[4, 10, 8, 3], &mut rng);
+        train(&mut mlp, &norm, &TrainConfig { epochs: 80, ..Default::default() });
+        super::super::mlp::fold_input_normalization(&mut mlp, &means, &stds);
+        (mlp, ds)
+    }
+
+    #[test]
+    fn posit8_tracks_f64_baseline_on_iris() {
+        let (mlp, ds) = trained_iris();
+        let base = mlp.accuracy(&ds);
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        let acc = dp.accuracy(&ds);
+        assert!(acc >= base - 0.06, "posit8 lost too much: {acc} vs {base}");
+    }
+
+    #[test]
+    fn emac_path_matches_dequantized_f64_path() {
+        // For formats whose quire fits f64's exact window, the two paths are
+        // identical (DESIGN.md §2 exactness argument).
+        let (mlp, ds) = trained_iris();
+        for spec in ["posit8es1", "float8we4", "fixed8q4"] {
+            let dp = DeepPositron::compile(&mlp, FormatSpec::parse(spec).unwrap());
+            for i in 0..20 {
+                let codes = dp.forward_codes(ds.test_row(i));
+                let vals: Vec<f64> = codes.iter().map(|&c| dp.quantizer().decode(c).unwrap().to_f64()).collect();
+                let ref_vals = dp.forward_dequantized(ds.test_row(i));
+                assert_eq!(vals, ref_vals, "{spec} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_precision_degrades_gracefully() {
+        let (mlp, ds) = trained_iris();
+        let acc8 = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 }).accuracy(&ds);
+        let acc5 = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 5, es: 1 }).accuracy(&ds);
+        assert!(acc8 >= acc5, "8-bit ({acc8}) should beat 5-bit ({acc5})");
+        assert!(acc5 > 0.3, "5-bit posit collapsed entirely: {acc5}");
+    }
+
+    #[test]
+    fn fixed_point_suffers_most_at_low_bits() {
+        // Table 1's qualitative story on a small task: best-of-sweep posit
+        // should be ≥ best-of-sweep fixed at 8 bits.
+        let (mlp, ds) = trained_iris();
+        let best = |family: &str| -> f64 {
+            FormatSpec::sweep_family(8, family)
+                .into_iter()
+                .map(|s| DeepPositron::compile(&mlp, s).accuracy(&ds))
+                .fold(0.0, f64::max)
+        };
+        let posit = best("posit");
+        let fixed = best("fixed");
+        assert!(posit >= fixed, "posit {posit} < fixed {fixed}");
+    }
+
+    #[test]
+    fn weights_roundtrip_through_tables() {
+        let (mlp, _) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Float { n: 8, we: 4 });
+        let w = dp.dequantized_weights();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0].len(), 4 * 10);
+        // Every dequantized weight must be representable (quantize = id).
+        for &v in w[0].iter() {
+            let (_, round) = dp.quantizer().quantize_f64(v);
+            assert_eq!(round, v);
+        }
+    }
+}

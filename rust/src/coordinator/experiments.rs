@@ -1,0 +1,342 @@
+//! Experiment drivers: everything the paper's evaluation section reports,
+//! runnable end-to-end from the CLI/benches (DESIGN.md §5 experiment index).
+
+use anyhow::Result;
+
+use crate::accel::{self, DeepPositron, Mlp};
+use crate::datasets::{self, Dataset, Scale};
+use crate::formats::FormatSpec;
+use crate::hw;
+use crate::quant;
+use crate::runtime::{FormatTables, Runtime};
+use crate::util::Rng;
+
+/// Which engine evaluates the quantized network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Bit-exact Rust EMAC simulator (golden path).
+    Sim,
+    /// AOT/XLA artifacts through PJRT (fast path).
+    Xla,
+}
+
+/// Per-dataset training epochs for the Rust substrate trainer.
+pub fn train_epochs(name: &str) -> usize {
+    match name {
+        "iris" => 80,
+        "wdbc" => 60,
+        "mushroom" => 12,
+        "mnist" | "fashion" => 14,
+        _ => 30,
+    }
+}
+
+/// Train the baseline f64 MLP for a dataset (Rust substrate trainer).
+/// Training runs on the z-scored view; the normalization is folded back
+/// into the first layer so the returned network consumes RAW features —
+/// the network Deep Positron actually quantizes (DESIGN.md §3).
+pub fn train_model(ds: &Dataset, seed: u64) -> Mlp {
+    let mut dims = vec![ds.num_features];
+    dims.extend(datasets::hidden_layers(&ds.name));
+    dims.push(ds.num_classes);
+    let mut rng = Rng::new(seed);
+    let mut mlp = Mlp::new(&dims, &mut rng);
+    let cfg = accel::TrainConfig { epochs: train_epochs(&ds.name), seed: seed ^ 0x7e57, ..Default::default() };
+    if datasets::normalizes_for_training(&ds.name) {
+        let (norm, means, stds) = ds.normalized();
+        accel::train(&mut mlp, &norm, &cfg);
+        accel::mlp::fold_input_normalization(&mut mlp, &means, &stds);
+    } else {
+        accel::train(&mut mlp, ds, &cfg);
+    }
+    mlp
+}
+
+/// Quantized test accuracy on the bit-exact simulator.
+pub fn eval_sim(mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> f64 {
+    DeepPositron::compile(mlp, spec).accuracy(ds)
+}
+
+/// Transpose accel (out×in) weights into the artifact's (in×out) layout.
+fn python_layout(dp: &DeepPositron, mlp: &Mlp) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let wq = dp.dequantized_weights();
+    let bq = dp.dequantized_biases();
+    let mut weights = Vec::with_capacity(wq.len());
+    for (l, w) in mlp.layers.iter().zip(&wq) {
+        let mut wio = vec![0.0; l.in_dim * l.out_dim];
+        for o in 0..l.out_dim {
+            for i in 0..l.in_dim {
+                wio[i * l.out_dim + o] = w[o * l.in_dim + i];
+            }
+        }
+        weights.push(wio);
+    }
+    (weights, bq)
+}
+
+/// Quantized test accuracy through the AOT/XLA artifacts.
+pub fn eval_xla(rt: &Runtime, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Result<f64> {
+    let dp = DeepPositron::compile(mlp, spec);
+    let (weights, biases) = python_layout(&dp, mlp);
+    let tables = FormatTables::new(spec, dp.quantizer());
+    let batch = *rt.batches(crate::runtime::Kind::QInfer, &ds.name).last().expect("no q_infer artifact");
+    let exe = rt.quantized_infer(&ds.name, batch)?;
+    let classes = ds.num_classes;
+    let mut correct = 0usize;
+    let mut i = 0;
+    while i < ds.test_len() {
+        let rows = batch.min(ds.test_len() - i);
+        let x = &ds.x_test[i * ds.num_features..(i + rows) * ds.num_features];
+        let logits = exe.run(x, rows, &weights, &biases, &tables)?;
+        for r in 0..rows {
+            let row = &logits[r * classes..(r + 1) * classes];
+            if accel::argmax(row) == ds.y_test[i + r] as usize {
+                correct += 1;
+            }
+        }
+        i += rows;
+    }
+    Ok(correct as f64 / ds.test_len() as f64)
+}
+
+/// Evaluate with the selected engine.
+pub fn eval(engine: Engine, rt: Option<&Runtime>, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Result<f64> {
+    match engine {
+        Engine::Sim => Ok(eval_sim(mlp, ds, spec)),
+        Engine::Xla => eval_xla(rt.expect("XLA engine needs a Runtime"), mlp, ds, spec),
+    }
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub dataset: String,
+    pub inference_size: usize,
+    pub posit: (f64, u32),
+    pub float: (f64, u32),
+    pub fixed: (f64, u32),
+    pub baseline: f64,
+}
+
+/// Best-of-sweep accuracy for one family at bit-width `n`.
+pub fn best_accuracy(
+    engine: Engine,
+    rt: Option<&Runtime>,
+    mlp: &Mlp,
+    ds: &Dataset,
+    family: &str,
+    n: u32,
+) -> Result<(f64, FormatSpec)> {
+    let mut best = (-1.0, FormatSpec::Fixed { n, q: 1 });
+    for spec in FormatSpec::sweep_family(n, family) {
+        let acc = eval(engine, rt, mlp, ds, spec)?;
+        if acc > best.0 {
+            best = (acc, spec);
+        }
+    }
+    Ok((best.0, best.1))
+}
+
+/// Table 1: 8-bit EMAC accuracy on the five tasks.
+pub fn table1(engine: Engine, rt: Option<&Runtime>, scale: Scale, seed: u64) -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for name in datasets::ALL {
+        let ds = datasets::load(name, seed, scale);
+        let mlp = train_model(&ds, seed);
+        let baseline = mlp.accuracy(&ds);
+        let (pa, ps) = best_accuracy(engine, rt, &mlp, &ds, "posit", 8)?;
+        let (fa, fs) = best_accuracy(engine, rt, &mlp, &ds, "float", 8)?;
+        let (xa, xs) = best_accuracy(engine, rt, &mlp, &ds, "fixed", 8)?;
+        rows.push(Table1Row {
+            dataset: name.to_string(),
+            inference_size: ds.test_len(),
+            posit: (pa, ps.sub_param()),
+            float: (fa, fs.sub_param()),
+            fixed: (xa, xs.sub_param()),
+            baseline,
+        });
+    }
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- Figs 6 / 7
+
+/// One point of the Fig. 6/7 scatter: a (family, bit-width) pair evaluated
+/// at its best sub-parameter, with hardware metrics attached.
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    pub spec: FormatSpec,
+    /// Mean accuracy degradation (baseline − quantized) over the tasks.
+    pub avg_degradation: f64,
+    pub edp_pj_ns: f64,
+    pub delay_ns: f64,
+    pub power_mw: f64,
+    /// Lowest degradation among its family at this bit-width (the ★).
+    pub star: bool,
+}
+
+/// The accuracy-vs-hardware trade-off sweep behind Figs. 6 and 7:
+/// bit-widths 5–8 × three families; per (family, n) each sub-parameter is
+/// evaluated on every task and the best-average config is reported.
+pub fn tradeoff_sweep(
+    engine: Engine,
+    rt: Option<&Runtime>,
+    scale: Scale,
+    seed: u64,
+    task_names: &[&str],
+) -> Result<Vec<TradeoffPoint>> {
+    // Train once per task.
+    let mut tasks = Vec::new();
+    for name in task_names {
+        let ds = datasets::load(name, seed, scale);
+        let mlp = train_model(&ds, seed);
+        let baseline = mlp.accuracy(&ds);
+        tasks.push((ds, mlp, baseline));
+    }
+    let mut points = Vec::new();
+    for n in 5..=8u32 {
+        for family in ["posit", "float", "fixed"] {
+            // Paper protocol: the sub-parameter (es / w_e / Q) is chosen
+            // per task (Table 1 reports different es per dataset); the
+            // figure's accuracy axis averages those per-task bests. The
+            // hardware axis uses the modal (most-often-chosen) config.
+            let sweep = FormatSpec::sweep_family(n, family);
+            let mut deg = 0.0;
+            let mut chosen: Vec<FormatSpec> = Vec::new();
+            for (ds, mlp, baseline) in &tasks {
+                let mut best: Option<(f64, FormatSpec)> = None;
+                for &spec in &sweep {
+                    let acc = eval(engine, rt, mlp, ds, spec)?;
+                    if best.map_or(true, |(b, _)| acc > b) {
+                        best = Some((acc, spec));
+                    }
+                }
+                let (acc, spec) = best.unwrap();
+                deg += (baseline - acc).max(-1.0);
+                chosen.push(spec);
+            }
+            deg /= tasks.len() as f64;
+            let spec = *chosen
+                .iter()
+                .max_by_key(|s| chosen.iter().filter(|c| c == s).count())
+                .unwrap();
+            let synth = hw::synthesize(spec, hw::DEFAULT_K);
+            points.push(TradeoffPoint {
+                spec,
+                avg_degradation: deg,
+                edp_pj_ns: synth.edp_pj_ns,
+                delay_ns: synth.critical_path_ns,
+                power_mw: synth.dynamic_power_mw,
+                star: false,
+            });
+        }
+    }
+    // Stars: per bit-width, the lowest-degradation family point.
+    for n in 5..=8u32 {
+        let idx = points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.spec.n() == n)
+            .min_by(|a, b| a.1.avg_degradation.partial_cmp(&b.1.avg_degradation).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        points[idx].star = true;
+    }
+    Ok(points)
+}
+
+// ------------------------------------------------------------------ Fig 5
+
+/// Fig. 5 heatmap for one dataset: train, then layer-wise best-of-sweep MSE
+/// per format over bits 5–8.
+pub fn fig5(dataset: &str, scale: Scale, seed: u64) -> Vec<quant::HeatCell> {
+    let ds = datasets::load(dataset, seed, scale);
+    let mlp = train_model(&ds, seed);
+    quant::heatmap(&mlp.named_tensors(), &[5, 6, 7, 8])
+}
+
+// ----------------------------------------------------------------- §5.1
+
+/// §5.1: the posit es trade-off. Average accuracy per es over the tasks and
+/// bits [5,7], plus EDP ratios at n=8.
+#[derive(Debug, Clone)]
+pub struct EsStudy {
+    /// avg accuracy (over tasks × bits 5..=7) per es ∈ {0,1,2}.
+    pub avg_acc: [f64; 3],
+    /// EDP(es)/EDP(0) at n=8.
+    pub edp_ratio: [f64; 3],
+}
+
+pub fn es_study(engine: Engine, rt: Option<&Runtime>, scale: Scale, seed: u64, task_names: &[&str]) -> Result<EsStudy> {
+    let mut tasks = Vec::new();
+    for name in task_names {
+        let ds = datasets::load(name, seed, scale);
+        let mlp = train_model(&ds, seed);
+        tasks.push((ds, mlp));
+    }
+    let mut avg_acc = [0.0f64; 3];
+    let mut count = 0usize;
+    for n in 5..=7u32 {
+        for (ds, mlp) in &tasks {
+            for es in 0..=2u32 {
+                avg_acc[es as usize] += eval(engine, rt, mlp, ds, FormatSpec::Posit { n, es })?;
+            }
+            count += 1;
+        }
+    }
+    for a in avg_acc.iter_mut() {
+        *a /= count as f64;
+    }
+    let (r1, r2) = hw::es_edp_ratios(8, hw::DEFAULT_K);
+    Ok(EsStudy { avg_acc, edp_ratio: [1.0, r1, r2] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_sim_small_iris_only() {
+        // Full Table 1 runs in the bench; unit-test one task end-to-end.
+        let ds = datasets::load("iris", 11, Scale::Small);
+        let mlp = train_model(&ds, 11);
+        let baseline = mlp.accuracy(&ds);
+        assert!(baseline >= 0.9, "baseline {baseline}");
+        let (acc, spec) = best_accuracy(Engine::Sim, None, &mlp, &ds, "posit", 8).unwrap();
+        assert!(acc >= baseline - 0.08, "posit8 {acc} too far below {baseline}");
+        assert_eq!(spec.family(), "posit");
+    }
+
+    #[test]
+    fn degradation_grows_as_bits_shrink() {
+        let ds = datasets::load("iris", 11, Scale::Small);
+        let mlp = train_model(&ds, 11);
+        let (acc8, _) = best_accuracy(Engine::Sim, None, &mlp, &ds, "posit", 8).unwrap();
+        let (acc5, _) = best_accuracy(Engine::Sim, None, &mlp, &ds, "posit", 5).unwrap();
+        assert!(acc8 >= acc5, "8-bit {acc8} vs 5-bit {acc5}");
+    }
+
+    #[test]
+    fn fig5_produces_full_grid() {
+        let cells = fig5("iris", Scale::Small, 3);
+        // layers: dense1..3 + avg = 4 rows × 4 bit-widths.
+        assert_eq!(cells.len(), 16);
+        // Structural invariants (the posit-vs-fixed *shape* claim needs the
+        // peaked weight distribution of the MNIST-scale nets — asserted in
+        // the fig5 bench): MSEs are positive and shrink with bit-width.
+        assert!(cells.iter().all(|c| c.mse_posit > 0.0 && c.mse_fixed > 0.0 && c.mse_float > 0.0));
+        for layer in ["dense1", "avg"] {
+            let at = |n: u32| cells.iter().find(|c| c.layer == layer && c.n == n).unwrap().mse_posit;
+            assert!(at(8) < at(5), "{layer}: posit MSE not shrinking with bits");
+        }
+    }
+
+    #[test]
+    fn es_study_runs_on_tiny_task() {
+        let s = es_study(Engine::Sim, None, Scale::Small, 5, &["iris"]).unwrap();
+        assert!(s.avg_acc.iter().all(|&a| a > 0.3));
+        assert!(s.edp_ratio[1] > 1.0 && s.edp_ratio[2] > s.edp_ratio[1]);
+    }
+}

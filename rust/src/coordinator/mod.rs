@@ -1,0 +1,16 @@
+//! L3 coordinator: experiment orchestration, the PJRT training-loop driver,
+//! the batched inference server, and report rendering.
+//!
+//! The paper's contribution lives at L1/L2 (the numeric formats and EMAC
+//! semantics); this layer is the system around them — it owns process
+//! lifecycle, sweep scheduling, batching, metrics, and the CLI (DESIGN.md
+//! §2 "thin driver" case).
+
+pub mod experiments;
+pub mod report;
+pub mod server;
+pub mod trainer;
+
+pub use experiments::{es_study, eval, fig5, table1, tradeoff_sweep, Engine};
+pub use server::{serve, ServeConfig, ServeMetrics, ServerHandle};
+pub use trainer::{train_via_pjrt, LoopConfig, TrainLog};

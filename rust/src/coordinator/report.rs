@@ -1,0 +1,193 @@
+//! Report rendering: markdown emitters for every experiment, matching the
+//! rows/series the paper's tables and figures show.
+
+use crate::coordinator::experiments::{EsStudy, Table1Row, TradeoffPoint};
+
+/// Render Table 1 exactly in the paper's column layout.
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut s = String::new();
+    s.push_str("| Dataset | Inference Size | Posit Acc. (es) | Float Acc. (w_e) | Fixed Acc. (Q) | 64-bit Float Acc. |\n");
+    s.push_str("|---|---|---|---|---|---|\n");
+    for r in rows {
+        let hi = [r.posit.0, r.float.0, r.fixed.0].into_iter().fold(0.0f64, f64::max);
+        let cell = |acc: f64, p: u32| {
+            if (acc - hi).abs() < 1e-12 {
+                format!("**{:.1}%** ({p})", acc * 100.0)
+            } else {
+                format!("{:.1}% ({p})", acc * 100.0)
+            }
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {:.1}% |\n",
+            r.dataset,
+            r.inference_size,
+            cell(r.posit.0, r.posit.1),
+            cell(r.float.0, r.float.1),
+            cell(r.fixed.0, r.fixed.1),
+            r.baseline * 100.0,
+        ));
+    }
+    s
+}
+
+/// Render the Fig. 6 series (degradation vs EDP) as a markdown table plus an
+/// ASCII scatter for terminal viewing.
+pub fn render_tradeoff(points: &[TradeoffPoint], metric: &str) -> String {
+    let metric_of = |p: &TradeoffPoint| -> f64 {
+        match metric {
+            "edp" => p.edp_pj_ns,
+            "delay" => p.delay_ns,
+            "power" => p.power_mw,
+            _ => panic!("unknown metric {metric}"),
+        }
+    };
+    let unit = match metric {
+        "edp" => "pJ·ns",
+        "delay" => "ns",
+        _ => "mW",
+    };
+    let mut s = format!("| config | bits | avg degradation | {metric} ({unit}) | ★ |\n|---|---|---|---|---|\n");
+    for p in points {
+        s.push_str(&format!(
+            "| {} | {} | {:+.2}% | {:.2} | {} |\n",
+            p.spec.name(),
+            p.spec.n(),
+            p.avg_degradation * 100.0,
+            metric_of(p),
+            if p.star { "★" } else { "" }
+        ));
+    }
+    s.push('\n');
+    s.push_str(&ascii_scatter(points, &metric_of, metric));
+    s
+}
+
+/// Minimal log-x ASCII scatter: rows = points sorted by metric.
+fn ascii_scatter(points: &[TradeoffPoint], metric_of: &dyn Fn(&TradeoffPoint) -> f64, label: &str) -> String {
+    let (lo, hi) = points.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), p| {
+        (lo.min(metric_of(p)), hi.max(metric_of(p)))
+    });
+    let degs: Vec<f64> = points.iter().map(|p| p.avg_degradation).collect();
+    let (dlo, dhi) = crate::util::stats::min_max(&degs);
+    let width = 48usize;
+    let mut s = format!("degradation (rows) vs {label} (column position, log scale)\n");
+    let mut sorted: Vec<&TradeoffPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.avg_degradation.partial_cmp(&b.avg_degradation).unwrap());
+    for p in sorted {
+        let x = if hi > lo {
+            ((metric_of(p).ln() - lo.ln()) / (hi.ln() - lo.ln()) * (width as f64 - 1.0)) as usize
+        } else {
+            0
+        };
+        let mut line = vec![b' '; width];
+        line[x.min(width - 1)] = match p.spec.family() {
+            "posit" => b'P',
+            "float" => b'F',
+            _ => b'X',
+        };
+        let deg_bar = if dhi > dlo { (p.avg_degradation - dlo) / (dhi - dlo) } else { 0.0 };
+        s.push_str(&format!(
+            "{:>12} {:>6.2}% |{}| {}\n",
+            p.spec.name(),
+            p.avg_degradation * 100.0,
+            String::from_utf8(line).unwrap(),
+            "#".repeat((deg_bar * 10.0) as usize)
+        ));
+    }
+    s
+}
+
+/// Render the §5.1 es study.
+pub fn render_es_study(s: &EsStudy) -> String {
+    format!(
+        "posit es parameter study (§5.1)\n\n\
+         | es | avg accuracy [5,7]-bit | EDP ratio vs es=0 (n=8) |\n|---|---|---|\n\
+         | 0 | {:.1}% | {:.2}× |\n| 1 | {:.1}% | {:.2}× |\n| 2 | {:.1}% | {:.2}× |\n\n\
+         paper: EDP(es=1) ≈ 1.4×, EDP(es=2) ≈ 3×; accuracy(es=1) best for [5,7]-bit.\n",
+        s.avg_acc[0] * 100.0,
+        s.edp_ratio[0],
+        s.avg_acc[1] * 100.0,
+        s.edp_ratio[1],
+        s.avg_acc[2] * 100.0,
+        s.edp_ratio[2],
+    )
+}
+
+/// Render Table 2 (posit-hardware comparison).
+pub fn render_table2() -> String {
+    let rows = crate::hw::table2_rows();
+    let mut s = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+        if i == 0 {
+            s.push_str(&format!("|{}\n", "---|".repeat(row.len())));
+        }
+    }
+    s
+}
+
+/// Write a report file under results/ (created on demand).
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FormatSpec;
+
+    #[test]
+    fn table1_renders_and_bolds_best() {
+        let rows = vec![Table1Row {
+            dataset: "iris".into(),
+            inference_size: 50,
+            posit: (0.98, 1),
+            float: (0.96, 3),
+            fixed: (0.92, 4),
+            baseline: 0.98,
+        }];
+        let s = render_table1(&rows);
+        assert!(s.contains("**98.0%** (1)"));
+        assert!(s.contains("| iris | 50 |"));
+    }
+
+    #[test]
+    fn tradeoff_renders_scatter() {
+        let points = vec![
+            TradeoffPoint {
+                spec: FormatSpec::Posit { n: 8, es: 1 },
+                avg_degradation: 0.01,
+                edp_pj_ns: 10.0,
+                delay_ns: 5.0,
+                power_mw: 2.0,
+                star: true,
+            },
+            TradeoffPoint {
+                spec: FormatSpec::Fixed { n: 8, q: 4 },
+                avg_degradation: 0.70,
+                edp_pj_ns: 2.0,
+                delay_ns: 1.0,
+                power_mw: 1.0,
+                star: false,
+            },
+        ];
+        let s = render_tradeoff(&points, "edp");
+        assert!(s.contains("★"));
+        assert!(s.contains("P") && s.contains("X"));
+    }
+
+    #[test]
+    fn es_study_renders() {
+        let s = render_es_study(&EsStudy { avg_acc: [0.9, 0.93, 0.91], edp_ratio: [1.0, 1.4, 3.0] });
+        assert!(s.contains("1.40×") && s.contains("93.0%"));
+    }
+
+    #[test]
+    fn table2_contains_this_work() {
+        assert!(render_table2().contains("This Work"));
+    }
+}

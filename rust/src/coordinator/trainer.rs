@@ -1,0 +1,130 @@
+//! Training-loop driver over the PJRT train-step artifact: the Rust
+//! coordinator owns the loop (shuffling, batching, loss logging,
+//! early-stopping); XLA owns the math. This is the paper's "networks trained
+//! with 32-bit floating point" baseline running on the three-layer stack.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::datasets::Dataset;
+use crate::runtime::{Runtime, TrainState};
+use crate::util::Rng;
+
+/// Hyperparameters for the PJRT training loop.
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub seed: u64,
+    /// Log the loss every N steps (0 = per epoch only).
+    pub log_every: usize,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig { epochs: 10, lr: 0.05, momentum: 0.9, seed: 7, log_every: 0 }
+    }
+}
+
+/// The training record (the e2e example's loss curve).
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    /// (global step, loss) samples.
+    pub losses: Vec<(usize, f64)>,
+    /// Mean loss per epoch.
+    pub epoch_loss: Vec<f64>,
+    pub steps: usize,
+    pub wall_seconds: f64,
+}
+
+impl TrainLog {
+    pub fn render(&self) -> String {
+        let mut s = String::from("epoch | mean loss\n------|----------\n");
+        for (e, l) in self.epoch_loss.iter().enumerate() {
+            s.push_str(&format!("{:>5} | {l:.4}\n", e + 1));
+        }
+        s.push_str(&format!("({} steps, {:.1}s wall)\n", self.steps, self.wall_seconds));
+        s
+    }
+}
+
+/// Run the training loop for `ds` through the dataset's train-step artifact.
+/// Batches are z-scored on the fly; on completion the normalization is
+/// folded into the first layer so the returned state consumes RAW features
+/// (the network Deep Positron quantizes — see experiments::train_model).
+pub fn train_via_pjrt(rt: &Runtime, ds: &Dataset, cfg: &LoopConfig) -> Result<(TrainState, TrainLog)> {
+    let step_exe = rt.train_step(&ds.name)?;
+    let batch = step_exe.batch();
+    let dims = step_exe.dims().to_vec();
+    assert_eq!(dims[0], ds.num_features, "artifact/topology mismatch");
+    let classes = *dims.last().unwrap();
+    let normalize = crate::datasets::normalizes_for_training(&ds.name);
+    let (means, stds) = if normalize {
+        ds.feature_stats()
+    } else {
+        (vec![0.0; ds.num_features], vec![1.0; ds.num_features])
+    };
+    let mut state = TrainState::init(&dims, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x10a);
+    let mut order: Vec<usize> = (0..ds.train_len()).collect();
+    let mut log = TrainLog::default();
+    let t0 = Instant::now();
+    let mut x = vec![0.0f64; batch * ds.num_features];
+    let mut y = vec![0.0f64; batch * classes];
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_sum = 0.0;
+        let mut epoch_batches = 0usize;
+        // Fixed-shape artifact: every step uses exactly `batch` rows. Small
+        // training sets (or the remainder) wrap around the shuffled order.
+        let steps_per_epoch = ds.train_len().div_ceil(batch);
+        for step in 0..steps_per_epoch {
+            for r in 0..batch {
+                let s = order[(step * batch + r) % order.len()];
+                let row = ds.train_row(s);
+                for (j, &v) in row.iter().enumerate() {
+                    x[r * ds.num_features + j] = (v - means[j]) / stds[j];
+                }
+                for c in 0..classes {
+                    y[r * classes + c] = if c == ds.y_train[s] as usize { 1.0 } else { 0.0 };
+                }
+            }
+            let loss = step_exe.step(&mut state, &x, &y, cfg.lr, cfg.momentum)?;
+            log.steps += 1;
+            epoch_sum += loss;
+            epoch_batches += 1;
+            if cfg.log_every > 0 && log.steps % cfg.log_every == 0 {
+                log.losses.push((log.steps, loss));
+            }
+        }
+        log.epoch_loss.push(epoch_sum / epoch_batches.max(1) as f64);
+    }
+    log.wall_seconds = t0.elapsed().as_secs_f64();
+    // Fold the normalization into layer 0 (python layout: w[in][out]).
+    let in_dim = dims[0];
+    let out_dim = dims[1];
+    for o in 0..out_dim {
+        let mut shift = 0.0;
+        for i in 0..in_dim {
+            let w = &mut state.params[0][i * out_dim + o];
+            *w /= stds[i];
+            shift += *w * means[i];
+        }
+        state.params[1][o] -= shift;
+    }
+    Ok((state, log))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_renders() {
+        let log = TrainLog { losses: vec![(1, 2.0)], epoch_loss: vec![2.0, 1.0], steps: 20, wall_seconds: 1.5 };
+        let s = log.render();
+        assert!(s.contains("2.0000") && s.contains("20 steps"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Procedural Fashion-MNIST-like garment-silhouette task.
+//!
+//! Ten classes matching Xiao et al.'s label set (t-shirt, trouser, pullover,
+//! dress, coat, sandal, shirt, sneaker, bag, ankle boot), rendered as filled
+//! silhouettes with jitter. Classes 0/2/4/6 (t-shirt/pullover/coat/shirt)
+//! share body shape and differ in sleeves/collar/front-opening details —
+//! reproducing the real dataset's confusable upper-wear cluster and its
+//! harder (~90%) baseline relative to digits.
+
+use super::raster::Canvas;
+use crate::util::Rng;
+
+pub const CLASS_NAMES: [&str; 10] =
+    ["t-shirt", "trouser", "pullover", "dress", "coat", "sandal", "shirt", "sneaker", "bag", "ankle-boot"];
+
+/// Render one garment with the given jitter RNG.
+pub fn render_garment(class: u32, rng: &mut Rng) -> Canvas {
+    let mut c = Canvas::new();
+    let ink = rng.range(0.55, 1.0);
+    draw_garment(&mut c, class, ink, rng);
+    // Heavy jitter: anisotropic "fit" variation + rotation + translation —
+    // this is what keeps the upper-wear cluster confusable (~90% MLP
+    // ceiling, like the real Fashion-MNIST).
+    let mut out = c.affine_aniso(
+        rng.range(-0.16, 0.16),
+        rng.range(0.72, 1.18),
+        rng.range(0.78, 1.15),
+        rng.range(-2.2, 2.2),
+        rng.range(-2.2, 2.2),
+    );
+    out.blur(1);
+    out.noise(rng, 0.12);
+    out.clamp();
+    out
+}
+
+fn draw_garment(c: &mut Canvas, class: u32, ink: f64, rng: &mut Rng) {
+    match class {
+        // ---- upper-wear cluster: shared torso, varying details ----
+        0 => {
+            // t-shirt: torso + SHORT sleeves
+            torso(c, ink, rng.range(-0.8, 0.8), rng.range(-0.8, 0.8));
+            c.fill_poly(&[(4.0, 8.0), (9.0, 7.0), (9.0, 13.0), (3.5, 12.5)], ink); // short L sleeve
+            c.fill_poly(&[(19.0, 7.0), (24.0, 8.0), (24.5, 12.5), (19.0, 13.0)], ink);
+        }
+        2 => {
+            // pullover: torso + LONG sleeves
+            torso(c, ink, rng.range(-0.8, 0.8), rng.range(-0.8, 0.8));
+            c.fill_poly(&[(4.0, 8.0), (9.0, 7.0), (9.0, 22.0), (4.5, 22.0)], ink);
+            c.fill_poly(&[(19.0, 7.0), (24.0, 8.0), (23.5, 22.0), (19.0, 22.0)], ink);
+        }
+        4 => {
+            // coat: long torso + long sleeves + front opening (dark seam) —
+            // the opening is missing in a third of instances (real coats
+            // photograph closed), deepening the confusion with pullover.
+            torso_tall(c, ink, rng.range(-0.8, 0.8));
+            c.fill_poly(&[(4.0, 8.0), (9.0, 7.0), (9.0, 23.0), (4.5, 23.0)], ink);
+            c.fill_poly(&[(19.0, 7.0), (24.0, 8.0), (23.5, 23.0), (19.0, 23.0)], ink);
+            if rng.chance(0.65) {
+                carve_column(c, 14, 8, 24); // front opening
+            }
+        }
+        6 => {
+            // shirt: torso + long sleeves + collar notch + button seam dots;
+            // cues appear probabilistically (the class is genuinely hard in
+            // the real data — ~60-70% per-class accuracy).
+            torso(c, ink, rng.range(-0.8, 0.8), rng.range(-0.8, 0.8));
+            c.fill_poly(&[(4.5, 8.0), (9.0, 7.0), (9.0, 20.0), (5.0, 20.0)], ink);
+            c.fill_poly(&[(19.0, 7.0), (23.5, 8.0), (23.0, 20.0), (19.0, 20.0)], ink);
+            if rng.chance(0.7) {
+                carve_pixel(c, 13, 7);
+                carve_pixel(c, 15, 7);
+            }
+            if rng.chance(0.6) {
+                for y in (10..22).step_by(3) {
+                    carve_pixel(c, 14, y);
+                }
+            }
+        }
+        1 => {
+            // trouser: two legs from a waistband
+            c.fill_poly(&[(9.0 + rng.range(-0.6, 0.6), 6.0), (19.0 + rng.range(-0.6, 0.6), 6.0), (19.0, 9.0), (9.0, 9.0)], ink);
+            c.fill_poly(&[(9.0, 9.0), (13.2, 9.0), (12.5 + rng.range(-0.6, 0.6), 24.0), (8.5 + rng.range(-0.6, 0.6), 24.0)], ink);
+            c.fill_poly(&[(14.8, 9.0), (19.0, 9.0), (19.5 + rng.range(-0.6, 0.6), 24.0), (15.5 + rng.range(-0.6, 0.6), 24.0)], ink);
+        }
+        3 => {
+            // dress: fitted top flaring to a wide hem
+            c.fill_poly(
+                &[
+                    (11.0 + rng.range(-0.5, 0.5), 5.0),
+                    (17.0 + rng.range(-0.5, 0.5), 5.0),
+                    (16.0, 11.0),
+                    (20.5 + rng.range(-0.8, 0.8), 24.0),
+                    (7.5 + rng.range(-0.8, 0.8), 24.0),
+                    (12.0, 11.0),
+                ],
+                ink,
+            );
+        }
+        5 => {
+            // sandal: thin sole + strap lines (sparse, low mass — like the
+            // real class)
+            c.fill_poly(&[(5.0 + rng.range(-0.5, 0.5), 20.0), (23.0 + rng.range(-0.5, 0.5), 18.5), (23.5, 21.0), (5.0, 22.5)], ink);
+            c.line(7.0, 20.5, 13.0 + rng.range(-0.8, 0.8), 13.0 + rng.range(-0.8, 0.8), 1.3, ink);
+            c.line(13.0, 13.0, 19.0, 19.0, 1.3, ink);
+            c.line(10.0, 20.0, 17.0 + rng.range(-0.8, 0.8), 14.5, 1.2, ink);
+        }
+        7 => {
+            // sneaker: low wedge profile
+            c.fill_poly(
+                &[(4.5 + rng.range(-0.5, 0.5), 21.5), (13.0, 20.5), (18.0, 15.5 + rng.range(-0.6, 0.6)), (23.5, 17.0), (23.5, 22.0), (4.5, 23.0)],
+                ink,
+            );
+            carve_pixel(c, 9, 21);
+            carve_pixel(c, 12, 20);
+        }
+        8 => {
+            // bag: trapezoid body + handle arc
+            c.fill_poly(&[(6.0 + rng.range(-0.5, 0.5), 12.0), (22.0 + rng.range(-0.5, 0.5), 12.0), (23.5, 23.0), (4.5, 23.0)], ink);
+            c.arc(14.0, 12.0, 5.0 + rng.range(-0.5, 0.5), 5.5, std::f64::consts::PI, std::f64::consts::TAU, 1.6, ink);
+        }
+        9 => {
+            // ankle boot: sole + shaft
+            c.fill_poly(&[(8.0 + rng.range(-0.5, 0.5), 8.0), (15.0 + rng.range(-0.5, 0.5), 8.0), (15.5, 16.0), (22.5, 18.0), (23.0, 22.5), (7.5, 22.5)], ink);
+        }
+        _ => panic!("fashion class out of range: {class}"),
+    }
+}
+
+/// Shared upper-wear torso.
+fn torso(c: &mut Canvas, ink: f64, jx: f64, jy: f64) {
+    c.fill_poly(
+        &[
+            (9.0 + jx, 6.5 + jy),
+            (19.0 + jx, 6.5),
+            (20.0, 22.0 + jy),
+            (8.0, 22.0),
+        ],
+        ink,
+    );
+}
+
+fn torso_tall(c: &mut Canvas, ink: f64, jx: f64) {
+    c.fill_poly(&[(9.0 + jx, 6.0), (19.0 + jx, 6.0), (20.5, 24.5), (7.5, 24.5)], ink);
+}
+
+/// Remove ink along a 1-px column (garment front openings).
+fn carve_column(c: &mut Canvas, x: usize, y0: usize, y1: usize) {
+    for y in y0..y1.min(super::raster::SIDE) {
+        c.px[y * super::raster::SIDE + x] *= 0.15;
+    }
+}
+
+fn carve_pixel(c: &mut Canvas, x: usize, y: usize) {
+    c.px[y * super::raster::SIDE + x] *= 0.2;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes() {
+        let mut rng = Rng::new(11);
+        for class in 0..10 {
+            let c = render_garment(class, &mut rng);
+            assert!(c.mass() > 8.0, "{} nearly blank", CLASS_NAMES[class as usize]);
+        }
+    }
+
+    #[test]
+    fn trouser_and_tshirt_differ_strongly() {
+        let mut rng = Rng::new(5);
+        let a = render_garment(0, &mut rng);
+        let b = render_garment(1, &mut rng);
+        let d: f64 = a.px.iter().zip(b.px.iter()).map(|(x, y)| (x - y).powi(2)).sum();
+        assert!(d > 20.0);
+    }
+
+    #[test]
+    fn upper_wear_cluster_is_confusable() {
+        // shirt vs pullover (both long-sleeved torsos) should be far closer
+        // than shirt vs trouser — the property that makes this task harder
+        // than digits.
+        let mean_image = |class: u32| -> Vec<f64> {
+            let mut rng = Rng::new(40 + class as u64);
+            let mut acc = vec![0.0; super::super::raster::PIXELS];
+            let n = 64;
+            for _ in 0..n {
+                let c = render_garment(class, &mut rng);
+                for (a, p) in acc.iter_mut().zip(c.px.iter()) {
+                    *a += p / n as f64;
+                }
+            }
+            acc
+        };
+        let dist = |a: &[f64], b: &[f64]| -> f64 { a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum() };
+        let shirt = mean_image(6);
+        let pullover = mean_image(2);
+        let trouser = mean_image(1);
+        assert!(
+            dist(&shirt, &pullover) * 2.0 < dist(&shirt, &trouser),
+            "pullover ({}) should be much closer to shirt than trouser ({}) is",
+            dist(&shirt, &pullover),
+            dist(&shirt, &trouser)
+        );
+    }
+}

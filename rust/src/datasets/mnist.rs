@@ -1,0 +1,130 @@
+//! Procedural MNIST-like handwritten-digit task.
+//!
+//! The real MNIST is a download; this generator synthesizes 28×28 grayscale
+//! digits with stroke-level structure (per-class stroke programs + random
+//! affine jitter, pen-width variation, blur, and pixel noise). The resulting
+//! task has MNIST-like statistics — sparse [0,1] pixels, ~98% 32-bit-float
+//! MLP baseline — which is what the paper's quantization study needs (see
+//! DESIGN.md §Substitutions).
+
+use super::raster::Canvas;
+use crate::util::Rng;
+
+/// Render one digit with the given jitter RNG.
+pub fn render_digit(class: u32, rng: &mut Rng) -> Canvas {
+    let mut c = Canvas::new();
+    let t = rng.range(1.6, 2.6); // pen thickness
+    let ink = rng.range(0.85, 1.0);
+    draw_glyph(&mut c, class, t, ink, rng);
+    // Affine jitter: small rotation, scale, translation.
+    let mut out = c.affine(rng.range(-0.16, 0.16), rng.range(0.82, 1.08), rng.range(-2.2, 2.2), rng.range(-2.2, 2.2));
+    out.blur(1);
+    out.noise(rng, 0.04);
+    out.clamp();
+    out
+}
+
+fn draw_glyph(c: &mut Canvas, class: u32, t: f64, ink: f64, rng: &mut Rng) {
+    use std::f64::consts::PI;
+    // Small per-stroke waviness.
+    let mut j = |amt: f64| rng.range(-amt, amt);
+    match class {
+        0 => {
+            c.arc(14.0 + j(0.8), 14.0 + j(0.8), 6.0 + j(1.0), 8.5 + j(1.0), 0.0, 2.0 * PI, t, ink);
+        }
+        1 => {
+            let x = 14.0 + j(1.0);
+            c.line(x - 4.0, 9.0 + j(1.0), x, 5.5 + j(0.6), t, ink); // flag
+            c.line(x, 5.5, x + j(0.8), 22.5 + j(0.8), t, ink); // stem
+        }
+        2 => {
+            c.arc(14.0 + j(0.6), 9.5, 5.5 + j(0.6), 4.5, -PI, 0.35, t, ink); // top hook
+            c.line(18.5 + j(0.8), 11.5, 8.5 + j(0.8), 22.0, t, ink); // diagonal
+            c.line(8.5, 22.0, 20.5 + j(0.8), 22.0 + j(0.5), t, ink); // base
+        }
+        3 => {
+            c.arc(13.0 + j(0.6), 9.5, 5.0, 4.0 + j(0.5), -PI * 0.9, PI * 0.5, t, ink);
+            c.arc(13.0 + j(0.6), 18.0, 5.5, 4.5 + j(0.5), -PI * 0.5, PI * 0.9, t, ink);
+        }
+        4 => {
+            let xv = 17.0 + j(0.8);
+            c.line(15.0 + j(0.8), 5.5, 8.0 + j(0.8), 16.5, t, ink); // left diagonal
+            c.line(8.0, 16.5, 20.5 + j(0.6), 16.5 + j(0.5), t, ink); // crossbar
+            c.line(xv, 10.0 + j(1.0), xv + j(0.8), 22.5, t, ink); // vertical
+        }
+        5 => {
+            c.line(18.5 + j(0.6), 6.0 + j(0.5), 10.0 + j(0.6), 6.0, t, ink); // top bar
+            c.line(10.0, 6.0, 9.2 + j(0.5), 13.0, t, ink); // left drop
+            c.arc(13.5 + j(0.6), 17.0, 5.5, 5.0 + j(0.6), -PI * 0.6, PI * 0.8, t, ink); // belly
+        }
+        6 => {
+            c.arc(14.5 + j(0.6), 12.0, 6.5, 7.5, PI * 0.55, PI * 1.45, t, ink); // spine
+            c.arc(13.5 + j(0.6), 17.5, 4.5, 4.5 + j(0.5), 0.0, 2.0 * PI, t, ink); // loop
+        }
+        7 => {
+            c.line(8.5 + j(0.6), 6.5 + j(0.5), 20.0 + j(0.6), 6.5, t, ink); // top bar
+            c.line(20.0, 6.5, 12.0 + j(1.0), 22.5 + j(0.6), t, ink); // diagonal
+        }
+        8 => {
+            c.arc(14.0 + j(0.5), 9.5, 4.3 + j(0.4), 4.0, 0.0, 2.0 * PI, t, ink);
+            c.arc(14.0 + j(0.5), 18.0, 5.2 + j(0.4), 4.6, 0.0, 2.0 * PI, t, ink);
+        }
+        9 => {
+            c.arc(14.5 + j(0.6), 10.0, 4.6, 4.4 + j(0.4), 0.0, 2.0 * PI, t, ink); // head loop
+            c.line(19.0 + j(0.5), 10.5, 16.5 + j(1.0), 22.5 + j(0.6), t, ink); // tail
+        }
+        _ => panic!("digit class out of range: {class}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes_with_ink() {
+        let mut rng = Rng::new(1);
+        for class in 0..10 {
+            let c = render_digit(class, &mut rng);
+            assert!(c.mass() > 10.0, "digit {class} nearly blank");
+            assert!(c.px.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = render_digit(5, &mut Rng::new(99));
+        let b = render_digit(5, &mut Rng::new(99));
+        assert_eq!(a.px.to_vec(), b.px.to_vec());
+    }
+
+    #[test]
+    fn jitter_varies_instances() {
+        let mut rng = Rng::new(4);
+        let a = render_digit(3, &mut rng);
+        let b = render_digit(3, &mut rng);
+        let diff: f64 = a.px.iter().zip(b.px.iter()).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "two renders identical — jitter broken");
+    }
+
+    #[test]
+    fn classes_are_distinguishable_in_pixel_space() {
+        // Mean images of distinct classes should differ a lot more than
+        // instances within a class — a weak separability check.
+        let mean_image = |class: u32| -> Vec<f64> {
+            let mut rng = Rng::new(7 + class as u64);
+            let mut acc = vec![0.0; super::super::raster::PIXELS];
+            for _ in 0..24 {
+                let c = render_digit(class, &mut rng);
+                for (a, p) in acc.iter_mut().zip(c.px.iter()) {
+                    *a += p / 24.0;
+                }
+            }
+            acc
+        };
+        let m1 = mean_image(1);
+        let m0 = mean_image(0);
+        let d01: f64 = m0.iter().zip(m1.iter()).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(d01 > 5.0, "digit 0 and 1 means too close: {d01}");
+    }
+}

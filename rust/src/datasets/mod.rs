@@ -1,0 +1,309 @@
+//! The five classification tasks of the paper's Table 1, with deterministic
+//! offline generation (see DESIGN.md §Substitutions for the real-vs-synthetic
+//! mapping) and the train/test protocol the evaluation uses.
+
+pub mod fashion;
+pub mod mnist;
+pub mod raster;
+pub mod tabular;
+
+use crate::util::Rng;
+
+/// One loaded task: flattened row-major features + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub x_train: Vec<f64>,
+    pub y_train: Vec<u32>,
+    pub x_test: Vec<f64>,
+    pub y_test: Vec<u32>,
+}
+
+/// Generation scale for the image tasks (tabular tasks are fixed-size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper-sized evaluation: 10 000 test images (Table 1's
+    /// "Inference Size"), 12 000 train.
+    Full,
+    /// Small smoke-test scale for unit/integration tests.
+    Small,
+}
+
+impl Scale {
+    fn image_sizes(self) -> (usize, usize) {
+        match self {
+            Scale::Full => (12_000, 10_000),
+            Scale::Small => (1_500, 500),
+        }
+    }
+}
+
+/// All dataset names, in the paper's Table 1 order.
+pub const ALL: [&str; 5] = ["wdbc", "iris", "mushroom", "mnist", "fashion"];
+
+/// Whether training uses a z-scored view of this task (folded back into the
+/// first layer for deployment). True for the tabular tasks, whose features
+/// live on wildly different natural scales; image pixels are already [0, 1]
+/// and train raw (per-pixel z-scoring explodes folded weights on
+/// near-constant border pixels).
+pub fn normalizes_for_training(name: &str) -> bool {
+    matches!(name, "wdbc" | "iris" | "mushroom")
+}
+
+/// The MLP topology used for each task (hidden layers only; input/output
+/// widths come from the data). Matches the paper's "three- or four-layer"
+/// feedforward networks — see DESIGN.md §6.
+pub fn hidden_layers(name: &str) -> Vec<usize> {
+    match name {
+        "wdbc" => vec![16, 8],
+        "iris" => vec![10, 8],
+        "mushroom" => vec![32],
+        "mnist" | "fashion" => vec![100],
+        _ => panic!("unknown dataset {name}"),
+    }
+}
+
+impl Dataset {
+    pub fn train_len(&self) -> usize {
+        self.y_train.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.y_test.len()
+    }
+
+    /// One test row.
+    pub fn test_row(&self, i: usize) -> &[f64] {
+        &self.x_test[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    pub fn train_row(&self, i: usize) -> &[f64] {
+        &self.x_train[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    /// Per-feature (mean, std) of the training split. Deployment keeps raw
+    /// features (Deep Positron quantizes the inputs the network actually
+    /// sees — the WDBC dynamic-range stress of Table 1 depends on this);
+    /// training normalizes internally and folds the transform back into the
+    /// first layer ([`crate::accel::mlp::fold_input_normalization`]).
+    pub fn feature_stats(&self) -> (Vec<f64>, Vec<f64>) {
+        let f = self.num_features;
+        let n = self.train_len();
+        let mut means = vec![0.0; f];
+        let mut stds = vec![0.0; f];
+        for j in 0..f {
+            let mut mean = 0.0;
+            for i in 0..n {
+                mean += self.x_train[i * f + j];
+            }
+            mean /= n as f64;
+            let mut var = 0.0;
+            for i in 0..n {
+                let d = self.x_train[i * f + j] - mean;
+                var += d * d;
+            }
+            means[j] = mean;
+            stds[j] = (var / n as f64).sqrt().max(1e-6);
+        }
+        (means, stds)
+    }
+
+    /// A z-score-normalized copy (training-time view of the task).
+    pub fn normalized(&self) -> (Dataset, Vec<f64>, Vec<f64>) {
+        let (means, stds) = self.feature_stats();
+        let f = self.num_features;
+        let mut out = self.clone();
+        for (i, v) in out.x_train.iter_mut().enumerate() {
+            *v = (*v - means[i % f]) / stds[i % f];
+        }
+        for (i, v) in out.x_test.iter_mut().enumerate() {
+            *v = (*v - means[i % f]) / stds[i % f];
+        }
+        (out, means, stds)
+    }
+}
+
+/// Split flattened (x, y) into train/test with a shuffled permutation.
+fn split(x: Vec<f64>, y: Vec<u32>, f: usize, test_len: usize, rng: &mut Rng) -> (Vec<f64>, Vec<u32>, Vec<f64>, Vec<u32>) {
+    let n = y.len();
+    assert!(test_len < n);
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut xtr = Vec::with_capacity((n - test_len) * f);
+    let mut ytr = Vec::with_capacity(n - test_len);
+    let mut xte = Vec::with_capacity(test_len * f);
+    let mut yte = Vec::with_capacity(test_len);
+    for (rank, &i) in order.iter().enumerate() {
+        let row = &x[i * f..(i + 1) * f];
+        if rank < test_len {
+            xte.extend_from_slice(row);
+            yte.push(y[i]);
+        } else {
+            xtr.extend_from_slice(row);
+            ytr.push(y[i]);
+        }
+    }
+    (xtr, ytr, xte, yte)
+}
+
+/// Generate an image task (balanced classes) at the given scale.
+fn image_task(name: &str, seed: u64, scale: Scale) -> Dataset {
+    let (train_n, test_n) = scale.image_sizes();
+    let render: fn(u32, &mut Rng) -> raster::Canvas = match name {
+        "mnist" => mnist::render_digit,
+        "fashion" => fashion::render_garment,
+        _ => unreachable!(),
+    };
+    let mut make = |count: usize, rng: &mut Rng| -> (Vec<f64>, Vec<u32>) {
+        let mut x = Vec::with_capacity(count * raster::PIXELS);
+        let mut y = Vec::with_capacity(count);
+        for i in 0..count {
+            let class = (i % 10) as u32;
+            let c = render(class, rng);
+            x.extend_from_slice(&c.px);
+            y.push(class);
+        }
+        // Shuffle rows so batches are class-mixed.
+        let mut order: Vec<usize> = (0..count).collect();
+        rng.shuffle(&mut order);
+        let mut xs = Vec::with_capacity(count * raster::PIXELS);
+        let mut ys = Vec::with_capacity(count);
+        for &i in &order {
+            xs.extend_from_slice(&x[i * raster::PIXELS..(i + 1) * raster::PIXELS]);
+            ys.push(y[i]);
+        }
+        (xs, ys)
+    };
+    let mut rng_train = Rng::new(seed ^ 0xA11CE);
+    let mut rng_test = Rng::new(seed ^ 0xB0B);
+    let (x_train, y_train) = make(train_n, &mut rng_train);
+    let (x_test, y_test) = make(test_n, &mut rng_test);
+    Dataset {
+        name: name.to_string(),
+        num_features: raster::PIXELS,
+        num_classes: 10,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    }
+}
+
+/// Load a task by name. Deterministic in (name, seed, scale). Test-split
+/// sizes for the tabular tasks match Table 1's "Inference Size" column
+/// (WDBC 190, Iris 50, Mushroom 2708).
+pub fn load(name: &str, seed: u64, scale: Scale) -> Dataset {
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    let ds = match name {
+        "iris" => {
+            let (x, y, f) = tabular::iris(&mut rng);
+            let (xtr, ytr, xte, yte) = split(x, y, f, 50, &mut rng);
+            Dataset { name: name.into(), num_features: f, num_classes: 3, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+        }
+        "wdbc" => {
+            let (x, y, f) = tabular::wdbc(&mut rng);
+            let (xtr, ytr, xte, yte) = split(x, y, f, 190, &mut rng);
+            Dataset { name: name.into(), num_features: f, num_classes: 2, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+        }
+        "mushroom" => {
+            let (x, y, f) = tabular::mushroom(&mut rng);
+            let (xtr, ytr, xte, yte) = split(x, y, f, 2708, &mut rng);
+            Dataset { name: name.into(), num_features: f, num_classes: 2, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+        }
+        "mnist" | "fashion" => return image_task(name, seed, scale),
+        _ => panic!("unknown dataset {name}"),
+    };
+    ds
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tabular_sizes_match_table1() {
+        assert_eq!(load("iris", 1, Scale::Small).test_len(), 50);
+        assert_eq!(load("wdbc", 1, Scale::Small).test_len(), 190);
+        assert_eq!(load("mushroom", 1, Scale::Small).test_len(), 2708);
+    }
+
+    #[test]
+    fn image_sizes_by_scale() {
+        let small = load("mnist", 1, Scale::Small);
+        assert_eq!(small.test_len(), 500);
+        assert_eq!(small.num_features, 784);
+        assert_eq!(small.num_classes, 10);
+    }
+
+    #[test]
+    fn deterministic_loads() {
+        let a = load("iris", 42, Scale::Small);
+        let b = load("iris", 42, Scale::Small);
+        assert_eq!(a.x_train, b.x_train);
+        assert_eq!(a.y_test, b.y_test);
+        let c = load("iris", 43, Scale::Small);
+        assert_ne!(a.x_train, c.x_train);
+    }
+
+    #[test]
+    fn normalized_copy_is_zero_mean_unit_var() {
+        let ds = load("wdbc", 7, Scale::Small);
+        let (norm, means, stds) = ds.normalized();
+        assert_eq!(means.len(), 30);
+        let f = norm.num_features;
+        let n = norm.train_len();
+        for j in [0, 15, 29] {
+            let mean: f64 = (0..n).map(|i| norm.x_train[i * f + j]).sum::<f64>() / n as f64;
+            let var: f64 = (0..n).map(|i| (norm.x_train[i * f + j] - mean).powi(2)).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-9);
+            assert!((var - 1.0).abs() < 1e-6);
+            assert!(stds[j] > 0.0);
+        }
+    }
+
+    #[test]
+    fn wdbc_is_raw_scale_with_wide_dynamic_range() {
+        // The Table 1 fixed-point-collapse depends on un-normalized inputs:
+        // the feature magnitudes must span several orders of magnitude.
+        let ds = load("wdbc", 7, Scale::Small);
+        let f = ds.num_features;
+        let col_mean = |j: usize| -> f64 {
+            (0..ds.train_len()).map(|i| ds.x_train[i * f + j].abs()).sum::<f64>() / ds.train_len() as f64
+        };
+        let biggest = (0..f).map(col_mean).fold(0.0f64, f64::max);
+        let smallest = (0..f).map(col_mean).fold(f64::INFINITY, f64::min);
+        assert!(biggest / smallest > 1e3, "dynamic range only {:.1}×", biggest / smallest);
+    }
+
+    #[test]
+    fn images_stay_in_unit_range() {
+        let ds = load("fashion", 3, Scale::Small);
+        assert!(ds.x_train.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn hidden_layer_registry_covers_all() {
+        for name in ALL {
+            assert!(!hidden_layers(name).is_empty());
+        }
+    }
+
+    #[test]
+    fn train_test_label_coverage() {
+        for name in ALL {
+            let ds = load(name, 9, Scale::Small);
+            let classes: std::collections::HashSet<u32> = ds.y_test.iter().copied().collect();
+            assert_eq!(classes.len(), ds.num_classes, "{name} test split missing classes");
+        }
+    }
+}

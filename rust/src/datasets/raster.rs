@@ -1,0 +1,251 @@
+//! A tiny 28×28 grayscale rasterizer used by the procedural MNIST- and
+//! Fashion-MNIST-like generators (the real datasets are downloads; the
+//! offline testbed synthesizes statistically-similar tasks — DESIGN.md
+//! §Substitutions).
+//!
+//! Primitives: thick anti-aliased-ish line segments, elliptical arcs, filled
+//! convex polygons, box blur, additive noise, and affine jitter. Pixels are
+//! f64 in [0, 1], row-major.
+
+use crate::util::Rng;
+
+pub const SIDE: usize = 28;
+pub const PIXELS: usize = SIDE * SIDE;
+
+/// A 28×28 grayscale canvas.
+#[derive(Clone)]
+pub struct Canvas {
+    pub px: [f64; PIXELS],
+}
+
+impl Default for Canvas {
+    fn default() -> Self {
+        Canvas { px: [0.0; PIXELS] }
+    }
+}
+
+impl Canvas {
+    pub fn new() -> Canvas {
+        Canvas::default()
+    }
+
+    #[inline]
+    fn put(&mut self, x: i32, y: i32, v: f64) {
+        if (0..SIDE as i32).contains(&x) && (0..SIDE as i32).contains(&y) {
+            let p = &mut self.px[y as usize * SIDE + x as usize];
+            *p = p.max(v);
+        }
+    }
+
+    /// Stamp a filled disc (the "pen") at a floating-point position.
+    fn stamp(&mut self, cx: f64, cy: f64, radius: f64, ink: f64) {
+        let r = radius.max(0.3);
+        let lo_x = (cx - r - 1.0).floor() as i32;
+        let hi_x = (cx + r + 1.0).ceil() as i32;
+        let lo_y = (cy - r - 1.0).floor() as i32;
+        let hi_y = (cy + r + 1.0).ceil() as i32;
+        for y in lo_y..=hi_y {
+            for x in lo_x..=hi_x {
+                let d = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2)).sqrt();
+                // Soft-edged pen: full ink inside, linear falloff over 1px.
+                let v = ink * (1.0 - (d - r).clamp(0.0, 1.0));
+                if v > 0.0 {
+                    self.put(x, y, v);
+                }
+            }
+        }
+    }
+
+    /// Thick line segment from (x0,y0) to (x1,y1).
+    pub fn line(&mut self, x0: f64, y0: f64, x1: f64, y1: f64, thickness: f64, ink: f64) {
+        let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+        let steps = (len * 3.0).ceil().max(1.0) as usize;
+        for i in 0..=steps {
+            let t = i as f64 / steps as f64;
+            self.stamp(x0 + (x1 - x0) * t, y0 + (y1 - y0) * t, thickness / 2.0, ink);
+        }
+    }
+
+    /// Elliptical arc centered (cx,cy), radii (rx,ry), angles in radians
+    /// from `a0` to `a1` (counter-clockwise, a1 > a0).
+    pub fn arc(&mut self, cx: f64, cy: f64, rx: f64, ry: f64, a0: f64, a1: f64, thickness: f64, ink: f64) {
+        let span = a1 - a0;
+        let steps = (span.abs() * rx.max(ry) * 2.0).ceil().max(4.0) as usize;
+        for i in 0..=steps {
+            let a = a0 + span * i as f64 / steps as f64;
+            self.stamp(cx + rx * a.cos(), cy + ry * a.sin(), thickness / 2.0, ink);
+        }
+    }
+
+    /// Filled polygon (scanline; handles convex and mildly concave shapes).
+    pub fn fill_poly(&mut self, pts: &[(f64, f64)], ink: f64) {
+        for y in 0..SIDE as i32 {
+            let fy = y as f64;
+            let mut xs: Vec<f64> = Vec::new();
+            for i in 0..pts.len() {
+                let (x0, y0) = pts[i];
+                let (x1, y1) = pts[(i + 1) % pts.len()];
+                if (y0 <= fy && y1 > fy) || (y1 <= fy && y0 > fy) {
+                    xs.push(x0 + (fy - y0) / (y1 - y0) * (x1 - x0));
+                }
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pair in xs.chunks(2) {
+                if let [a, b] = pair {
+                    for x in a.round() as i32..=b.round() as i32 {
+                        self.put(x, y, ink);
+                    }
+                }
+            }
+        }
+    }
+
+    /// 3×3 box blur, `passes` times (approximates gaussian smoothing).
+    pub fn blur(&mut self, passes: usize) {
+        for _ in 0..passes {
+            let src = self.px;
+            for y in 0..SIDE as i32 {
+                for x in 0..SIDE as i32 {
+                    let mut acc = 0.0;
+                    let mut n = 0.0;
+                    for dy in -1..=1 {
+                        for dx in -1..=1 {
+                            let (xx, yy) = (x + dx, y + dy);
+                            if (0..SIDE as i32).contains(&xx) && (0..SIDE as i32).contains(&yy) {
+                                acc += src[yy as usize * SIDE + xx as usize];
+                                n += 1.0;
+                            }
+                        }
+                    }
+                    self.px[y as usize * SIDE + x as usize] = acc / n;
+                }
+            }
+        }
+    }
+
+    /// Additive pixel noise, clamped to [0,1].
+    pub fn noise(&mut self, rng: &mut Rng, amplitude: f64) {
+        for p in self.px.iter_mut() {
+            *p = (*p + rng.range(-amplitude, amplitude)).clamp(0.0, 1.0);
+        }
+    }
+
+    /// Clamp all pixels to [0,1].
+    pub fn clamp(&mut self) {
+        for p in self.px.iter_mut() {
+            *p = p.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Apply an affine jitter: rotate by `theta`, scale, and translate —
+    /// resampled with bilinear interpolation around the canvas center.
+    pub fn affine(&self, theta: f64, scale: f64, dx: f64, dy: f64) -> Canvas {
+        self.affine_aniso(theta, scale, scale, dx, dy)
+    }
+
+    /// Anisotropic affine: separate x/y scales (garment "fit" variation).
+    pub fn affine_aniso(&self, theta: f64, scale_x: f64, scale_y: f64, dx: f64, dy: f64) -> Canvas {
+        let mut out = Canvas::new();
+        let c = (SIDE as f64 - 1.0) / 2.0;
+        let (sin, cos) = theta.sin_cos();
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                // Inverse map output pixel -> source coordinates.
+                let ox = x as f64 - c - dx;
+                let oy = y as f64 - c - dy;
+                let sx = (cos * ox + sin * oy) / scale_x + c;
+                let sy = (-sin * ox + cos * oy) / scale_y + c;
+                out.px[y * SIDE + x] = self.bilinear(sx, sy);
+            }
+        }
+        out
+    }
+
+    fn bilinear(&self, x: f64, y: f64) -> f64 {
+        let x0 = x.floor();
+        let y0 = y.floor();
+        let fx = x - x0;
+        let fy = y - y0;
+        let sample = |xi: f64, yi: f64| -> f64 {
+            let (xi, yi) = (xi as i32, yi as i32);
+            if (0..SIDE as i32).contains(&xi) && (0..SIDE as i32).contains(&yi) {
+                self.px[yi as usize * SIDE + xi as usize]
+            } else {
+                0.0
+            }
+        };
+        sample(x0, y0) * (1.0 - fx) * (1.0 - fy)
+            + sample(x0 + 1.0, y0) * fx * (1.0 - fy)
+            + sample(x0, y0 + 1.0) * (1.0 - fx) * fy
+            + sample(x0 + 1.0, y0 + 1.0) * fx * fy
+    }
+
+    /// Total ink (useful for sanity tests).
+    pub fn mass(&self) -> f64 {
+        self.px.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_canvas_has_no_mass() {
+        assert_eq!(Canvas::new().mass(), 0.0);
+    }
+
+    #[test]
+    fn line_leaves_ink_along_path() {
+        let mut c = Canvas::new();
+        c.line(4.0, 14.0, 24.0, 14.0, 2.0, 1.0);
+        assert!(c.px[14 * SIDE + 14] > 0.9);
+        assert!(c.px[14 * SIDE + 4] > 0.5);
+        assert_eq!(c.px[0], 0.0);
+    }
+
+    #[test]
+    fn fill_poly_fills_interior() {
+        let mut c = Canvas::new();
+        c.fill_poly(&[(6.0, 6.0), (22.0, 6.0), (22.0, 22.0), (6.0, 22.0)], 1.0);
+        assert!(c.px[14 * SIDE + 14] > 0.9); // center filled
+        assert_eq!(c.px[2 * SIDE + 2], 0.0); // outside untouched
+    }
+
+    #[test]
+    fn blur_conserves_roughly_and_smooths() {
+        let mut c = Canvas::new();
+        c.px[14 * SIDE + 14] = 1.0;
+        let before = c.mass();
+        c.blur(1);
+        assert!(c.px[14 * SIDE + 14] < 0.5);
+        assert!(c.px[13 * SIDE + 14] > 0.0);
+        assert!((c.mass() - before).abs() < 0.2);
+    }
+
+    #[test]
+    fn affine_identity_preserves_image() {
+        let mut c = Canvas::new();
+        c.line(6.0, 6.0, 20.0, 20.0, 2.0, 1.0);
+        let moved = c.affine(0.0, 1.0, 0.0, 0.0);
+        let diff: f64 = c.px.iter().zip(moved.px.iter()).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff < 1e-9);
+    }
+
+    #[test]
+    fn affine_translation_moves_mass() {
+        let mut c = Canvas::new();
+        c.stamp(10.0, 10.0, 2.0, 1.0);
+        let moved = c.affine(0.0, 1.0, 5.0, 3.0);
+        assert!(moved.px[13 * SIDE + 15] > 0.5);
+        assert!(moved.px[10 * SIDE + 10] < 0.5);
+    }
+
+    #[test]
+    fn arcs_draw_circles() {
+        let mut c = Canvas::new();
+        c.arc(14.0, 14.0, 8.0, 8.0, 0.0, std::f64::consts::TAU, 2.0, 1.0);
+        assert!(c.px[14 * SIDE + 22] > 0.5); // right edge of circle
+        assert!(c.px[14 * SIDE + 14] < 0.1); // hollow center
+    }
+}

@@ -1,0 +1,338 @@
+//! The Exact Multiply-and-Accumulate unit (paper §4.1, Algorithms 1, 2, 4).
+//!
+//! Each DNN neuron computes a weighted sum of its inputs. A conventional MAC
+//! rounds after every product, accumulating error that becomes substantial at
+//! ≤8-bit precision. The EMAC instead implements a variant of the Kulisch
+//! accumulator: every product is converted **exactly** to a wide fixed-point
+//! register (the *quire*), summed without rounding, and a single
+//! round-to-nearest (ties to even) happens in a deferred terminal stage.
+//!
+//! The accumulator width required for `k` products is Eq. (2):
+//!
+//! ```text
+//! w_a = ceil(log2(k)) + 2*ceil(log2(max/min)) + 2
+//! ```
+//!
+//! This module implements the *semantics* of the paper's three RTL designs
+//! (Figs. 2–4) rather than transliterating their pipeline signals: decoded
+//! operands are exact scaled integers (`mag × 2^exp`), products accumulate in
+//! an `i128` quire whose LSB weight is the smallest possible product unit,
+//! and the terminal stage rounds via [`Quantizer::quantize_exact`] — the
+//! identical mathematical function the RTL computes with its LZD/shift/round
+//! pipeline. Construction fails loudly if Eq. (2)'s width (plus fraction
+//! guard bits) exceeds the 127 usable quire bits; every format in the paper's
+//! [5, 8]-bit sweep fits.
+
+use super::exact::Exact;
+use super::tables::Quantizer;
+use super::Format;
+
+/// Paper Eq. (2): accumulator width for `k` products of a format with the
+/// given max/min magnitude ratio.
+pub fn quire_width_bits(k: usize, max: f64, min: f64) -> u32 {
+    let k = k.max(2);
+    let range = (max / min).log2().ceil() as u32;
+    (k as f64).log2().ceil() as u32 + 2 * range + 2
+}
+
+/// An exact multiply-and-accumulate unit bound to one format.
+///
+/// Usage mirrors the hardware: [`Emac::mac`] per (weight, activation) code
+/// pair, then [`Emac::result`] for the deferred round (+ optional ReLU for
+/// hidden layers), which also clears the quire for the next neuron.
+pub struct Emac<'q> {
+    quantizer: &'q Quantizer,
+    /// Decoded value per code, flattened for the hot loop (perf pass
+    /// iteration 3 — EXPERIMENTS.md §Perf): magnitude (0 ⇒ zero operand,
+    /// which annihilates the product), exponent relative to the quire LSB,
+    /// and sign. Non-canonical codes (NaR) carry `mag = u64::MAX` as a
+    /// debug-checked trap.
+    lut: Vec<PodVal>,
+    /// The quire: fixed-point accumulator in units of 2^lsb_exp.
+    quire: i128,
+    /// LSB weight exponent: 2 × (smallest canonical-value exponent).
+    lsb_exp: i32,
+    /// Products accumulated since the last `result()` (for width auditing).
+    count: usize,
+    /// Max products supported by the width check at construction.
+    max_k: usize,
+    /// Optional artificial quire narrowing (ablation study): accumulator
+    /// wraps two's-complement at this many bits, emulating an
+    /// under-provisioned register versus Eq. (2)'s sizing.
+    width_limit: Option<u32>,
+}
+
+/// Flattened decoded code word (hot-loop layout).
+#[derive(Debug, Clone, Copy)]
+struct PodVal {
+    /// Odd magnitude (canonical); 0 = value zero; u64::MAX = non-canonical.
+    mag: u64,
+    /// Binary exponent of the value.
+    exp: i32,
+    neg: bool,
+}
+
+const POD_INVALID: PodVal = PodVal { mag: u64::MAX, exp: 0, neg: false };
+
+impl<'q> Emac<'q> {
+    /// Build an EMAC for `fmt`, sized (and width-checked) for dot products of
+    /// length ≤ `max_k`.
+    pub fn new(fmt: &dyn Format, quantizer: &'q Quantizer, max_k: usize) -> Emac<'q> {
+        assert_eq!(fmt.name(), quantizer.name(), "format/quantizer mismatch");
+        let mut lut: Vec<PodVal> = vec![POD_INVALID; fmt.num_codes() as usize];
+        let mut min_exp = i32::MAX;
+        let mut max_top = i32::MIN;
+        for code in 0..fmt.num_codes() {
+            let code = code as u16;
+            if let Some(e) = quantizer.decode(code) {
+                if !e.is_zero() {
+                    let c = e.canonical();
+                    min_exp = min_exp.min(c.exp);
+                    max_top = max_top.max(c.exp + (128 - c.mag.leading_zeros()) as i32);
+                    debug_assert!(c.mag < u64::MAX as u128);
+                    lut[code as usize] = PodVal { mag: c.mag as u64, exp: c.exp, neg: c.sign };
+                } else {
+                    lut[code as usize] = PodVal { mag: 0, exp: 0, neg: false };
+                }
+            }
+        }
+        let lsb_exp = 2 * min_exp;
+        // Worst case |quire| < k × (2^max_top)^2; required bits relative to
+        // the LSB weight:
+        let need = (2 * max_top - lsb_exp) as u32 + (max_k.max(2) as f64).log2().ceil() as u32 + 1;
+        assert!(
+            need <= 126,
+            "{}: quire needs {need} bits (> i128) for k={max_k}; paper Eq.(2) gives {}",
+            fmt.name(),
+            quire_width_bits(max_k, fmt.max_value(), fmt.min_pos()),
+        );
+        Emac { quantizer, lut, quire: 0, lsb_exp, count: 0, max_k, width_limit: None }
+    }
+
+    /// Narrow the quire to `bits` (ablation: what happens when the
+    /// accumulator is smaller than Eq. (2) requires — it wraps, exactly as
+    /// an undersized two's-complement register would).
+    pub fn set_width_limit(&mut self, bits: u32) {
+        assert!((2..=127).contains(&bits));
+        self.width_limit = Some(bits);
+    }
+
+    #[inline]
+    fn wrap(&mut self) {
+        if let Some(w) = self.width_limit {
+            let shift = 128 - w;
+            self.quire = (self.quire << shift) >> shift;
+        }
+    }
+
+    /// One multiply-accumulate of two code words. Exact: no rounding happens
+    /// here (the defining EMAC property).
+    #[inline]
+    pub fn mac(&mut self, weight: u16, activation: u16) {
+        let w = self.lut[weight as usize];
+        let a = self.lut[activation as usize];
+        debug_assert!(w.mag != u64::MAX, "non-canonical weight code {weight:#x}");
+        debug_assert!(a.mag != u64::MAX, "non-canonical activation code {activation:#x}");
+        #[cfg(debug_assertions)]
+        {
+            self.count += 1;
+            assert!(self.count <= self.max_k, "EMAC overran its sized k");
+        }
+        if w.mag == 0 || a.mag == 0 {
+            return;
+        }
+        // Canonical magnitudes are ≤16-bit: the product fits u64 (u64×u64
+        // would be a 128-bit multiply — the narrower one is the hot-loop
+        // win of perf iteration 3).
+        let mag = w.mag * a.mag;
+        let shift = (w.exp + a.exp - self.lsb_exp) as u32;
+        let term = (mag as i128) << shift;
+        self.quire += if w.neg ^ a.neg { -term } else { term };
+        self.wrap();
+    }
+
+    /// Accumulate a raw pre-decoded exact value (used for biases, which Deep
+    /// Positron adds in the same exact domain before rounding).
+    #[inline]
+    pub fn accumulate_exact(&mut self, v: Exact) {
+        if v.is_zero() {
+            return;
+        }
+        let shift = v.exp - self.lsb_exp;
+        assert!(shift >= 0, "bias finer than quire LSB");
+        let term = (v.mag as i128) << shift as u32;
+        self.quire += if v.sign { -term } else { term };
+        self.wrap();
+    }
+
+    /// Current quire contents as an exact value (no rounding).
+    pub fn quire_value(&self) -> Exact {
+        Exact::new(self.quire < 0, self.quire.unsigned_abs(), self.lsb_exp)
+    }
+
+    /// Terminal stage: deferred round-to-nearest-even (+ ReLU for hidden
+    /// layers, applied to the rounded value as in the paper's fourth pipeline
+    /// stage). Returns the output code and clears the quire.
+    pub fn result(&mut self, relu: bool) -> u16 {
+        let v = self.quire_value();
+        self.quire = 0;
+        self.count = 0;
+        if relu && v.sign {
+            // ReLU(x) = max(x, 0): negative sums clamp to the zero code.
+            let (c, _) = self.quantizer.quantize_exact(&Exact::ZERO);
+            return c;
+        }
+        let (c, _) = self.quantizer.quantize_exact(&v);
+        c
+    }
+
+    /// Convenience: full dot product + optional ReLU in one call.
+    pub fn dot(&mut self, weights: &[u16], activations: &[u16], bias: Option<Exact>, relu: bool) -> u16 {
+        assert_eq!(weights.len(), activations.len());
+        for (&w, &a) in weights.iter().zip(activations) {
+            self.mac(w, a);
+        }
+        if let Some(b) = bias {
+            self.accumulate_exact(b);
+        }
+        self.result(relu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Fixed, Float, FormatSpec, Posit};
+    use super::*;
+
+    #[test]
+    fn eq2_matches_paper_example() {
+        // posit(8,0): max/min = 2^6/2^-6 = 2^12; k=256:
+        // w_a = 8 + 2*12 + 2 = 34
+        assert_eq!(quire_width_bits(256, 64.0, 1.0 / 64.0), 34);
+    }
+
+    #[test]
+    fn emac_is_exact_where_f64_is() {
+        // Sum of products must equal f64 reference when f64 is exact
+        // (posit8 es=0 products span ≤ 34 bits).
+        let fmt = Posit::new(8, 0);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 64);
+        let mut rng = 0x12345678u64;
+        for _ in 0..50 {
+            let mut wcodes = Vec::new();
+            let mut acodes = Vec::new();
+            let mut reference = 0.0f64;
+            for _ in 0..64 {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let w = (rng >> 16) as u16 & 0xFF;
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let a = (rng >> 16) as u16 & 0xFF;
+                let (w, a) = (if w == 0x80 { 0x7F } else { w }, if a == 0x80 { 0x7F } else { a });
+                reference += fmt.decode(w).to_f64() * fmt.decode(a).to_f64();
+                wcodes.push(w);
+                acodes.push(a);
+            }
+            let code = emac.dot(&wcodes, &acodes, None, false);
+            let expected = q.quantize_f64(reference).0;
+            assert_eq!(code, expected, "EMAC disagrees with exact f64 reference");
+        }
+    }
+
+    #[test]
+    fn deferred_rounding_beats_per_step_rounding() {
+        // The motivating EMAC property: accumulating many small products that
+        // would individually round away still contributes to the final sum.
+        let fmt = Posit::new(8, 0);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 200);
+        // 64 products of minpos*minpos = 2^-12 each; sum = 64 × 2^-12 = 2^-6
+        // = minpos exactly.
+        for _ in 0..64 {
+            emac.mac(0x01, 0x01);
+        }
+        let code = emac.result(false);
+        assert_eq!(q.decode(code).unwrap().to_f64(), 1.0 / 64.0);
+        // Per-step rounding would have produced 0 at every step for a
+        // non-exact 8-bit MAC (minpos² << minpos/2 is representable… the
+        // quire keeps it).
+    }
+
+    #[test]
+    fn relu_clamps_negative_sums() {
+        let fmt = Float::new(8, 4);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 8);
+        let (one, _) = q.quantize_f64(1.0);
+        let (neg_two, _) = q.quantize_f64(-2.0);
+        emac.mac(one, neg_two);
+        let code = emac.result(true);
+        assert_eq!(q.decode(code).unwrap().to_f64(), 0.0);
+        // Without ReLU:
+        emac.mac(one, neg_two);
+        let code = emac.result(false);
+        assert_eq!(q.decode(code).unwrap().to_f64(), -2.0);
+    }
+
+    #[test]
+    fn fixed_emac_saturates_at_terminal_round() {
+        // Algorithm 1's clip: sums beyond the format range clamp to ±max.
+        let fmt = Fixed::new(8, 5);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 64);
+        let (two, _) = q.quantize_f64(2.0);
+        for _ in 0..10 {
+            emac.mac(two, two); // 10 × 4 = 40 >> max (3.97)
+        }
+        let code = emac.result(false);
+        assert_eq!(q.decode(code).unwrap().to_f64(), q.max_value());
+    }
+
+    #[test]
+    fn bias_accumulates_exactly() {
+        let fmt = Posit::new(8, 1);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 8);
+        let (one, _) = q.quantize_f64(1.0);
+        emac.mac(one, one);
+        emac.accumulate_exact(Exact::from_f64(0.5));
+        let code = emac.result(false);
+        assert_eq!(q.decode(code).unwrap().to_f64(), 1.5);
+    }
+
+    #[test]
+    fn all_paper_formats_fit_i128_at_k784() {
+        // MNIST first layer: k = 784. Every swept format must construct.
+        for n in 5..=8 {
+            for spec in FormatSpec::sweep(n) {
+                let fmt = spec.build();
+                let q = Quantizer::new(fmt.as_ref());
+                let _ = Emac::new(fmt.as_ref(), &q, 784);
+            }
+        }
+    }
+
+    #[test]
+    fn posit_es2_wide_range_exactness() {
+        // posit8 es=2 has the widest quire (~108+ bits, beyond f64): check a
+        // cancellation case f64 would get wrong.
+        let fmt = Posit::new(8, 2);
+        let q = Quantizer::new(&fmt);
+        let mut emac = Emac::new(&fmt, &q, 16);
+        let (max_c, maxv) = q.quantize_f64(fmt.max_value());
+        assert_eq!(maxv, fmt.max_value());
+        let (min_c, minv) = q.quantize_f64(fmt.min_pos());
+        assert_eq!(minv, fmt.min_pos());
+        let (neg_max, _) = q.quantize_f64(-fmt.max_value());
+        // max² + min² − max² = min² = 2^-48 exactly in the quire — far below
+        // f64's 53-bit window around max² (an inexact MAC loses min² here).
+        // min² < minpos/2, and posits never round nonzero to zero, so the
+        // terminal round clamps to +minpos.
+        emac.mac(max_c, max_c);
+        emac.mac(min_c, min_c);
+        emac.mac(neg_max, max_c); // −max²
+        assert_eq!(emac.quire_value().canonical(), Exact::from_f64(fmt.min_pos()).mul(Exact::from_f64(fmt.min_pos())).canonical());
+        let code = emac.result(false);
+        assert_eq!(q.decode(code).unwrap().to_f64(), fmt.min_pos());
+    }
+}

@@ -1,0 +1,271 @@
+//! Exact (error-free) scaled-integer values.
+//!
+//! Every finite value representable by the ≤16-bit formats studied in the
+//! paper is of the form `(-1)^sign × mag × 2^exp` with a small integer
+//! magnitude. Representing decoded numbers this way lets the quire (EMAC)
+//! accumulate **exactly** — the defining property of the paper's
+//! exact-multiply-and-accumulate unit — and lets terminal rounding compare
+//! against round-to-nearest decision boundaries without any floating-point
+//! error.
+
+use std::cmp::Ordering;
+
+/// A sign-magnitude exact value `(-1)^sign × mag × 2^exp`.
+///
+/// `mag == 0` is canonical zero (sign must be `false`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Exact {
+    pub sign: bool,
+    pub mag: u128,
+    pub exp: i32,
+}
+
+impl Exact {
+    pub const ZERO: Exact = Exact { sign: false, mag: 0, exp: 0 };
+
+    /// Construct, normalizing zero.
+    pub fn new(sign: bool, mag: u128, exp: i32) -> Exact {
+        if mag == 0 {
+            Exact::ZERO
+        } else {
+            Exact { sign, mag, exp }
+        }
+    }
+
+    /// Canonicalize so that `mag` is odd (minimal mag, maximal exp).
+    /// Zero is returned unchanged.
+    pub fn canonical(self) -> Exact {
+        if self.mag == 0 {
+            return Exact::ZERO;
+        }
+        let tz = self.mag.trailing_zeros();
+        Exact { sign: self.sign, mag: self.mag >> tz, exp: self.exp + tz as i32 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mag == 0
+    }
+
+    /// Exact product. Panics on u128 overflow (cannot happen for decoded
+    /// format values, whose magnitudes fit in ≤ 16 bits).
+    pub fn mul(self, rhs: Exact) -> Exact {
+        Exact::new(self.sign ^ rhs.sign, self.mag.checked_mul(rhs.mag).expect("exact mul overflow"), self.exp + rhs.exp)
+    }
+
+    /// Exact sum. Panics if the aligned magnitudes overflow u128.
+    pub fn add(self, rhs: Exact) -> Exact {
+        if self.is_zero() {
+            return rhs;
+        }
+        if rhs.is_zero() {
+            return self;
+        }
+        let e = self.exp.min(rhs.exp);
+        let a = align_mag(self.mag, (self.exp - e) as u32);
+        let b = align_mag(rhs.mag, (rhs.exp - e) as u32);
+        match (self.sign, rhs.sign) {
+            (false, false) => Exact::new(false, a + b, e),
+            (true, true) => Exact::new(true, a + b, e),
+            (sa, _sb) => match a.cmp(&b) {
+                Ordering::Equal => Exact::ZERO,
+                Ordering::Greater => Exact::new(sa, a - b, e),
+                Ordering::Less => Exact::new(!sa, b - a, e),
+            },
+        }
+    }
+
+    pub fn neg(self) -> Exact {
+        if self.is_zero() {
+            self
+        } else {
+            Exact { sign: !self.sign, ..self }
+        }
+    }
+
+    pub fn abs(self) -> Exact {
+        Exact { sign: false, ..self }
+    }
+
+    /// Convert to f64. Exact whenever `mag` has ≤ 53 significant bits and the
+    /// exponent is in range — always true for decoded format values and their
+    /// pairwise sums (rounding boundaries).
+    pub fn to_f64(self) -> f64 {
+        let m = self.mag as f64; // exact for mag < 2^53
+        debug_assert!(self.mag < (1u128 << 53), "Exact::to_f64 would round");
+        let v = m * pow2(self.exp);
+        if self.sign {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Exact comparison of signed values.
+    pub fn cmp_exact(&self, rhs: &Exact) -> Ordering {
+        match (self.is_zero(), rhs.is_zero()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => {
+                if rhs.sign {
+                    Ordering::Greater
+                } else {
+                    Ordering::Less
+                }
+            }
+            (false, true) => {
+                if self.sign {
+                    Ordering::Less
+                } else {
+                    Ordering::Greater
+                }
+            }
+            (false, false) => match (self.sign, rhs.sign) {
+                (false, true) => Ordering::Greater,
+                (true, false) => Ordering::Less,
+                (false, false) => cmp_mag(self, rhs),
+                (true, true) => cmp_mag(rhs, self),
+            },
+        }
+    }
+
+    /// Compare magnitudes: |self| vs |rhs|, exactly.
+    pub fn cmp_mag(&self, rhs: &Exact) -> Ordering {
+        if self.is_zero() || rhs.is_zero() {
+            return self.mag.cmp(&rhs.mag);
+        }
+        cmp_mag(self, rhs)
+    }
+
+    /// Parse an f64 into an exact value. Panics on NaN/Inf.
+    pub fn from_f64(x: f64) -> Exact {
+        assert!(x.is_finite(), "Exact::from_f64 of non-finite");
+        if x == 0.0 {
+            return Exact::ZERO;
+        }
+        let bits = x.to_bits();
+        let sign = bits >> 63 == 1;
+        let biased = ((bits >> 52) & 0x7ff) as i32;
+        let frac = bits & ((1u64 << 52) - 1);
+        let (mag, exp) = if biased == 0 {
+            (frac as u128, -1074)
+        } else {
+            ((frac | (1 << 52)) as u128, biased - 1075)
+        };
+        Exact::new(sign, mag, exp).canonical()
+    }
+}
+
+/// Magnitude comparison for two nonzero values.
+fn cmp_mag(a: &Exact, b: &Exact) -> Ordering {
+    // Compare a.mag × 2^a.exp vs b.mag × 2^b.exp without overflow: compare
+    // "bit positions" first, then aligned magnitudes.
+    let top_a = a.exp as i64 + (128 - a.mag.leading_zeros()) as i64;
+    let top_b = b.exp as i64 + (128 - b.mag.leading_zeros()) as i64;
+    if top_a != top_b {
+        return top_a.cmp(&top_b);
+    }
+    // Same magnitude order; align to common exponent. The shift is bounded by
+    // the difference of leading-zero counts (< 128) and cannot overflow after
+    // canonicalization for format-derived values; guard anyway.
+    let a = a.canonical();
+    let b = b.canonical();
+    let e = a.exp.min(b.exp);
+    let sa = (a.exp - e) as u32;
+    let sb = (b.exp - e) as u32;
+    if sa >= 128 || a.mag.leading_zeros() < sa {
+        return Ordering::Greater; // a needs more headroom than exists => larger
+    }
+    if sb >= 128 || b.mag.leading_zeros() < sb {
+        return Ordering::Less;
+    }
+    (a.mag << sa).cmp(&(b.mag << sb))
+}
+
+fn align_mag(mag: u128, shift: u32) -> u128 {
+    assert!(shift < 128 && mag.leading_zeros() >= shift, "Exact::add alignment overflow");
+    mag << shift
+}
+
+/// 2^e as f64 (exact), including the subnormal range.
+pub fn pow2(e: i32) -> f64 {
+    if (-1022..=1023).contains(&e) {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else if (-1074..-1022).contains(&e) {
+        f64::from_bits(1u64 << (e + 1074) as u32)
+    } else if e < -1074 {
+        0.0
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_canonical() {
+        assert_eq!(Exact::new(true, 0, 5), Exact::ZERO);
+        assert!(Exact::ZERO.is_zero());
+    }
+
+    #[test]
+    fn canonicalize_strips_trailing_zeros() {
+        let v = Exact::new(false, 48, -3).canonical();
+        assert_eq!(v, Exact { sign: false, mag: 3, exp: 1 });
+        assert_eq!(v.to_f64(), 6.0);
+    }
+
+    #[test]
+    fn add_mixed_signs() {
+        let a = Exact::new(false, 3, 0); // 3
+        let b = Exact::new(true, 1, 1); // -2
+        assert_eq!(a.add(b).to_f64(), 1.0);
+        assert_eq!(b.add(a).to_f64(), 1.0);
+        assert_eq!(a.add(a.neg()), Exact::ZERO);
+    }
+
+    #[test]
+    fn mul_signs_and_exponents() {
+        let a = Exact::new(true, 3, -2); // -0.75
+        let b = Exact::new(false, 5, 1); // 10
+        assert_eq!(a.mul(b).to_f64(), -7.5);
+    }
+
+    #[test]
+    fn cmp_across_scales() {
+        let small = Exact::new(false, 1, -40);
+        let big = Exact::new(false, 1, 40);
+        assert_eq!(small.cmp_exact(&big), Ordering::Less);
+        assert_eq!(big.cmp_exact(&small), Ordering::Greater);
+        assert_eq!(big.neg().cmp_exact(&small), Ordering::Less);
+        assert_eq!(Exact::ZERO.cmp_exact(&small.neg()), Ordering::Greater);
+    }
+
+    #[test]
+    fn cmp_equal_after_alignment() {
+        let a = Exact::new(false, 4, 0);
+        let b = Exact::new(false, 1, 2);
+        assert_eq!(a.cmp_exact(&b), Ordering::Equal);
+    }
+
+    #[test]
+    fn from_f64_round_trips() {
+        for &x in &[1.0, -1.5, 0.0, 0.09375, -1024.0, 0.1] {
+            let e = Exact::from_f64(x);
+            if x == 0.1 {
+                // 0.1 is not a dyadic rational but from_f64 captures its exact
+                // f64 bit value.
+                assert_eq!(e.to_f64(), 0.1);
+            } else {
+                assert_eq!(e.to_f64(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_in_normal_range() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-10), 1.0 / 1024.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Two's-complement fixed-point, §4.2 of the paper.
+//!
+//! Parameterized by total bits `n` and fractional bits `Q` (`n > Q`):
+//! a code is a signed n-bit integer scaled by `2^−Q`. Characteristics:
+//!
+//! ```text
+//! max = 2^−Q × (2^(n−1) − 1)
+//! min = 2^−Q                      (smallest nonzero magnitude)
+//! ```
+//!
+//! Arithmetic saturates (Algorithm 1 clips to the most positive / most
+//! negative code on accumulator overflow).
+
+use super::exact::Exact;
+use super::{Decoded, Format};
+
+/// Fixed-point format descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fixed {
+    n: u32,
+    q: u32,
+}
+
+impl Fixed {
+    pub fn new(n: u32, q: u32) -> Fixed {
+        assert!((2..=16).contains(&n), "fixed n out of range: {n}");
+        assert!(q < n, "fixed Q must satisfy Q < n: q={q}, n={n}");
+        Fixed { n, q }
+    }
+
+    pub fn q(&self) -> u32 {
+        self.q
+    }
+
+    /// Interpret a code as the signed integer it stores.
+    pub fn to_int(&self, code: u16) -> i32 {
+        let code = (code & self.mask()) as i32;
+        let sign_bit = 1i32 << (self.n - 1);
+        if code & sign_bit != 0 {
+            code - (1i32 << self.n)
+        } else {
+            code
+        }
+    }
+
+    /// Pack a signed integer (must fit) into a code.
+    pub fn from_int(&self, v: i32) -> u16 {
+        debug_assert!(v >= -(1i32 << (self.n - 1)) && v < (1i32 << (self.n - 1)));
+        (v as u32 as u16) & self.mask()
+    }
+
+    /// Most positive / most negative stored integers.
+    pub fn int_max(&self) -> i32 {
+        (1i32 << (self.n - 1)) - 1
+    }
+
+    pub fn int_min(&self) -> i32 {
+        -(1i32 << (self.n - 1))
+    }
+}
+
+impl Format for Fixed {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("fixed{}q{}", self.n, self.q)
+    }
+
+    fn decode(&self, code: u16) -> Decoded {
+        let v = self.to_int(code);
+        if v == 0 {
+            return Decoded::Zero;
+        }
+        Decoded::Finite(Exact::new(v < 0, v.unsigned_abs() as u128, -(self.q as i32)).canonical())
+    }
+
+    /// Every fixed-point pattern is a value.
+    fn is_canonical(&self, _code: u16) -> bool {
+        true
+    }
+
+    fn max_value(&self) -> f64 {
+        self.int_max() as f64 * super::exact::pow2(-(self.q as i32))
+    }
+
+    fn min_pos(&self) -> f64 {
+        super::exact::pow2(-(self.q as i32))
+    }
+
+    fn underflows_to_zero(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed8_q5_known_values() {
+        let f = Fixed::new(8, 5);
+        assert_eq!(f.decode(0).to_f64(), 0.0);
+        assert_eq!(f.decode(32).to_f64(), 1.0); // 32 × 2^-5
+        assert_eq!(f.decode(1).to_f64(), 1.0 / 32.0);
+        assert_eq!(f.decode(0x7F).to_f64(), 127.0 / 32.0);
+        assert_eq!(f.decode(0x80).to_f64(), -4.0); // -128 × 2^-5
+        assert_eq!(f.decode(0xFF).to_f64(), -1.0 / 32.0);
+        assert_eq!(f.max_value(), 127.0 / 32.0);
+        assert_eq!(f.min_pos(), 1.0 / 32.0);
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        let f = Fixed::new(8, 4);
+        for v in -128..=127 {
+            assert_eq!(f.to_int(f.from_int(v)), v);
+        }
+    }
+
+    #[test]
+    fn monotone_in_signed_order() {
+        let f = Fixed::new(6, 3);
+        let mut prev = f64::NEG_INFINITY;
+        for v in f.int_min()..=f.int_max() {
+            let x = f.decode(f.from_int(v)).to_f64();
+            assert!(x > prev);
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn q_zero_is_integers() {
+        let f = Fixed::new(8, 0);
+        assert_eq!(f.decode(5).to_f64(), 5.0);
+        assert_eq!(f.max_value(), 127.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Low-precision IEEE-754-style floating point, §4.3 of the paper.
+//!
+//! Parameterized by `w_e` exponent bits and `w_f = n − 1 − w_e` fraction
+//! bits. Matching the paper's Deep Positron implementation, NaN and ±Inf are
+//! **not** representable: the all-ones exponent field is left unused (the
+//! biased exponent saturates at `exp_max = 2^w_e − 2`), and the redundant
+//! negative-zero pattern is non-canonical. Subnormals (biased exponent 0)
+//! are supported. Characteristics (paper §4.3):
+//!
+//! ```text
+//! bias    = 2^(w_e − 1) − 1
+//! exp_max = 2^w_e − 2
+//! max     = 2^(exp_max − bias) × (2 − 2^−w_f)
+//! min     = 2^(1 − bias) × 2^−w_f          (smallest subnormal)
+//! ```
+
+use super::exact::Exact;
+use super::{Decoded, Format};
+
+/// Float format descriptor: n total bits, `we` exponent bits,
+/// `wf = n - 1 - we` fraction bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Float {
+    n: u32,
+    we: u32,
+}
+
+impl Float {
+    pub fn new(n: u32, we: u32) -> Float {
+        assert!((3..=16).contains(&n), "float n out of range: {n}");
+        assert!(we >= 1 && we <= n - 2, "float we out of range: we={we}, n={n}");
+        Float { n, we }
+    }
+
+    pub fn we(&self) -> u32 {
+        self.we
+    }
+
+    pub fn wf(&self) -> u32 {
+        self.n - 1 - self.we
+    }
+
+    pub fn bias(&self) -> i32 {
+        (1i32 << (self.we - 1)) - 1
+    }
+
+    /// Largest *used* biased exponent (`2^w_e − 2`; all-ones is reserved).
+    pub fn exp_max(&self) -> i32 {
+        (1i32 << self.we) - 2
+    }
+
+    fn fields(&self, code: u16) -> (bool, u32, u32) {
+        let code = code & self.mask();
+        let sign = (code >> (self.n - 1)) & 1 == 1;
+        let e = ((code >> self.wf()) & (((1u32 << self.we) - 1) as u16)) as u32;
+        let f = (code & (((1u32 << self.wf()) - 1) as u16)) as u32;
+        (sign, e, f)
+    }
+
+    /// Assemble a code from fields.
+    pub fn pack(&self, sign: bool, e: u32, f: u32) -> u16 {
+        debug_assert!(e < (1 << self.we) && f < (1 << self.wf()));
+        (((sign as u32) << (self.n - 1)) | (e << self.wf()) | f) as u16
+    }
+}
+
+impl Format for Float {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("float{}we{}", self.n, self.we)
+    }
+
+    fn decode(&self, code: u16) -> Decoded {
+        let (sign, e, f) = self.fields(code);
+        let wf = self.wf();
+        if e == 0 {
+            // Subnormal: (-1)^s × 0.f × 2^(1-bias)
+            if f == 0 {
+                return Decoded::Zero; // ±0 both decode to zero
+            }
+            let exp = 1 - self.bias() - wf as i32;
+            return Decoded::Finite(Exact::new(sign, f as u128, exp).canonical());
+        }
+        // Normal: (-1)^s × 1.f × 2^(e-bias). The reserved all-ones exponent
+        // still *decodes* by the same formula (it is merely never encoded);
+        // is_canonical excludes it.
+        let mag = (1u128 << wf) | f as u128;
+        let exp = e as i32 - self.bias() - wf as i32;
+        Decoded::Finite(Exact::new(sign, mag, exp).canonical())
+    }
+
+    fn is_canonical(&self, code: u16) -> bool {
+        let (sign, e, f) = self.fields(code);
+        if e == ((1u32 << self.we) - 1) {
+            return false; // reserved (would-be Inf/NaN) exponent
+        }
+        if e == 0 && f == 0 && sign {
+            return false; // negative zero is redundant
+        }
+        true
+    }
+
+    fn max_value(&self) -> f64 {
+        let wf = self.wf();
+        super::exact::pow2(self.exp_max() - self.bias()) * (2.0 - super::exact::pow2(-(wf as i32)))
+    }
+
+    fn min_pos(&self) -> f64 {
+        super::exact::pow2(1 - self.bias() - self.wf() as i32)
+    }
+
+    fn underflows_to_zero(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(f: &Float, code: u16) -> f64 {
+        f.decode(code).to_f64()
+    }
+
+    #[test]
+    fn float8_we4_known_values() {
+        // we=4, wf=3, bias=7 — the classic "IEEE-like" 8-bit float (E4M3
+        // field layout, but with no Inf/NaN per the paper).
+        let f = Float::new(8, 4);
+        assert_eq!(f.bias(), 7);
+        assert_eq!(f.wf(), 3);
+        assert_eq!(val(&f, f.pack(false, 7, 0)), 1.0);
+        assert_eq!(val(&f, f.pack(false, 7, 4)), 1.5);
+        assert_eq!(val(&f, f.pack(false, 8, 0)), 2.0);
+        assert_eq!(val(&f, f.pack(true, 7, 0)), -1.0);
+        // Subnormals: 0.f × 2^-6
+        assert_eq!(val(&f, f.pack(false, 0, 1)), 2.0f64.powi(-9)); // minpos
+        assert_eq!(val(&f, f.pack(false, 0, 7)), 7.0 * 2.0f64.powi(-9));
+        // max = 2^(14-7) × (2 - 2^-3) = 128 × 1.875 = 240
+        assert_eq!(f.max_value(), 240.0);
+        assert_eq!(val(&f, f.pack(false, 14, 7)), 240.0);
+        assert_eq!(f.min_pos(), 2.0f64.powi(-9));
+    }
+
+    #[test]
+    fn float8_we5_range() {
+        let f = Float::new(8, 5);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.wf(), 2);
+        // max = 2^(30-15) × (2 - 2^-2) = 32768 × 1.75
+        assert_eq!(f.max_value(), 57344.0);
+        assert_eq!(f.min_pos(), 2.0f64.powi(-16));
+    }
+
+    #[test]
+    fn zero_codes() {
+        let f = Float::new(8, 4);
+        assert_eq!(f.decode(0x00), Decoded::Zero);
+        assert_eq!(f.decode(0x80), Decoded::Zero); // -0 decodes to 0
+        assert!(f.is_canonical(0x00));
+        assert!(!f.is_canonical(0x80)); // but is not canonical
+    }
+
+    #[test]
+    fn reserved_exponent_not_canonical() {
+        let f = Float::new(8, 4);
+        for frac in 0..8u32 {
+            assert!(!f.is_canonical(f.pack(false, 15, frac)));
+            assert!(!f.is_canonical(f.pack(true, 15, frac)));
+        }
+        // Canonical code count: 2^8 - 2×2^3 (reserved exp) - 1 (neg zero)
+        let count = (0u16..256).filter(|&c| f.is_canonical(c)).count();
+        assert_eq!(count, 256 - 16 - 1);
+    }
+
+    #[test]
+    fn positive_codes_monotone() {
+        for we in 2..=5 {
+            let f = Float::new(8, we);
+            let mut prev = -1.0;
+            for code in 0..(1u16 << 7) {
+                if !f.is_canonical(code) {
+                    continue;
+                }
+                let v = val(&f, code);
+                assert!(v > prev, "float8we{we} not monotone at {code:#04x}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn small_float_5bit() {
+        // n=5, we=2, wf=2, bias=1
+        let f = Float::new(5, 2);
+        assert_eq!(val(&f, f.pack(false, 1, 0)), 1.0);
+        assert_eq!(val(&f, f.pack(false, 2, 2)), 3.0);
+        assert_eq!(f.max_value(), 2.0 * 1.75);
+    }
+}

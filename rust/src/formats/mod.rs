@@ -1,0 +1,235 @@
+//! Bit-exact software implementations of the three numerical formats the
+//! paper compares at equal bit-width — **posit(n, es)**, **floating
+//! point(w_e, w_f)** (subnormal-capable, no NaN/Inf, per §4.3), and
+//! **fixed-point(n, Q)** (§4.2) — plus the exact multiply-and-accumulate
+//! (EMAC, §4.1) built on a Kulisch-style quire.
+//!
+//! These are the golden reference for the whole repository: the table-driven
+//! quantizer ([`tables::Quantizer`]), the Deep Positron accelerator simulator
+//! (`crate::accel`), and the AOT/XLA fast path are all validated against the
+//! decode/encode/EMAC semantics defined here.
+
+pub mod emac;
+pub mod exact;
+pub mod fixed;
+pub mod float;
+pub mod ops;
+pub mod posit;
+pub mod tables;
+
+pub use emac::{quire_width_bits, Emac};
+pub use exact::Exact;
+pub use fixed::Fixed;
+pub use float::Float;
+pub use posit::Posit;
+pub use tables::Quantizer;
+
+/// Result of decoding a code word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decoded {
+    /// The (single, for posit/fixed) zero pattern.
+    Zero,
+    /// Posit "Not a Real" (`10...0`). Never produced by Deep Positron
+    /// datapaths (all DNN tensors are real-valued, §4.4) but decodable.
+    NaR,
+    /// A finite nonzero value `(-1)^sign × mag × 2^exp`, exactly.
+    Finite(Exact),
+}
+
+impl Decoded {
+    /// The value as f64 (exact for all ≤16-bit formats). NaR maps to NaN.
+    pub fn to_f64(&self) -> f64 {
+        match self {
+            Decoded::Zero => 0.0,
+            Decoded::NaR => f64::NAN,
+            Decoded::Finite(e) => e.to_f64(),
+        }
+    }
+
+    /// The value as an [`Exact`]; NaR panics, Zero is exact zero.
+    pub fn to_exact(&self) -> Exact {
+        match self {
+            Decoded::Zero => Exact::ZERO,
+            Decoded::NaR => panic!("NaR has no exact value"),
+            Decoded::Finite(e) => *e,
+        }
+    }
+}
+
+/// A low-precision numerical format: a total bit-width `n ≤ 16` plus a
+/// bijection between (most) n-bit code words and real values.
+///
+/// Encoding (round-to-nearest, ties-to-even-code — the rounding the paper
+/// uses for direct quantization, §5) is provided by [`tables::Quantizer`],
+/// which works uniformly for any `Format` via its sorted value table.
+pub trait Format {
+    /// Total bit-width n (2..=16).
+    fn n(&self) -> u32;
+
+    /// Short machine name, e.g. `posit8es1`, `float8we4`, `fixed8q5`.
+    fn name(&self) -> String;
+
+    /// Decode an n-bit code word (stored in the low n bits of `code`).
+    fn decode(&self, code: u16) -> Decoded;
+
+    /// Does this code word denote a usable finite value (including zero)?
+    /// Excludes NaR, reserved patterns, and redundant encodings (e.g. the
+    /// IEEE-style negative zero, which the paper lists among float's
+    /// deficiencies).
+    fn is_canonical(&self, code: u16) -> bool;
+
+    /// Largest finite magnitude.
+    fn max_value(&self) -> f64;
+
+    /// Smallest nonzero magnitude.
+    fn min_pos(&self) -> f64;
+
+    /// Whether a nonzero real rounds to zero when below `min_pos/2`
+    /// (floats and fixed underflow; posits clamp to ±minpos instead).
+    fn underflows_to_zero(&self) -> bool;
+
+    /// Number of code words, `2^n`.
+    fn num_codes(&self) -> u32 {
+        1u32 << self.n()
+    }
+
+    /// Mask of the low n bits.
+    fn mask(&self) -> u16 {
+        if self.n() >= 16 {
+            u16::MAX
+        } else {
+            ((1u32 << self.n()) - 1) as u16
+        }
+    }
+}
+
+/// A dynamically-typed format descriptor: the unit of sweeping in the
+/// paper's evaluation (format family × bit-width × sub-parameter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatSpec {
+    Posit { n: u32, es: u32 },
+    Float { n: u32, we: u32 },
+    Fixed { n: u32, q: u32 },
+}
+
+impl FormatSpec {
+    /// Instantiate the codec.
+    pub fn build(&self) -> Box<dyn Format + Send + Sync> {
+        match *self {
+            FormatSpec::Posit { n, es } => Box::new(Posit::new(n, es)),
+            FormatSpec::Float { n, we } => Box::new(Float::new(n, we)),
+            FormatSpec::Fixed { n, q } => Box::new(Fixed::new(n, q)),
+        }
+    }
+
+    pub fn n(&self) -> u32 {
+        match *self {
+            FormatSpec::Posit { n, .. } | FormatSpec::Float { n, .. } | FormatSpec::Fixed { n, .. } => n,
+        }
+    }
+
+    /// The family label used in the paper's tables/figures.
+    pub fn family(&self) -> &'static str {
+        match self {
+            FormatSpec::Posit { .. } => "posit",
+            FormatSpec::Float { .. } => "float",
+            FormatSpec::Fixed { .. } => "fixed",
+        }
+    }
+
+    /// The sub-parameter the paper sweeps (es, w_e, or Q).
+    pub fn sub_param(&self) -> u32 {
+        match *self {
+            FormatSpec::Posit { es, .. } => es,
+            FormatSpec::Float { we, .. } => we,
+            FormatSpec::Fixed { q, .. } => q,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.build().name()
+    }
+
+    /// Parse names like `posit8es1`, `float6we3`, `fixed8q5`.
+    pub fn parse(s: &str) -> Option<FormatSpec> {
+        fn split(s: &str, mid: &str) -> Option<(u32, u32)> {
+            let idx = s.find(mid)?;
+            let a = s[..idx].parse().ok()?;
+            let b = s[idx + mid.len()..].parse().ok()?;
+            Some((a, b))
+        }
+        if let Some(rest) = s.strip_prefix("posit") {
+            let (n, es) = split(rest, "es")?;
+            return Some(FormatSpec::Posit { n, es });
+        }
+        if let Some(rest) = s.strip_prefix("float") {
+            let (n, we) = split(rest, "we")?;
+            return Some(FormatSpec::Float { n, we });
+        }
+        if let Some(rest) = s.strip_prefix("fixed") {
+            let (n, q) = split(rest, "q")?;
+            return Some(FormatSpec::Fixed { n, q });
+        }
+        None
+    }
+
+    /// The sweep grid the paper evaluates (§5): for a given bit-width,
+    /// posit es ∈ {0,1,2}, float w_e ∈ {2..=5}, fixed Q ∈ {1..=n-2}.
+    /// (es is capped at n−3 so the regime terminator + es bits fit; at
+    /// n ≥ 5 the full paper range {0,1,2} is available.)
+    pub fn sweep(n: u32) -> Vec<FormatSpec> {
+        let mut v = Vec::new();
+        for es in 0..=2u32.min(n.saturating_sub(3)) {
+            v.push(FormatSpec::Posit { n, es });
+        }
+        for we in 2..=5u32.min(n.saturating_sub(2)) {
+            v.push(FormatSpec::Float { n, we });
+        }
+        for q in 1..=n.saturating_sub(2) {
+            v.push(FormatSpec::Fixed { n, q });
+        }
+        v
+    }
+
+    /// All specs of one family at bit-width n.
+    pub fn sweep_family(n: u32, family: &str) -> Vec<FormatSpec> {
+        Self::sweep(n).into_iter().filter(|s| s.family() == family).collect()
+    }
+}
+
+impl std::fmt::Display for FormatSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["posit8es1", "posit5es0", "float8we4", "fixed8q5", "fixed6q3"] {
+            let spec = FormatSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+        }
+        assert!(FormatSpec::parse("posit8").is_none());
+        assert!(FormatSpec::parse("bogus8es1").is_none());
+    }
+
+    #[test]
+    fn sweep_covers_all_families() {
+        let specs = FormatSpec::sweep(8);
+        assert!(specs.iter().any(|s| s.family() == "posit"));
+        assert!(specs.iter().any(|s| s.family() == "float"));
+        assert!(specs.iter().any(|s| s.family() == "fixed"));
+        // posit es 0..=2, float we 2..=5, fixed q 1..=6
+        assert_eq!(specs.len(), 3 + 4 + 6);
+    }
+
+    #[test]
+    fn sweep_family_filters() {
+        assert!(FormatSpec::sweep_family(8, "posit").iter().all(|s| s.family() == "posit"));
+        assert_eq!(FormatSpec::sweep_family(8, "posit").len(), 3);
+    }
+}

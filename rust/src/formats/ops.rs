@@ -1,0 +1,203 @@
+//! Correctly-rounded scalar arithmetic (add/sub/mul, fused dot) for any
+//! [`Format`].
+//!
+//! The paper's Table 2 situates this work among posit arithmetic-unit
+//! generators (add/sub/mul units, [3, 16, 17, 23, 25]); these operations
+//! give the repository the same capability in software — exact integer
+//! arithmetic on decoded operands followed by a single
+//! round-to-nearest-even, i.e. the result every correct hardware unit must
+//! produce. They also serve as the oracle for EMAC edge-case tests.
+
+use super::exact::Exact;
+use super::tables::Quantizer;
+
+/// A scalar ALU for one format. NaR/non-canonical inputs are rejected by
+/// `decode` (DNN datapaths are real-valued, §4.4); [`ScalarAlu::is_nar`]
+/// lets callers screen first.
+pub struct ScalarAlu<'q> {
+    q: &'q Quantizer,
+}
+
+impl<'q> ScalarAlu<'q> {
+    pub fn new(q: &'q Quantizer) -> ScalarAlu<'q> {
+        ScalarAlu { q }
+    }
+
+    pub fn is_nar(&self, code: u16) -> bool {
+        self.q.decode(code).is_none()
+    }
+
+    fn get(&self, code: u16) -> Exact {
+        self.q.decode(code).unwrap_or_else(|| panic!("{}: non-value code {code:#x}", self.q.name()))
+    }
+
+    /// Correctly-rounded sum of two code words.
+    pub fn add(&self, a: u16, b: u16) -> u16 {
+        let v = self.get(a).add(self.get(b));
+        self.q.quantize_exact(&v).0
+    }
+
+    /// Correctly-rounded difference.
+    pub fn sub(&self, a: u16, b: u16) -> u16 {
+        let v = self.get(a).add(self.get(b).neg());
+        self.q.quantize_exact(&v).0
+    }
+
+    /// Correctly-rounded product.
+    pub fn mul(&self, a: u16, b: u16) -> u16 {
+        let v = self.get(a).mul(self.get(b));
+        self.q.quantize_exact(&v).0
+    }
+
+    /// Correctly-rounded quotient. Division is not closed over dyadic
+    /// rationals, so the exact-value trick doesn't apply directly; instead
+    /// we long-divide to `PREC` extra quotient bits and fold the remainder
+    /// into a sticky bit — enough precision that round-to-nearest over the
+    /// ≤16-bit target format is exact. Division by zero panics (posit
+    /// hardware would produce NaR; Deep Positron datapaths never divide).
+    pub fn div(&self, a: u16, b: u16) -> u16 {
+        let num = self.get(a);
+        let den = self.get(b);
+        assert!(!den.is_zero(), "{}: division by zero", self.q.name());
+        if num.is_zero() {
+            return self.q.quantize_exact(&Exact::ZERO).0;
+        }
+        // Normalize: quotient of magnitudes with PREC fractional bits.
+        const PREC: u32 = 40; // > 2×(16-bit significand) + guard
+        let n = num.canonical();
+        let d = den.canonical();
+        let q_mag = ((n.mag as u128) << PREC) / d.mag as u128;
+        let rem = ((n.mag as u128) << PREC) % d.mag as u128;
+        // Sticky: if the remainder is nonzero the true quotient lies
+        // strictly above q_mag×2^-PREC; nudge by half a ulp of the
+        // low-order guard range so ties can never be hit spuriously.
+        let sticky = (rem != 0) as u128;
+        let v = Exact::new(n.sign ^ d.sign, (q_mag << 1) | sticky, n.exp - d.exp - PREC as i32 - 1);
+        self.q.quantize_exact(&v).0
+    }
+
+    /// Inexact (per-step-rounded) MAC chain — the conventional unit the EMAC
+    /// is compared against. Rounds after every product AND every addition,
+    /// exactly like a fused-multiply-round/add-round pipeline.
+    pub fn inexact_dot(&self, weights: &[u16], activations: &[u16]) -> u16 {
+        assert_eq!(weights.len(), activations.len());
+        let zero = self.q.quantize_f64(0.0).0;
+        let mut acc = zero;
+        for (&w, &a) in weights.iter().zip(activations) {
+            let p = self.mul(w, a);
+            acc = self.add(acc, p);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Fixed, Float, Format, Posit, Quantizer};
+    use super::*;
+
+    #[test]
+    fn posit_add_known() {
+        let q = Quantizer::new(&Posit::new(8, 0));
+        let alu = ScalarAlu::new(&q);
+        let (one, _) = q.quantize_f64(1.0);
+        let (two, _) = q.quantize_f64(2.0);
+        let (three, _) = q.quantize_f64(3.0);
+        assert_eq!(alu.add(one, two), three);
+        assert_eq!(alu.sub(three, two), one);
+        assert_eq!(alu.mul(one, two), two);
+    }
+
+    #[test]
+    fn add_commutes_and_mul_commutes() {
+        let q = Quantizer::new(&Float::new(8, 4));
+        let alu = ScalarAlu::new(&q);
+        let samples: Vec<u16> = (0..=255u16).filter(|&c| q.decode(c).is_some()).step_by(7).collect();
+        for &a in &samples {
+            for &b in &samples {
+                assert_eq!(alu.add(a, b), alu.add(b, a));
+                assert_eq!(alu.mul(a, b), alu.mul(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn mul_matches_f64_when_exact() {
+        // Products of 8-bit float values are exact in f64 → correctly-rounded
+        // result == quantize(f64 product).
+        let q = Quantizer::new(&Float::new(8, 3));
+        let alu = ScalarAlu::new(&q);
+        for a in 0..=255u16 {
+            for b in (0..=255u16).step_by(5) {
+                let (Some(va), Some(vb)) = (q.decode(a), q.decode(b)) else { continue };
+                let expect = q.quantize_f64(va.to_f64() * vb.to_f64()).0;
+                assert_eq!(alu.mul(a, b), expect, "{a:#x} × {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn div_exact_cases() {
+        let q = Quantizer::new(&Posit::new(8, 1));
+        let alu = ScalarAlu::new(&q);
+        let code = |x: f64| q.quantize_f64(x).0;
+        assert_eq!(alu.div(code(1.0), code(2.0)), code(0.5));
+        assert_eq!(alu.div(code(3.0), code(2.0)), code(1.5));
+        assert_eq!(alu.div(code(-1.0), code(4.0)), code(-0.25));
+        assert_eq!(alu.div(code(0.0), code(3.0)), code(0.0));
+    }
+
+    #[test]
+    fn div_is_correctly_rounded_vs_f64() {
+        // For ≤8-bit operands the f64 quotient is within 2^-52 relative of
+        // the true one while format boundaries are ≥2^-18 apart, so
+        // rounding the f64 quotient is the correct answer except on exact
+        // boundaries — which only occur for exactly-representable
+        // quotients, handled exactly by both paths.
+        for spec in ["posit8es0", "posit8es2", "float8we4", "fixed8q4"] {
+            let fmt = crate::formats::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            let alu = ScalarAlu::new(&q);
+            for a in (0..=255u16).step_by(3) {
+                for b in (0..=255u16).step_by(7) {
+                    let (Some(va), Some(vb)) = (q.decode(a), q.decode(b)) else { continue };
+                    if vb.is_zero() {
+                        continue;
+                    }
+                    let expect = q.quantize_f64(va.to_f64() / vb.to_f64()).0;
+                    assert_eq!(alu.div(a, b), expect, "{spec}: {a:#x} / {b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn div_by_zero_panics() {
+        let q = Quantizer::new(&Posit::new(8, 0));
+        let alu = ScalarAlu::new(&q);
+        let one = q.quantize_f64(1.0).0;
+        let _ = alu.div(one, 0);
+    }
+
+    #[test]
+    fn inexact_dot_loses_what_emac_keeps() {
+        // 64 × (minpos·minpos) : inexact chain rounds each product to… posit
+        // never rounds to zero, so each product becomes minpos and the sum
+        // GROWS too fast; fixed-point rounds each product to zero and the sum
+        // stays zero; the EMAC gets both exactly right.
+        let fixed = Fixed::new(8, 5);
+        let qf = Quantizer::new(&fixed);
+        let alu = ScalarAlu::new(&qf);
+        let (minc, minv) = qf.quantize_f64(fixed.min_pos());
+        assert_eq!(minv, fixed.min_pos());
+        let w = vec![minc; 64];
+        let acc = alu.inexact_dot(&w, &w);
+        assert_eq!(qf.decode(acc).unwrap().to_f64(), 0.0, "per-step rounding must lose min²");
+
+        let mut emac = super::super::Emac::new(&fixed, &qf, 64);
+        let exact = emac.dot(&w, &w, None, false);
+        // 64 × (2^-5)² = 2^-4 = 2 × minpos: representable.
+        assert_eq!(qf.decode(exact).unwrap().to_f64(), 1.0 / 16.0);
+    }
+}

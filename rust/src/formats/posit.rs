@@ -1,0 +1,243 @@
+//! The posit numerical format (Type III unum), §3.2 of the paper.
+//!
+//! An n-bit posit with `es` exponent bits encodes, per Eq. (1):
+//!
+//! ```text
+//! (-1)^s × (2^(2^es))^k × 2^e × 1.f
+//! ```
+//!
+//! where `k` is the signed run-length-encoded regime, `e` the unsigned
+//! exponent, and `1.f` the fraction with hidden bit. Two patterns are
+//! reserved: `00…0` (zero) and `10…0` ("Not a Real"). Negative posits are
+//! decoded after two's complement. Decode mirrors the paper's Algorithm 3.
+
+use super::exact::Exact;
+use super::{Decoded, Format};
+
+/// Posit format descriptor. Supports `2 ≤ n ≤ 16`, `es ≤ 4`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Posit {
+    n: u32,
+    es: u32,
+}
+
+impl Posit {
+    pub fn new(n: u32, es: u32) -> Posit {
+        assert!((2..=16).contains(&n), "posit n out of range: {n}");
+        assert!(es <= 4, "posit es out of range: {es}");
+        Posit { n, es }
+    }
+
+    pub fn es(&self) -> u32 {
+        self.es
+    }
+
+    /// `useed = 2^(2^es)`, the regime scale-factor base.
+    pub fn useed_log2(&self) -> i32 {
+        1i32 << self.es
+    }
+
+    /// Scale factor (power of two) of the largest finite value:
+    /// `max = useed^(n-2)`.
+    pub fn max_sf(&self) -> i32 {
+        (self.n as i32 - 2) * self.useed_log2()
+    }
+
+    /// The NaR pattern `10…0`.
+    pub fn nar_code(&self) -> u16 {
+        1u16 << (self.n - 1)
+    }
+
+    /// Decode the regime/exponent/fraction of a *positive* posit body
+    /// (the low n-1 bits after sign handling). Returns (sf, frac_num,
+    /// frac_bits): value = 2^sf × frac_num / 2^frac_bits, frac_num with
+    /// hidden bit set.
+    fn decode_body(&self, body: u16) -> (i32, u64, u32) {
+        let nb = self.n - 1; // number of body bits
+        debug_assert!(body != 0, "zero body handled by caller");
+        let lead = (body >> (nb - 1)) & 1; // leading regime bit
+        // Count the run of bits equal to `lead` starting at the top.
+        let mut run = 0u32;
+        for i in (0..nb).rev() {
+            if (body >> i) & 1 == lead {
+                run += 1;
+            } else {
+                break;
+            }
+        }
+        let k: i32 = if lead == 1 { run as i32 - 1 } else { -(run as i32) };
+        // Bits after the regime terminator (if any).
+        let used = run + 1; // regime run + terminator
+        let rem_bits = nb.saturating_sub(used);
+        let rem = if rem_bits == 0 { 0u16 } else { body & (((1u32 << rem_bits) - 1) as u16) };
+        // Exponent: the first `es` of the remaining bits (zero-padded on the
+        // right if truncated by the regime).
+        let (e, frac, frac_bits) = if rem_bits >= self.es {
+            let fb = rem_bits - self.es;
+            let e = (rem >> fb) as i32;
+            let frac = rem & (((1u32 << fb) - 1) as u16);
+            (e, frac as u64, fb)
+        } else {
+            // Exponent field truncated: the available bits are the HIGH bits
+            // of e; missing low bits are zero.
+            let e = ((rem as u32) << (self.es - rem_bits)) as i32;
+            (e, 0u64, 0u32)
+        };
+        let sf = k * self.useed_log2() + e;
+        let hidden = 1u64 << frac_bits;
+        (sf, hidden | frac, frac_bits)
+    }
+}
+
+impl Format for Posit {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("posit{}es{}", self.n, self.es)
+    }
+
+    fn decode(&self, code: u16) -> Decoded {
+        let code = code & self.mask();
+        if code == 0 {
+            return Decoded::Zero;
+        }
+        if code == self.nar_code() {
+            return Decoded::NaR;
+        }
+        let sign = (code >> (self.n - 1)) & 1 == 1;
+        // Negative posits: two's complement before decoding (Algorithm 3).
+        let body = if sign {
+            (code.wrapping_neg() & self.mask()) & !(1u16 << (self.n - 1))
+        } else {
+            code
+        };
+        let (sf, frac, frac_bits) = self.decode_body(body);
+        // value = ±frac × 2^(sf - frac_bits)
+        Decoded::Finite(Exact::new(sign, frac as u128, sf - frac_bits as i32).canonical())
+    }
+
+    fn is_canonical(&self, code: u16) -> bool {
+        (code & self.mask()) != self.nar_code()
+    }
+
+    fn max_value(&self) -> f64 {
+        super::exact::pow2(self.max_sf())
+    }
+
+    fn min_pos(&self) -> f64 {
+        super::exact::pow2(-self.max_sf())
+    }
+
+    /// Posits never round a nonzero real to zero: they clamp to ±minpos.
+    fn underflows_to_zero(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(p: &Posit, code: u16) -> f64 {
+        p.decode(code).to_f64()
+    }
+
+    #[test]
+    fn posit8_es0_known_values() {
+        let p = Posit::new(8, 0);
+        assert_eq!(val(&p, 0x00), 0.0);
+        assert!(val(&p, 0x80).is_nan()); // NaR
+        assert_eq!(val(&p, 0x40), 1.0); // 0100_0000
+        assert_eq!(val(&p, 0x50), 1.5); // regime k=0, frac .1000
+        assert_eq!(val(&p, 0x48), 1.25);
+        assert_eq!(val(&p, 0x60), 2.0); // regime k=1
+        assert_eq!(val(&p, 0x70), 4.0); // regime k=2
+        assert_eq!(val(&p, 0x7F), 64.0); // maxpos = useed^(n-2) = 2^6
+        assert_eq!(val(&p, 0x01), 1.0 / 64.0); // minpos
+        assert_eq!(val(&p, 0x20), 0.5); // regime k=-1
+        // Negatives: two's complement symmetry.
+        assert_eq!(val(&p, 0xC0), -1.0); // -(0x40)
+        assert_eq!(val(&p, 0xB0), -1.5);
+        assert_eq!(val(&p, 0x81), -64.0); // most negative
+    }
+
+    #[test]
+    fn posit8_es1_known_values() {
+        let p = Posit::new(8, 1);
+        assert_eq!(p.useed_log2(), 2); // useed = 4
+        assert_eq!(val(&p, 0x40), 1.0);
+        assert_eq!(val(&p, 0x50), 2.0); // e=1
+        assert_eq!(val(&p, 0x60), 4.0); // k=1
+        assert_eq!(val(&p, 0x7F), 4096.0); // useed^6 = 4^6
+        assert_eq!(val(&p, 0x01), 1.0 / 4096.0);
+        assert_eq!(val(&p, 0x48), 1.5); // frac bits: 0100_1000 -> k=0,e=0,f=.100
+    }
+
+    #[test]
+    fn posit8_es2_extremes() {
+        let p = Posit::new(8, 2);
+        assert_eq!(p.max_value(), (16.0f64).powi(6)); // 2^24
+        assert_eq!(p.min_pos(), (16.0f64).powi(-6));
+        assert_eq!(val(&p, 0x7F), p.max_value());
+        assert_eq!(val(&p, 0x01), p.min_pos());
+    }
+
+    #[test]
+    fn posit16_es1_sample() {
+        let p = Posit::new(16, 1);
+        assert_eq!(val(&p, 0x4000), 1.0);
+        assert_eq!(val(&p, 0x5000), 2.0);
+        // maxpos = useed^14 = 4^14 = 2^28
+        assert_eq!(val(&p, 0x7FFF), (2.0f64).powi(28));
+    }
+
+    #[test]
+    fn decode_is_monotone_in_signed_code_order() {
+        // Posits are ordered like 2's-complement integers — the property that
+        // makes them compare "as if integers" in hardware.
+        for es in 0..=2 {
+            let p = Posit::new(8, es);
+            let mut prev: Option<f64> = None;
+            // Signed order: 0x81..=0xFF (negatives ascending), 0x00..=0x7F.
+            let signed_order = (0x81u16..=0xFF).chain(0x00..=0x7F);
+            for code in signed_order {
+                let v = p.decode(code).to_f64();
+                if let Some(pv) = prev {
+                    assert!(v > pv, "posit8es{es} not monotone at code {code:#04x}: {pv} !< {v}");
+                }
+                prev = Some(v);
+            }
+        }
+    }
+
+    #[test]
+    fn negation_is_twos_complement() {
+        for es in 0..=2 {
+            let p = Posit::new(8, es);
+            for code in 1u16..=0xFF {
+                if code == p.nar_code() {
+                    continue;
+                }
+                let neg = code.wrapping_neg() & 0xFF;
+                assert_eq!(
+                    p.decode(code).to_f64(),
+                    -p.decode(neg).to_f64(),
+                    "2's complement negation failed for code {code:#04x} (es={es})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_widths_decode() {
+        // 5-bit posits (the paper's lower sweep bound).
+        let p = Posit::new(5, 0);
+        assert_eq!(val(&p, 0x08), 1.0); // 01000
+        assert_eq!(val(&p, 0x0F), 8.0); // maxpos = 2^3
+        assert_eq!(val(&p, 0x01), 0.125);
+        let pe = Posit::new(5, 1);
+        assert_eq!(val(&pe, 0x0F), 64.0); // 4^3
+    }
+}

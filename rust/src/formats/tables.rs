@@ -1,0 +1,403 @@
+//! Table-driven, format-generic quantization.
+//!
+//! For any [`Format`] we enumerate the canonical codes, sort their exact
+//! values, and precompute round-to-nearest decision boundaries (midpoints)
+//! plus tie directions ("ties to even **code**", the rounding the paper uses
+//! when directly quantizing 32-bit-float parameters, §5). This gives one
+//! uniform, provably-correct encoder for posit/float/fixed at any bit-width,
+//! and it is exactly the representation the AOT'd XLA graphs consume: the
+//! quantized-inference artifact takes `(values, boundaries, tie_up)` tables
+//! as runtime inputs, so ONE artifact per network topology serves every
+//! format — see DESIGN.md §2.
+//!
+//! All boundary comparisons can also be made in exact integer arithmetic
+//! ([`Quantizer::quantize_exact`]), which is what the EMAC's terminal
+//! rounding uses: the quire value never touches f64.
+
+use std::cmp::Ordering;
+
+use super::exact::Exact;
+use super::{Decoded, Format};
+
+/// Precomputed quantization tables for one format instance.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    name: String,
+    n: u32,
+    /// Sorted (ascending) distinct finite values, as exact f64.
+    values: Vec<f64>,
+    /// Exact form of each value.
+    exacts: Vec<Exact>,
+    /// Code word for each value.
+    codes: Vec<u16>,
+    /// Midpoints between adjacent values (`len = values.len()-1`), exact f64.
+    bounds: Vec<f64>,
+    /// Exact `v_i + v_{i+1}` (twice the midpoint) for error-free tie tests.
+    bound_sums: Vec<Exact>,
+    /// On an exact tie at `bounds[i]`: round up to `values[i+1]`?
+    /// (Chosen so the selected code has even LSB.)
+    tie_up: Vec<bool>,
+    /// Code → table index (None for non-canonical codes).
+    code_index: Vec<Option<u32>>,
+    /// Index of value 0.0.
+    zero_idx: usize,
+    underflows_to_zero: bool,
+    min_pos: f64,
+    max_value: f64,
+}
+
+impl Quantizer {
+    /// Build tables by exhaustively decoding every canonical code.
+    pub fn new(fmt: &dyn Format) -> Quantizer {
+        let ncodes = fmt.num_codes();
+        let mut entries: Vec<(Exact, u16)> = Vec::with_capacity(ncodes as usize);
+        for code in 0..ncodes {
+            let code = code as u16;
+            if !fmt.is_canonical(code) {
+                continue;
+            }
+            match fmt.decode(code) {
+                Decoded::Zero => entries.push((Exact::ZERO, code)),
+                Decoded::Finite(e) => entries.push((e, code)),
+                Decoded::NaR => unreachable!("NaR must be non-canonical"),
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp_exact(&b.0));
+        // Values must be strictly increasing (canonical codes are distinct).
+        for w in entries.windows(2) {
+            assert_eq!(
+                w[0].0.cmp_exact(&w[1].0),
+                Ordering::Less,
+                "{}: duplicate canonical values for codes {:#x}, {:#x}",
+                fmt.name(),
+                w[0].1,
+                w[1].1
+            );
+        }
+        let exacts: Vec<Exact> = entries.iter().map(|e| e.0).collect();
+        let codes: Vec<u16> = entries.iter().map(|e| e.1).collect();
+        let values: Vec<f64> = exacts.iter().map(|e| e.to_f64()).collect();
+        let zero_idx = exacts.iter().position(|e| e.is_zero()).expect("no zero value in format");
+
+        let mut bounds = Vec::with_capacity(values.len() - 1);
+        let mut bound_sums = Vec::with_capacity(values.len() - 1);
+        let mut tie_up = Vec::with_capacity(values.len() - 1);
+        for i in 0..values.len() - 1 {
+            let sum = exacts[i].add(exacts[i + 1]).canonical();
+            // Midpoint = sum/2: exact in f64 because adjacent format values
+            // have nearby exponents and few significant bits.
+            bounds.push(Exact::new(sum.sign, sum.mag, sum.exp - 1).to_f64());
+            bound_sums.push(sum);
+            // Ties go to the even code ("round to nearest, ties to even").
+            let up_even = codes[i + 1] & 1 == 0;
+            let down_even = codes[i] & 1 == 0;
+            debug_assert!(
+                up_even != down_even || !up_even,
+                "{}: adjacent codes {:#x},{:#x} have identical parity",
+                fmt.name(),
+                codes[i],
+                codes[i + 1]
+            );
+            tie_up.push(up_even);
+        }
+
+        let mut code_index = vec![None; ncodes as usize];
+        for (i, &c) in codes.iter().enumerate() {
+            code_index[c as usize] = Some(i as u32);
+        }
+
+        Quantizer {
+            name: fmt.name(),
+            n: fmt.n(),
+            values,
+            exacts,
+            codes,
+            bounds,
+            bound_sums,
+            tie_up,
+            code_index,
+            zero_idx,
+            underflows_to_zero: fmt.underflows_to_zero(),
+            min_pos: fmt.min_pos(),
+            max_value: fmt.max_value(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn codes(&self) -> &[u16] {
+        &self.codes
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn tie_up(&self) -> &[bool] {
+        &self.tie_up
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.max_value
+    }
+
+    pub fn min_pos(&self) -> f64 {
+        self.min_pos
+    }
+
+    /// Exact value of a canonical code (None otherwise).
+    pub fn decode(&self, code: u16) -> Option<Exact> {
+        self.code_index.get(code as usize).copied().flatten().map(|i| self.exacts[i as usize])
+    }
+
+    /// Table index of a canonical code.
+    pub fn index_of(&self, code: u16) -> Option<usize> {
+        self.code_index.get(code as usize).copied().flatten().map(|i| i as usize)
+    }
+
+    /// Round-to-nearest (ties to even code) quantization of an f64.
+    /// Returns (code, dequantized value). Saturates at ±max; formats with
+    /// `underflows_to_zero() == false` (posit) clamp small nonzero inputs to
+    /// ±minpos instead of rounding them to zero.
+    pub fn quantize_f64(&self, x: f64) -> (u16, f64) {
+        assert!(!x.is_nan(), "cannot quantize NaN");
+        // partition_point: first i with bounds[i] >= x; x rounds above every
+        // gap strictly below the midpoint.
+        let mut idx = self.bounds.partition_point(|&b| b < x);
+        if idx < self.bounds.len() && self.bounds[idx] == x {
+            // Exact tie.
+            if self.tie_up[idx] {
+                idx += 1;
+            }
+        }
+        self.finish(idx, x != 0.0, x > 0.0)
+    }
+
+    /// Quantize an exact value (the quire datapath — no f64 anywhere).
+    pub fn quantize_exact(&self, x: &Exact) -> (u16, f64) {
+        let two_x = if x.is_zero() { *x } else { Exact { exp: x.exp + 1, ..*x } };
+        // Monotone predicate: "x rounds strictly above gap i".
+        let idx = partition_point(self.bound_sums.len(), |i| {
+            match two_x.cmp_exact(&self.bound_sums[i]) {
+                Ordering::Greater => true,
+                Ordering::Equal => self.tie_up[i],
+                Ordering::Less => false,
+            }
+        });
+        self.finish(idx, !x.is_zero(), !x.sign && !x.is_zero())
+    }
+
+    fn finish(&self, mut idx: usize, nonzero: bool, positive: bool) -> (u16, f64) {
+        if !self.underflows_to_zero && nonzero && idx == self.zero_idx {
+            // Posit: nonzero reals never round to zero — clamp to ±minpos.
+            idx = if positive { self.zero_idx + 1 } else { self.zero_idx - 1 };
+        }
+        (self.codes[idx], self.values[idx])
+    }
+
+    /// Quantize a slice; returns (codes, dequantized values).
+    pub fn quantize_slice(&self, xs: &[f64]) -> (Vec<u16>, Vec<f64>) {
+        let mut codes = Vec::with_capacity(xs.len());
+        let mut vals = Vec::with_capacity(xs.len());
+        for &x in xs {
+            let (c, v) = self.quantize_f64(x);
+            codes.push(c);
+            vals.push(v);
+        }
+        (codes, vals)
+    }
+
+    /// Dequantize a slice of codes (non-canonical codes panic).
+    pub fn dequantize_slice(&self, codes: &[u16]) -> Vec<f64> {
+        codes
+            .iter()
+            .map(|&c| {
+                let i = self.index_of(c).unwrap_or_else(|| panic!("{}: non-canonical code {c:#x}", self.name));
+                self.values[i]
+            })
+            .collect()
+    }
+
+    /// Tables padded to `cap` entries for fixed-shape HLO inputs:
+    /// (values padded with max, boundaries padded with +inf, tie flags as
+    /// 0.0/1.0 padded with 0). `cap` must be ≥ `len()`.
+    pub fn padded_tables(&self, cap: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        assert!(cap >= self.len(), "{}: cap {cap} < table size {}", self.name, self.len());
+        let mut v = self.values.clone();
+        v.resize(cap, *self.values.last().unwrap());
+        let mut b: Vec<f64> = self.bounds.clone();
+        b.resize(cap - 1, f64::INFINITY);
+        let mut t: Vec<f64> = self.tie_up.iter().map(|&u| if u { 1.0 } else { 0.0 }).collect();
+        t.resize(cap - 1, 0.0);
+        (v, b, t)
+    }
+
+    /// Mean-squared quantization error of a tensor (paper Eq. 3).
+    pub fn mse(&self, xs: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for &x in xs {
+            let (_, v) = self.quantize_f64(x);
+            let d = x - v;
+            acc += d * d;
+        }
+        acc / xs.len() as f64
+    }
+}
+
+fn partition_point(len: usize, pred: impl Fn(usize) -> bool) -> usize {
+    let mut lo = 0usize;
+    let mut hi = len;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Fixed, Float, Posit};
+    use super::*;
+
+    #[test]
+    fn posit8_table_size_and_extremes() {
+        let q = Quantizer::new(&Posit::new(8, 0));
+        assert_eq!(q.len(), 255); // 256 codes minus NaR
+        assert_eq!(q.values()[0], -64.0);
+        assert_eq!(*q.values().last().unwrap(), 64.0);
+        assert_eq!(q.values()[q.len() / 2], 0.0);
+    }
+
+    #[test]
+    fn quantize_representable_is_identity() {
+        for spec in ["posit8es1", "float8we4", "fixed8q5"] {
+            let fmt = super::super::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            for i in 0..q.len() {
+                let x = q.values()[i];
+                let (c, v) = q.quantize_f64(x);
+                assert_eq!(v, x, "{spec}: representable {x} not fixed");
+                assert_eq!(c, q.codes()[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_picks_nearest() {
+        let q = Quantizer::new(&Posit::new(8, 0));
+        // 1.26 is between 1.25 (0x48) and 1.28125? posit8es0 neighbors of
+        // 1.25: 1.28125 does not exist; next is 1.3125 (frac step 1/16 at
+        // sf=0 => 1/32? n=8,es=0: k=0 leaves 5 frac bits => step 1/32).
+        let (c, v) = q.quantize_f64(1.26);
+        assert_eq!(v, 1.25);
+        assert_eq!(c, 0x48);
+        let (_, v) = q.quantize_f64(1.27);
+        assert_eq!(v, 1.28125);
+    }
+
+    #[test]
+    fn ties_go_to_even_code() {
+        let q = Quantizer::new(&Fixed::new(8, 4));
+        // step = 1/16; 3/32 is exactly between 1/16 (code 1) and 2/16
+        // (code 2): even code 2 wins.
+        let (c, v) = q.quantize_f64(3.0 / 32.0);
+        assert_eq!(c, 2);
+        assert_eq!(v, 2.0 / 16.0);
+        // 5/32 between codes 2 and 3: even code 2 wins (round down).
+        let (c, v) = q.quantize_f64(5.0 / 32.0);
+        assert_eq!(c, 2);
+        assert_eq!(v, 2.0 / 16.0);
+    }
+
+    #[test]
+    fn saturation_at_extremes() {
+        for spec in ["posit8es0", "float8we4", "fixed8q5"] {
+            let fmt = super::super::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            let (_, v) = q.quantize_f64(1.0e30);
+            assert_eq!(v, q.max_value(), "{spec}");
+            // Negative clamp goes to the most-negative value — for 2's
+            // complement fixed-point that is −2^(n−1)·2^−Q, NOT −max
+            // (Algorithm 1 clips to "min neg value").
+            let (_, v) = q.quantize_f64(-1.0e30);
+            assert_eq!(v, q.values()[0], "{spec}");
+        }
+    }
+
+    #[test]
+    fn posit_never_underflows_to_zero() {
+        let q = Quantizer::new(&Posit::new(8, 0));
+        let (_, v) = q.quantize_f64(1e-300);
+        assert_eq!(v, q.min_pos());
+        let (_, v) = q.quantize_f64(-1e-300);
+        assert_eq!(v, -q.min_pos());
+        // but exact zero stays zero
+        let (c, v) = q.quantize_f64(0.0);
+        assert_eq!((c, v), (0, 0.0));
+    }
+
+    #[test]
+    fn float_and_fixed_underflow_to_zero() {
+        for spec in ["float8we4", "fixed8q5"] {
+            let fmt = super::super::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            let (_, v) = q.quantize_f64(q.min_pos() / 8.0);
+            assert_eq!(v, 0.0, "{spec}");
+        }
+    }
+
+    #[test]
+    fn exact_and_f64_quantize_agree() {
+        for spec in ["posit8es2", "float8we5", "fixed8q3", "posit5es0", "float6we3"] {
+            let fmt = super::super::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            let mut x = -300.0f64;
+            while x < 300.0 {
+                let a = q.quantize_f64(x);
+                let b = q.quantize_exact(&Exact::from_f64(x));
+                assert_eq!(a, b, "{spec} at {x}");
+                x += 0.37;
+            }
+        }
+    }
+
+    #[test]
+    fn padded_tables_shapes() {
+        let q = Quantizer::new(&Posit::new(6, 1));
+        let (v, b, t) = q.padded_tables(256);
+        assert_eq!(v.len(), 256);
+        assert_eq!(b.len(), 255);
+        assert_eq!(t.len(), 255);
+        assert_eq!(v[q.len()..].iter().filter(|&&x| x == q.max_value()).count(), 256 - q.len());
+        assert!(b[q.len() - 1..].iter().all(|&x| x.is_infinite()));
+    }
+
+    #[test]
+    fn mse_zero_for_representable() {
+        let q = Quantizer::new(&Float::new(8, 4));
+        let vals: Vec<f64> = q.values().to_vec();
+        assert_eq!(q.mse(&vals), 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! RTL-component cost primitives for a Virtex-7-class (28 nm) FPGA fabric.
+//!
+//! The paper synthesizes its EMACs with Vivado 2017.2 on xc7vx485t-2; this
+//! module is the offline substitute (DESIGN.md §Substitutions): each
+//! hardware building block the three EMAC designs instantiate (Figs. 2–4)
+//! is costed structurally — LUTs, flip-flops, DSP slices, propagation
+//! delay, and switched energy. Constants are calibrated to
+//! Virtex-7-plausible values; the experiments consume *relative* orderings
+//! (fixed < float ≈ posit, EDP growth with es, …), which emerge from the
+//! structure (accumulator widths, shifter depths) rather than the constants.
+
+/// Resource + timing + energy cost of one component (or a composition).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+    /// Propagation delay through the component, ns.
+    pub delay_ns: f64,
+    /// Switched energy per operation, pJ.
+    pub energy_pj: f64,
+}
+
+impl Cost {
+    /// Series composition: delays add (same pipeline stage).
+    pub fn then(self, next: Cost) -> Cost {
+        Cost {
+            luts: self.luts + next.luts,
+            ffs: self.ffs + next.ffs,
+            dsps: self.dsps + next.dsps,
+            delay_ns: self.delay_ns + next.delay_ns,
+            energy_pj: self.energy_pj + next.energy_pj,
+        }
+    }
+
+    /// Parallel composition: delays max, resources add.
+    pub fn beside(self, other: Cost) -> Cost {
+        Cost {
+            luts: self.luts + other.luts,
+            ffs: self.ffs + other.ffs,
+            dsps: self.dsps + other.dsps,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+            energy_pj: self.energy_pj + other.energy_pj,
+        }
+    }
+}
+
+/// ceil(log2(x)), for x ≥ 1.
+pub fn clog2(x: u32) -> u32 {
+    debug_assert!(x >= 1);
+    32 - (x - 1).leading_zeros().min(32)
+}
+
+// ---- calibration constants (Virtex-7 -2 speed grade ballpark) ----
+const T_LUT_NS: f64 = 0.22; // one LUT6 level incl. local route
+const T_CARRY_BASE_NS: f64 = 0.55; // carry-chain entry/exit
+const T_CARRY_PER_BIT_NS: f64 = 0.032;
+const E_LUT_PJ: f64 = 0.014; // switched energy per active LUT
+const E_FF_PJ: f64 = 0.004;
+const E_DSP_PJ: f64 = 0.9;
+/// Activity factor: fraction of a component's LUTs toggling per op.
+const ACTIVITY: f64 = 0.35;
+
+fn lut_energy(luts: f64) -> f64 {
+    luts * E_LUT_PJ * ACTIVITY
+}
+
+/// W-bit carry-chain adder/subtractor.
+pub fn adder(w: u32) -> Cost {
+    let luts = w as f64;
+    Cost {
+        luts,
+        ffs: 0.0,
+        dsps: 0.0,
+        delay_ns: T_CARRY_BASE_NS + T_CARRY_PER_BIT_NS * w as f64,
+        energy_pj: lut_energy(luts),
+    }
+}
+
+/// W-bit two's-complement negate (conditional invert + increment).
+pub fn twos_complement(w: u32) -> Cost {
+    adder(w).then(Cost { luts: w as f64 / 2.0, delay_ns: T_LUT_NS, energy_pj: lut_energy(w as f64 / 2.0), ..Cost::default() })
+}
+
+/// A×B multiplier. Mantissa multipliers of ≤8-bit formats are small enough
+/// that Vivado maps them to fabric (LUTs); ≥11×11 would go to DSP48s.
+pub fn multiplier(a: u32, b: u32) -> Cost {
+    if a <= 10 && b <= 10 {
+        let luts = (a * b) as f64 * 0.85;
+        Cost {
+            luts,
+            ffs: 0.0,
+            dsps: 0.0,
+            // Array multiplier: ~max(a,b) partial-product rows of carry.
+            delay_ns: 0.7 + 0.075 * a.max(b) as f64,
+            energy_pj: lut_energy(luts) * 1.6, // high toggle rate in PP array
+        }
+    } else {
+        Cost { luts: 12.0, ffs: 0.0, dsps: 1.0, delay_ns: 2.6, energy_pj: E_DSP_PJ }
+    }
+}
+
+/// W-bit barrel shifter over P shift positions (log2(P) mux levels).
+pub fn barrel_shifter(w: u32, positions: u32) -> Cost {
+    let levels = clog2(positions.max(2)) as f64;
+    let luts = w as f64 * levels / 2.0; // LUT6 as 4:1 mux → ~2 bits/level/LUT
+    Cost {
+        luts,
+        ffs: 0.0,
+        dsps: 0.0,
+        delay_ns: 0.25 + (T_LUT_NS + 0.05) * levels,
+        energy_pj: lut_energy(luts),
+    }
+}
+
+/// W-bit leading-zeros detector (binary-tree priority encoder).
+pub fn lzd(w: u32) -> Cost {
+    let luts = w as f64 * 0.75;
+    Cost {
+        luts,
+        ffs: 0.0,
+        dsps: 0.0,
+        delay_ns: 0.2 + T_LUT_NS * clog2(w.max(2)) as f64,
+        energy_pj: lut_energy(luts),
+    }
+}
+
+/// W-bit OR/AND reduction tree.
+pub fn reduce(w: u32) -> Cost {
+    let luts = (w as f64 / 5.0).ceil();
+    Cost {
+        luts,
+        ffs: 0.0,
+        dsps: 0.0,
+        delay_ns: T_LUT_NS * (clog2(w.max(2)) as f64 / 2.5).ceil(),
+        energy_pj: lut_energy(luts),
+    }
+}
+
+/// Rounding logic (guard/sticky extraction + increment) on W bits.
+pub fn rounder(w: u32) -> Cost {
+    reduce(w).then(adder(w))
+}
+
+/// Pipeline register of W bits (adds FFs and register energy, no delay —
+/// it *defines* stage boundaries).
+pub fn pipeline_reg(w: u32) -> Cost {
+    Cost { luts: 0.0, ffs: w as f64, dsps: 0.0, delay_ns: 0.0, energy_pj: w as f64 * E_FF_PJ * ACTIVITY }
+}
+
+/// W-bit 2:1 mux bank.
+pub fn mux2(w: u32) -> Cost {
+    let luts = w as f64 / 2.0;
+    Cost { luts, ffs: 0.0, dsps: 0.0, delay_ns: T_LUT_NS, energy_pj: lut_energy(luts) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_values() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(8), 3);
+        assert_eq!(clog2(9), 4);
+        assert_eq!(clog2(1024), 10);
+    }
+
+    #[test]
+    fn adder_scales_linearly() {
+        let a8 = adder(8);
+        let a32 = adder(32);
+        assert!(a32.luts == 4.0 * a8.luts);
+        assert!(a32.delay_ns > a8.delay_ns);
+        assert!(a32.delay_ns < 4.0 * a8.delay_ns, "carry chain is sublinear-ish via base term");
+    }
+
+    #[test]
+    fn small_mult_uses_fabric_big_uses_dsp() {
+        assert_eq!(multiplier(6, 6).dsps, 0.0);
+        assert_eq!(multiplier(12, 12).dsps, 1.0);
+    }
+
+    #[test]
+    fn barrel_depth_grows_with_positions() {
+        let s8 = barrel_shifter(32, 8);
+        let s64 = barrel_shifter(32, 64);
+        assert!(s64.delay_ns > s8.delay_ns);
+        assert!(s64.luts > s8.luts);
+    }
+
+    #[test]
+    fn composition_rules() {
+        let a = adder(8);
+        let b = lzd(16);
+        let series = a.then(b);
+        assert!((series.delay_ns - (a.delay_ns + b.delay_ns)).abs() < 1e-12);
+        assert_eq!(series.luts, a.luts + b.luts);
+        let par = a.beside(b);
+        assert_eq!(par.delay_ns, a.delay_ns.max(b.delay_ns));
+        assert_eq!(par.luts, a.luts + b.luts);
+    }
+
+    #[test]
+    fn registers_cost_ffs_not_delay() {
+        let r = pipeline_reg(32);
+        assert_eq!(r.ffs, 32.0);
+        assert_eq!(r.delay_ns, 0.0);
+        assert!(r.energy_pj > 0.0);
+    }
+}

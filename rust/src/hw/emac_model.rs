@@ -1,0 +1,252 @@
+//! Structural synthesis model of the three EMAC soft cores (paper Figs. 2–4).
+//!
+//! Composes the [`components`](super::components) primitives exactly the way
+//! each RTL design instantiates them, stage by stage (the paper's EMACs are
+//! pipelined into multiplication / accumulation / rounding, §4.1). The
+//! critical path of the widest stage sets Fmax; per-op switched energy and
+//! the energy-delay product follow.
+
+use super::components::{self as c, clog2, Cost};
+use crate::formats::{quire_width_bits, Fixed, Float, FormatSpec, Posit};
+use crate::formats::Format;
+
+/// Synthesis estimate for one EMAC configuration.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub spec: FormatSpec,
+    /// Dot-product length the accumulator is sized for (Eq. 2's k).
+    pub k: usize,
+    /// Accumulator (quire) width per Eq. (2).
+    pub quire_bits: u32,
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+    /// Per-pipeline-stage propagation delays, ns.
+    pub stage_delays_ns: Vec<f64>,
+    /// Critical path = slowest pipeline stage, ns. This is what Vivado's
+    /// timing report calls "delay" and what the paper's Fig. 7 (left)
+    /// plots; Fmax is its reciprocal.
+    pub critical_path_ns: f64,
+    /// Pipeline fill latency: sum of stage delays, ns.
+    pub latency_ns: f64,
+    /// Max operating frequency = 1 / critical path, MHz.
+    pub fmax_mhz: f64,
+    /// Switched energy per MAC operation, pJ.
+    pub energy_pj: f64,
+    /// Dynamic power at Fmax, mW.
+    pub dynamic_power_mw: f64,
+    /// Energy-delay product, pJ·ns (Fig. 6's x-axis).
+    pub edp_pj_ns: f64,
+}
+
+/// Synthesize (model) the EMAC for `spec`, sized for dot products of length
+/// `k`.
+pub fn synthesize(spec: FormatSpec, k: usize) -> SynthReport {
+    let (stages, quire_bits) = match spec {
+        FormatSpec::Fixed { n, q } => fixed_emac(Fixed::new(n, q), k),
+        FormatSpec::Float { n, we } => float_emac(Float::new(n, we), k),
+        FormatSpec::Posit { n, es } => posit_emac(Posit::new(n, es), k),
+    };
+    let total = stages.iter().fold(Cost::default(), |acc, s| acc.then(*s));
+    let stage_delays_ns: Vec<f64> = stages.iter().map(|s| s.delay_ns).collect();
+    let critical_path_ns = stage_delays_ns.iter().cloned().fold(0.0f64, f64::max);
+    let latency_ns = stage_delays_ns.iter().sum();
+    let fmax_mhz = 1e3 / critical_path_ns;
+    let energy_pj = total.energy_pj;
+    SynthReport {
+        spec,
+        k,
+        quire_bits,
+        luts: total.luts,
+        ffs: total.ffs,
+        dsps: total.dsps,
+        stage_delays_ns,
+        critical_path_ns,
+        latency_ns,
+        fmax_mhz,
+        energy_pj,
+        dynamic_power_mw: energy_pj * fmax_mhz * 1e-3,
+        edp_pj_ns: energy_pj * critical_path_ns,
+    }
+}
+
+/// Fixed-point EMAC (Fig. 2, Algorithm 1): n×n multiply → wide accumulate →
+/// round + clip + normalize shift.
+fn fixed_emac(fmt: Fixed, k: usize) -> (Vec<Cost>, u32) {
+    let n = fmt.n();
+    let wa = quire_width_bits(k, fmt.max_value(), fmt.min_pos());
+    // Stage 1: signed n×n multiplier.
+    let s1 = c::multiplier(n, n).then(c::pipeline_reg(2 * n));
+    // Stage 2: sign-extended accumulate into the w_a register.
+    let s2 = c::adder(wa).then(c::pipeline_reg(wa));
+    // Stage 3: overflow detect (AND/OR over the top bits), clip mux,
+    // round-to-nearest-even, normalize shift-right by Q (fixed wiring).
+    let s3 = c::reduce(wa - n)
+        .beside(c::reduce(wa - n))
+        .then(c::rounder(n + 2))
+        .then(c::mux2(n))
+        .then(c::pipeline_reg(n));
+    (vec![s1, s2, s3], wa)
+}
+
+/// Floating-point EMAC (Fig. 3, Algorithm 2): unpack + mantissa multiply /
+/// shift into fixed-point + accumulate / LZD + normalize + round + pack.
+fn float_emac(fmt: Float, k: usize) -> (Vec<Cost>, u32) {
+    let we = fmt.we();
+    let wf = fmt.wf();
+    let wa = quire_width_bits(k, fmt.max_value(), fmt.min_pos());
+    let mant = wf + 1; // hidden bit
+    // Stage 1: subnormal detect (OR over e), hidden-bit insert, (wf+1)²
+    // multiplier, exponent add.
+    let s1 = c::reduce(we)
+        .beside(c::reduce(we))
+        .then(c::multiplier(mant, mant))
+        .beside(c::adder(we + 2))
+        .then(c::pipeline_reg(2 * mant + we + 3));
+    // Stage 2: two's complement of the product, barrel shift to fixed-point
+    // alignment (shift range = w_a), wide accumulate.
+    let s2 = c::twos_complement(2 * mant)
+        .then(c::barrel_shifter(wa, wa))
+        .then(c::adder(wa))
+        .then(c::pipeline_reg(wa));
+    // Stage 3: sign-magnitude (two's comp), LZD, normalize shift, round
+    // (guard/sticky), pack.
+    let s3 = c::twos_complement(wa)
+        .then(c::lzd(wa))
+        .then(c::barrel_shifter(wa, wa))
+        .then(c::rounder(wf + 3))
+        .then(c::mux2(fmt.n()))
+        .then(c::pipeline_reg(fmt.n()));
+    (vec![s1, s2, s3], wa)
+}
+
+/// Posit EMAC (Fig. 4, Algorithms 3–4): regime/exponent/fraction decode per
+/// operand + fraction multiply / shift into quire + accumulate / LZD +
+/// regime re-encode + round.
+fn posit_emac(fmt: Posit, k: usize) -> (Vec<Cost>, u32) {
+    let n = fmt.n();
+    let es = fmt.es();
+    let wa = quire_width_bits(k, fmt.max_value(), fmt.min_pos());
+    let frac = n - 2 - es.min(n - 3); // fraction incl. hidden bit
+    // Per-operand decode (Algorithm 3): 2's complement, regime LZD, regime
+    // shift-out, sign/exp extract. Two operands in parallel.
+    let decode_one = c::twos_complement(n).then(c::lzd(n)).then(c::barrel_shifter(n, n));
+    // Stage 1: decode both operands + fraction multiply + scale-factor add.
+    let s1 = decode_one
+        .beside(decode_one)
+        .then(c::multiplier(frac, frac))
+        .beside(c::adder(clog2(n) + es + 2))
+        .then(c::pipeline_reg(2 * frac + clog2(n) + es + 3));
+    // Stage 2: two's complement of product, shift into quire position,
+    // accumulate (Algorithm 4 "Accumulation").
+    let s2 = c::twos_complement(2 * frac)
+        .then(c::barrel_shifter(wa, wa))
+        .then(c::adder(wa))
+        .then(c::pipeline_reg(wa));
+    // Stage 3: sign extract, LZD over the quire, fraction/sf extraction
+    // shift (Algorithm 4 "Fraction & SF Extraction"). The posit design
+    // (Fig. 4) registers extraction separately from encoding — a deeper
+    // pipeline than float's Fig. 3, which is how the posit EMAC sustains a
+    // higher Fmax than float despite the extra regime machinery (§5).
+    let s3 = c::twos_complement(wa).then(c::lzd(wa)).then(c::barrel_shifter(wa, wa)).then(c::pipeline_reg(n + es + 8));
+    // Stage 4: convergent rounding + regime RE-ENCODE (the posit-specific
+    // cost: building the run-length regime needs another shifter + the
+    // overflow muxes of Algorithm 4 lines 25–42) and final 2's complement.
+    let s4 = c::rounder(n + 2)
+        .then(c::barrel_shifter(n + es + 2, n)) // regime construction
+        .then(c::mux2(n + es + 2))
+        .then(c::mux2(n))
+        .then(c::twos_complement(n))
+        .then(c::pipeline_reg(n));
+    (vec![s1, s2, s3, s4], wa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> FormatSpec {
+        FormatSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn quire_widths_match_eq2() {
+        let r = synthesize(spec("posit8es0"), 256);
+        assert_eq!(r.quire_bits, 34); // 8 + 2*12 + 2
+        let rf = synthesize(spec("fixed8q5"), 256);
+        assert_eq!(rf.quire_bits, 8 + 2 * 7 + 2);
+    }
+
+    #[test]
+    fn fixed_is_cheapest_and_fastest() {
+        // §5: "The fixed-point EMAC, obviously, is uncontested with its
+        // resource utilization and latency."
+        for n in 5..=8u32 {
+            let fx = synthesize(FormatSpec::Fixed { n, q: n - 3 }, 256);
+            let fl = synthesize(FormatSpec::Float { n, we: 4.min(n - 3) }, 256);
+            let po = synthesize(FormatSpec::Posit { n, es: 1 }, 256);
+            assert!(fx.luts < fl.luts && fx.luts < po.luts, "n={n}");
+            assert!(fx.latency_ns < fl.latency_ns && fx.latency_ns < po.latency_ns, "n={n}");
+            assert!(fx.edp_pj_ns < fl.edp_pj_ns && fx.edp_pj_ns < po.edp_pj_ns, "n={n}");
+        }
+    }
+
+    #[test]
+    fn posit_uses_more_resources_than_float_at_same_width() {
+        // §5: posit "using more resources for the same bit-precision" than
+        // float (decode/encode of the run-length regime).
+        for n in 6..=8u32 {
+            let fl = synthesize(FormatSpec::Float { n, we: 4.min(n - 3) }, 256);
+            let po = synthesize(FormatSpec::Posit { n, es: 1 }, 256);
+            assert!(po.luts > fl.luts, "n={n}: posit {} ≤ float {}", po.luts, fl.luts);
+        }
+    }
+
+    #[test]
+    fn edp_grows_with_es() {
+        // §5.1: EDP(es=0) < EDP(es=1) < EDP(es=2).
+        let e0 = synthesize(spec("posit8es0"), 256).edp_pj_ns;
+        let e1 = synthesize(spec("posit8es1"), 256).edp_pj_ns;
+        let e2 = synthesize(spec("posit8es2"), 256).edp_pj_ns;
+        assert!(e0 < e1 && e1 < e2, "EDP ordering broken: {e0} {e1} {e2}");
+        // Paper reports ≈1.4× and ≈3×; accept the same ballpark (±60%).
+        assert!(e1 / e0 > 1.1 && e1 / e0 < 2.4, "es1/es0 = {}", e1 / e0);
+        assert!(e2 / e0 > 1.8 && e2 / e0 < 5.5, "es2/es0 = {}", e2 / e0);
+    }
+
+    #[test]
+    fn wider_formats_cost_more() {
+        for fam in ["posit", "float", "fixed"] {
+            let mut prev: Option<SynthReport> = None;
+            for n in 5..=8u32 {
+                let s = match fam {
+                    "posit" => FormatSpec::Posit { n, es: 1 },
+                    "float" => FormatSpec::Float { n, we: 3 },
+                    _ => FormatSpec::Fixed { n, q: n / 2 },
+                };
+                let r = synthesize(s, 256);
+                if let Some(p) = prev {
+                    assert!(r.luts > p.luts, "{fam} LUTs not monotone at n={n}");
+                    assert!(r.edp_pj_ns > p.edp_pj_ns, "{fam} EDP not monotone at n={n}");
+                }
+                prev = Some(r);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_grows_with_k() {
+        let small = synthesize(spec("posit8es1"), 32);
+        let big = synthesize(spec("posit8es1"), 1024);
+        assert!(big.quire_bits > small.quire_bits);
+        assert!(big.latency_ns > small.latency_ns);
+    }
+
+    #[test]
+    fn fmax_is_reciprocal_of_slowest_stage() {
+        let r = synthesize(spec("float8we4"), 256);
+        let slowest = r.stage_delays_ns.iter().cloned().fold(0.0f64, f64::max);
+        assert!((r.fmax_mhz - 1e3 / slowest).abs() < 1e-9);
+        assert_eq!(r.stage_delays_ns.len(), 3);
+    }
+}

@@ -1,0 +1,124 @@
+//! FPGA synthesis cost model (Virtex-7-class) for the three EMAC designs —
+//! the offline substitute for the paper's Vivado 2017.2 runs (DESIGN.md
+//! §Substitutions). Produces the hardware axes of Figs. 6 and 7, the §5
+//! synthesis prose, the §5.1 es-parameter study, and this work's row of
+//! Table 2.
+
+pub mod components;
+pub mod emac_model;
+
+pub use emac_model::{synthesize, SynthReport};
+
+use crate::formats::FormatSpec;
+
+/// Default dot-product length the paper-style synthesis sizes Eq. (2) for
+/// (the largest layer fan-in across the five tasks is MNIST's 784).
+pub const DEFAULT_K: usize = 784;
+
+/// Synthesis sweep over every format config at bit-widths `ns`.
+pub fn sweep(ns: &[u32], k: usize) -> Vec<SynthReport> {
+    let mut out = Vec::new();
+    for &n in ns {
+        for spec in FormatSpec::sweep(n) {
+            out.push(synthesize(spec, k));
+        }
+    }
+    out
+}
+
+/// §5.1 energy-delay-product ratios between posit es values at one
+/// bit-width: returns (EDP(es1)/EDP(es0), EDP(es2)/EDP(es0)).
+pub fn es_edp_ratios(n: u32, k: usize) -> (f64, f64) {
+    let e0 = synthesize(FormatSpec::Posit { n, es: 0 }, k).edp_pj_ns;
+    let e1 = synthesize(FormatSpec::Posit { n, es: 1 }, k).edp_pj_ns;
+    let e2 = synthesize(FormatSpec::Posit { n, es: 2 }, k).edp_pj_ns;
+    (e1 / e0, e2 / e0)
+}
+
+/// Render a synthesis table (markdown) for a list of reports.
+pub fn render_table(reports: &[SynthReport]) -> String {
+    let mut s = String::new();
+    s.push_str("| config | k | quire | LUTs | FFs | DSPs | delay (ns) | Fmax (MHz) | fill (ns) | energy (pJ) | power (mW) | EDP (pJ·ns) |\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in reports {
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.0} | {:.0} | {:.0} | {:.2} | {:.0} | {:.2} | {:.2} | {:.2} | {:.1} |\n",
+            r.spec.name(),
+            r.k,
+            r.quire_bits,
+            r.luts,
+            r.ffs,
+            r.dsps,
+            r.critical_path_ns,
+            r.fmax_mhz,
+            r.latency_ns,
+            r.energy_pj,
+            r.dynamic_power_mw,
+            r.edp_pj_ns
+        ));
+    }
+    s
+}
+
+/// The "This Work" row of the paper's Table 2, plus the comparison rows
+/// quoted from prior art (static metadata, for the table2 report).
+pub fn table2_rows() -> Vec<[String; 7]> {
+    let hdr = |a: &str, b: &str, c: &str, d: &str, e: &str, f: &str, g: &str| {
+        [a.to_string(), b.to_string(), c.to_string(), d.to_string(), e.to_string(), f.to_string(), g.to_string()]
+    };
+    vec![
+        hdr("Design", "Device", "Task", "Dataset", "Bit-precision", "Operations", "Language"),
+        hdr("[17] Jaiswal & So", "Virtex-6 FPGA/ASIC", "-", "-", "All", "Mul,Add/Sub", "Verilog"),
+        hdr("[3] Chaurasiya et al.", "Zynq-7000 SoC/ASIC", "FIR Filter", "-", "All", "Mul,Add/Sub", "Verilog"),
+        hdr("[25] Podobas & Matsuoka", "Stratix V FPGA", "-", "-", "All", "Mul,Add/Sub", "C++/OpenCL"),
+        hdr("[4] Chen et al.", "Virtex7 & Ultrascale+", "-", "-", "32", "Quire", "Verilog"),
+        hdr("[23] Lehóczky et al.", "Artix-7 FPGA", "-", "-", "All", "Quire", "C#"),
+        hdr("[18] Johnson", "ASIC", "Image Classification", "ImageNet", "All, emph. 8", "Quire", "OpenCL"),
+        hdr(
+            "This Work (model)",
+            "Virtex-7 xc7vx485t (cost model)",
+            "Image Classification",
+            "WDBC, Iris, Mushroom, MNIST, Fashion MNIST",
+            "All, emph. [5,8]",
+            "Quire",
+            "Rust + JAX/Pallas",
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_sizes() {
+        let reports = sweep(&[5, 6, 7, 8], 256);
+        // Per-n: posit 3 + float (we 2..=min(5,n-2)) + fixed (n-2) configs.
+        assert!(reports.len() > 40);
+        assert!(reports.iter().all(|r| r.fmax_mhz > 50.0 && r.fmax_mhz < 2000.0));
+    }
+
+    #[test]
+    fn es_ratios_in_paper_ballpark() {
+        let (r1, r2) = es_edp_ratios(8, DEFAULT_K);
+        // Paper §5.1: es=0 EDP ≈ 1.4× (vs es=1) and 3× (vs es=2) smaller.
+        assert!(r1 > 1.05 && r1 < 2.5, "es1/es0 = {r1}");
+        assert!(r2 > 1.5 && r2 < 6.0, "es2/es0 = {r2}");
+        assert!(r2 > r1);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let reports = sweep(&[8], 256);
+        let t = render_table(&reports);
+        assert_eq!(t.lines().count(), reports.len() + 2);
+        assert!(t.contains("posit8es1"));
+    }
+
+    #[test]
+    fn table2_has_this_work_row() {
+        let rows = table2_rows();
+        assert!(rows.last().unwrap()[0].contains("This Work"));
+        assert_eq!(rows[0].len(), 7);
+    }
+}

@@ -1,0 +1,42 @@
+//! # deep-positron
+//!
+//! A full-system reproduction of **"Performance-Efficiency Trade-off of
+//! Low-Precision Numerical Formats in Deep Neural Networks"** (Carmichael et
+//! al., CoNGA'19) — the Deep Positron accelerator study comparing **posit**,
+//! **floating-point**, and **fixed-point** formats at [5, 8]-bit precision
+//! with exact multiply-and-accumulate (EMAC) units.
+//!
+//! The stack has three layers (see DESIGN.md):
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + JAX graphs, AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **L3 (this crate, Rust)** — bit-exact format codecs and EMACs
+//!   ([`formats`]), the Deep Positron accelerator simulator ([`accel`]), an
+//!   FPGA cost model ([`hw`]), dataset generators ([`datasets`]),
+//!   quantization-error analysis ([`quant`]), a PJRT runtime that executes
+//!   the AOT artifacts ([`runtime`]), and the experiment/serving coordinator
+//!   ([`coordinator`]).
+//!
+//! Quick taste (pure-Rust path, no artifacts needed):
+//!
+//! ```
+//! use deep_positron::formats::{Format, FormatSpec, Quantizer, Emac};
+//!
+//! let spec = FormatSpec::parse("posit8es1").unwrap();
+//! let fmt = spec.build();
+//! let q = Quantizer::new(fmt.as_ref());
+//! let (code, value) = q.quantize_f64(0.3);
+//! assert!((value - 0.3).abs() < 0.01);
+//! let mut emac = Emac::new(fmt.as_ref(), &q, 16);
+//! let out = emac.dot(&[code; 4], &[code; 4], None, false);
+//! assert!((q.decode(out).unwrap().to_f64() - 4.0 * value * value).abs() < 0.01);
+//! ```
+
+pub mod accel;
+pub mod coordinator;
+pub mod datasets;
+pub mod formats;
+pub mod hw;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,256 @@
+//! `repro` — CLI for the Deep Positron reproduction.
+//!
+//! Every table and figure of the paper has a subcommand that regenerates it
+//! (DESIGN.md §5 experiment index). Reports are printed and mirrored into
+//! `results/`.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+use deep_positron::coordinator::{experiments, report, server, trainer, Engine};
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::runtime::{artifacts_dir, Runtime};
+use deep_positron::{hw, quant};
+
+const USAGE: &str = "\
+repro — Deep Positron (CoNGA'19) reproduction driver
+
+USAGE: repro <command> [--key value ...]
+
+COMMANDS (one per paper artifact):
+  synth-report   EMAC synthesis table (§5 prose)        [--k 784] [--bits 5,6,7,8]
+  fig1           posit value distribution + param fit   [--seed 7]
+  fig5           layer-wise quantization-error heatmaps [--dataset mnist] [--scale small|full]
+  table1         8-bit inference accuracy, five tasks   [--engine sim|xla] [--scale small|full]
+  fig6           degradation vs energy-delay-product    [--engine sim|xla] [--tasks a,b,c]
+  fig7           degradation vs delay and power         (same flags as fig6)
+  es-study       §5.1 posit es trade-off                (same flags)
+  table2         posit-hardware comparison table
+  train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
+  serve          batched inference server demo          [--dataset iris] [--requests 200] [--engine sim|xla]
+  all            run every report at small scale
+
+Common flags: --seed N (default 7), --scale small|full (default small).
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i].strip_prefix("--").map(str::to_string);
+        match (k, args.get(i + 1)) {
+            (Some(k), Some(v)) => {
+                flags.insert(k, v.clone());
+                i += 2;
+            }
+            (Some(k), None) => bail!("flag --{k} missing a value"),
+            (None, _) => bail!("unexpected argument {}", args[i]),
+        }
+    }
+    Ok(flags)
+}
+
+struct Common {
+    seed: u64,
+    scale: Scale,
+    engine: Engine,
+    tasks: Vec<String>,
+}
+
+fn common(flags: &HashMap<String, String>) -> Result<Common> {
+    let seed = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let scale = match flags.get("scale").map(String::as_str) {
+        None | Some("small") => Scale::Small,
+        Some("full") => Scale::Full,
+        Some(other) => bail!("unknown scale {other}"),
+    };
+    let engine = match flags.get("engine").map(String::as_str) {
+        None | Some("sim") => Engine::Sim,
+        Some("xla") => Engine::Xla,
+        Some(other) => bail!("unknown engine {other}"),
+    };
+    let tasks = flags
+        .get("tasks")
+        .map(|t| t.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| datasets::ALL.iter().map(|s| s.to_string()).collect());
+    Ok(Common { seed, scale, engine, tasks })
+}
+
+fn maybe_runtime(engine: Engine) -> Result<Option<Runtime>> {
+    Ok(match engine {
+        Engine::Sim => None,
+        Engine::Xla => Some(Runtime::new(&artifacts_dir())?),
+    })
+}
+
+fn emit(name: &str, content: &str) -> Result<()> {
+    println!("{content}");
+    let path = report::write_report(name, content)?;
+    eprintln!("[written to {}]", path.display());
+    Ok(())
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    let c = common(&flags)?;
+    match cmd.as_str() {
+        "synth-report" => {
+            let k: usize = flags.get("k").map(|s| s.parse()).transpose()?.unwrap_or(hw::DEFAULT_K);
+            let bits: Vec<u32> = flags
+                .get("bits")
+                .map(|b| b.split(',').map(|x| x.parse().unwrap()).collect())
+                .unwrap_or_else(|| vec![5, 6, 7, 8]);
+            let reports = hw::sweep(&bits, k);
+            emit("synth_report.md", &hw::render_table(&reports))?;
+        }
+        "fig1" => {
+            let spec = FormatSpec::Posit { n: 8, es: 0 };
+            let hist = quant::value_distribution(spec, 8.0, 32);
+            let mut s = String::from("Fig 1a: posit8(es=0) value distribution over [-8, 8] (32 bins)\n\n");
+            for (i, h) in hist.iter().enumerate() {
+                let lo = -8.0 + 16.0 * i as f64 / 32.0;
+                s.push_str(&format!("{lo:>6.2} | {}\n", "#".repeat(*h)));
+            }
+            // Fig 1b: trained ConvNet-like parameter distribution + error.
+            let ds = datasets::load("iris", c.seed, c.scale);
+            let mlp = experiments::train_model(&ds, c.seed);
+            let params = &mlp.named_tensors().last().unwrap().data.clone();
+            let (hist, err) = quant::param_error_profile(spec, params, 1.5, 24);
+            s.push_str("\nFig 1b: trained-MLP parameter histogram | squared quantization error (posit8 es=0)\n\n");
+            let max_h = *hist.iter().max().unwrap_or(&1) as f64;
+            let max_e = err.iter().cloned().fold(1e-300, f64::max);
+            for i in 0..hist.len() {
+                let lo = -1.5 + 3.0 * i as f64 / 24.0;
+                s.push_str(&format!(
+                    "{lo:>6.2} | {:<24} | {}\n",
+                    "#".repeat((hist[i] as f64 / max_h * 24.0) as usize),
+                    "*".repeat((err[i] / max_e * 24.0) as usize)
+                ));
+            }
+            emit("fig1.md", &s)?;
+        }
+        "fig5" => {
+            let dataset = flags.get("dataset").map(String::as_str).unwrap_or("mnist").to_string();
+            let cells = experiments::fig5(&dataset, c.scale, c.seed);
+            let ns = [5, 6, 7, 8];
+            let mut s = format!("Fig 5 — layer-wise quantization error, dataset = {dataset}\n\n");
+            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_fixed, "MSE_posit − MSE_fixed (negative ⇒ posit better)"));
+            s.push('\n');
+            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_float, "MSE_posit − MSE_float (negative ⇒ posit better)"));
+            emit(&format!("fig5_{dataset}.md"), &s)?;
+        }
+        "table1" => {
+            let rt = maybe_runtime(c.engine)?;
+            let rows = experiments::table1(c.engine, rt.as_ref(), c.scale, c.seed)?;
+            emit("table1.md", &report::render_table1(&rows))?;
+        }
+        "fig6" | "fig7" => {
+            let rt = maybe_runtime(c.engine)?;
+            let tasks: Vec<&str> = c.tasks.iter().map(String::as_str).collect();
+            let points = experiments::tradeoff_sweep(c.engine, rt.as_ref(), c.scale, c.seed, &tasks)?;
+            if cmd == "fig6" {
+                emit("fig6.md", &report::render_tradeoff(&points, "edp"))?;
+            } else {
+                let mut s = report::render_tradeoff(&points, "delay");
+                s.push('\n');
+                s.push_str(&report::render_tradeoff(&points, "power"));
+                emit("fig7.md", &s)?;
+            }
+        }
+        "es-study" => {
+            let rt = maybe_runtime(c.engine)?;
+            let tasks: Vec<&str> = c.tasks.iter().map(String::as_str).collect();
+            let study = experiments::es_study(c.engine, rt.as_ref(), c.scale, c.seed, &tasks)?;
+            emit("es_study.md", &report::render_es_study(&study))?;
+        }
+        "table2" => emit("table2.md", &report::render_table2())?,
+        "sweep" => {
+            // Diagnostic: per-(task, config) accuracy at one bit-width.
+            let n: u32 = flags.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let rt = maybe_runtime(c.engine)?;
+            let mut s = format!("accuracy sweep at n={n} (engine {:?})\n\n| task | baseline |", c.engine);
+            let specs = FormatSpec::sweep(n);
+            for spec in &specs {
+                s.push_str(&format!(" {} |", spec.name()));
+            }
+            s.push('\n');
+            s.push_str(&format!("|---|---|{}", "---|".repeat(specs.len())));
+            s.push('\n');
+            for name in &c.tasks {
+                let ds = datasets::load(name, c.seed, c.scale);
+                let mlp = experiments::train_model(&ds, c.seed);
+                s.push_str(&format!("| {name} | {:.1} |", mlp.accuracy(&ds) * 100.0));
+                for &spec in &specs {
+                    let acc = experiments::eval(c.engine, rt.as_ref(), &mlp, &ds, spec)?;
+                    s.push_str(&format!(" {:.1} |", acc * 100.0));
+                }
+                s.push('\n');
+            }
+            emit(&format!("sweep_n{n}.md"), &s)?;
+        }
+        "train" => {
+            let dataset = flags.get("dataset").map(String::as_str).unwrap_or("mnist").to_string();
+            let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(10);
+            let rt = Runtime::new(&artifacts_dir())?;
+            let ds = datasets::load(&dataset, c.seed, c.scale);
+            let cfg = trainer::LoopConfig { epochs, seed: c.seed, log_every: 10, ..Default::default() };
+            let (state, log) = trainer::train_via_pjrt(&rt, &ds, &cfg)?;
+            let mlp = state.to_mlp();
+            let acc = mlp.accuracy(&ds);
+            let mut s = format!("PJRT training loop — {dataset} ({} epochs)\n\n", epochs);
+            s.push_str(&log.render());
+            s.push_str(&format!("\nf32-trained test accuracy: {:.2}%\n", acc * 100.0));
+            emit(&format!("train_{dataset}.md"), &s)?;
+        }
+        "serve" => {
+            let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
+            let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+            let ds = datasets::load(&dataset, c.seed, c.scale);
+            let mlp = experiments::train_model(&ds, c.seed);
+            let cfg = server::ServeConfig { engine: c.engine, ..Default::default() };
+            let handle = server::serve(&ds, mlp, cfg)?;
+            let rxs: Vec<_> = (0..requests).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec())).collect();
+            let mut correct = 0usize;
+            for (i, rx) in rxs.into_iter().enumerate() {
+                if rx.recv()?.class == ds.y_test[i % ds.test_len()] as usize {
+                    correct += 1;
+                }
+            }
+            let metrics = handle.shutdown();
+            let mut s = format!("inference server — {dataset}, engine {:?}\n\n", c.engine);
+            s.push_str(&metrics.render());
+            s.push_str(&format!("\nserved accuracy: {:.1}%\n", correct as f64 / requests as f64 * 100.0));
+            emit(&format!("serve_{dataset}.md"), &s)?;
+        }
+        "all" => {
+            for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7"] {
+                println!("==== {sub} ====");
+                run(&[sub.to_string(), "--seed".into(), c.seed.to_string()])?;
+            }
+            for ds in ["mnist", "fashion"] {
+                run(&["fig5".into(), "--dataset".into(), ds.into(), "--seed".into(), c.seed.to_string()])?;
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command {other}\n\n{USAGE}"),
+    }
+    Ok(())
+}

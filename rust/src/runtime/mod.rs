@@ -1,0 +1,455 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them on the
+//! request path. Python never runs here — the artifacts in `artifacts/` are
+//! produced once by `make artifacts` (python/compile/aot.py) and this module
+//! is the only bridge (per /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → compile → execute).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::{FormatSpec, Quantizer};
+
+/// Artifact kinds emitted by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    QInfer,
+    F32Infer,
+    Train,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "q_infer" => Kind::QInfer,
+            "f32_infer" => Kind::F32Infer,
+            "train" => Kind::Train,
+            _ => bail!("unknown artifact kind {s}"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub kind: Kind,
+    pub dataset: String,
+    pub batch: usize,
+    /// Full layer dims, input..output.
+    pub dims: Vec<usize>,
+    pub file: PathBuf,
+}
+
+/// Parse `artifacts/manifest.txt`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<Artifact>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("missing manifest in {dir:?}; run `make artifacts`"))?;
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let mut kind = None;
+        let mut dataset = None;
+        let mut batch = None;
+        let mut dims = None;
+        let mut file = None;
+        for tok in line.split_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or_else(|| anyhow!("bad manifest token {tok}"))?;
+            match k {
+                "kind" => kind = Some(Kind::parse(v)?),
+                "dataset" => dataset = Some(v.to_string()),
+                "batch" => batch = Some(v.parse::<usize>()?),
+                "dims" => dims = Some(v.split('-').map(|d| d.parse::<usize>()).collect::<Result<Vec<_>, _>>()?),
+                "file" => file = Some(dir.join(v)),
+                _ => bail!("unknown manifest key {k}"),
+            }
+        }
+        out.push(Artifact {
+            kind: kind.ok_or_else(|| anyhow!("manifest line missing kind: {line}"))?,
+            dataset: dataset.ok_or_else(|| anyhow!("missing dataset"))?,
+            batch: batch.ok_or_else(|| anyhow!("missing batch"))?,
+            dims: dims.ok_or_else(|| anyhow!("missing dims"))?,
+            file: file.ok_or_else(|| anyhow!("missing file"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Table capacity baked into the artifacts (quantize_lut.TABLE).
+pub const TABLE: usize = 256;
+
+/// The PJRT runtime: one CPU client + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: Vec<Artifact>,
+    cache: Mutex<HashMap<(Kind, String, usize), usize>>, // -> slot in exes
+    exes: Mutex<Vec<(usize, xla::PjRtLoadedExecutable)>>, // (artifact idx, exe)
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let artifacts = parse_manifest(artifacts_dir)?;
+        Ok(Runtime { client, artifacts, cache: Mutex::new(HashMap::new()), exes: Mutex::new(Vec::new()) })
+    }
+
+    pub fn artifacts(&self) -> &[Artifact] {
+        &self.artifacts
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn find(&self, kind: Kind, dataset: &str, batch: usize) -> Result<usize> {
+        self.artifacts
+            .iter()
+            .position(|a| a.kind == kind && a.dataset == dataset && a.batch == batch)
+            .ok_or_else(|| anyhow!("no artifact kind={kind:?} dataset={dataset} batch={batch}; re-run `make artifacts`"))
+    }
+
+    /// Batch sizes available for a (kind, dataset), ascending.
+    pub fn batches(&self, kind: Kind, dataset: &str) -> Vec<usize> {
+        let mut b: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == kind && a.dataset == dataset).map(|a| a.batch).collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// Compile (or fetch from cache) an executable; returns its slot.
+    fn executable(&self, kind: Kind, dataset: &str, batch: usize) -> Result<(usize, usize)> {
+        let key = (kind, dataset.to_string(), batch);
+        if let Some(&slot) = self.cache.lock().unwrap().get(&key) {
+            let idx = self.exes.lock().unwrap()[slot].0;
+            return Ok((slot, idx));
+        }
+        let idx = self.find(kind, dataset, batch)?;
+        let a = &self.artifacts[idx];
+        let proto = xla::HloModuleProto::from_text_file(&a.file).map_err(|e| anyhow!("parse {:?}: {e}", a.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = comp.compile(&self.client).map_err(|e| anyhow!("compile {:?}: {e}", a.file))?;
+        let mut exes = self.exes.lock().unwrap();
+        exes.push((idx, exe));
+        let slot = exes.len() - 1;
+        self.cache.lock().unwrap().insert(key, slot);
+        Ok((slot, idx))
+    }
+
+    fn run(&self, slot: usize, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exes = self.exes.lock().unwrap();
+        let (_, exe) = &exes[slot];
+        let result = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+
+    /// Build the quantized-inference handle for one dataset topology.
+    pub fn quantized_infer(&self, dataset: &str, batch: usize) -> Result<QInfer<'_>> {
+        let (slot, idx) = self.executable(Kind::QInfer, dataset, batch)?;
+        let a = &self.artifacts[idx];
+        Ok(QInfer { rt: self, slot, dims: a.dims.clone(), batch })
+    }
+
+    pub fn f32_infer(&self, dataset: &str, batch: usize) -> Result<F32Infer<'_>> {
+        let (slot, idx) = self.executable(Kind::F32Infer, dataset, batch)?;
+        let a = &self.artifacts[idx];
+        Ok(F32Infer { rt: self, slot, dims: a.dims.clone(), batch })
+    }
+
+    pub fn train_step(&self, dataset: &str) -> Result<TrainStep<'_>> {
+        let batch = *self
+            .batches(Kind::Train, dataset)
+            .first()
+            .ok_or_else(|| anyhow!("no train artifact for {dataset}"))?;
+        let (slot, idx) = self.executable(Kind::Train, dataset, batch)?;
+        let a = &self.artifacts[idx];
+        Ok(TrainStep { rt: self, slot, dims: a.dims.clone(), batch })
+    }
+}
+
+/// f64 tensor literal from a flat slice.
+pub fn lit_f64(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "literal size mismatch");
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(data).reshape(&d).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// f32 tensor literal from a flat f64 slice (converted).
+pub fn lit_f32(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+    let v: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+    xla::Literal::vec1(&v).reshape(&d).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// The per-format tables in the artifact's layout.
+#[derive(Debug, Clone)]
+pub struct FormatTables {
+    pub values: Vec<f64>,
+    pub bounds: Vec<f64>,
+    pub ties: Vec<f64>,
+    pub flags: [f64; 2],
+}
+
+impl FormatTables {
+    /// Build from a quantizer (pads to the artifact's 256-entry layout).
+    pub fn new(spec: FormatSpec, q: &Quantizer) -> FormatTables {
+        let (values, mut bounds, mut ties) = q.padded_tables(TABLE);
+        // quantize_lut expects TABLE-length bounds/ties (padded +inf / 0).
+        bounds.resize(TABLE, f64::INFINITY);
+        ties.resize(TABLE, 0.0);
+        let is_posit = matches!(spec, FormatSpec::Posit { .. });
+        FormatTables { values, bounds, ties, flags: [if is_posit { 1.0 } else { 0.0 }, q.min_pos()] }
+    }
+}
+
+/// Quantized-inference executable bound to (dataset topology, batch).
+pub struct QInfer<'r> {
+    rt: &'r Runtime,
+    slot: usize,
+    dims: Vec<usize>,
+    batch: usize,
+}
+
+impl<'r> QInfer<'r> {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Run up to `batch` rows (padded internally). `weights[i]` is the
+    /// dequantized (in × out) matrix (python layout), `biases[i]` the
+    /// dequantized bias. Returns `rows × classes` logits.
+    pub fn run(
+        &self,
+        x: &[f64],
+        rows: usize,
+        weights: &[Vec<f64>],
+        biases: &[Vec<f64>],
+        tables: &FormatTables,
+    ) -> Result<Vec<f64>> {
+        let in_dim = self.dims[0];
+        let out_dim = *self.dims.last().unwrap();
+        assert!(rows <= self.batch && x.len() == rows * in_dim);
+        let mut xp = x.to_vec();
+        xp.resize(self.batch * in_dim, 0.0);
+        let mut args = Vec::with_capacity(5 + 2 * weights.len());
+        args.push(lit_f64(&xp, &[self.batch, in_dim])?);
+        for (i, (w, b)) in weights.iter().zip(biases).enumerate() {
+            args.push(lit_f64(w, &[self.dims[i], self.dims[i + 1]])?);
+            args.push(lit_f64(b, &[self.dims[i + 1]])?);
+        }
+        args.push(lit_f64(&tables.values, &[TABLE])?);
+        args.push(lit_f64(&tables.bounds, &[TABLE])?);
+        args.push(lit_f64(&tables.ties, &[TABLE])?);
+        args.push(lit_f64(&tables.flags, &[2])?);
+        let out = self.rt.run(self.slot, &args)?;
+        let logits: Vec<f64> = out[0].to_vec().map_err(|e| anyhow!("logits: {e}"))?;
+        Ok(logits[..rows * out_dim].to_vec())
+    }
+}
+
+/// f32 baseline inference executable.
+pub struct F32Infer<'r> {
+    rt: &'r Runtime,
+    slot: usize,
+    dims: Vec<usize>,
+    batch: usize,
+}
+
+impl<'r> F32Infer<'r> {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn run(&self, x: &[f64], rows: usize, weights: &[Vec<f64>], biases: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let in_dim = self.dims[0];
+        let out_dim = *self.dims.last().unwrap();
+        assert!(rows <= self.batch && x.len() == rows * in_dim);
+        let mut xp = x.to_vec();
+        xp.resize(self.batch * in_dim, 0.0);
+        let mut args = Vec::new();
+        args.push(lit_f32(&xp, &[self.batch, in_dim])?);
+        for (i, (w, b)) in weights.iter().zip(biases).enumerate() {
+            args.push(lit_f32(w, &[self.dims[i], self.dims[i + 1]])?);
+            args.push(lit_f32(b, &[self.dims[i + 1]])?);
+        }
+        let out = self.rt.run(self.slot, &args)?;
+        let logits: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("logits: {e}"))?;
+        Ok(logits[..rows * out_dim].iter().map(|&v| v as f64).collect())
+    }
+}
+
+/// Training-step executable.
+pub struct TrainStep<'r> {
+    rt: &'r Runtime,
+    slot: usize,
+    dims: Vec<usize>,
+    batch: usize,
+}
+
+/// Flattened f32 training state (params + velocities), host side. Weight
+/// matrices use the python (in × out) layout.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub dims: Vec<usize>,
+    /// w1, b1, w2, b2, ...
+    pub params: Vec<Vec<f64>>,
+    pub vels: Vec<Vec<f64>>,
+}
+
+impl TrainState {
+    /// He-initialized state for a topology.
+    pub fn init(dims: &[usize], seed: u64) -> TrainState {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut params = Vec::new();
+        let mut vels = Vec::new();
+        for win in dims.windows(2) {
+            let (i, o) = (win[0], win[1]);
+            let std = (2.0 / i as f64).sqrt();
+            params.push((0..i * o).map(|_| rng.normal(0.0, std)).collect());
+            params.push(vec![0.0; o]);
+            vels.push(vec![0.0; i * o]);
+            vels.push(vec![0.0; o]);
+        }
+        TrainState { dims: dims.to_vec(), params, vels }
+    }
+
+    /// Convert to the accelerator's Mlp (f64, row-major (out, in) weights).
+    pub fn to_mlp(&self) -> crate::accel::Mlp {
+        let mut layers = Vec::new();
+        for (li, win) in self.dims.windows(2).enumerate() {
+            let (i, o) = (win[0], win[1]);
+            let wio = &self.params[2 * li];
+            let mut w = vec![0.0; i * o];
+            for r in 0..i {
+                for c in 0..o {
+                    w[c * i + r] = wio[r * o + c];
+                }
+            }
+            layers.push(crate::accel::mlp::Layer { in_dim: i, out_dim: o, w, b: self.params[2 * li + 1].clone() });
+        }
+        crate::accel::Mlp { layers }
+    }
+
+    /// Build from an accelerator Mlp (transposes back to python layout).
+    pub fn from_mlp(mlp: &crate::accel::Mlp) -> TrainState {
+        let dims = mlp.dims();
+        let mut params = Vec::new();
+        let mut vels = Vec::new();
+        for l in &mlp.layers {
+            let mut w = vec![0.0; l.in_dim * l.out_dim];
+            for o in 0..l.out_dim {
+                for i in 0..l.in_dim {
+                    w[i * l.out_dim + o] = l.w[o * l.in_dim + i];
+                }
+            }
+            params.push(w);
+            params.push(l.b.clone());
+            vels.push(vec![0.0; l.in_dim * l.out_dim]);
+            vels.push(vec![0.0; l.out_dim]);
+        }
+        TrainState { dims, params, vels }
+    }
+}
+
+impl<'r> TrainStep<'r> {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// One SGD-momentum step; updates `state` in place, returns the loss.
+    pub fn step(&self, state: &mut TrainState, x: &[f64], y_onehot: &[f64], lr: f64, momentum: f64) -> Result<f64> {
+        let in_dim = self.dims[0];
+        let classes = *self.dims.last().unwrap();
+        assert_eq!(x.len(), self.batch * in_dim, "train batch must be exactly {}", self.batch);
+        assert_eq!(y_onehot.len(), self.batch * classes);
+        let mut args = Vec::new();
+        args.push(lit_f32(x, &[self.batch, in_dim])?);
+        args.push(lit_f32(y_onehot, &[self.batch, classes])?);
+        args.push(xla::Literal::scalar(lr as f32));
+        args.push(xla::Literal::scalar(momentum as f32));
+        for (li, win) in self.dims.windows(2).enumerate() {
+            args.push(lit_f32(&state.params[2 * li], &[win[0], win[1]])?);
+            args.push(lit_f32(&state.params[2 * li + 1], &[win[1]])?);
+        }
+        for (li, win) in self.dims.windows(2).enumerate() {
+            args.push(lit_f32(&state.vels[2 * li], &[win[0], win[1]])?);
+            args.push(lit_f32(&state.vels[2 * li + 1], &[win[1]])?);
+        }
+        let out = self.rt.run(self.slot, &args)?;
+        let loss: f32 = out[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e}"))?[0];
+        let np = state.params.len();
+        for i in 0..np {
+            state.params[i] =
+                out[1 + i].to_vec::<f32>().map_err(|e| anyhow!("param {i}: {e}"))?.iter().map(|&v| v as f64).collect();
+        }
+        for i in 0..np {
+            state.vels[i] =
+                out[1 + np + i].to_vec::<f32>().map_err(|e| anyhow!("vel {i}: {e}"))?.iter().map(|&v| v as f64).collect();
+        }
+        Ok(loss as f64)
+    }
+}
+
+/// Default artifacts directory: $REPRO_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("REPRO_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("dp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "kind=q_infer dataset=iris batch=64 dims=4-10-8-3 file=q_infer_iris_b64.hlo.txt\n\
+             kind=train dataset=iris batch=128 dims=4-10-8-3 file=train_iris_b128.hlo.txt\n",
+        )
+        .unwrap();
+        let arts = parse_manifest(&dir).unwrap();
+        assert_eq!(arts.len(), 2);
+        assert_eq!(arts[0].kind, Kind::QInfer);
+        assert_eq!(arts[0].dims, vec![4, 10, 8, 3]);
+        assert_eq!(arts[1].batch, 128);
+    }
+
+    #[test]
+    fn train_state_roundtrip_to_mlp() {
+        let st = TrainState::init(&[4, 3, 2], 1);
+        assert_eq!(st.params.len(), 4);
+        assert_eq!(st.params[0].len(), 12);
+        let mlp = st.to_mlp();
+        assert_eq!(mlp.dims(), vec![4, 3, 2]);
+        // Transposition check: python w[r=1,c=0] == accel w[o=0][i=1].
+        assert_eq!(st.params[0][1 * 3 + 0], mlp.layers[0].w[0 * 4 + 1]);
+        // And back.
+        let st2 = TrainState::from_mlp(&mlp);
+        assert_eq!(st.params[0], st2.params[0]);
+        assert_eq!(st.params[1], st2.params[1]);
+    }
+
+    #[test]
+    fn format_tables_layout() {
+        let spec = FormatSpec::parse("posit8es1").unwrap();
+        let q = Quantizer::new(spec.build().as_ref());
+        let t = FormatTables::new(spec, &q);
+        assert_eq!(t.values.len(), TABLE);
+        assert_eq!(t.bounds.len(), TABLE);
+        assert_eq!(t.ties.len(), TABLE);
+        assert_eq!(t.flags[0], 1.0);
+        assert!(t.bounds[TABLE - 1].is_infinite());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities: a deterministic RNG (the offline build has
+//! no `rand` crate), lightweight statistics, and a property-test driver used
+//! by the test suites in lieu of `proptest`.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

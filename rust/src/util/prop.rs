@@ -1,0 +1,74 @@
+//! A tiny property-testing driver (the offline registry has no `proptest`;
+//! DESIGN.md §Substitutions). Properties run against many seeded random
+//! cases; on failure the driver re-reports the failing seed so the case can
+//! be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(256)
+}
+
+/// Run `property` against `cases()` independently-seeded RNGs. Panics with
+/// the seed of the first failing case.
+pub fn forall(name: &str, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases() {
+        let seed = 0xDEEB_0516_u64.wrapping_mul(case + 1) ^ case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Draw a "interesting" f64: mixes uniform ranges, exact format-scale
+/// dyadics, zeros, and extremes — the corners quantizers get wrong.
+pub fn arb_f64(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => rng.range(-1.0, 1.0),
+        2 => rng.range(-300.0, 300.0),
+        3 => rng.range(-1e6, 1e6),
+        4 => {
+            // exact dyadic m × 2^e, the tie-prone inputs
+            let m = rng.below(512) as f64 - 256.0;
+            let e = rng.below(24) as i32 - 12;
+            m * crate::formats::exact::pow2(e)
+        }
+        5 => rng.range(-1e-6, 1e-6),
+        6 => if rng.chance(0.5) { 1e30 } else { -1e30 },
+        _ => rng.gaussian(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 is u64", |rng| {
+            let _ = rng.next_u64();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn arb_f64_is_finite() {
+        forall("arb f64 finite", |rng| {
+            assert!(arb_f64(rng).is_finite());
+        });
+    }
+}

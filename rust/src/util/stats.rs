@@ -1,0 +1,149 @@
+//! Lightweight statistics helpers shared by benches, the cost model, and the
+//! experiment reports.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank on a sorted copy), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Min/max of a slice.
+pub fn min_max(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Histogram with `bins` equal-width buckets over [lo, hi].
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let i = (((x - lo) / w) as usize).min(bins - 1);
+        h[i] += 1;
+    }
+    h
+}
+
+/// Simple timer for the hand-rolled bench harness (criterion is unavailable
+/// offline; see DESIGN.md §Substitutions).
+pub struct BenchTimer {
+    label: String,
+    samples: Vec<f64>,
+}
+
+impl BenchTimer {
+    pub fn new(label: &str) -> BenchTimer {
+        BenchTimer { label: label.to_string(), samples: Vec::new() }
+    }
+
+    /// Time one invocation (seconds).
+    pub fn sample<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.samples.push(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Run `f` repeatedly for at least `budget` seconds (min 3 samples).
+    pub fn run(&mut self, budget: f64, mut f: impl FnMut()) {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_secs_f64() < budget || self.samples.len() < 3 {
+            self.sample(&mut f);
+        }
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Render a criterion-style one-liner.
+    pub fn report(&self) -> String {
+        let m = mean(&self.samples);
+        let sd = std_dev(&self.samples);
+        format!(
+            "{:<44} time: [{} ± {}]  n={}",
+            self.label,
+            fmt_time(m),
+            fmt_time(sd),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[1.0, 2.0, 3.0]) - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9, 1.5], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 1]);
+    }
+
+    #[test]
+    fn timer_collects_samples() {
+        let mut t = BenchTimer::new("noop");
+        t.run(0.001, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(t.samples().len() >= 3);
+        assert!(t.report().contains("noop"));
+    }
+}

@@ -1,0 +1,57 @@
+//! Property tests over coordinator invariants: the batching server and the
+//! sweep/report plumbing.
+
+use std::time::Duration;
+
+use deep_positron::coordinator::experiments::train_model;
+use deep_positron::coordinator::{serve, ServeConfig};
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::util::prop::forall;
+
+#[test]
+fn prop_server_serves_every_request_exactly_once() {
+    // Runs a fresh server per case with random burst patterns; every request
+    // must receive exactly one reply and metrics must account for all.
+    std::env::set_var("PROP_CASES", std::env::var("PROP_CASES").unwrap_or_else(|_| "8".into()));
+    let ds = datasets::load("iris", 3, Scale::Small);
+    let mlp = train_model(&ds, 3);
+    forall("server accounts for all requests", |rng| {
+        let cfg = ServeConfig { max_batch_wait: Duration::from_micros(rng.below(3000) as u64), ..Default::default() };
+        let handle = serve(&ds, mlp.clone(), cfg).unwrap();
+        let n = 1 + rng.below(40);
+        let rxs: Vec<_> = (0..n).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec())).collect();
+        let mut replies = 0;
+        for rx in rxs {
+            let reply = rx.recv().expect("no reply");
+            assert!(reply.class < ds.num_classes);
+            replies += 1;
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(replies, n);
+        assert_eq!(metrics.served, n);
+        assert_eq!(metrics.latencies_s.len(), n);
+        assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), n);
+        assert!(metrics.batches <= n);
+    });
+}
+
+#[test]
+fn prop_best_accuracy_is_max_of_family_sweep() {
+    std::env::set_var("PROP_CASES", std::env::var("PROP_CASES").unwrap_or_else(|_| "6".into()));
+    let ds = datasets::load("iris", 9, Scale::Small);
+    let mlp = train_model(&ds, 9);
+    forall("best_accuracy = max over sweep", |rng| {
+        let family = ["posit", "float", "fixed"][rng.below(3)];
+        let n = 5 + rng.below(4) as u32;
+        let (best, spec) =
+            deep_positron::coordinator::experiments::best_accuracy(deep_positron::coordinator::Engine::Sim, None, &mlp, &ds, family, n)
+                .unwrap();
+        assert_eq!(spec.family(), family);
+        assert_eq!(spec.n(), n);
+        for s in FormatSpec::sweep_family(n, family) {
+            let acc = deep_positron::coordinator::experiments::eval_sim(&mlp, &ds, s);
+            assert!(acc <= best + 1e-12, "{s} beats reported best");
+        }
+    });
+}

@@ -1,0 +1,161 @@
+//! Property tests over the format/EMAC invariants (util::prop's seeded
+//! forall in lieu of the unavailable proptest crate — DESIGN.md
+//! §Substitutions).
+
+use std::cmp::Ordering;
+
+use deep_positron::formats::{Emac, Exact, Format, FormatSpec, Quantizer};
+use deep_positron::util::prop::{arb_f64, forall};
+use deep_positron::util::Rng;
+
+fn arb_spec(rng: &mut Rng) -> FormatSpec {
+    let n = 5 + rng.below(4) as u32; // 5..=8
+    match rng.below(3) {
+        0 => FormatSpec::Posit { n, es: rng.below(3) as u32 },
+        1 => FormatSpec::Float { n, we: 2 + rng.below((n - 3) as usize).min(3) as u32 },
+        _ => FormatSpec::Fixed { n, q: 1 + rng.below((n - 2) as usize) as u32 },
+    }
+}
+
+#[test]
+fn prop_encode_decode_identity_on_codes() {
+    forall("encode(decode(c)) == c", |rng| {
+        let spec = arb_spec(rng);
+        let fmt = spec.build();
+        let q = Quantizer::new(fmt.as_ref());
+        let code = q.codes()[rng.below(q.len())];
+        let v = q.decode(code).unwrap();
+        let (c2, _) = q.quantize_exact(&v);
+        assert_eq!(c2, code, "{spec}: code {code:#x} decodes to {v:?} but re-encodes to {c2:#x}");
+    });
+}
+
+#[test]
+fn prop_quantize_returns_nearest_value() {
+    forall("quantize is nearest", |rng| {
+        let spec = arb_spec(rng);
+        let fmt = spec.build();
+        let q = Quantizer::new(fmt.as_ref());
+        let x = arb_f64(rng);
+        let (_, v) = q.quantize_f64(x);
+        let err = (x - v).abs();
+        // Posit-only exception: tiny nonzero x clamps to ±minpos even though
+        // 0 is closer (the no-underflow rule) — exclude 0 from the check.
+        let skip_zero = !fmt.underflows_to_zero() && x != 0.0;
+        if skip_zero {
+            assert_ne!(v, 0.0, "{spec}: posit rounded nonzero {x} to zero");
+        }
+        // No other representable value may be strictly closer (ties allowed).
+        for &u in q.values() {
+            if skip_zero && u == 0.0 {
+                continue;
+            }
+            assert!(
+                (x - u).abs() >= err * (1.0 - 1e-15),
+                "{spec}: quantize({x}) = {v} but {u} is closer"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_decode_monotone_in_value_order() {
+    forall("table strictly increasing", |rng| {
+        let spec = arb_spec(rng);
+        let q = Quantizer::new(spec.build().as_ref());
+        let i = rng.below(q.len() - 1);
+        assert!(q.values()[i] < q.values()[i + 1], "{spec}: table not strictly increasing at {i}");
+    });
+}
+
+#[test]
+fn prop_exact_and_f64_quantize_agree() {
+    forall("quantize_exact == quantize_f64", |rng| {
+        let spec = arb_spec(rng);
+        let q = Quantizer::new(spec.build().as_ref());
+        let x = arb_f64(rng);
+        assert_eq!(q.quantize_f64(x), q.quantize_exact(&Exact::from_f64(x)), "{spec} at {x}");
+    });
+}
+
+#[test]
+fn prop_emac_matches_exact_reference() {
+    forall("EMAC == exact rational dot", |rng| {
+        let spec = arb_spec(rng);
+        let fmt = spec.build();
+        let q = Quantizer::new(fmt.as_ref());
+        let k = 1 + rng.below(48);
+        let mut emac = Emac::new(fmt.as_ref(), &q, 64);
+        let mut exact_sum = Exact::ZERO;
+        for _ in 0..k {
+            let w = q.codes()[rng.below(q.len())];
+            let a = q.codes()[rng.below(q.len())];
+            emac.mac(w, a);
+            exact_sum = exact_sum.add(q.decode(w).unwrap().mul(q.decode(a).unwrap()));
+        }
+        // The quire must hold the exact rational sum.
+        assert_eq!(
+            emac.quire_value().canonical().cmp_exact(&exact_sum.canonical()),
+            Ordering::Equal,
+            "{spec}: quire diverged from exact sum"
+        );
+        // And the terminal round must be the correctly-rounded result.
+        let code = emac.result(false);
+        let (expect, _) = q.quantize_exact(&exact_sum);
+        assert_eq!(code, expect, "{spec}: terminal rounding wrong");
+    });
+}
+
+#[test]
+fn prop_emac_relu_equals_post_round_clamp() {
+    forall("relu(round(x)) == round-then-clamp", |rng| {
+        let spec = arb_spec(rng);
+        let fmt = spec.build();
+        let q = Quantizer::new(fmt.as_ref());
+        let mut emac = Emac::new(fmt.as_ref(), &q, 16);
+        let mut emac2 = Emac::new(fmt.as_ref(), &q, 16);
+        let k = 1 + rng.below(8);
+        for _ in 0..k {
+            let w = q.codes()[rng.below(q.len())];
+            let a = q.codes()[rng.below(q.len())];
+            emac.mac(w, a);
+            emac2.mac(w, a);
+        }
+        let with_relu = emac.result(true);
+        let without = emac2.result(false);
+        let v = q.decode(without).unwrap().to_f64();
+        let rv = q.decode(with_relu).unwrap().to_f64();
+        assert_eq!(rv, v.max(0.0), "{spec}");
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_neighbor_gap() {
+    forall("|x - q(x)| ≤ gap/2 within range", |rng| {
+        let spec = arb_spec(rng);
+        let fmt = spec.build();
+        let q = Quantizer::new(fmt.as_ref());
+        // In-range x only (outside the range saturation error is unbounded).
+        let x = rng.range(-fmt.max_value(), fmt.max_value());
+        let (_, v) = q.quantize_f64(x);
+        let idx = q.values().partition_point(|&u| u < v);
+        let gap_lo = if idx > 0 { q.values()[idx] - q.values()[idx - 1] } else { f64::INFINITY };
+        let gap_hi = if idx + 1 < q.len() { q.values()[idx + 1] - q.values()[idx] } else { f64::INFINITY };
+        let bound = gap_lo.max(gap_hi) / 2.0 + 1e-15;
+        // Posit minpos clamp can exceed the local gap at zero — skip there.
+        if fmt.underflows_to_zero() || v != 0.0 && x.abs() >= fmt.min_pos() {
+            assert!((x - v).abs() <= bound, "{spec}: |{x} - {v}| > {bound}");
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_family_nonempty_and_distinct() {
+    forall("sweeps well-formed", |rng| {
+        let n = 5 + rng.below(4) as u32;
+        let sweep = FormatSpec::sweep(n);
+        let names: std::collections::HashSet<String> = sweep.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), sweep.len(), "duplicate specs in sweep({n})");
+        assert!(sweep.iter().all(|s| s.n() == n));
+    });
+}

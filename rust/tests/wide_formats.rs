@@ -1,0 +1,91 @@
+//! 16-bit format coverage: the codecs generalize beyond the paper's [5,8]
+//! sweep — IEEE-754 half (float16 we5), bfloat16 (float16 we8), posit16 —
+//! including the EMAC-width guard that rejects quires wider than the i128
+//! accumulator.
+
+use deep_positron::formats::{Emac, Format, FormatSpec, Quantizer};
+
+#[test]
+fn half_precision_known_values() {
+    // IEEE binary16 layout (we=5, wf=10), minus Inf/NaN per Deep Positron.
+    let half = FormatSpec::Float { n: 16, we: 5 }.build();
+    let q = Quantizer::new(half.as_ref());
+    for x in [1.0, -1.5, 0.333251953125, 1024.0, 6.103515625e-5] {
+        let (_, v) = q.quantize_f64(x);
+        assert_eq!(v, x, "half must represent {x} exactly");
+    }
+    // max = 2^15 × (2 − 2^-10) = 65504
+    assert_eq!(half.max_value(), 65504.0);
+    // smallest subnormal = 2^-24
+    assert_eq!(half.min_pos(), 2.0f64.powi(-24));
+    // 1/3 rounds to the nearest half value
+    let (_, v) = q.quantize_f64(1.0 / 3.0);
+    assert!((v - 1.0 / 3.0).abs() < 2.0f64.powi(-11));
+}
+
+#[test]
+fn bfloat16_known_values() {
+    let bf16 = FormatSpec::Float { n: 16, we: 8 }.build();
+    let q = Quantizer::new(bf16.as_ref());
+    // bf16 has f32's exponent range (bias 127, exp_max 254): max =
+    // 2^127 × (2 − 2^-7).
+    assert_eq!(bf16.max_value(), 2.0f64.powi(127) * (2.0 - 2.0f64.powi(-7)));
+    let (_, v) = q.quantize_f64(3.141592653589793);
+    assert_eq!(v, 3.140625, "π in bfloat16");
+}
+
+#[test]
+fn posit16_es1_structure() {
+    let p16 = FormatSpec::Posit { n: 16, es: 1 }.build();
+    let q = Quantizer::new(p16.as_ref());
+    assert_eq!(q.len(), 65535); // 2^16 − NaR
+    assert_eq!(p16.max_value(), 2.0f64.powi(28)); // useed^14 = 4^14
+    let (_, v) = q.quantize_f64(1.0);
+    assert_eq!(v, 1.0);
+    // Tapered: step near 1.0 is 2^-12 (12 fraction bits at regime 01/10).
+    let (_, v) = q.quantize_f64(1.0 + 2.0f64.powi(-12));
+    assert_eq!(v, 1.0 + 2.0f64.powi(-12));
+}
+
+#[test]
+fn half_precision_emac_works() {
+    // Quire for half at k=64: ceil(log2 64) + 2×ceil(log2(65504/2^-24)) + 2
+    // = 6 + 2×40 + 2 = 88 bits — fits i128.
+    let half = FormatSpec::Float { n: 16, we: 5 }.build();
+    let q = Quantizer::new(half.as_ref());
+    let mut emac = Emac::new(half.as_ref(), &q, 64);
+    let (c, _) = q.quantize_f64(0.125);
+    for _ in 0..64 {
+        emac.mac(c, c);
+    }
+    let out = emac.result(false);
+    assert_eq!(q.decode(out).unwrap().to_f64(), 1.0); // 64 × 0.125²
+}
+
+#[test]
+#[should_panic(expected = "quire needs")]
+fn posit16_es2_emac_exceeds_i128_and_is_rejected() {
+    // posit16 es=2: max/min ratio = useed^(2n−4) = 16^28 = 2^112; Eq. (2)
+    // demands far beyond 127 bits. The constructor must refuse loudly
+    // rather than silently wrap.
+    let p16 = FormatSpec::Posit { n: 16, es: 2 }.build();
+    let q = Quantizer::new(p16.as_ref());
+    let _ = Emac::new(p16.as_ref(), &q, 784);
+}
+
+#[test]
+fn wide_quantizer_is_still_correct_nearest() {
+    let p16 = FormatSpec::Posit { n: 16, es: 1 }.build();
+    let q = Quantizer::new(p16.as_ref());
+    let mut rng = deep_positron::util::Rng::new(5);
+    for _ in 0..2000 {
+        let x = rng.range(-100.0, 100.0);
+        let (_, v) = q.quantize_f64(x);
+        let err = (x - v).abs();
+        // Binary-search the two neighbors and verify nearest.
+        let idx = q.values().partition_point(|&u| u < v);
+        for j in idx.saturating_sub(1)..(idx + 2).min(q.len()) {
+            assert!((x - q.values()[j]).abs() >= err - 1e-18);
+        }
+    }
+}
