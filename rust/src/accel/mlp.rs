@@ -14,9 +14,13 @@ use crate::util::Rng;
 /// One dense layer: row-major `w[out][in]`, bias `b[out]`.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Input width (fan-in).
     pub in_dim: usize,
+    /// Output width (fan-out).
     pub out_dim: usize,
+    /// Weights, row-major `w[out][in]`.
     pub w: Vec<f64>,
+    /// Biases, `b[out]`.
     pub b: Vec<f64>,
 }
 
@@ -24,6 +28,7 @@ pub struct Layer {
 /// (softmax applied in the loss), matching Deep Positron's dataflow.
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// Dense layers, input-first.
     pub layers: Vec<Layer>,
 }
 
@@ -47,6 +52,7 @@ impl Mlp {
         Mlp { layers }
     }
 
+    /// Layer widths, `[in, h1, ..., out]`.
     pub fn dims(&self) -> Vec<usize> {
         let mut d: Vec<usize> = vec![self.layers[0].in_dim];
         d.extend(self.layers.iter().map(|l| l.out_dim));
@@ -123,6 +129,7 @@ pub fn fold_input_normalization(mlp: &mut Mlp, means: &[f64], stds: &[f64]) {
     }
 }
 
+/// Index of the largest element (first wins on ties).
 pub fn argmax(xs: &[f64]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
@@ -136,12 +143,17 @@ pub fn argmax(xs: &[f64]) -> usize {
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Passes over the training split.
     pub epochs: usize,
+    /// Minibatch size.
     pub batch: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// SGD momentum coefficient.
     pub momentum: f64,
     /// L2 weight decay.
     pub decay: f64,
+    /// Shuffling seed.
     pub seed: u64,
 }
 

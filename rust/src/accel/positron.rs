@@ -7,6 +7,8 @@
 //! layers). This is the golden path Table 1's low-precision columns are
 //! measured on; the AOT/XLA fast path is validated against it.
 
+use std::sync::Arc;
+
 use super::mlp::{argmax, Mlp};
 use crate::datasets::Dataset;
 use crate::formats::ops::ScalarAlu;
@@ -29,7 +31,9 @@ pub enum Datapath {
 pub struct DeepPositron {
     spec: FormatSpec,
     fmt: Box<dyn Format + Send + Sync>,
-    quantizer: Quantizer,
+    /// Shared, read-only quantization tables (one build per format per
+    /// process — [`Quantizer::shared`]).
+    quantizer: Arc<Quantizer>,
     /// Per-layer weight codes, row-major `[out][in]`.
     weights: Vec<Vec<u16>>,
     /// Per-layer bias values, kept exact (the accelerator feeds biases into
@@ -39,10 +43,17 @@ pub struct DeepPositron {
 }
 
 impl DeepPositron {
-    /// Quantize a trained f64 network onto the accelerator.
+    /// Quantize a trained f64 network onto the accelerator, drawing the
+    /// quantization tables from the process-wide shared cache.
     pub fn compile(mlp: &Mlp, spec: FormatSpec) -> DeepPositron {
+        DeepPositron::compile_with(mlp, spec, Quantizer::shared(spec))
+    }
+
+    /// [`DeepPositron::compile`] with caller-provided tables — the injection
+    /// point for serving workers (or tests) that manage table sharing
+    /// themselves. `quantizer` must have been built for `spec`.
+    pub fn compile_with(mlp: &Mlp, spec: FormatSpec, quantizer: Arc<Quantizer>) -> DeepPositron {
         let fmt = spec.build();
-        let quantizer = Quantizer::new(fmt.as_ref());
         let mut weights = Vec::with_capacity(mlp.layers.len());
         let mut biases = Vec::with_capacity(mlp.layers.len());
         for layer in &mlp.layers {
@@ -61,10 +72,12 @@ impl DeepPositron {
         DeepPositron { spec, fmt, quantizer, weights, biases, dims: mlp.dims() }
     }
 
+    /// The format this instance was compiled for.
     pub fn spec(&self) -> FormatSpec {
         self.spec
     }
 
+    /// The (shared) quantization tables backing this instance.
     pub fn quantizer(&self) -> &Quantizer {
         &self.quantizer
     }
@@ -75,6 +88,7 @@ impl DeepPositron {
         self.weights.iter().map(|codes| self.quantizer.dequantize_slice(codes)).collect()
     }
 
+    /// The dequantized bias values per layer (fast-path input).
     pub fn dequantized_biases(&self) -> Vec<Vec<f64>> {
         self.biases.iter().map(|bs| bs.iter().map(|b| b.to_f64()).collect()).collect()
     }

@@ -112,11 +112,17 @@ pub fn eval(engine: Engine, rt: Option<&Runtime>, mlp: &Mlp, ds: &Dataset, spec:
 /// One row of Table 1.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Task name.
     pub dataset: String,
+    /// Test-split size (the paper's "Inference Size" column).
     pub inference_size: usize,
+    /// Best 8-bit posit accuracy and its es.
     pub posit: (f64, u32),
+    /// Best 8-bit float accuracy and its w_e.
     pub float: (f64, u32),
+    /// Best 8-bit fixed accuracy and its Q.
     pub fixed: (f64, u32),
+    /// The f64-trained baseline accuracy.
     pub baseline: f64,
 }
 
@@ -167,11 +173,15 @@ pub fn table1(engine: Engine, rt: Option<&Runtime>, scale: Scale, seed: u64) -> 
 /// at its best sub-parameter, with hardware metrics attached.
 #[derive(Debug, Clone)]
 pub struct TradeoffPoint {
+    /// The (family, n) config at its best sub-parameter.
     pub spec: FormatSpec,
     /// Mean accuracy degradation (baseline − quantized) over the tasks.
     pub avg_degradation: f64,
+    /// Energy-delay product of the EMAC, pJ·ns (Fig. 6 x-axis).
     pub edp_pj_ns: f64,
+    /// EMAC critical-path delay, ns (Fig. 7 left x-axis).
     pub delay_ns: f64,
+    /// EMAC dynamic power, mW (Fig. 7 right x-axis).
     pub power_mw: f64,
     /// Lowest degradation among its family at this bit-width (the ★).
     pub star: bool,
@@ -269,6 +279,7 @@ pub struct EsStudy {
     pub edp_ratio: [f64; 3],
 }
 
+/// Run the §5.1 es study over `task_names` (accuracy per es, EDP ratios).
 pub fn es_study(engine: Engine, rt: Option<&Runtime>, scale: Scale, seed: u64, task_names: &[&str]) -> Result<EsStudy> {
     let mut tasks = Vec::new();
     for name in task_names {

@@ -1,5 +1,6 @@
 //! L3 coordinator: experiment orchestration, the PJRT training-loop driver,
-//! the batched inference server, and report rendering.
+//! the single-shard serving facade (the sharded engine itself lives in
+//! [`crate::serve`]), and report rendering.
 //!
 //! The paper's contribution lives at L1/L2 (the numeric formats and EMAC
 //! semantics); this layer is the system around them — it owns process

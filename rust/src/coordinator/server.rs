@@ -1,30 +1,33 @@
-//! Batched inference server — the edge-deployment scenario the paper's
-//! introduction motivates (low-precision DNNs on end-devices).
+//! Single-shard serving facade — the original batched inference server's
+//! API, now a thin wrapper over the sharded multi-worker engine in
+//! [`crate::serve`].
 //!
-//! vLLM-router-style dynamic batching, scaled to this system: a worker
-//! thread owns the PJRT runtime (XLA handles are not `Send`; everything
-//! device-side stays on one thread) and the quantized model; clients submit
-//! feature vectors over a channel; the batcher coalesces requests up to the
-//! largest AOT-compiled batch size or a wait deadline, pads to the smallest
-//! compiled batch that fits, executes, and replies per-request. Latency and
-//! batch-occupancy metrics are collected for the serving benchmark.
+//! [`serve`] stands up a [`ServeEngine`](crate::serve::ServeEngine) with one
+//! (dataset, format) shard and one worker: exactly the old behaviour
+//! (deadline-based dynamic batching on a dedicated engine-owning thread),
+//! same metrics, same blocking warm-up. New code that wants format sharding,
+//! worker pools, or affinity routing should use [`crate::serve`] directly.
 
 use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::accel::{argmax, DeepPositron, Mlp};
+use crate::accel::Mlp;
 use crate::coordinator::experiments::Engine;
 use crate::datasets::Dataset;
 use crate::formats::FormatSpec;
-use crate::runtime::{artifacts_dir, FormatTables, Kind, Runtime};
+use crate::serve::{ServeEngine, ShardConfig, ShardKey, WorkerConfig};
 
-/// Server configuration.
+pub use crate::serve::metrics::ShardMetrics as ServeMetrics;
+pub use crate::serve::worker::InferReply;
+
+/// Server configuration (single shard, single worker).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Preferred engine (falls back to Sim when PJRT/artifacts are missing).
     pub engine: Engine,
+    /// Numeric format the model is quantized to.
     pub spec: FormatSpec,
     /// Max time the batcher waits to fill a batch.
     pub max_batch_wait: Duration,
@@ -40,68 +43,10 @@ impl Default for ServeConfig {
     }
 }
 
-struct Request {
-    x: Vec<f64>,
-    submitted: Instant,
-    resp: mpsc::Sender<InferReply>,
-}
-
-/// One served prediction.
-#[derive(Debug, Clone)]
-pub struct InferReply {
-    pub class: usize,
-    /// Queue + batch + compute latency, seconds.
-    pub latency_s: f64,
-}
-
-/// Serving metrics, returned on shutdown.
-#[derive(Debug, Clone, Default)]
-pub struct ServeMetrics {
-    pub served: usize,
-    pub batches: usize,
-    pub latencies_s: Vec<f64>,
-    pub batch_sizes: Vec<usize>,
-    pub wall_seconds: f64,
-}
-
-impl ServeMetrics {
-    pub fn throughput(&self) -> f64 {
-        if self.wall_seconds > 0.0 {
-            self.served as f64 / self.wall_seconds
-        } else {
-            0.0
-        }
-    }
-
-    pub fn render(&self) -> String {
-        use crate::util::stats::{mean, percentile};
-        if self.latencies_s.is_empty() {
-            return "no requests served".into();
-        }
-        format!(
-            "served {} requests in {} batches ({:.1} req/s)\n\
-             latency mean {:.2} ms | p50 {:.2} ms | p99 {:.2} ms\n\
-             mean batch occupancy {:.1}",
-            self.served,
-            self.batches,
-            self.throughput(),
-            mean(&self.latencies_s) * 1e3,
-            percentile(&self.latencies_s, 50.0) * 1e3,
-            percentile(&self.latencies_s, 99.0) * 1e3,
-            mean(&self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>()),
-        )
-    }
-}
-
-enum Control {
-    Req(Request),
-    Shutdown(mpsc::Sender<ServeMetrics>),
-}
-
-/// Client handle to a running server.
+/// Client handle to a running single-shard server.
 pub struct ServerHandle {
-    tx: mpsc::Sender<Control>,
-    worker: Option<JoinHandle<()>>,
+    engine: ServeEngine,
+    key: ShardKey,
     num_features: usize,
 }
 
@@ -109,174 +54,24 @@ impl ServerHandle {
     /// Submit one feature vector; returns the reply receiver.
     pub fn submit(&self, x: Vec<f64>) -> mpsc::Receiver<InferReply> {
         assert_eq!(x.len(), self.num_features, "feature dim mismatch");
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Control::Req(Request { x, submitted: Instant::now(), resp: tx })).expect("server gone");
-        rx
+        self.engine.submit(&self.key, x).expect("server gone")
     }
 
     /// Stop the server and collect metrics.
-    pub fn shutdown(mut self) -> ServeMetrics {
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Control::Shutdown(tx));
-        let metrics = rx.recv().unwrap_or_default();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        metrics
+    pub fn shutdown(self) -> ServeMetrics {
+        self.engine.shutdown().shards.into_iter().next().unwrap_or_default()
     }
 }
 
-/// Start a server for `ds` with a trained model. The worker thread builds
-/// its own PJRT runtime (XLA handles stay thread-local). Blocks until the
-/// worker has compiled + warmed every executable, so no request ever pays
-/// XLA compile time.
+/// Start a server for `ds` with a trained model. Blocks until the worker has
+/// compiled + warmed every executable, so no request ever pays XLA compile
+/// time. See [`crate::serve::ServeEngine`] for the multi-shard form.
 pub fn serve(ds: &Dataset, mlp: Mlp, cfg: ServeConfig) -> Result<ServerHandle> {
-    let (tx, rx) = mpsc::channel::<Control>();
-    let (ready_tx, ready_rx) = mpsc::channel::<()>();
-    let dataset = ds.name.clone();
-    let num_features = ds.num_features;
-    let classes = ds.num_classes;
-    let worker = std::thread::spawn(move || worker_loop(rx, ready_tx, dataset, mlp, cfg, classes));
-    ready_rx.recv().map_err(|_| anyhow::anyhow!("server worker died during warm-up"))?;
-    Ok(ServerHandle { tx, worker: Some(worker), num_features })
-}
-
-fn worker_loop(
-    rx: mpsc::Receiver<Control>,
-    ready_tx: mpsc::Sender<()>,
-    dataset: String,
-    mlp: Mlp,
-    cfg: ServeConfig,
-    classes: usize,
-) {
-    let dp = DeepPositron::compile(&mlp, cfg.spec);
-    // XLA engine state (runtime + layouts), built once.
-    let xla = if cfg.engine == Engine::Xla {
-        match Runtime::new(&artifacts_dir()) {
-            Ok(rt) => {
-                let (weights, biases) = python_layout(&dp, &mlp);
-                let tables = FormatTables::new(cfg.spec, dp.quantizer());
-                Some((rt, weights, biases, tables))
-            }
-            Err(e) => {
-                eprintln!("server: falling back to sim engine ({e})");
-                None
-            }
-        }
-    } else {
-        None
-    };
-    let batch_sizes: Vec<usize> = match &xla {
-        Some((rt, ..)) => rt.batches(Kind::QInfer, &dataset),
-        None => vec![64],
-    };
-    let max_batch = *batch_sizes.last().unwrap_or(&64);
-    // Pre-warm: compile every batch-size executable and run one padded
-    // batch through each BEFORE accepting traffic, so no request pays the
-    // XLA compile (perf pass iteration 2 — EXPERIMENTS.md §Perf).
-    if let Some((rt, weights, biases, tables)) = &xla {
-        let in_dim = mlp.layers[0].in_dim;
-        for &b in &batch_sizes {
-            let zeros = vec![0.0; in_dim];
-            if let Ok(exe) = rt.quantized_infer(&dataset, b) {
-                let _ = exe.run(&zeros, 1, weights, biases, tables);
-            }
-        }
-    }
-    let _ = ready_tx.send(());
-    if std::env::var("SERVE_TRACE").is_ok() {
-        eprintln!("[trace] worker ready: engine={:?} xla={} batch_sizes={batch_sizes:?}", cfg.engine, xla.is_some());
-    }
-    let mut metrics = ServeMetrics::default();
-    let t0 = Instant::now();
-    let mut pending: Vec<Request> = Vec::new();
-    loop {
-        // Block for the first request (or control message).
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(Control::Req(r)) => pending.push(r),
-                Ok(Control::Shutdown(done)) => {
-                    metrics.wall_seconds = t0.elapsed().as_secs_f64();
-                    let _ = done.send(metrics);
-                    return;
-                }
-                Err(_) => return,
-            }
-        }
-        // Coalesce until the batch fills or the wait deadline passes.
-        let deadline = Instant::now() + cfg.max_batch_wait;
-        let mut shutdown: Option<mpsc::Sender<ServeMetrics>> = None;
-        while pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Control::Req(r)) => pending.push(r),
-                Ok(Control::Shutdown(done)) => {
-                    shutdown = Some(done);
-                    break;
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        // Execute the batch.
-        let rows = pending.len();
-        let preds: Vec<usize> = match &xla {
-            Some((rt, weights, biases, tables)) => {
-                // Smallest compiled batch that fits (pad the remainder).
-                let b = *batch_sizes.iter().find(|&&b| b >= rows).unwrap_or(&max_batch);
-                let mut x = Vec::with_capacity(b * pending[0].x.len());
-                for r in &pending {
-                    x.extend_from_slice(&r.x);
-                }
-                let t_exec = Instant::now();
-                match rt.quantized_infer(&dataset, b).and_then(|exe| exe.run(&x, rows, weights, biases, tables)) {
-                    Ok(logits) => {
-                        if std::env::var("SERVE_TRACE").is_ok() {
-                            eprintln!("[trace] batch rows={rows} pad={b} exec={:?}", t_exec.elapsed());
-                        }
-                        (0..rows).map(|r| argmax(&logits[r * classes..(r + 1) * classes])).collect()
-                    }
-                    Err(e) => {
-                        eprintln!("server: batch failed ({e}); using sim");
-                        pending.iter().map(|r| dp.predict(&r.x)).collect()
-                    }
-                }
-            }
-            None => pending.iter().map(|r| dp.predict(&r.x)).collect(),
-        };
-        metrics.batches += 1;
-        metrics.batch_sizes.push(rows);
-        for (req, class) in pending.drain(..).zip(preds) {
-            let latency_s = req.submitted.elapsed().as_secs_f64();
-            metrics.served += 1;
-            metrics.latencies_s.push(latency_s);
-            let _ = req.resp.send(InferReply { class, latency_s });
-        }
-        if let Some(done) = shutdown {
-            metrics.wall_seconds = t0.elapsed().as_secs_f64();
-            let _ = done.send(metrics);
-            return;
-        }
-    }
-}
-
-fn python_layout(dp: &DeepPositron, mlp: &Mlp) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
-    let wq = dp.dequantized_weights();
-    let bq = dp.dequantized_biases();
-    let mut weights = Vec::with_capacity(wq.len());
-    for (l, w) in mlp.layers.iter().zip(&wq) {
-        let mut wio = vec![0.0; l.in_dim * l.out_dim];
-        for o in 0..l.out_dim {
-            for i in 0..l.in_dim {
-                wio[i * l.out_dim + o] = w[o * l.in_dim + i];
-            }
-        }
-        weights.push(wio);
-    }
-    (weights, bq)
+    let mut shard = ShardConfig::new(ds, mlp, cfg.spec).with_engine(cfg.engine);
+    shard.worker = WorkerConfig { max_batch_wait: cfg.max_batch_wait, ..WorkerConfig::default() };
+    let key = ShardKey::new(&ds.name, cfg.spec);
+    let engine = ServeEngine::start(vec![shard]).map_err(|e| anyhow!("serve: {e}"))?;
+    Ok(ServerHandle { engine, key, num_features: ds.num_features })
 }
 
 #[cfg(test)]

@@ -14,9 +14,13 @@ use crate::util::Rng;
 /// Hyperparameters for the PJRT training loop.
 #[derive(Debug, Clone)]
 pub struct LoopConfig {
+    /// Passes over the training split.
     pub epochs: usize,
+    /// Learning rate.
     pub lr: f64,
+    /// SGD momentum coefficient.
     pub momentum: f64,
+    /// Shuffling/init seed.
     pub seed: u64,
     /// Log the loss every N steps (0 = per epoch only).
     pub log_every: usize,
@@ -35,11 +39,14 @@ pub struct TrainLog {
     pub losses: Vec<(usize, f64)>,
     /// Mean loss per epoch.
     pub epoch_loss: Vec<f64>,
+    /// Total optimizer steps taken.
     pub steps: usize,
+    /// Training wall-clock, seconds.
     pub wall_seconds: f64,
 }
 
 impl TrainLog {
+    /// Render the per-epoch loss table.
     pub fn render(&self) -> String {
         let mut s = String::from("epoch | mean loss\n------|----------\n");
         for (e, l) in self.epoch_loss.iter().enumerate() {

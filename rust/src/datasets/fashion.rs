@@ -10,6 +10,7 @@
 use super::raster::Canvas;
 use crate::util::Rng;
 
+/// Class labels in Fashion-MNIST order (Xiao et al.).
 pub const CLASS_NAMES: [&str; 10] =
     ["t-shirt", "trouser", "pullover", "dress", "coat", "sandal", "shirt", "sneaker", "bag", "ankle-boot"];
 

@@ -12,12 +12,19 @@ use crate::util::Rng;
 /// One loaded task: flattened row-major features + integer labels.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Task name (one of [`ALL`]).
     pub name: String,
+    /// Features per row.
     pub num_features: usize,
+    /// Distinct class labels.
     pub num_classes: usize,
+    /// Training features, row-major.
     pub x_train: Vec<f64>,
+    /// Training labels.
     pub y_train: Vec<u32>,
+    /// Test features, row-major.
     pub x_test: Vec<f64>,
+    /// Test labels.
     pub y_test: Vec<u32>,
 }
 
@@ -66,10 +73,12 @@ pub fn hidden_layers(name: &str) -> Vec<usize> {
 }
 
 impl Dataset {
+    /// Training rows.
     pub fn train_len(&self) -> usize {
         self.y_train.len()
     }
 
+    /// Test rows.
     pub fn test_len(&self) -> usize {
         self.y_test.len()
     }
@@ -79,6 +88,7 @@ impl Dataset {
         &self.x_test[i * self.num_features..(i + 1) * self.num_features]
     }
 
+    /// One training row.
     pub fn train_row(&self, i: usize) -> &[f64] {
         &self.x_train[i * self.num_features..(i + 1) * self.num_features]
     }

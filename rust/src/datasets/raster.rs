@@ -9,12 +9,15 @@
 
 use crate::util::Rng;
 
+/// Image side length, pixels.
 pub const SIDE: usize = 28;
+/// Pixels per image (`SIDE²` = the image tasks' feature count).
 pub const PIXELS: usize = SIDE * SIDE;
 
 /// A 28×28 grayscale canvas.
 #[derive(Clone)]
 pub struct Canvas {
+    /// Row-major pixel intensities in [0, 1].
     pub px: [f64; PIXELS],
 }
 
@@ -25,6 +28,7 @@ impl Default for Canvas {
 }
 
 impl Canvas {
+    /// A blank (all-zero) canvas.
     pub fn new() -> Canvas {
         Canvas::default()
     }

@@ -15,12 +15,16 @@ use std::cmp::Ordering;
 /// `mag == 0` is canonical zero (sign must be `false`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Exact {
+    /// Sign bit (`true` = negative).
     pub sign: bool,
+    /// Integer magnitude.
     pub mag: u128,
+    /// Power-of-two scale.
     pub exp: i32,
 }
 
 impl Exact {
+    /// Canonical zero.
     pub const ZERO: Exact = Exact { sign: false, mag: 0, exp: 0 };
 
     /// Construct, normalizing zero.
@@ -42,6 +46,7 @@ impl Exact {
         Exact { sign: self.sign, mag: self.mag >> tz, exp: self.exp + tz as i32 }
     }
 
+    /// Whether this is (canonical) zero.
     pub fn is_zero(&self) -> bool {
         self.mag == 0
     }
@@ -74,6 +79,7 @@ impl Exact {
         }
     }
 
+    /// Exact negation (zero stays canonical).
     pub fn neg(self) -> Exact {
         if self.is_zero() {
             self
@@ -82,6 +88,7 @@ impl Exact {
         }
     }
 
+    /// Absolute value.
     pub fn abs(self) -> Exact {
         Exact { sign: false, ..self }
     }

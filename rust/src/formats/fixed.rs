@@ -22,12 +22,14 @@ pub struct Fixed {
 }
 
 impl Fixed {
+    /// Fixed-point format with `n` total bits and `q` fractional bits.
     pub fn new(n: u32, q: u32) -> Fixed {
         assert!((2..=16).contains(&n), "fixed n out of range: {n}");
         assert!(q < n, "fixed Q must satisfy Q < n: q={q}, n={n}");
         Fixed { n, q }
     }
 
+    /// Fractional bit count Q.
     pub fn q(&self) -> u32 {
         self.q
     }
@@ -54,6 +56,7 @@ impl Fixed {
         (1i32 << (self.n - 1)) - 1
     }
 
+    /// Most negative stored integer, `−2^(n−1)`.
     pub fn int_min(&self) -> i32 {
         -(1i32 << (self.n - 1))
     }

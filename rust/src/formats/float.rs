@@ -26,20 +26,24 @@ pub struct Float {
 }
 
 impl Float {
+    /// Float format with `n` total bits and `we` exponent bits.
     pub fn new(n: u32, we: u32) -> Float {
         assert!((3..=16).contains(&n), "float n out of range: {n}");
         assert!(we >= 1 && we <= n - 2, "float we out of range: we={we}, n={n}");
         Float { n, we }
     }
 
+    /// Exponent bit count w_e.
     pub fn we(&self) -> u32 {
         self.we
     }
 
+    /// Fraction bit count `w_f = n − 1 − w_e`.
     pub fn wf(&self) -> u32 {
         self.n - 1 - self.we
     }
 
+    /// Exponent bias, `2^(w_e−1) − 1`.
     pub fn bias(&self) -> i32 {
         (1i32 << (self.we - 1)) - 1
     }

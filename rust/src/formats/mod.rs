@@ -106,9 +106,13 @@ pub trait Format {
 /// A dynamically-typed format descriptor: the unit of sweeping in the
 /// paper's evaluation (format family × bit-width × sub-parameter).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // variant fields n/es/we/q are the paper's notation
 pub enum FormatSpec {
+    /// Posit(n, es) — §3.2.
     Posit { n: u32, es: u32 },
+    /// Float(n, w_e) — §4.3.
     Float { n: u32, we: u32 },
+    /// Fixed(n, Q) — §4.2.
     Fixed { n: u32, q: u32 },
 }
 
@@ -122,6 +126,7 @@ impl FormatSpec {
         }
     }
 
+    /// Total bit-width n.
     pub fn n(&self) -> u32 {
         match *self {
             FormatSpec::Posit { n, .. } | FormatSpec::Float { n, .. } | FormatSpec::Fixed { n, .. } => n,
@@ -146,6 +151,7 @@ impl FormatSpec {
         }
     }
 
+    /// Machine name, e.g. `posit8es1` (parseable by [`FormatSpec::parse`]).
     pub fn name(&self) -> String {
         self.build().name()
     }
@@ -177,6 +183,20 @@ impl FormatSpec {
     /// posit es ∈ {0,1,2}, float w_e ∈ {2..=5}, fixed Q ∈ {1..=n-2}.
     /// (es is capped at n−3 so the regime terminator + es bits fit; at
     /// n ≥ 5 the full paper range {0,1,2} is available.)
+    ///
+    /// ```
+    /// use deep_positron::formats::FormatSpec;
+    ///
+    /// let grid = FormatSpec::sweep(8);
+    /// // 3 posit + 4 float + 6 fixed configs at 8 bits.
+    /// assert_eq!(grid.len(), 13);
+    /// assert!(grid.contains(&FormatSpec::Posit { n: 8, es: 1 }));
+    /// assert!(grid.iter().all(|spec| spec.n() == 8));
+    /// // Every entry round-trips through its machine name.
+    /// for spec in &grid {
+    ///     assert_eq!(FormatSpec::parse(&spec.name()), Some(*spec));
+    /// }
+    /// ```
     pub fn sweep(n: u32) -> Vec<FormatSpec> {
         let mut v = Vec::new();
         for es in 0..=2u32.min(n.saturating_sub(3)) {

@@ -19,10 +19,12 @@ pub struct ScalarAlu<'q> {
 }
 
 impl<'q> ScalarAlu<'q> {
+    /// ALU over one format's quantization tables.
     pub fn new(q: &'q Quantizer) -> ScalarAlu<'q> {
         ScalarAlu { q }
     }
 
+    /// Whether `code` is NaR / non-canonical (no real value).
     pub fn is_nar(&self, code: u16) -> bool {
         self.q.decode(code).is_none()
     }

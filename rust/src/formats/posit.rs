@@ -22,12 +22,14 @@ pub struct Posit {
 }
 
 impl Posit {
+    /// Posit format with `n` total bits and `es` exponent bits.
     pub fn new(n: u32, es: u32) -> Posit {
         assert!((2..=16).contains(&n), "posit n out of range: {n}");
         assert!(es <= 4, "posit es out of range: {es}");
         Posit { n, es }
     }
 
+    /// Exponent bit count es.
     pub fn es(&self) -> u32 {
         self.es
     }

@@ -12,8 +12,11 @@
 /// Resource + timing + energy cost of one component (or a composition).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Cost {
+    /// Look-up tables consumed.
     pub luts: f64,
+    /// Flip-flops consumed.
     pub ffs: f64,
+    /// DSP slices consumed.
     pub dsps: f64,
     /// Propagation delay through the component, ns.
     pub delay_ns: f64,

@@ -13,13 +13,17 @@ use crate::formats::Format;
 /// Synthesis estimate for one EMAC configuration.
 #[derive(Debug, Clone)]
 pub struct SynthReport {
+    /// The synthesized format configuration.
     pub spec: FormatSpec,
     /// Dot-product length the accumulator is sized for (Eq. 2's k).
     pub k: usize,
     /// Accumulator (quire) width per Eq. (2).
     pub quire_bits: u32,
+    /// Look-up tables consumed.
     pub luts: f64,
+    /// Flip-flops consumed.
     pub ffs: f64,
+    /// DSP slices consumed.
     pub dsps: f64,
     /// Per-pipeline-stage propagation delays, ns.
     pub stage_delays_ns: Vec<f64>,

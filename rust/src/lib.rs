@@ -14,8 +14,8 @@
 //!   ([`formats`]), the Deep Positron accelerator simulator ([`accel`]), an
 //!   FPGA cost model ([`hw`]), dataset generators ([`datasets`]),
 //!   quantization-error analysis ([`quant`]), a PJRT runtime that executes
-//!   the AOT artifacts ([`runtime`]), and the experiment/serving coordinator
-//!   ([`coordinator`]).
+//!   the AOT artifacts ([`runtime`]), the sharded multi-worker serving
+//!   engine ([`serve`]), and the experiment coordinator ([`coordinator`]).
 //!
 //! Quick taste (pure-Rust path, no artifacts needed):
 //!
@@ -31,6 +31,13 @@
 //! let out = emac.dot(&[code; 4], &[code; 4], None, false);
 //! assert!((q.decode(out).unwrap().to_f64() - 4.0 * value * value).abs() < 0.01);
 //! ```
+//!
+//! For production-style serving — many (dataset, format) shards behind one
+//! router, worker pools with dynamic batching, shared quantization tables,
+//! per-shard latency percentiles — see [`serve`] and the `serve` CLI mode
+//! (`cargo run --release -- serve`).
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod coordinator;
@@ -39,4 +46,5 @@ pub mod formats;
 pub mod hw;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;

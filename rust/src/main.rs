@@ -7,11 +7,12 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use anyhow::{bail, Result};
-use deep_positron::coordinator::{experiments, report, server, trainer, Engine};
+use anyhow::{anyhow, bail, Result};
+use deep_positron::coordinator::{experiments, report, trainer, Engine};
 use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
 use deep_positron::runtime::{artifacts_dir, Runtime};
+use deep_positron::serve::{ServeEngine, ShardConfig};
 use deep_positron::{hw, quant};
 
 const USAGE: &str = "\
@@ -29,7 +30,8 @@ COMMANDS (one per paper artifact):
   es-study       §5.1 posit es trade-off                (same flags)
   table2         posit-hardware comparison table
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
-  serve          batched inference server demo          [--dataset iris] [--requests 200] [--engine sim|xla]
+  serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
+                                                        [--workers 2] [--requests 200] [--engine sim|xla]
   all            run every report at small scale
 
 Common flags: --seed N (default 7), --scale small|full (default small).
@@ -152,9 +154,11 @@ fn run(args: &[String]) -> Result<()> {
             let cells = experiments::fig5(&dataset, c.scale, c.seed);
             let ns = [5, 6, 7, 8];
             let mut s = format!("Fig 5 — layer-wise quantization error, dataset = {dataset}\n\n");
-            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_fixed, "MSE_posit − MSE_fixed (negative ⇒ posit better)"));
+            let fixed_title = "MSE_posit − MSE_fixed (negative ⇒ posit better)";
+            let float_title = "MSE_posit − MSE_float (negative ⇒ posit better)";
+            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_fixed, fixed_title));
             s.push('\n');
-            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_float, "MSE_posit − MSE_float (negative ⇒ posit better)"));
+            s.push_str(&quant::render_heatmap(&cells, &ns, quant::HeatCell::posit_minus_float, float_title));
             emit(&format!("fig5_{dataset}.md"), &s)?;
         }
         "table1" => {
@@ -223,19 +227,43 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => {
             let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
             let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+            let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let formats: Vec<FormatSpec> = match flags.get("formats") {
+                Some(list) => list
+                    .split(',')
+                    .map(|name| FormatSpec::parse(name).ok_or_else(|| anyhow!("unparseable format {name}")))
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![FormatSpec::Posit { n: 8, es: 1 }],
+            };
             let ds = datasets::load(&dataset, c.seed, c.scale);
             let mlp = experiments::train_model(&ds, c.seed);
-            let cfg = server::ServeConfig { engine: c.engine, ..Default::default() };
-            let handle = server::serve(&ds, mlp, cfg)?;
-            let rxs: Vec<_> = (0..requests).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec())).collect();
+            // One shard per requested format, all over the same trained
+            // model — the deployment-time format choice as a routing key.
+            let shards: Vec<ShardConfig> = formats
+                .iter()
+                .map(|&spec| ShardConfig::new(&ds, mlp.clone(), spec).with_engine(c.engine).with_workers(workers))
+                .collect();
+            let engine = ServeEngine::start(shards).map_err(|e| anyhow!("serve: {e}"))?;
+            let keys = engine.shard_keys();
+            let rxs: Vec<_> = (0..requests)
+                .map(|i| {
+                    let row = ds.test_row(i % ds.test_len()).to_vec();
+                    (i, engine.submit(&keys[i % keys.len()], row))
+                })
+                .collect();
             let mut correct = 0usize;
-            for (i, rx) in rxs.into_iter().enumerate() {
+            for (i, rx) in rxs {
+                let rx = rx.map_err(|e| anyhow!("submit: {e}"))?;
                 if rx.recv()?.class == ds.y_test[i % ds.test_len()] as usize {
                     correct += 1;
                 }
             }
-            let metrics = handle.shutdown();
-            let mut s = format!("inference server — {dataset}, engine {:?}\n\n", c.engine);
+            let metrics = engine.shutdown();
+            let mut s = format!(
+                "sharded inference engine — {dataset}, {} shard(s) × {workers} worker(s), engine {:?}\n\n",
+                keys.len(),
+                c.engine
+            );
             s.push_str(&metrics.render());
             s.push_str(&format!("\nserved accuracy: {:.1}%\n", correct as f64 / requests as f64 * 100.0));
             emit(&format!("serve_{dataset}.md"), &s)?;

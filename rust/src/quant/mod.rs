@@ -27,20 +27,30 @@ pub fn best_config(family: &str, n: u32, xs: &[f64]) -> (FormatSpec, f64) {
 /// A named parameter tensor (layer weights or biases).
 #[derive(Debug, Clone)]
 pub struct NamedTensor {
+    /// Tensor name (Fig. 5 row label, e.g. `dense1`).
     pub name: String,
+    /// Flattened parameter values.
     pub data: Vec<f64>,
 }
 
 /// One cell of the Fig. 5 heatmap: layer × bit-width.
 #[derive(Debug, Clone)]
 pub struct HeatCell {
+    /// Layer (row) label.
     pub layer: String,
+    /// Bit-width (column).
     pub n: u32,
+    /// Best-of-sweep posit MSE.
     pub mse_posit: f64,
+    /// Best-of-sweep float MSE.
     pub mse_float: f64,
+    /// Best-of-sweep fixed MSE.
     pub mse_fixed: f64,
+    /// The posit config achieving `mse_posit`.
     pub best_posit: FormatSpec,
+    /// The float config achieving `mse_float`.
     pub best_float: FormatSpec,
+    /// The fixed config achieving `mse_fixed`.
     pub best_fixed: FormatSpec,
 }
 

@@ -15,8 +15,11 @@ use crate::formats::{FormatSpec, Quantizer};
 /// Artifact kinds emitted by aot.py.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Kind {
+    /// Quantized inference (table-driven datapath).
     QInfer,
+    /// f32 baseline inference.
     F32Infer,
+    /// One SGD-momentum training step.
     Train,
 }
 
@@ -34,11 +37,15 @@ impl Kind {
 /// One manifest entry.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Artifact kind.
     pub kind: Kind,
+    /// Dataset (topology) the artifact was lowered for.
     pub dataset: String,
+    /// Compiled batch size.
     pub batch: usize,
     /// Full layer dims, input..output.
     pub dims: Vec<usize>,
+    /// HLO text file path.
     pub file: PathBuf,
 }
 
@@ -94,10 +101,12 @@ impl Runtime {
         Ok(Runtime { client, artifacts, cache: Mutex::new(HashMap::new()), exes: Mutex::new(Vec::new()) })
     }
 
+    /// The parsed artifact manifest.
     pub fn artifacts(&self) -> &[Artifact] {
         &self.artifacts
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -151,12 +160,14 @@ impl Runtime {
         Ok(QInfer { rt: self, slot, dims: a.dims.clone(), batch })
     }
 
+    /// Build the f32 baseline-inference handle for one dataset topology.
     pub fn f32_infer(&self, dataset: &str, batch: usize) -> Result<F32Infer<'_>> {
         let (slot, idx) = self.executable(Kind::F32Infer, dataset, batch)?;
         let a = &self.artifacts[idx];
         Ok(F32Infer { rt: self, slot, dims: a.dims.clone(), batch })
     }
 
+    /// Build the train-step handle for one dataset topology.
     pub fn train_step(&self, dataset: &str) -> Result<TrainStep<'_>> {
         let batch = *self
             .batches(Kind::Train, dataset)
@@ -186,9 +197,13 @@ pub fn lit_f32(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
 /// The per-format tables in the artifact's layout.
 #[derive(Debug, Clone)]
 pub struct FormatTables {
+    /// Sorted format values, padded to [`TABLE`].
     pub values: Vec<f64>,
+    /// Round-to-nearest boundaries, padded with `+inf`.
     pub bounds: Vec<f64>,
+    /// Tie directions as 0.0/1.0, padded with 0.
     pub ties: Vec<f64>,
+    /// `[is_posit, min_pos]` — the artifact's scalar format flags.
     pub flags: [f64; 2],
 }
 
@@ -213,10 +228,12 @@ pub struct QInfer<'r> {
 }
 
 impl<'r> QInfer<'r> {
+    /// Compiled batch size.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// Layer dims, input..output.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
@@ -262,10 +279,13 @@ pub struct F32Infer<'r> {
 }
 
 impl<'r> F32Infer<'r> {
+    /// Compiled batch size.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// Run up to `batch` rows (padded internally); returns `rows × classes`
+    /// logits.
     pub fn run(&self, x: &[f64], rows: usize, weights: &[Vec<f64>], biases: &[Vec<f64>]) -> Result<Vec<f64>> {
         let in_dim = self.dims[0];
         let out_dim = *self.dims.last().unwrap();
@@ -296,9 +316,11 @@ pub struct TrainStep<'r> {
 /// matrices use the python (in × out) layout.
 #[derive(Debug, Clone)]
 pub struct TrainState {
+    /// Layer dims, input..output.
     pub dims: Vec<usize>,
     /// w1, b1, w2, b2, ...
     pub params: Vec<Vec<f64>>,
+    /// Momentum velocities, same layout as `params`.
     pub vels: Vec<Vec<f64>>,
 }
 
@@ -358,10 +380,12 @@ impl TrainState {
 }
 
 impl<'r> TrainStep<'r> {
+    /// Compiled (exact) training batch size.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// Layer dims, input..output.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }

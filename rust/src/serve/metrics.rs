@@ -1,0 +1,166 @@
+//! Serving metrics: per-shard throughput, batch occupancy, and latency
+//! percentiles (p50/p95/p99), aggregated engine-wide on shutdown.
+//!
+//! Workers append into one shared [`ShardMetrics`] per shard (a brief mutex
+//! hold per executed batch — negligible next to EMAC compute);
+//! [`crate::serve::ServeEngine::shutdown`] stamps the wall-clock and returns
+//! the full [`EngineMetrics`] snapshot.
+
+use crate::util::stats::{mean, percentile};
+
+/// Aggregated serving metrics for one shard (summed over its workers).
+#[derive(Debug, Clone, Default)]
+pub struct ShardMetrics {
+    /// Shard label, `dataset/format` (e.g. `iris/posit8es1`).
+    pub shard: String,
+    /// Total requests served.
+    pub served: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Per-request end-to-end latency (queue + batch wait + compute), seconds.
+    pub latencies_s: Vec<f64>,
+    /// Rows in each executed batch.
+    pub batch_sizes: Vec<usize>,
+    /// Requests served by each worker (index = worker id within the shard).
+    pub per_worker: Vec<usize>,
+    /// Workers that run the PJRT/XLA fast path (the rest fell back to Sim).
+    pub xla_workers: usize,
+    /// Engine start → shutdown wall clock, seconds (stamped on shutdown).
+    pub wall_seconds: f64,
+}
+
+impl ShardMetrics {
+    /// Served requests per wall-clock second (0 before shutdown stamps the
+    /// wall time).
+    pub fn throughput(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.served as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean rows per executed batch (the batcher's fill level).
+    pub fn occupancy(&self) -> f64 {
+        mean(&self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>())
+    }
+
+    /// Latency percentile in seconds, `p` in [0, 100] (0 when nothing was
+    /// served).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            0.0
+        } else {
+            percentile(&self.latencies_s, p)
+        }
+    }
+
+    /// Human-readable per-shard report (latency in ms, throughput in req/s).
+    pub fn render(&self) -> String {
+        if self.latencies_s.is_empty() {
+            return format!("[{}] no requests served", self.shard);
+        }
+        format!(
+            "[{}] served {} requests in {} batches ({:.1} req/s)\n\
+             \x20 latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms (mean {:.2} ms)\n\
+             \x20 batch occupancy {:.2} | workers {} ({} xla) | per-worker {:?}",
+            self.shard,
+            self.served,
+            self.batches,
+            self.throughput(),
+            self.latency_percentile(50.0) * 1e3,
+            self.latency_percentile(95.0) * 1e3,
+            self.latency_percentile(99.0) * 1e3,
+            mean(&self.latencies_s) * 1e3,
+            self.occupancy(),
+            self.per_worker.len(),
+            self.xla_workers,
+            self.per_worker,
+        )
+    }
+}
+
+/// Engine-wide final metrics: one entry per shard, sorted by shard label.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    /// Per-shard metrics.
+    pub shards: Vec<ShardMetrics>,
+}
+
+impl EngineMetrics {
+    /// Requests served across every shard.
+    pub fn total_served(&self) -> usize {
+        self.shards.iter().map(|s| s.served).sum()
+    }
+
+    /// Aggregate requests per second over the engine's lifetime.
+    pub fn throughput(&self) -> f64 {
+        let wall = self.shards.iter().map(|s| s.wall_seconds).fold(0.0f64, f64::max);
+        if wall > 0.0 {
+            self.total_served() as f64 / wall
+        } else {
+            0.0
+        }
+    }
+
+    /// Render every shard plus an aggregate line.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for shard in &self.shards {
+            s.push_str(&shard.render());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "aggregate: {} requests across {} shard(s), {:.1} req/s",
+            self.total_served(),
+            self.shards.len(),
+            self.throughput()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ShardMetrics {
+        ShardMetrics {
+            shard: "iris/posit8es1".into(),
+            served: 4,
+            batches: 2,
+            latencies_s: vec![0.001, 0.002, 0.003, 0.004],
+            batch_sizes: vec![3, 1],
+            per_worker: vec![3, 1],
+            xla_workers: 0,
+            wall_seconds: 2.0,
+        }
+    }
+
+    #[test]
+    fn shard_derived_stats() {
+        let m = sample();
+        assert_eq!(m.throughput(), 2.0);
+        assert_eq!(m.occupancy(), 2.0);
+        assert!(m.latency_percentile(50.0) >= 0.002);
+        assert!(m.latency_percentile(99.0) <= 0.004);
+        let r = m.render();
+        assert!(r.contains("req/s") && r.contains("p99"));
+    }
+
+    #[test]
+    fn empty_shard_is_safe() {
+        let m = ShardMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.latency_percentile(99.0), 0.0);
+        assert!(m.render().contains("no requests"));
+    }
+
+    #[test]
+    fn engine_aggregates() {
+        let e = EngineMetrics { shards: vec![sample(), sample()] };
+        assert_eq!(e.total_served(), 8);
+        assert_eq!(e.throughput(), 4.0);
+        assert!(e.render().contains("aggregate"));
+    }
+}

@@ -1,0 +1,32 @@
+//! The sharded, multi-worker serving engine — the system the paper's
+//! edge-deployment motivation scales up to.
+//!
+//! Architecture (DESIGN.md §7):
+//!
+//! * **Router** ([`router`]) — requests address a [`ShardKey`] (one shard
+//!   per dataset × numeric format, the deployment-time choice Deep Positron
+//!   makes per model); within a shard, requests spread round-robin across
+//!   workers or pin to one via an affinity hash.
+//! * **Worker pool** ([`worker`]) — each worker thread owns its engine (the
+//!   bit-exact Sim datapath, or the PJRT/XLA fast path when artifacts
+//!   exist; XLA handles are not `Send`) and runs deadline-based dynamic
+//!   batching. A shard with a format that has no compiled artifact degrades
+//!   to Sim automatically.
+//! * **Shared tables** — workers obtain quantization tables from the
+//!   process-wide [`crate::formats::Quantizer::shared`] cache, so N replicas
+//!   of one format build the sorted value/boundary tables once, not N times.
+//! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy, and
+//!   p50/p95/p99 latency, aggregated on shutdown.
+//!
+//! The single-shard server the repository started with lives on as a thin
+//! facade over this engine in [`crate::coordinator::server`]. The scaling
+//! behaviour (1 → 4 workers) is demonstrated by
+//! `rust/benches/serve_throughput.rs`.
+
+pub mod metrics;
+pub mod router;
+pub mod worker;
+
+pub use metrics::{EngineMetrics, ShardMetrics};
+pub use router::{ServeEngine, ShardConfig, ShardKey};
+pub use worker::{InferReply, ServeError, WorkerConfig};

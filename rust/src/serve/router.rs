@@ -1,0 +1,294 @@
+//! Request routing: a [`ServeEngine`] owns one shard per (dataset, format)
+//! pair; each shard owns a pool of warm workers. Requests address a shard by
+//! [`ShardKey`] and are spread across its workers round-robin, or pinned by
+//! an affinity hash (sticky sessions).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::accel::Mlp;
+use crate::coordinator::experiments::Engine;
+use crate::datasets::Dataset;
+use crate::formats::FormatSpec;
+use crate::serve::metrics::{EngineMetrics, ShardMetrics};
+use crate::serve::worker::{self, Control, InferReply, Request, ServeError, WorkerConfig, WorkerHandle, WorkerSpec};
+
+/// Routing key: one shard serves one (dataset, format) pair.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShardKey {
+    /// Dataset (model/topology) name, e.g. `iris`.
+    pub dataset: String,
+    /// Format name as produced by [`FormatSpec::name`], e.g. `posit8es1`.
+    pub format: String,
+}
+
+impl ShardKey {
+    /// Key for a dataset × format pair.
+    pub fn new(dataset: &str, spec: FormatSpec) -> ShardKey {
+        ShardKey { dataset: dataset.to_string(), format: spec.name() }
+    }
+
+    /// `dataset/format` label used in metrics and traces.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.dataset, self.format)
+    }
+}
+
+/// Configuration of one shard: a quantized model replicated across workers.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Dataset name (routing-key half + AOT-artifact lookup key).
+    pub dataset: String,
+    /// Input feature count; requests are validated against this.
+    pub num_features: usize,
+    /// Output class count.
+    pub num_classes: usize,
+    /// The trained f64 network this shard serves (quantized per `spec`).
+    pub mlp: Mlp,
+    /// Numeric format the shard quantizes to (routing-key half).
+    pub spec: FormatSpec,
+    /// Preferred engine; workers fall back to Sim when PJRT or the compiled
+    /// artifact is missing.
+    pub engine: Engine,
+    /// Worker replicas (each owns its own engine instance).
+    pub workers: usize,
+    /// Batching knobs shared by the workers.
+    pub worker: WorkerConfig,
+}
+
+impl ShardConfig {
+    /// Shard for a loaded dataset and trained model: 1 worker, Sim engine,
+    /// default batching.
+    pub fn new(ds: &Dataset, mlp: Mlp, spec: FormatSpec) -> ShardConfig {
+        ShardConfig {
+            dataset: ds.name.clone(),
+            num_features: ds.num_features,
+            num_classes: ds.num_classes,
+            mlp,
+            spec,
+            engine: Engine::Sim,
+            workers: 1,
+            worker: WorkerConfig::default(),
+        }
+    }
+
+    /// Set the worker-replica count (min 1).
+    pub fn with_workers(mut self, n: usize) -> ShardConfig {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Set the preferred engine.
+    pub fn with_engine(mut self, engine: Engine) -> ShardConfig {
+        self.engine = engine;
+        self
+    }
+}
+
+struct Shard {
+    key: ShardKey,
+    num_features: usize,
+    workers: Vec<WorkerHandle>,
+    next: AtomicUsize,
+    metrics: Arc<Mutex<ShardMetrics>>,
+}
+
+impl Shard {
+    fn submit(&self, worker_idx: usize, x: Vec<f64>) -> Result<mpsc::Receiver<InferReply>, ServeError> {
+        if x.len() != self.num_features {
+            return Err(ServeError::BadRequest { got: x.len(), want: self.num_features });
+        }
+        let (tx, rx) = mpsc::channel();
+        self.workers[worker_idx]
+            .tx
+            .send(Control::Req(Request { x, submitted: Instant::now(), resp: tx }))
+            .map_err(|_| ServeError::Closed)?;
+        Ok(rx)
+    }
+}
+
+/// The sharded, multi-worker serving engine.
+///
+/// One shard per (dataset, format); N warm workers per shard, each owning
+/// its own engine (Sim or PJRT) and running deadline-based dynamic batching;
+/// quantization tables shared process-wide
+/// ([`crate::formats::Quantizer::shared`]); per-shard metrics collected on
+/// [`ServeEngine::shutdown`].
+///
+/// ```no_run
+/// use deep_positron::coordinator::experiments::train_model;
+/// use deep_positron::datasets::{self, Scale};
+/// use deep_positron::formats::FormatSpec;
+/// use deep_positron::serve::{ServeEngine, ShardConfig, ShardKey};
+///
+/// let ds = datasets::load("iris", 7, Scale::Small);
+/// let mlp = train_model(&ds, 7);
+/// // Two format shards over the same model, four workers each.
+/// let shards = ["posit8es1", "fixed8q5"]
+///     .iter()
+///     .map(|f| ShardConfig::new(&ds, mlp.clone(), FormatSpec::parse(f).unwrap()).with_workers(4))
+///     .collect();
+/// let engine = ServeEngine::start(shards).unwrap();
+/// let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+/// let reply = engine.submit(&key, ds.test_row(0).to_vec()).unwrap().recv().unwrap();
+/// println!("class {} in {:.2} ms", reply.class, reply.latency_s * 1e3);
+/// println!("{}", engine.shutdown().render());
+/// ```
+pub struct ServeEngine {
+    shards: HashMap<ShardKey, Shard>,
+    started: Instant,
+}
+
+impl ServeEngine {
+    /// Start every shard and block until all workers are warm, so no
+    /// request ever pays compile time. Every worker of every shard spawns
+    /// first and warm-up runs in parallel; readiness is collected after.
+    /// Duplicate (dataset, format) configs collapse onto one shard (last
+    /// wins; the superseded workers shut down when their channels close).
+    pub fn start(shards: Vec<ShardConfig>) -> Result<ServeEngine, ServeError> {
+        // Phase 1: spawn everything, no waiting.
+        let mut staged = Vec::with_capacity(shards.len());
+        for cfg in shards {
+            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.spec.name() };
+            let nworkers = cfg.workers.max(1);
+            let metrics = Arc::new(Mutex::new(ShardMetrics {
+                shard: key.label(),
+                per_worker: vec![0; nworkers],
+                ..Default::default()
+            }));
+            let mut workers = Vec::with_capacity(nworkers);
+            let mut readies = Vec::with_capacity(nworkers);
+            for index in 0..nworkers {
+                let (handle, ready) = worker::spawn(WorkerSpec {
+                    shard: key.label(),
+                    dataset: cfg.dataset.clone(),
+                    index,
+                    mlp: cfg.mlp.clone(),
+                    spec: cfg.spec,
+                    engine: cfg.engine,
+                    classes: cfg.num_classes,
+                    cfg: cfg.worker.clone(),
+                    metrics: Arc::clone(&metrics),
+                });
+                workers.push(handle);
+                readies.push(ready);
+            }
+            staged.push((key, cfg.num_features, workers, readies, metrics));
+        }
+        // Phase 2: collect readiness (a dead worker thread drops its sender).
+        let mut map = HashMap::new();
+        for (key, num_features, workers, readies, metrics) in staged {
+            for ready in readies {
+                match ready.recv() {
+                    Ok(xla_active) => {
+                        if xla_active {
+                            metrics.lock().unwrap().xla_workers += 1;
+                        }
+                    }
+                    Err(_) => return Err(ServeError::Closed),
+                }
+            }
+            map.insert(key.clone(), Shard { key, num_features, workers, next: AtomicUsize::new(0), metrics });
+        }
+        Ok(ServeEngine { shards: map, started: Instant::now() })
+    }
+
+    /// All registered shard keys, sorted by label for stable iteration.
+    pub fn shard_keys(&self) -> Vec<ShardKey> {
+        let mut keys: Vec<ShardKey> = self.shards.keys().cloned().collect();
+        keys.sort_by_key(|k| k.label());
+        keys
+    }
+
+    fn shard(&self, key: &ShardKey) -> Result<&Shard, ServeError> {
+        self.shards.get(key).ok_or_else(|| ServeError::UnknownShard(key.label()))
+    }
+
+    /// Submit one feature vector to a shard; round-robins across its
+    /// workers. Returns the receiver the reply will arrive on.
+    pub fn submit(&self, key: &ShardKey, x: Vec<f64>) -> Result<mpsc::Receiver<InferReply>, ServeError> {
+        let shard = self.shard(key)?;
+        let w = shard.next.fetch_add(1, Ordering::Relaxed) % shard.workers.len();
+        shard.submit(w, x)
+    }
+
+    /// Submit with an affinity hash: requests carrying the same `affinity`
+    /// (session id, user id, …) always land on the same worker of the shard,
+    /// keeping per-session batches warm on one engine.
+    pub fn submit_with_affinity(
+        &self,
+        key: &ShardKey,
+        affinity: u64,
+        x: Vec<f64>,
+    ) -> Result<mpsc::Receiver<InferReply>, ServeError> {
+        let shard = self.shard(key)?;
+        let w = (mix64(affinity) % shard.workers.len() as u64) as usize;
+        shard.submit(w, x)
+    }
+
+    /// Live metrics snapshot for one shard (wall clock stamped as of now).
+    pub fn shard_metrics(&self, key: &ShardKey) -> Option<ShardMetrics> {
+        self.shards.get(key).map(|s| {
+            let mut m = s.metrics.lock().unwrap().clone();
+            m.wall_seconds = self.started.elapsed().as_secs_f64();
+            m
+        })
+    }
+
+    /// Stop every worker — each serves whatever is already queued first —
+    /// and return the final per-shard metrics.
+    pub fn shutdown(self) -> EngineMetrics {
+        let wall = self.started.elapsed().as_secs_f64();
+        let mut shards: Vec<Shard> = self.shards.into_values().collect();
+        shards.sort_by_key(|s| s.key.label());
+        let mut out = Vec::with_capacity(shards.len());
+        for shard in &mut shards {
+            for w in &shard.workers {
+                let (tx, rx) = mpsc::channel();
+                if w.tx.send(Control::Shutdown(tx)).is_ok() {
+                    let _ = rx.recv();
+                }
+            }
+            for w in &mut shard.workers {
+                if let Some(join) = w.join.take() {
+                    let _ = join.join();
+                }
+            }
+            let mut m = shard.metrics.lock().unwrap().clone();
+            m.wall_seconds = wall;
+            out.push(m);
+        }
+        EngineMetrics { shards: out }
+    }
+}
+
+/// SplitMix64 finalizer: spreads low-entropy affinity keys across workers.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_key_label_and_eq() {
+        let spec = FormatSpec::Posit { n: 8, es: 1 };
+        let a = ShardKey::new("iris", spec);
+        let b = ShardKey { dataset: "iris".into(), format: "posit8es1".into() };
+        assert_eq!(a, b);
+        assert_eq!(a.label(), "iris/posit8es1");
+    }
+
+    #[test]
+    fn mix64_spreads_small_keys() {
+        let hits: std::collections::HashSet<u64> = (0..16).map(|k| mix64(k) % 4).collect();
+        assert!(hits.len() > 1, "all affinity keys mapped to one worker");
+    }
+}

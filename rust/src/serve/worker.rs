@@ -1,0 +1,318 @@
+//! Shard workers: each worker thread owns its inference engine (bit-exact
+//! Sim, or the PJRT/XLA fast path when artifacts exist) and runs the
+//! deadline-based dynamic batcher extracted from the original
+//! single-worker server (`coordinator::server`).
+//!
+//! Engine-per-thread is load-bearing: XLA handles are not `Send`, so all
+//! device-side state lives and dies on one worker thread. Worker replicas of
+//! the same format do NOT pay the quantization-table build N times — tables
+//! come from the process-wide [`Quantizer::shared`](crate::formats::Quantizer::shared)
+//! cache via [`DeepPositron::compile`].
+//!
+//! Fallback ladder (the router never has to care): requested `Engine::Xla`
+//! degrades to Sim when the PJRT runtime cannot start, when the dataset has
+//! no compiled `q_infer` artifact, or — per batch — when an execution fails.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::accel::{argmax, DeepPositron, Mlp};
+use crate::coordinator::experiments::Engine;
+use crate::formats::FormatSpec;
+use crate::runtime::{artifacts_dir, FormatTables, Kind, Runtime};
+use crate::serve::metrics::ShardMetrics;
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    /// Predicted class index.
+    pub class: usize,
+    /// Queue + batch-wait + compute latency, seconds.
+    pub latency_s: f64,
+    /// Worker (within the shard) that served the request.
+    pub worker: usize,
+}
+
+/// Errors surfaced by the serving engine's client API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// No shard is registered under the requested key.
+    UnknownShard(String),
+    /// The request's feature dimension does not match the shard's model.
+    BadRequest {
+        /// Features in the submitted vector.
+        got: usize,
+        /// Features the shard's model expects.
+        want: usize,
+    },
+    /// The engine (or the routed worker) has already shut down.
+    Closed,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownShard(key) => write!(f, "no shard registered for {key}"),
+            ServeError::BadRequest { got, want } => {
+                write!(f, "bad request: {got} features submitted, shard expects {want}")
+            }
+            ServeError::Closed => write!(f, "serving engine is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Batching knobs shared by a shard's workers.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Max time the batcher waits to fill a batch before executing it.
+    pub max_batch_wait: Duration,
+    /// Batch cap when no compiled artifact dictates one (Sim engine).
+    pub sim_batch: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig { max_batch_wait: Duration::from_millis(2), sim_batch: 64 }
+    }
+}
+
+pub(crate) struct Request {
+    pub x: Vec<f64>,
+    pub submitted: Instant,
+    pub resp: mpsc::Sender<InferReply>,
+}
+
+pub(crate) enum Control {
+    Req(Request),
+    Shutdown(mpsc::Sender<()>),
+}
+
+pub(crate) struct WorkerHandle {
+    pub tx: mpsc::Sender<Control>,
+    pub join: Option<JoinHandle<()>>,
+}
+
+/// Everything a worker needs to start; moved onto its thread.
+pub(crate) struct WorkerSpec {
+    pub shard: String,
+    pub dataset: String,
+    pub index: usize,
+    pub mlp: Mlp,
+    pub spec: FormatSpec,
+    pub engine: Engine,
+    pub classes: usize,
+    pub cfg: WorkerConfig,
+    pub metrics: Arc<Mutex<ShardMetrics>>,
+}
+
+/// Spawn one worker WITHOUT waiting for warm-up; the returned receiver
+/// fires once the worker is warm (model quantized, every XLA executable
+/// compiled and exercised once), carrying whether the XLA fast path is
+/// active. Callers spawn every worker first and then collect readiness, so
+/// warm-up runs in parallel across the whole engine.
+pub(crate) fn spawn(ws: WorkerSpec) -> (WorkerHandle, mpsc::Receiver<bool>) {
+    let (tx, rx) = mpsc::channel::<Control>();
+    let (ready_tx, ready_rx) = mpsc::channel::<bool>();
+    let join = std::thread::spawn(move || worker_loop(rx, ready_tx, ws));
+    (WorkerHandle { tx, join: Some(join) }, ready_rx)
+}
+
+/// Per-worker XLA fast-path state (thread-local by construction).
+struct XlaState {
+    rt: Runtime,
+    weights: Vec<Vec<f64>>,
+    biases: Vec<Vec<f64>>,
+    tables: FormatTables,
+    batches: Vec<usize>,
+}
+
+/// Try to stand up the fast path; any failure means Sim.
+fn build_xla(shard: &str, dataset: &str, dp: &DeepPositron, mlp: &Mlp, spec: FormatSpec) -> Option<XlaState> {
+    let rt = match Runtime::new(&artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("serve[{shard}]: PJRT unavailable, falling back to Sim ({e})");
+            return None;
+        }
+    };
+    let batches = rt.batches(Kind::QInfer, dataset);
+    if batches.is_empty() {
+        eprintln!("serve[{shard}]: no q_infer artifact for {dataset}, falling back to Sim");
+        return None;
+    }
+    let (weights, biases) = python_layout(dp, mlp);
+    let tables = FormatTables::new(spec, dp.quantizer());
+    Some(XlaState { rt, weights, biases, tables, batches })
+}
+
+fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, ws: WorkerSpec) {
+    let dp = DeepPositron::compile(&ws.mlp, ws.spec);
+    let xla = if ws.engine == Engine::Xla { build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec) } else { None };
+    let batch_sizes: Vec<usize> = match &xla {
+        Some(x) => x.batches.clone(),
+        None => vec![ws.cfg.sim_batch.max(1)],
+    };
+    let max_batch = *batch_sizes.last().expect("batch size list is never empty");
+    // Pre-warm: compile every batch-size executable and push one padded batch
+    // through each BEFORE accepting traffic.
+    if let Some(x) = &xla {
+        let in_dim = ws.mlp.layers[0].in_dim;
+        for &b in &x.batches {
+            let zeros = vec![0.0; in_dim];
+            if let Ok(exe) = x.rt.quantized_infer(&ws.dataset, b) {
+                let _ = exe.run(&zeros, 1, &x.weights, &x.biases, &x.tables);
+            }
+        }
+    }
+    let _ = ready_tx.send(xla.is_some());
+    if std::env::var("SERVE_TRACE").is_ok() {
+        eprintln!(
+            "[trace] worker {}#{} ready: engine={:?} xla={} batch_sizes={batch_sizes:?}",
+            ws.shard,
+            ws.index,
+            ws.engine,
+            xla.is_some()
+        );
+    }
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Block for the first request (or control message).
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(Control::Req(r)) => pending.push(r),
+                Ok(Control::Shutdown(done)) => {
+                    finish(&rx, &mut pending, &ws, &dp, &xla, max_batch);
+                    let _ = done.send(());
+                    return;
+                }
+                Err(_) => return,
+            }
+        }
+        // Coalesce until the batch fills or the wait deadline passes.
+        let deadline = Instant::now() + ws.cfg.max_batch_wait;
+        let mut shutdown: Option<mpsc::Sender<()>> = None;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Control::Req(r)) => pending.push(r),
+                Ok(Control::Shutdown(done)) => {
+                    shutdown = Some(done);
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        execute(&mut pending, &ws, &dp, &xla, max_batch);
+        if let Some(done) = shutdown {
+            finish(&rx, &mut pending, &ws, &dp, &xla, max_batch);
+            let _ = done.send(());
+            return;
+        }
+    }
+}
+
+/// Drain whatever is already queued and serve it before acknowledging
+/// shutdown: every request submitted before `Shutdown` gets a reply.
+fn finish(
+    rx: &mpsc::Receiver<Control>,
+    pending: &mut Vec<Request>,
+    ws: &WorkerSpec,
+    dp: &DeepPositron,
+    xla: &Option<XlaState>,
+    max_batch: usize,
+) {
+    while let Ok(ctl) = rx.try_recv() {
+        if let Control::Req(r) = ctl {
+            pending.push(r);
+        }
+    }
+    execute(pending, ws, dp, xla, max_batch);
+}
+
+/// Execute everything in `pending` (in chunks of at most `max_batch`),
+/// reply per request, and record shard metrics.
+fn execute(
+    pending: &mut Vec<Request>,
+    ws: &WorkerSpec,
+    dp: &DeepPositron,
+    xla: &Option<XlaState>,
+    max_batch: usize,
+) {
+    while !pending.is_empty() {
+        let take = pending.len().min(max_batch);
+        let batch: Vec<Request> = pending.drain(..take).collect();
+        let rows = batch.len();
+        let preds: Vec<usize> = match xla {
+            Some(x) => {
+                // Smallest compiled batch that fits (pad the remainder).
+                let b = *x.batches.iter().find(|&&s| s >= rows).unwrap_or(&max_batch);
+                let mut flat = Vec::with_capacity(rows * batch[0].x.len());
+                for r in &batch {
+                    flat.extend_from_slice(&r.x);
+                }
+                let t_exec = Instant::now();
+                match x
+                    .rt
+                    .quantized_infer(&ws.dataset, b)
+                    .and_then(|exe| exe.run(&flat, rows, &x.weights, &x.biases, &x.tables))
+                {
+                    Ok(logits) => {
+                        if std::env::var("SERVE_TRACE").is_ok() {
+                            let dt = t_exec.elapsed();
+                            eprintln!("[trace] {}#{} batch rows={rows} pad={b} exec={dt:?}", ws.shard, ws.index);
+                        }
+                        (0..rows).map(|r| argmax(&logits[r * ws.classes..(r + 1) * ws.classes])).collect()
+                    }
+                    Err(e) => {
+                        eprintln!("serve[{}#{}]: batch failed ({e}); using Sim", ws.shard, ws.index);
+                        batch.iter().map(|r| dp.predict(&r.x)).collect()
+                    }
+                }
+            }
+            None => batch.iter().map(|r| dp.predict(&r.x)).collect(),
+        };
+        // Reply (and compute latencies) OUTSIDE the shard-metrics lock, so
+        // workers finishing batches concurrently never serialize on reply
+        // delivery; then record the whole batch under one short lock.
+        let mut latencies = Vec::with_capacity(rows);
+        for (req, class) in batch.into_iter().zip(preds) {
+            let latency_s = req.submitted.elapsed().as_secs_f64();
+            latencies.push(latency_s);
+            let _ = req.resp.send(InferReply { class, latency_s, worker: ws.index });
+        }
+        let mut m = ws.metrics.lock().unwrap();
+        m.batches += 1;
+        m.batch_sizes.push(rows);
+        m.served += rows;
+        if let Some(count) = m.per_worker.get_mut(ws.index) {
+            *count += rows;
+        }
+        m.latencies_s.extend_from_slice(&latencies);
+    }
+}
+
+/// Transpose accel (out × in) weights into the AOT artifact's (in × out)
+/// layout; biases pass through dequantized.
+fn python_layout(dp: &DeepPositron, mlp: &Mlp) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let wq = dp.dequantized_weights();
+    let bq = dp.dequantized_biases();
+    let mut weights = Vec::with_capacity(wq.len());
+    for (l, w) in mlp.layers.iter().zip(&wq) {
+        let mut wio = vec![0.0; l.in_dim * l.out_dim];
+        for o in 0..l.out_dim {
+            for i in 0..l.in_dim {
+                wio[i * l.out_dim + o] = w[o * l.in_dim + i];
+            }
+        }
+        weights.push(wio);
+    }
+    (weights, bq)
+}

@@ -61,6 +61,7 @@ pub struct BenchTimer {
 }
 
 impl BenchTimer {
+    /// Timer with a report label.
     pub fn new(label: &str) -> BenchTimer {
         BenchTimer { label: label.to_string(), samples: Vec::new() }
     }
@@ -81,6 +82,7 @@ impl BenchTimer {
         }
     }
 
+    /// The collected per-invocation timings, seconds.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }

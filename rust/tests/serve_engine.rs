@@ -1,0 +1,191 @@
+//! Integration tests for the sharded serving engine (`rust/src/serve`):
+//! format-shard routing, worker-pool spreading, shared-table caching, and
+//! the serving edge cases (zero-length request, partial-batch deadline
+//! expiry, shutdown with in-flight requests, Sim fallback without
+//! artifacts).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deep_positron::coordinator::experiments::{train_model, Engine};
+use deep_positron::datasets::{self, Dataset, Scale};
+use deep_positron::formats::{FormatSpec, Quantizer};
+use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, WorkerConfig};
+
+fn iris() -> (Dataset, deep_positron::accel::Mlp) {
+    let ds = datasets::load("iris", 3, Scale::Small);
+    let mlp = train_model(&ds, 3);
+    (ds, mlp)
+}
+
+#[test]
+fn routes_across_format_shards() {
+    let (ds, mlp) = iris();
+    let specs = [FormatSpec::parse("posit8es1").unwrap(), FormatSpec::parse("fixed8q5").unwrap()];
+    let shards = specs.iter().map(|&s| ShardConfig::new(&ds, mlp.clone(), s)).collect();
+    let engine = ServeEngine::start(shards).unwrap();
+    assert_eq!(engine.shard_keys().len(), 2);
+
+    for &spec in &specs {
+        let key = ShardKey::new("iris", spec);
+        let rxs: Vec<_> = (0..10).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).unwrap()).collect();
+        for rx in rxs {
+            let reply = rx.recv().unwrap();
+            assert!(reply.class < ds.num_classes);
+        }
+    }
+    // Unknown shard key is an error, not a panic.
+    let missing = ShardKey::new("iris", FormatSpec::parse("float8we4").unwrap());
+    assert!(matches!(engine.submit(&missing, ds.test_row(0).to_vec()), Err(ServeError::UnknownShard(_))));
+
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.shards.len(), 2);
+    for shard in &metrics.shards {
+        assert_eq!(shard.served, 10, "{}", shard.shard);
+        assert_eq!(shard.latencies_s.len(), 10);
+    }
+    assert_eq!(metrics.total_served(), 20);
+}
+
+#[test]
+fn zero_length_request_is_rejected_not_fatal() {
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let engine = ServeEngine::start(vec![ShardConfig::new(&ds, mlp, spec)]).unwrap();
+    let key = ShardKey::new("iris", spec);
+
+    let err = engine.submit(&key, Vec::new()).unwrap_err();
+    assert_eq!(err, ServeError::BadRequest { got: 0, want: ds.num_features });
+    // Wrong (nonzero) dimension is rejected the same way.
+    let err = engine.submit(&key, vec![0.0; ds.num_features + 1]).unwrap_err();
+    assert_eq!(err, ServeError::BadRequest { got: ds.num_features + 1, want: ds.num_features });
+
+    // The engine keeps serving after rejected requests.
+    let reply = engine.submit(&key, ds.test_row(0).to_vec()).unwrap().recv().unwrap();
+    assert!(reply.class < ds.num_classes);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.total_served(), 1, "rejected requests must not be counted");
+}
+
+#[test]
+fn partial_batch_flushes_on_deadline() {
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let mut shard = ShardConfig::new(&ds, mlp, spec);
+    // Large batch cap + long-ish deadline: 3 requests can never fill the
+    // batch, so replies prove the deadline flush path works.
+    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(25), sim_batch: 64 };
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", spec);
+
+    let rxs: Vec<_> = (0..3).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().expect("partial batch must flush at the deadline");
+    }
+    let metrics = engine.shutdown();
+    let shard = &metrics.shards[0];
+    assert_eq!(shard.served, 3);
+    assert!(shard.batches >= 1);
+    assert!(shard.batch_sizes.iter().all(|&b| b <= 3), "batches: {:?}", shard.batch_sizes);
+}
+
+#[test]
+fn shutdown_serves_in_flight_requests() {
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let mut shard = ShardConfig::new(&ds, mlp, spec);
+    // Long deadline so the batch is still open when shutdown arrives.
+    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(200), sim_batch: 64 };
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", spec);
+
+    let n = 25;
+    let rxs: Vec<_> = (0..n).map(|i| engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()).unwrap()).collect();
+    // Shut down immediately, without consuming a single reply.
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.total_served(), n, "every in-flight request must be served before shutdown");
+    for rx in rxs {
+        let reply = rx.recv().expect("reply must have been sent before the worker exited");
+        assert!(reply.class < ds.num_classes);
+    }
+}
+
+#[test]
+fn xla_shard_falls_back_to_sim_without_artifacts() {
+    // Point the artifact lookup at an empty directory: the Xla-preferring
+    // shard must degrade to Sim per worker and still serve correctly.
+    let dir = std::env::temp_dir().join("dp_serve_no_artifacts");
+    let _ = std::fs::create_dir_all(&dir);
+    std::env::set_var("REPRO_ARTIFACTS", &dir);
+
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let shard = ShardConfig::new(&ds, mlp, spec).with_engine(Engine::Xla).with_workers(2);
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", spec);
+
+    let rxs: Vec<_> = (0..8).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().class < ds.num_classes);
+    }
+    let metrics = engine.shutdown();
+    let shard = &metrics.shards[0];
+    assert_eq!(shard.served, 8);
+    assert_eq!(shard.xla_workers, 0, "no artifacts -> every worker must report the Sim fallback");
+}
+
+#[test]
+fn round_robin_spreads_load_and_affinity_pins() {
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let shard = ShardConfig::new(&ds, mlp, spec).with_workers(4);
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", spec);
+
+    // Sequential round-robin: 40 requests over 4 workers = 10 each.
+    for i in 0..40 {
+        let reply = engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()).unwrap().recv().unwrap();
+        assert_eq!(reply.worker, i % 4, "round-robin must cycle workers deterministically");
+    }
+    // Affinity: one session hash always lands on one worker.
+    let workers: Vec<usize> = (0..10)
+        .map(|i| {
+            engine
+                .submit_with_affinity(&key, 0xFEED, ds.test_row(i).to_vec())
+                .unwrap()
+                .recv()
+                .unwrap()
+                .worker
+        })
+        .collect();
+    assert!(workers.windows(2).all(|w| w[0] == w[1]), "affinity must pin a worker: {workers:?}");
+
+    let metrics = engine.shutdown();
+    let shard = &metrics.shards[0];
+    assert_eq!(shard.per_worker.iter().sum::<usize>(), 50);
+    assert!(shard.per_worker.iter().all(|&c| c >= 10), "per-worker spread: {:?}", shard.per_worker);
+}
+
+#[test]
+fn worker_replicas_share_one_quantizer_table() {
+    // Pre-build the table for a spec nothing else in this binary uses, then
+    // start 4 worker replicas: every replica must attach to the SAME cached
+    // table (pointer-stable across engine start), never rebuild it. (The
+    // global build counter is shared with concurrently running tests, so
+    // this asserts pointer identity rather than a counter delta; the
+    // once-per-spec counter semantics are covered by the lib test in
+    // formats::tables.)
+    let spec = FormatSpec::parse("float7we3").unwrap();
+    let prewarmed = Quantizer::shared(spec);
+    let (ds, mlp) = iris();
+    let engine = ServeEngine::start(vec![ShardConfig::new(&ds, mlp, spec).with_workers(4)]).unwrap();
+    assert!(
+        Arc::ptr_eq(&prewarmed, &Quantizer::shared(spec)),
+        "starting 4 replicas must reuse the prewarmed shared table"
+    );
+
+    let key = ShardKey::new("iris", spec);
+    let reply = engine.submit(&key, ds.test_row(0).to_vec()).unwrap().recv().unwrap();
+    assert!(reply.class < ds.num_classes);
+    engine.shutdown();
+}

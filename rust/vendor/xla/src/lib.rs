@@ -1,0 +1,157 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The real backend links the XLA C library and executes the AOT'd HLO
+//! artifacts produced by `python/compile/aot.py`. This build environment has
+//! neither crates.io access nor the XLA shared library, so this crate keeps
+//! the exact API surface the runtime layer (`deep_positron::runtime`) calls
+//! and reports PJRT as unavailable at the single entry point,
+//! [`PjRtClient::cpu`]. Every caller in the workspace treats that error as
+//! "fall back to the bit-exact Sim engine", so the full test suite and the
+//! serving stack run without XLA. Swap this path dependency for the real
+//! `xla` crate to light up the fast path; no workspace code changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (display-only here).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(
+            "PJRT backend unavailable: the vendored `xla` crate is an offline stub \
+             (see rust/vendor/xla); engines fall back to Sim"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// PJRT client handle. The stub's only constructor always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+
+    /// Compile for a client. Always errors in the stub.
+    pub fn compile(&self, _client: &PjRtClient) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument buffers. Always errors in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A device-side buffer (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A host-side tensor literal. The stub keeps no data: literals are only
+/// ever fed to [`PjRtLoadedExecutable::execute`], which errors first.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Scalar literal.
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Copy out as a typed vector. Always errors in the stub.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+
+    /// Split a tuple literal. Always errors in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub must fail"),
+        };
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_constructors_are_callable() {
+        let l = Literal::vec1(&[1.0f64, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f64>().is_err());
+        let _ = Literal::scalar(0.5f32);
+    }
+}
