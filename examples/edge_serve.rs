@@ -57,7 +57,11 @@ fn main() -> anyhow::Result<()> {
     }
     let metrics = handle.shutdown();
     println!("\n{}", metrics.render());
-    println!("\nserved accuracy : {:.2}% (f64 baseline {:.2}%)", correct as f64 / requests as f64 * 100.0, baseline * 100.0);
+    println!(
+        "\nserved accuracy : {:.2}% (f64 baseline {:.2}%)",
+        correct as f64 / requests as f64 * 100.0,
+        baseline * 100.0
+    );
     println!("batch sizes     : {:?}…", &metrics.batch_sizes[..metrics.batch_sizes.len().min(12)]);
     Ok(())
 }

@@ -32,7 +32,13 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(&artifacts_dir())?;
     println!("PJRT platform: {}", rt.platform());
     let ds = datasets::load(&dataset, 7, scale);
-    println!("dataset: {} train / {} test, {} features, {} classes\n", ds.train_len(), ds.test_len(), ds.num_features, ds.num_classes);
+    println!(
+        "dataset: {} train / {} test, {} features, {} classes\n",
+        ds.train_len(),
+        ds.test_len(),
+        ds.num_features,
+        ds.num_classes
+    );
 
     // ---- 1. train through the PJRT artifact ----
     let cfg = trainer::LoopConfig { epochs, lr: 0.05, momentum: 0.9, seed: 7, log_every: 10 };
@@ -71,6 +77,11 @@ fn main() -> anyhow::Result<()> {
 
     // ---- summary row for EXPERIMENTS.md ----
     let (best_acc, best_spec) = experiments::best_accuracy(Engine::Xla, Some(&rt), &mlp, &ds, "posit", 8)?;
-    println!("\nbest 8-bit posit: {} at {:.2}% (baseline {:.2}%)", best_spec.name(), best_acc * 100.0, baseline * 100.0);
+    println!(
+        "\nbest 8-bit posit: {} at {:.2}% (baseline {:.2}%)",
+        best_spec.name(),
+        best_acc * 100.0,
+        baseline * 100.0
+    );
     Ok(())
 }

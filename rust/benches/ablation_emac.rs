@@ -24,7 +24,11 @@ fn main() {
             println!("{name} (baseline {:.1}%):", mlp.accuracy(&ds) * 100.0);
             println!("{:<12} {:>8} {:>8} {:>8}", "config", "EMAC", "inexact", "gap");
             for n in [5u32, 6, 8] {
-                for spec in [FormatSpec::Posit { n, es: 1 }, FormatSpec::Float { n, we: 3.min(n - 2) }, FormatSpec::Fixed { n, q: n / 2 }] {
+                for spec in [
+                    FormatSpec::Posit { n, es: 1 },
+                    FormatSpec::Float { n, we: 3.min(n - 2) },
+                    FormatSpec::Fixed { n, q: n / 2 },
+                ] {
                     let dp = DeepPositron::compile(&mlp, spec);
                     let exact = dp.accuracy_with(&ds, Datapath::Emac);
                     let inexact = dp.accuracy_with(&ds, Datapath::InexactMac);

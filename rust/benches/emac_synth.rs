@@ -20,7 +20,10 @@ fn main() {
     // Shape checks at n=8.
     let get = |name: &str| reports.iter().find(|r| r.spec == FormatSpec::parse(name).unwrap()).unwrap();
     let (p1, f4, x5) = (get("posit8es1"), get("float8we4"), get("fixed8q5"));
-    println!("fixed fewest LUTs           : {}", if x5.luts < f4.luts && x5.luts < p1.luts { "OK" } else { "VIOLATED" });
+    println!(
+        "fixed fewest LUTs           : {}",
+        if x5.luts < f4.luts && x5.luts < p1.luts { "OK" } else { "VIOLATED" }
+    );
     println!("posit more LUTs than float  : {}", if p1.luts > f4.luts { "OK" } else { "VIOLATED" });
     println!("posit Fmax ≥ float Fmax     : {}", if p1.fmax_mhz >= f4.fmax_mhz { "OK" } else { "VIOLATED (model)" });
     println!("posit EDP within 2× of float: {}", if p1.edp_pj_ns < 2.0 * f4.edp_pj_ns { "OK" } else { "VIOLATED" });

@@ -17,6 +17,9 @@ fn main() {
     println!("{}", report::render_es_study(&study));
     let best_es = (0..3).max_by(|&a, &b| study.avg_acc[a].partial_cmp(&study.avg_acc[b]).unwrap()).unwrap();
     println!("accuracy-best es over [5,7] bits: {best_es} (paper: 1)");
-    println!("EDP ordering es0 < es1 < es2   : {}", if study.edp_ratio[1] > 1.0 && study.edp_ratio[2] > study.edp_ratio[1] { "OK" } else { "VIOLATED" });
+    println!(
+        "EDP ordering es0 < es1 < es2   : {}",
+        if study.edp_ratio[1] > 1.0 && study.edp_ratio[2] > study.edp_ratio[1] { "OK" } else { "VIOLATED" }
+    );
     println!("{}", timer.report());
 }

@@ -41,6 +41,9 @@ fn main() {
     // Shape check: most parameters fall in [-0.5, 0.5].
     let in_band: usize = ph[6..14].iter().sum();
     let all: usize = ph.iter().sum();
-    println!("\nparams in [-0.6,0.6]: {:.0}% (paper: 'high density in [-0.5,+0.5]')", in_band as f64 / all as f64 * 100.0);
+    println!(
+        "\nparams in [-0.6,0.6]: {:.0}% (paper: 'high density in [-0.5,+0.5]')",
+        in_band as f64 / all as f64 * 100.0
+    );
     println!("{}\n{}", timer.report(), timer2.report());
 }

@@ -16,13 +16,18 @@ fn main() {
         println!("== bench: Fig 5 — {dataset} ==\n");
         let mut timer = BenchTimer::new("fig5/train+heatmap");
         let cells = timer.sample(|| experiments::fig5(dataset, Scale::Small, 7));
-        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_fixed, &format!("{dataset}: MSE_posit − MSE_fixed (negative ⇒ posit better)")));
-        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_float, &format!("{dataset}: MSE_posit − MSE_float (negative ⇒ posit better)")));
+        let fixed_title = format!("{dataset}: MSE_posit − MSE_fixed (negative ⇒ posit better)");
+        let float_title = format!("{dataset}: MSE_posit − MSE_float (negative ⇒ posit better)");
+        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_fixed, &fixed_title));
+        println!("{}", quant::render_heatmap(&cells, &ns, HeatCell::posit_minus_float, &float_title));
         // Shape checks on the MNIST-scale network (peaked weights).
         let avg5 = cells.iter().find(|c| c.layer == "avg" && c.n == 5).unwrap();
         let avg8 = cells.iter().find(|c| c.layer == "avg" && c.n == 8).unwrap();
         println!("posit beats fixed on avg @5bit: {}", if avg5.posit_minus_fixed() < 0.0 { "OK" } else { "VIOLATED" });
-        println!("posit ≤ float on avg @5bit   : {}", if avg5.posit_minus_float() <= 1e-12 { "OK" } else { "VIOLATED" });
+        println!(
+            "posit ≤ float on avg @5bit   : {}",
+            if avg5.posit_minus_float() <= 1e-12 { "OK" } else { "VIOLATED" }
+        );
         println!("error shrinks with bits      : {}", if avg8.mse_posit < avg5.mse_posit { "OK" } else { "VIOLATED" });
         println!("{}\n", timer.report());
     }

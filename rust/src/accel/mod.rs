@@ -1,9 +1,14 @@
 //! The Deep Positron accelerator (paper §4) and its substrates: a plain
 //! f64 MLP (training + baseline inference) and the bit-exact EMAC datapath
 //! simulator the low-precision results are measured on.
+//!
+//! Inference compiles once into a per-layer execution plan (pre-decoded
+//! weight operands, quire-staged biases — DESIGN.md §8) and runs many via
+//! [`DeepPositron::forward_batch`]; the scalar entry points are the
+//! batch-of-one special case.
 
 pub mod mlp;
 pub mod positron;
 
 pub use mlp::{argmax, train, Mlp, TrainConfig};
-pub use positron::{Datapath, DeepPositron};
+pub use positron::{Datapath, DeepPositron, EVAL_BATCH};

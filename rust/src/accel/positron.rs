@@ -6,13 +6,29 @@
 //! (exact quire accumulation, single deferred round, ReLU stage for hidden
 //! layers). This is the golden path Table 1's low-precision columns are
 //! measured on; the AOT/XLA fast path is validated against it.
+//!
+//! Execution follows a compile-once / run-many plan (DESIGN.md §8): at
+//! [`DeepPositron::compile`] time every layer's weight codes are pre-decoded
+//! into flat EMAC operands and biases are pre-shifted into quire units, so
+//! [`DeepPositron::forward_batch`] walks each layer once per batch — the
+//! weight row streams across all samples, one quire/activation buffer set is
+//! reused, and nothing is decoded or allocated per sample. The scalar
+//! [`DeepPositron::forward_codes_with`] is the batch-of-one special case and
+//! is bit-identical to the old per-sample EMAC loop (asserted by
+//! `tests/batch_parity.rs` against an independent scalar oracle).
 
 use std::sync::Arc;
 
-use super::mlp::{argmax, Mlp};
+use super::mlp::Mlp;
 use crate::datasets::Dataset;
+use crate::formats::emac::{DecodeLut, DecodedOp};
 use crate::formats::ops::ScalarAlu;
-use crate::formats::{Emac, Exact, Format, FormatSpec, Quantizer};
+use crate::formats::{Exact, FormatSpec, Quantizer};
+
+/// Test-set evaluation batch size: large enough to amortize per-batch
+/// setup, small enough to keep the feature-major activation blocks
+/// cache-resident.
+pub const EVAL_BATCH: usize = 64;
 
 /// Which multiply-accumulate datapath the accelerator uses (ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,18 +43,41 @@ pub enum Datapath {
     NarrowQuire(u32),
 }
 
+/// One layer of the compiled execution plan (DESIGN.md §8): weight codes
+/// pre-decoded into flat EMAC operands and biases pre-shifted into quire
+/// units, ready for the batched kernel.
+struct LayerPlan {
+    /// Fan-in of the layer.
+    in_dim: usize,
+    /// Fan-out of the layer.
+    out_dim: usize,
+    /// Pre-decoded weight operands, row-major `[out][in]`.
+    w_ops: Vec<DecodedOp>,
+    /// Per-output bias, pre-shifted into quire units (`2^lsb_exp`).
+    bias_q: Vec<i128>,
+    /// Hidden layers apply ReLU in format space at the terminal round.
+    relu: bool,
+}
+
 /// A network instantiated on Deep Positron with one numeric format.
 pub struct DeepPositron {
     spec: FormatSpec,
-    fmt: Box<dyn Format + Send + Sync>,
     /// Shared, read-only quantization tables (one build per format per
     /// process — [`Quantizer::shared`]).
     quantizer: Arc<Quantizer>,
-    /// Per-layer weight codes, row-major `[out][in]`.
+    /// Shared decoded-operand table (one build per format per process —
+    /// [`DecodeLut::shared`]); the batched kernel's activation lookup.
+    lut: Arc<DecodeLut>,
+    /// Per-layer weight codes, row-major `[out][in]` (consumed by the
+    /// inexact-MAC ablation and the dequantized accessors).
     weights: Vec<Vec<u16>>,
     /// Per-layer bias values, kept exact (the accelerator feeds biases into
     /// the quire directly, after their own quantization to the format).
     biases: Vec<Vec<Exact>>,
+    /// The compiled execution plan, one entry per layer.
+    plan: Vec<LayerPlan>,
+    /// Code of value 0.0 (ReLU clamp target, inexact-MAC accumulator seed).
+    zero_code: u16,
     dims: Vec<usize>,
 }
 
@@ -53,7 +92,11 @@ impl DeepPositron {
     /// point for serving workers (or tests) that manage table sharing
     /// themselves. `quantizer` must have been built for `spec`.
     pub fn compile_with(mlp: &Mlp, spec: FormatSpec, quantizer: Arc<Quantizer>) -> DeepPositron {
-        let fmt = spec.build();
+        let lut = DecodeLut::shared(spec);
+        let dims = mlp.dims();
+        // Eq. (2) width check, once at compile time (it used to run inside
+        // every per-sample Emac construction): widest dot product + 1 bias.
+        lut.assert_quire_fits(dims.iter().max().unwrap() + 1);
         let mut weights = Vec::with_capacity(mlp.layers.len());
         let mut biases = Vec::with_capacity(mlp.layers.len());
         for layer in &mlp.layers {
@@ -69,7 +112,25 @@ impl DeepPositron {
                 .collect();
             biases.push(bias_exact);
         }
-        DeepPositron { spec, fmt, quantizer, weights, biases, dims: mlp.dims() }
+        let last = weights.len() - 1;
+        let plan = weights
+            .iter()
+            .zip(&biases)
+            .enumerate()
+            .map(|(li, (codes, bias))| {
+                let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
+                debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
+                LayerPlan {
+                    in_dim: dims[li],
+                    out_dim: dims[li + 1],
+                    w_ops,
+                    bias_q: bias.iter().map(|b| lut.to_quire(b)).collect(),
+                    relu: li < last,
+                }
+            })
+            .collect();
+        let zero_code = quantizer.zero_code();
+        DeepPositron { spec, quantizer, lut, weights, biases, plan, zero_code, dims }
     }
 
     /// The format this instance was compiled for.
@@ -99,79 +160,205 @@ impl DeepPositron {
         self.forward_codes_with(x, Datapath::Emac)
     }
 
-    /// Run one sample through a selected datapath (ablation studies).
+    /// Run one sample through a selected datapath — the batch-of-one case of
+    /// [`DeepPositron::forward_batch`].
     pub fn forward_codes_with(&self, x: &[f64], mode: Datapath) -> Vec<u16> {
-        assert_eq!(x.len(), self.dims[0]);
-        let (mut act, _) = self.quantizer.quantize_slice(x);
-        let max_k = *self.dims.iter().max().unwrap();
-        let mut emac = Emac::new(self.fmt.as_ref(), &self.quantizer, max_k + 1);
-        if let Datapath::NarrowQuire(bits) = mode {
-            emac.set_width_limit(bits);
+        self.forward_batch(&[x], mode).pop().expect("one row in, one row out")
+    }
+
+    /// Run a batch of samples through a selected datapath, walking every
+    /// layer once for the whole batch. Bit-identical to running each sample
+    /// through the scalar EMAC loop: quire accumulation is exact integer
+    /// addition (order-free), the narrow-quire wrap is a homomorphism mod
+    /// 2^bits (so one terminal wrap equals the scalar per-step wrap), and the
+    /// inexact path keeps the scalar per-sample operation order.
+    pub fn forward_batch(&self, rows: &[&[f64]], mode: Datapath) -> Vec<Vec<u16>> {
+        for row in rows {
+            assert_eq!(row.len(), self.dims[0], "feature dim mismatch");
         }
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        match mode {
+            Datapath::Emac => self.batch_emac(rows, None),
+            Datapath::NarrowQuire(bits) => {
+                assert!((2..=127).contains(&bits));
+                self.batch_emac(rows, Some(bits))
+            }
+            Datapath::InexactMac => self.batch_inexact(rows),
+        }
+    }
+
+    /// Quantize input rows into a feature-major code block (`[feature][sample]`
+    /// — the layout that keeps the batched kernels' sample loops contiguous).
+    fn quantize_block(&self, rows: &[&[f64]], act: &mut [u16]) {
+        let b = rows.len();
+        for (s, row) in rows.iter().enumerate() {
+            for (i, &x) in row.iter().enumerate() {
+                act[i * b + s] = self.quantizer.quantize_f64(x).0;
+            }
+        }
+    }
+
+    /// Transpose the final feature-major activation block back into one code
+    /// row per sample.
+    fn gather_rows(&self, act: &[u16], b: usize) -> Vec<Vec<u16>> {
+        let out_dim = *self.dims.last().unwrap();
+        (0..b).map(|s| (0..out_dim).map(|o| act[o * b + s]).collect()).collect()
+    }
+
+    /// The batched EMAC kernel: per output neuron, seed every sample's quire
+    /// with the pre-shifted bias, stream the pre-decoded weight row across
+    /// the batch, and round once at the terminal stage.
+    fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>) -> Vec<Vec<u16>> {
+        let b = rows.len();
+        let max_dim = *self.dims.iter().max().unwrap();
+        let lsb = self.lut.lsb_exp();
+        let ops = self.lut.ops();
+        let mut act = vec![0u16; b * max_dim];
+        let mut next = vec![0u16; b * max_dim];
+        let mut quires = vec![0i128; b];
+        self.quantize_block(rows, &mut act);
+        for lp in &self.plan {
+            for o in 0..lp.out_dim {
+                let wrow = &lp.w_ops[o * lp.in_dim..(o + 1) * lp.in_dim];
+                quires.fill(lp.bias_q[o]);
+                for (i, w) in wrow.iter().enumerate() {
+                    if w.mag == 0 {
+                        continue; // zero weight annihilates the whole column
+                    }
+                    let acol = &act[i * b..(i + 1) * b];
+                    for (s, &code) in acol.iter().enumerate() {
+                        let a = ops[code as usize];
+                        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
+                        if a.mag == 0 {
+                            continue;
+                        }
+                        // The exact product term of `Emac::mac`: magnitudes
+                        // are ≤16-bit, so the product fits u64.
+                        let mag = w.mag * a.mag;
+                        let shift = (w.exp + a.exp - lsb) as u32;
+                        let term = (mag as i128) << shift;
+                        quires[s] += if w.neg ^ a.neg { -term } else { term };
+                    }
+                }
+                let out = &mut next[o * b..(o + 1) * b];
+                for (s, out_code) in out.iter_mut().enumerate() {
+                    let mut q = quires[s];
+                    if let Some(bits) = width_limit {
+                        // Two's-complement wrap of the undersized register.
+                        // Wrapping once here is bit-identical to the scalar
+                        // per-step wrap: sign extension picks the same
+                        // representative of the sum mod 2^bits.
+                        let sh = 128 - bits;
+                        q = (q << sh) >> sh;
+                    }
+                    *out_code = if lp.relu && q < 0 {
+                        // ReLU(x) = max(x, 0): negative sums clamp to zero.
+                        self.zero_code
+                    } else {
+                        self.quantizer.quantize_exact(&Exact::new(q < 0, q.unsigned_abs(), lsb)).0
+                    };
+                }
+            }
+            std::mem::swap(&mut act, &mut next);
+        }
+        self.gather_rows(&act, b)
+    }
+
+    /// The batched conventional-MAC ablation: round after every multiply and
+    /// every add, preserving the scalar per-sample operation order exactly.
+    fn batch_inexact(&self, rows: &[&[f64]]) -> Vec<Vec<u16>> {
+        let b = rows.len();
+        let max_dim = *self.dims.iter().max().unwrap();
         let alu = ScalarAlu::new(&self.quantizer);
-        let zero = self.quantizer.quantize_f64(0.0).0;
+        let mut act = vec![0u16; b * max_dim];
+        let mut next = vec![0u16; b * max_dim];
+        let mut accs = vec![0u16; b];
+        self.quantize_block(rows, &mut act);
         let last = self.weights.len() - 1;
-        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+        for (li, (codes, biases)) in self.weights.iter().zip(&self.biases).enumerate() {
             let in_dim = self.dims[li];
             let out_dim = self.dims[li + 1];
             let relu = li < last;
-            let mut next = Vec::with_capacity(out_dim);
             for o in 0..out_dim {
-                let row = &w[o * in_dim..(o + 1) * in_dim];
-                let code = match mode {
-                    Datapath::Emac | Datapath::NarrowQuire(_) => emac.dot(row, &act, Some(b[o]), relu),
-                    Datapath::InexactMac => {
-                        // Conventional pipeline: round after every op.
-                        let mut acc = alu.inexact_dot(row, &act);
-                        let (bcode, _) = self.quantizer.quantize_exact(&b[o]);
-                        acc = alu.add(acc, bcode);
-                        let v = self.quantizer.decode(acc).unwrap();
-                        if relu && v.sign {
-                            zero
-                        } else {
-                            acc
-                        }
+                let wrow = &codes[o * in_dim..(o + 1) * in_dim];
+                accs.fill(self.zero_code);
+                for (i, &wc) in wrow.iter().enumerate() {
+                    let acol = &act[i * b..(i + 1) * b];
+                    for (s, &ac) in acol.iter().enumerate() {
+                        accs[s] = alu.add(accs[s], alu.mul(wc, ac));
                     }
-                };
-                next.push(code);
+                }
+                let (bcode, _) = self.quantizer.quantize_exact(&biases[o]);
+                let out = &mut next[o * b..(o + 1) * b];
+                for (s, out_code) in out.iter_mut().enumerate() {
+                    let acc = alu.add(accs[s], bcode);
+                    let v = self.quantizer.decode(acc).expect("rounded code decodes");
+                    *out_code = if relu && v.sign { self.zero_code } else { acc };
+                }
             }
-            act = next;
+            std::mem::swap(&mut act, &mut next);
         }
-        act
+        self.gather_rows(&act, b)
     }
 
-    /// Test accuracy under a selected datapath.
-    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
-        let mut correct = 0usize;
-        for i in 0..ds.test_len() {
-            let out = self.forward_codes_with(ds.test_row(i), mode);
-            let vals: Vec<f64> =
-                out.iter().map(|&c| self.quantizer.decode(c).map_or(f64::NAN, |e| e.to_f64())).collect();
-            if argmax(&vals) == ds.y_test[i] as usize {
-                correct += 1;
+    /// Argmax over the decoded values of an output-code row. Returns `None`
+    /// when no code decodes to a real value (an all-NaR row) — callers must
+    /// not mistake an undecodable row for class 0.
+    pub fn decoded_argmax(&self, codes: &[u16]) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &c) in codes.iter().enumerate() {
+            if let Some(e) = self.quantizer.decode(c) {
+                let v = e.to_f64();
+                if best.map_or(true, |(_, bv)| v > bv) {
+                    best = Some((i, v));
+                }
             }
         }
-        correct as f64 / ds.test_len() as f64
+        best.map(|(i, _)| i)
     }
 
     /// Predicted class for one sample: argmax over the decoded output codes.
     /// Posit codes could be compared as signed integers directly (the posit
     /// monotonicity property); decoding keeps this uniform across formats.
+    /// Panics on an all-NaR output row (never produced by the datapaths,
+    /// whose terminal rounds emit canonical codes only).
     pub fn predict(&self, x: &[f64]) -> usize {
-        let out = self.forward_codes(x);
-        let vals: Vec<f64> = out.iter().map(|&c| self.quantizer.decode(c).map_or(f64::NAN, |e| e.to_f64())).collect();
-        argmax(&vals)
+        self.decoded_argmax(&self.forward_codes(x)).expect("output row decoded to no real value")
     }
 
-    /// Test-set accuracy on the EMAC datapath.
-    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+    /// Batched predictions on the EMAC datapath — one compiled-plan walk for
+    /// the whole batch (the serving engine's Sim execution path).
+    pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<usize> {
+        self.forward_batch(rows, Datapath::Emac)
+            .iter()
+            .map(|out| self.decoded_argmax(out).expect("output row decoded to no real value"))
+            .collect()
+    }
+
+    /// Test accuracy under a selected datapath, evaluated through
+    /// [`DeepPositron::forward_batch`] in chunks of [`EVAL_BATCH`] samples.
+    /// Undecodable output rows count as wrong, never as class 0.
+    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
         let mut correct = 0usize;
-        for i in 0..ds.test_len() {
-            if self.predict(ds.test_row(i)) == ds.y_test[i] as usize {
-                correct += 1;
+        let mut i = 0;
+        while i < ds.test_len() {
+            let take = EVAL_BATCH.min(ds.test_len() - i);
+            let rows: Vec<&[f64]> = (i..i + take).map(|j| ds.test_row(j)).collect();
+            for (j, out) in self.forward_batch(&rows, mode).iter().enumerate() {
+                if self.decoded_argmax(out) == Some(ds.y_test[i + j] as usize) {
+                    correct += 1;
+                }
             }
+            i += take;
         }
         correct as f64 / ds.test_len() as f64
+    }
+
+    /// Test-set accuracy on the EMAC datapath (batched evaluation).
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        self.accuracy_with(ds, Datapath::Emac)
     }
 
     /// Reference forward pass with *dequantized* weights and table-rounded
@@ -240,6 +427,35 @@ mod tests {
                 assert_eq!(vals, ref_vals, "{spec} sample {i}");
             }
         }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_sample_calls() {
+        // Quick in-crate parity check; the exhaustive sweep (every format ×
+        // every datapath × an independent scalar oracle) lives in
+        // `tests/batch_parity.rs`.
+        let (mlp, ds) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(24)] {
+            let rows: Vec<&[f64]> = (0..10).map(|i| ds.test_row(i)).collect();
+            let batched = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_argmax_rejects_all_nar_rows() {
+        let (mlp, _) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        // 0x80 is posit NaR: an all-NaR row has no argmax (NOT class 0).
+        assert_eq!(dp.decoded_argmax(&[0x80, 0x80, 0x80]), None);
+        // A single decodable code wins regardless of position.
+        let one = dp.quantizer().quantize_f64(1.0).0;
+        assert_eq!(dp.decoded_argmax(&[0x80, one, 0x80]), Some(1));
+        let neg = dp.quantizer().quantize_f64(-2.0).0;
+        assert_eq!(dp.decoded_argmax(&[0x80, neg]), Some(1));
     }
 
     #[test]

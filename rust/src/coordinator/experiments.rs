@@ -52,7 +52,11 @@ pub fn train_model(ds: &Dataset, seed: u64) -> Mlp {
     mlp
 }
 
-/// Quantized test accuracy on the bit-exact simulator.
+/// Quantized test accuracy on the bit-exact simulator: compile the network
+/// once into its execution plan, then sweep the test split through
+/// [`DeepPositron::accuracy`]'s batched evaluation (chunks of
+/// [`crate::accel::EVAL_BATCH`] samples per plan walk — DESIGN.md §8). This
+/// is what every Table 1 / Fig. 6–7 / es-study Sim sweep routes through.
 pub fn eval_sim(mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> f64 {
     DeepPositron::compile(mlp, spec).accuracy(ds)
 }
@@ -126,7 +130,10 @@ pub struct Table1Row {
     pub baseline: f64,
 }
 
-/// Best-of-sweep accuracy for one family at bit-width `n`.
+/// Best-of-sweep accuracy for one family at bit-width `n`. Each candidate
+/// format compiles once and evaluates the whole test split batched
+/// ([`eval_sim`]); the shared `Quantizer`/`DecodeLut` caches mean repeat
+/// sweeps of a format pay no table rebuilds.
 pub fn best_accuracy(
     engine: Engine,
     rt: Option<&Runtime>,

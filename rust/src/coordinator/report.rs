@@ -6,7 +6,9 @@ use crate::coordinator::experiments::{EsStudy, Table1Row, TradeoffPoint};
 /// Render Table 1 exactly in the paper's column layout.
 pub fn render_table1(rows: &[Table1Row]) -> String {
     let mut s = String::new();
-    s.push_str("| Dataset | Inference Size | Posit Acc. (es) | Float Acc. (w_e) | Fixed Acc. (Q) | 64-bit Float Acc. |\n");
+    s.push_str(
+        "| Dataset | Inference Size | Posit Acc. (es) | Float Acc. (w_e) | Fixed Acc. (Q) | 64-bit Float Acc. |\n",
+    );
     s.push_str("|---|---|---|---|---|---|\n");
     for r in rows {
         let hi = [r.posit.0, r.float.0, r.fixed.0].into_iter().fold(0.0f64, f64::max);

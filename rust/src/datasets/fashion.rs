@@ -80,9 +80,18 @@ fn draw_garment(c: &mut Canvas, class: u32, ink: f64, rng: &mut Rng) {
         }
         1 => {
             // trouser: two legs from a waistband
-            c.fill_poly(&[(9.0 + rng.range(-0.6, 0.6), 6.0), (19.0 + rng.range(-0.6, 0.6), 6.0), (19.0, 9.0), (9.0, 9.0)], ink);
-            c.fill_poly(&[(9.0, 9.0), (13.2, 9.0), (12.5 + rng.range(-0.6, 0.6), 24.0), (8.5 + rng.range(-0.6, 0.6), 24.0)], ink);
-            c.fill_poly(&[(14.8, 9.0), (19.0, 9.0), (19.5 + rng.range(-0.6, 0.6), 24.0), (15.5 + rng.range(-0.6, 0.6), 24.0)], ink);
+            c.fill_poly(
+                &[(9.0 + rng.range(-0.6, 0.6), 6.0), (19.0 + rng.range(-0.6, 0.6), 6.0), (19.0, 9.0), (9.0, 9.0)],
+                ink,
+            );
+            c.fill_poly(
+                &[(9.0, 9.0), (13.2, 9.0), (12.5 + rng.range(-0.6, 0.6), 24.0), (8.5 + rng.range(-0.6, 0.6), 24.0)],
+                ink,
+            );
+            c.fill_poly(
+                &[(14.8, 9.0), (19.0, 9.0), (19.5 + rng.range(-0.6, 0.6), 24.0), (15.5 + rng.range(-0.6, 0.6), 24.0)],
+                ink,
+            );
         }
         3 => {
             // dress: fitted top flaring to a wide hem
@@ -101,7 +110,10 @@ fn draw_garment(c: &mut Canvas, class: u32, ink: f64, rng: &mut Rng) {
         5 => {
             // sandal: thin sole + strap lines (sparse, low mass — like the
             // real class)
-            c.fill_poly(&[(5.0 + rng.range(-0.5, 0.5), 20.0), (23.0 + rng.range(-0.5, 0.5), 18.5), (23.5, 21.0), (5.0, 22.5)], ink);
+            c.fill_poly(
+                &[(5.0 + rng.range(-0.5, 0.5), 20.0), (23.0 + rng.range(-0.5, 0.5), 18.5), (23.5, 21.0), (5.0, 22.5)],
+                ink,
+            );
             c.line(7.0, 20.5, 13.0 + rng.range(-0.8, 0.8), 13.0 + rng.range(-0.8, 0.8), 1.3, ink);
             c.line(13.0, 13.0, 19.0, 19.0, 1.3, ink);
             c.line(10.0, 20.0, 17.0 + rng.range(-0.8, 0.8), 14.5, 1.2, ink);
@@ -109,7 +121,14 @@ fn draw_garment(c: &mut Canvas, class: u32, ink: f64, rng: &mut Rng) {
         7 => {
             // sneaker: low wedge profile
             c.fill_poly(
-                &[(4.5 + rng.range(-0.5, 0.5), 21.5), (13.0, 20.5), (18.0, 15.5 + rng.range(-0.6, 0.6)), (23.5, 17.0), (23.5, 22.0), (4.5, 23.0)],
+                &[
+                    (4.5 + rng.range(-0.5, 0.5), 21.5),
+                    (13.0, 20.5),
+                    (18.0, 15.5 + rng.range(-0.6, 0.6)),
+                    (23.5, 17.0),
+                    (23.5, 22.0),
+                    (4.5, 23.0),
+                ],
                 ink,
             );
             carve_pixel(c, 9, 21);
@@ -117,12 +136,25 @@ fn draw_garment(c: &mut Canvas, class: u32, ink: f64, rng: &mut Rng) {
         }
         8 => {
             // bag: trapezoid body + handle arc
-            c.fill_poly(&[(6.0 + rng.range(-0.5, 0.5), 12.0), (22.0 + rng.range(-0.5, 0.5), 12.0), (23.5, 23.0), (4.5, 23.0)], ink);
+            c.fill_poly(
+                &[(6.0 + rng.range(-0.5, 0.5), 12.0), (22.0 + rng.range(-0.5, 0.5), 12.0), (23.5, 23.0), (4.5, 23.0)],
+                ink,
+            );
             c.arc(14.0, 12.0, 5.0 + rng.range(-0.5, 0.5), 5.5, std::f64::consts::PI, std::f64::consts::TAU, 1.6, ink);
         }
         9 => {
             // ankle boot: sole + shaft
-            c.fill_poly(&[(8.0 + rng.range(-0.5, 0.5), 8.0), (15.0 + rng.range(-0.5, 0.5), 8.0), (15.5, 16.0), (22.5, 18.0), (23.0, 22.5), (7.5, 22.5)], ink);
+            c.fill_poly(
+                &[
+                    (8.0 + rng.range(-0.5, 0.5), 8.0),
+                    (15.0 + rng.range(-0.5, 0.5), 8.0),
+                    (15.5, 16.0),
+                    (22.5, 18.0),
+                    (23.0, 22.5),
+                    (7.5, 22.5),
+                ],
+                ink,
+            );
         }
         _ => panic!("fashion class out of range: {class}"),
     }

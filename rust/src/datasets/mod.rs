@@ -136,7 +136,13 @@ impl Dataset {
 }
 
 /// Split flattened (x, y) into train/test with a shuffled permutation.
-fn split(x: Vec<f64>, y: Vec<u32>, f: usize, test_len: usize, rng: &mut Rng) -> (Vec<f64>, Vec<u32>, Vec<f64>, Vec<u32>) {
+fn split(
+    x: Vec<f64>,
+    y: Vec<u32>,
+    f: usize,
+    test_len: usize,
+    rng: &mut Rng,
+) -> (Vec<f64>, Vec<u32>, Vec<f64>, Vec<u32>) {
     let n = y.len();
     assert!(test_len < n);
     let mut order: Vec<usize> = (0..n).collect();
@@ -210,17 +216,41 @@ pub fn load(name: &str, seed: u64, scale: Scale) -> Dataset {
         "iris" => {
             let (x, y, f) = tabular::iris(&mut rng);
             let (xtr, ytr, xte, yte) = split(x, y, f, 50, &mut rng);
-            Dataset { name: name.into(), num_features: f, num_classes: 3, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+            Dataset {
+                name: name.into(),
+                num_features: f,
+                num_classes: 3,
+                x_train: xtr,
+                y_train: ytr,
+                x_test: xte,
+                y_test: yte,
+            }
         }
         "wdbc" => {
             let (x, y, f) = tabular::wdbc(&mut rng);
             let (xtr, ytr, xte, yte) = split(x, y, f, 190, &mut rng);
-            Dataset { name: name.into(), num_features: f, num_classes: 2, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+            Dataset {
+                name: name.into(),
+                num_features: f,
+                num_classes: 2,
+                x_train: xtr,
+                y_train: ytr,
+                x_test: xte,
+                y_test: yte,
+            }
         }
         "mushroom" => {
             let (x, y, f) = tabular::mushroom(&mut rng);
             let (xtr, ytr, xte, yte) = split(x, y, f, 2708, &mut rng);
-            Dataset { name: name.into(), num_features: f, num_classes: 2, x_train: xtr, y_train: ytr, x_test: xte, y_test: yte }
+            Dataset {
+                name: name.into(),
+                num_features: f,
+                num_classes: 2,
+                x_train: xtr,
+                y_train: ytr,
+                x_test: xte,
+                y_test: yte,
+            }
         }
         "mnist" | "fashion" => return image_task(name, seed, scale),
         _ => panic!("unknown dataset {name}"),

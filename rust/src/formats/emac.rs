@@ -22,10 +22,25 @@
 //! pipeline. Construction fails loudly if Eq. (2)'s width (plus fraction
 //! guard bits) exceeds the 127 usable quire bits; every format in the paper's
 //! [5, 8]-bit sweep fits.
+//!
+//! The decoded-operand table lives in a [`DecodeLut`] shared process-wide
+//! per format ([`DecodeLut::shared`], an `Arc` cache alongside
+//! [`Quantizer::shared`]): [`Emac`] construction no longer walks the format's
+//! code space, and `accel`'s compiled execution plans (DESIGN.md §8)
+//! pre-decode whole weight tensors through the same table.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::exact::Exact;
 use super::tables::Quantizer;
-use super::Format;
+use super::{Format, FormatSpec};
+
+/// Process-wide cache behind [`DecodeLut::shared`].
+static SHARED_LUTS: OnceLock<Mutex<HashMap<FormatSpec, Arc<DecodeLut>>>> = OnceLock::new();
+/// Count of cache-miss LUT builds (observable in tests/benches).
+static SHARED_LUT_BUILDS: AtomicUsize = AtomicUsize::new(0);
 
 /// Paper Eq. (2): accumulator width for `k` products of a format with the
 /// given max/min magnitude ratio.
@@ -35,51 +50,55 @@ pub fn quire_width_bits(k: usize, max: f64, min: f64) -> u32 {
     (k as f64).log2().ceil() as u32 + 2 * range + 2
 }
 
-/// An exact multiply-and-accumulate unit bound to one format.
-///
-/// Usage mirrors the hardware: [`Emac::mac`] per (weight, activation) code
-/// pair, then [`Emac::result`] for the deferred round (+ optional ReLU for
-/// hidden layers), which also clears the quire for the next neuron.
-pub struct Emac<'q> {
-    quantizer: &'q Quantizer,
-    /// Decoded value per code, flattened for the hot loop (perf pass
-    /// iteration 3 — EXPERIMENTS.md §Perf): magnitude (0 ⇒ zero operand,
-    /// which annihilates the product), exponent relative to the quire LSB,
-    /// and sign. Non-canonical codes (NaR) carry `mag = u64::MAX` as a
-    /// debug-checked trap.
-    lut: Vec<PodVal>,
-    /// The quire: fixed-point accumulator in units of 2^lsb_exp.
-    quire: i128,
-    /// LSB weight exponent: 2 × (smallest canonical-value exponent).
-    lsb_exp: i32,
-    /// Products accumulated since the last `result()` (for width auditing).
-    count: usize,
-    /// Max products supported by the width check at construction.
-    max_k: usize,
-    /// Optional artificial quire narrowing (ablation study): accumulator
-    /// wraps two's-complement at this many bits, emulating an
-    /// under-provisioned register versus Eq. (2)'s sizing.
-    width_limit: Option<u32>,
-}
-
-/// Flattened decoded code word (hot-loop layout).
+/// A decoded code word in the EMAC's flattened hot-loop layout: magnitude
+/// (0 ⇒ zero operand, which annihilates the product), binary exponent, and
+/// sign. Non-canonical codes (NaR) carry `mag = u64::MAX` as a
+/// debug-checked trap ([`DecodedOp::is_invalid`]).
 #[derive(Debug, Clone, Copy)]
-struct PodVal {
-    /// Odd magnitude (canonical); 0 = value zero; u64::MAX = non-canonical.
-    mag: u64,
+pub struct DecodedOp {
+    /// Odd magnitude (canonical); 0 = value zero; `u64::MAX` = non-canonical.
+    pub mag: u64,
     /// Binary exponent of the value.
-    exp: i32,
-    neg: bool,
+    pub exp: i32,
+    /// Sign (`true` = negative).
+    pub neg: bool,
 }
 
-const POD_INVALID: PodVal = PodVal { mag: u64::MAX, exp: 0, neg: false };
+impl DecodedOp {
+    /// The non-canonical (NaR / reserved code) marker entry.
+    pub const INVALID: DecodedOp = DecodedOp { mag: u64::MAX, exp: 0, neg: false };
 
-impl<'q> Emac<'q> {
-    /// Build an EMAC for `fmt`, sized (and width-checked) for dot products of
-    /// length ≤ `max_k`.
-    pub fn new(fmt: &dyn Format, quantizer: &'q Quantizer, max_k: usize) -> Emac<'q> {
+    /// Whether this entry denotes no real value (NaR / reserved code).
+    #[inline]
+    pub fn is_invalid(&self) -> bool {
+        self.mag == u64::MAX
+    }
+}
+
+/// The decoded-operand table of one format: every code word flattened to a
+/// [`DecodedOp`], plus the quire geometry derived from the format's value
+/// range. Built once per format per process via [`DecodeLut::shared`] and
+/// handed out as cheap `Arc` clones — the compile-once half of the
+/// compile-once / run-many execution plans (DESIGN.md §8).
+#[derive(Debug)]
+pub struct DecodeLut {
+    name: String,
+    ops: Vec<DecodedOp>,
+    /// Quire LSB weight exponent: 2 × (smallest canonical-value exponent).
+    lsb_exp: i32,
+    /// Highest set-bit position of any canonical value (exp + mag bits).
+    max_top: i32,
+    max_value: f64,
+    min_pos: f64,
+}
+
+impl DecodeLut {
+    /// Build the table by decoding every code of `fmt`. Prefer
+    /// [`DecodeLut::shared`], which performs this walk once per format per
+    /// process.
+    pub fn new(fmt: &dyn Format, quantizer: &Quantizer) -> DecodeLut {
         assert_eq!(fmt.name(), quantizer.name(), "format/quantizer mismatch");
-        let mut lut: Vec<PodVal> = vec![POD_INVALID; fmt.num_codes() as usize];
+        let mut ops: Vec<DecodedOp> = vec![DecodedOp::INVALID; fmt.num_codes() as usize];
         let mut min_exp = i32::MAX;
         let mut max_top = i32::MIN;
         for code in 0..fmt.num_codes() {
@@ -90,23 +109,168 @@ impl<'q> Emac<'q> {
                     min_exp = min_exp.min(c.exp);
                     max_top = max_top.max(c.exp + (128 - c.mag.leading_zeros()) as i32);
                     debug_assert!(c.mag < u64::MAX as u128);
-                    lut[code as usize] = PodVal { mag: c.mag as u64, exp: c.exp, neg: c.sign };
+                    ops[code as usize] = DecodedOp { mag: c.mag as u64, exp: c.exp, neg: c.sign };
                 } else {
-                    lut[code as usize] = PodVal { mag: 0, exp: 0, neg: false };
+                    ops[code as usize] = DecodedOp { mag: 0, exp: 0, neg: false };
                 }
             }
         }
-        let lsb_exp = 2 * min_exp;
-        // Worst case |quire| < k × (2^max_top)^2; required bits relative to
-        // the LSB weight:
-        let need = (2 * max_top - lsb_exp) as u32 + (max_k.max(2) as f64).log2().ceil() as u32 + 1;
+        DecodeLut {
+            name: fmt.name(),
+            ops,
+            lsb_exp: 2 * min_exp,
+            max_top,
+            max_value: quantizer.max_value(),
+            min_pos: quantizer.min_pos(),
+        }
+    }
+
+    /// The process-wide shared table for `spec`: built once, then handed out
+    /// as cheap `Arc` clones — the reason [`Emac::new`] is allocation-free
+    /// on the inference hot path.
+    pub fn shared(spec: FormatSpec) -> Arc<DecodeLut> {
+        let cache = SHARED_LUTS.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        if let Some(l) = map.get(&spec) {
+            return Arc::clone(l);
+        }
+        SHARED_LUT_BUILDS.fetch_add(1, AtomicOrdering::Relaxed);
+        let q = Quantizer::shared(spec);
+        let l = Arc::new(DecodeLut::new(spec.build().as_ref(), &q));
+        map.insert(spec, Arc::clone(&l));
+        l
+    }
+
+    /// How many cache-miss builds [`DecodeLut::shared`] has performed so far
+    /// in this process (monotone; used to assert no per-sample rebuilds).
+    pub fn shared_builds() -> usize {
+        SHARED_LUT_BUILDS.load(AtomicOrdering::Relaxed)
+    }
+
+    /// The format's machine name, e.g. `posit8es1`.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Quire LSB weight exponent (the unit every product/bias term is
+    /// shifted into).
+    pub fn lsb_exp(&self) -> i32 {
+        self.lsb_exp
+    }
+
+    /// The decoded operand of one code word.
+    #[inline]
+    pub fn op(&self, code: u16) -> DecodedOp {
+        self.ops[code as usize]
+    }
+
+    /// All decoded operands, indexed by code word (the batched kernel's
+    /// activation lookup).
+    pub fn ops(&self) -> &[DecodedOp] {
+        &self.ops
+    }
+
+    /// Quire bits needed for dot products of length ≤ `max_k`, relative to
+    /// the LSB weight (worst case `|quire| < k × (2^max_top)²` plus sign).
+    pub fn quire_bits_needed(&self, max_k: usize) -> u32 {
+        (2 * self.max_top - self.lsb_exp) as u32 + (max_k.max(2) as f64).log2().ceil() as u32 + 1
+    }
+
+    /// Panic unless dot products of length ≤ `max_k` fit the 127 usable
+    /// `i128` quire bits (the construction-time guard of [`Emac::new`] and
+    /// `DeepPositron::compile`).
+    pub fn assert_quire_fits(&self, max_k: usize) {
+        let need = self.quire_bits_needed(max_k);
         assert!(
             need <= 126,
             "{}: quire needs {need} bits (> i128) for k={max_k}; paper Eq.(2) gives {}",
-            fmt.name(),
-            quire_width_bits(max_k, fmt.max_value(), fmt.min_pos()),
+            self.name,
+            quire_width_bits(max_k, self.max_value, self.min_pos),
         );
-        Emac { quantizer, lut, quire: 0, lsb_exp, count: 0, max_k, width_limit: None }
+    }
+
+    /// Pre-shift an exact value into quire units (`2^lsb_exp`) — how compiled
+    /// plans stage biases so the batched kernel seeds the quire with a single
+    /// integer load.
+    pub fn to_quire(&self, v: &Exact) -> i128 {
+        if v.is_zero() {
+            return 0;
+        }
+        let shift = v.exp - self.lsb_exp;
+        assert!(shift >= 0, "{}: value finer than the quire LSB", self.name);
+        debug_assert!(v.mag < 1u128 << 64, "quire term magnitude overflow");
+        let term = (v.mag as i128) << shift as u32;
+        if v.sign {
+            -term
+        } else {
+            term
+        }
+    }
+}
+
+/// An exact multiply-and-accumulate unit bound to one format.
+///
+/// Usage mirrors the hardware: [`Emac::mac`] per (weight, activation) code
+/// pair, then [`Emac::result`] for the deferred round (+ optional ReLU for
+/// hidden layers), which also clears the quire for the next neuron.
+pub struct Emac<'q> {
+    quantizer: &'q Quantizer,
+    /// Shared decoded-operand table ([`DecodeLut::shared`]) — construction
+    /// is an `Arc` clone, not a table build.
+    lut: Arc<DecodeLut>,
+    /// The quire: fixed-point accumulator in units of 2^lsb_exp.
+    quire: i128,
+    /// LSB weight exponent (copied out of the LUT for the hot loop).
+    lsb_exp: i32,
+    /// Products accumulated since the last `result()` (width auditing —
+    /// debug builds only, so release builds carry no dead field).
+    #[cfg(debug_assertions)]
+    count: usize,
+    /// Max products supported by the width check at construction.
+    #[cfg(debug_assertions)]
+    max_k: usize,
+    /// Optional artificial quire narrowing (ablation study): accumulator
+    /// wraps two's-complement at this many bits, emulating an
+    /// under-provisioned register versus Eq. (2)'s sizing.
+    width_limit: Option<u32>,
+}
+
+impl<'q> Emac<'q> {
+    /// Build an EMAC for `fmt`, sized (and width-checked) for dot products of
+    /// length ≤ `max_k`. Built-in formats (whose names round-trip through
+    /// [`FormatSpec::parse`]) draw the decoded-operand table from the
+    /// process-wide [`DecodeLut::shared`] cache, so construction no longer
+    /// allocates or rebuilds it; a custom [`Format`] impl falls back to a
+    /// private per-instance build — the pre-cache behavior.
+    pub fn new(fmt: &dyn Format, quantizer: &'q Quantizer, max_k: usize) -> Emac<'q> {
+        let lut = match FormatSpec::parse(&fmt.name()) {
+            Some(spec) => DecodeLut::shared(spec),
+            None => Arc::new(DecodeLut::new(fmt, quantizer)),
+        };
+        Emac::with_lut(lut, quantizer, max_k)
+    }
+
+    /// [`Emac::new`] with a caller-provided decoded-operand table — the
+    /// allocation-free constructor for callers that already hold the shared
+    /// table (tests and benches asserting zero rebuilds use it; the batched
+    /// plan kernel in `accel` reads the same [`DecodeLut`] directly instead
+    /// of constructing per-neuron EMACs). `lut` must have been built for
+    /// `quantizer`'s format.
+    pub fn with_lut(lut: Arc<DecodeLut>, quantizer: &'q Quantizer, max_k: usize) -> Emac<'q> {
+        assert_eq!(lut.name(), quantizer.name(), "format/quantizer mismatch");
+        lut.assert_quire_fits(max_k);
+        let lsb_exp = lut.lsb_exp();
+        Emac {
+            quantizer,
+            lut,
+            quire: 0,
+            lsb_exp,
+            #[cfg(debug_assertions)]
+            count: 0,
+            #[cfg(debug_assertions)]
+            max_k,
+            width_limit: None,
+        }
     }
 
     /// Narrow the quire to `bits` (ablation: what happens when the
@@ -129,10 +293,10 @@ impl<'q> Emac<'q> {
     /// here (the defining EMAC property).
     #[inline]
     pub fn mac(&mut self, weight: u16, activation: u16) {
-        let w = self.lut[weight as usize];
-        let a = self.lut[activation as usize];
-        debug_assert!(w.mag != u64::MAX, "non-canonical weight code {weight:#x}");
-        debug_assert!(a.mag != u64::MAX, "non-canonical activation code {activation:#x}");
+        let w = self.lut.op(weight);
+        let a = self.lut.op(activation);
+        debug_assert!(!w.is_invalid(), "non-canonical weight code {weight:#x}");
+        debug_assert!(!a.is_invalid(), "non-canonical activation code {activation:#x}");
         #[cfg(debug_assertions)]
         {
             self.count += 1;
@@ -155,13 +319,7 @@ impl<'q> Emac<'q> {
     /// Positron adds in the same exact domain before rounding).
     #[inline]
     pub fn accumulate_exact(&mut self, v: Exact) {
-        if v.is_zero() {
-            return;
-        }
-        let shift = v.exp - self.lsb_exp;
-        assert!(shift >= 0, "bias finer than quire LSB");
-        let term = (v.mag as i128) << shift as u32;
-        self.quire += if v.sign { -term } else { term };
+        self.quire += self.lut.to_quire(&v);
         self.wrap();
     }
 
@@ -176,11 +334,13 @@ impl<'q> Emac<'q> {
     pub fn result(&mut self, relu: bool) -> u16 {
         let v = self.quire_value();
         self.quire = 0;
-        self.count = 0;
+        #[cfg(debug_assertions)]
+        {
+            self.count = 0;
+        }
         if relu && v.sign {
             // ReLU(x) = max(x, 0): negative sums clamp to the zero code.
-            let (c, _) = self.quantizer.quantize_exact(&Exact::ZERO);
-            return c;
+            return self.quantizer.zero_code();
         }
         let (c, _) = self.quantizer.quantize_exact(&v);
         c
@@ -313,6 +473,37 @@ mod tests {
     }
 
     #[test]
+    fn shared_lut_is_pointer_stable() {
+        // Two EMACs of the same format must attach to the SAME cached decode
+        // table — `Emac::new` is an Arc clone, never a table rebuild.
+        let spec = FormatSpec::parse("posit7es1").unwrap();
+        let a = DecodeLut::shared(spec);
+        let b = DecodeLut::shared(spec);
+        assert!(Arc::ptr_eq(&a, &b), "shared() must reuse the cached decode LUT");
+        assert!(DecodeLut::shared_builds() >= 1);
+        assert_eq!(a.name(), "posit7es1");
+    }
+
+    #[test]
+    fn lut_to_quire_matches_mac_semantics() {
+        // Seeding the quire with `to_quire(bias)` must equal accumulating the
+        // bias through `accumulate_exact` (the plan-time bias pre-shift).
+        let fmt = Posit::new(8, 1);
+        let q = Quantizer::new(&fmt);
+        let lut = DecodeLut::shared(FormatSpec::parse("posit8es1").unwrap());
+        for x in [0.0, 0.5, -1.25, 3.0, -0.0625] {
+            let v = Exact::from_f64(x);
+            let mut emac = Emac::with_lut(Arc::clone(&lut), &q, 4);
+            emac.accumulate_exact(v);
+            assert_eq!(
+                emac.quire_value().cmp_exact(&Exact::new(x < 0.0, lut.to_quire(&v).unsigned_abs(), lut.lsb_exp())),
+                std::cmp::Ordering::Equal,
+                "to_quire({x}) disagrees with accumulate_exact"
+            );
+        }
+    }
+
+    #[test]
     fn posit_es2_wide_range_exactness() {
         // posit8 es=2 has the widest quire (~108+ bits, beyond f64): check a
         // cancellation case f64 would get wrong.
@@ -331,7 +522,10 @@ mod tests {
         emac.mac(max_c, max_c);
         emac.mac(min_c, min_c);
         emac.mac(neg_max, max_c); // −max²
-        assert_eq!(emac.quire_value().canonical(), Exact::from_f64(fmt.min_pos()).mul(Exact::from_f64(fmt.min_pos())).canonical());
+        assert_eq!(
+            emac.quire_value().canonical(),
+            Exact::from_f64(fmt.min_pos()).mul(Exact::from_f64(fmt.min_pos())).canonical()
+        );
         let code = emac.result(false);
         assert_eq!(q.decode(code).unwrap().to_f64(), fmt.min_pos());
     }

@@ -17,7 +17,7 @@ pub mod ops;
 pub mod posit;
 pub mod tables;
 
-pub use emac::{quire_width_bits, Emac};
+pub use emac::{quire_width_bits, DecodeLut, DecodedOp, Emac};
 pub use exact::Exact;
 pub use fixed::Fixed;
 pub use float::Float;

@@ -204,6 +204,13 @@ impl Quantizer {
         self.min_pos
     }
 
+    /// Code word of value 0.0 — the ReLU clamp target and the inexact-MAC
+    /// accumulator seed (identical to `quantize_exact(&Exact::ZERO).0`,
+    /// without the boundary search).
+    pub fn zero_code(&self) -> u16 {
+        self.codes[self.zero_idx]
+    }
+
     /// Exact value of a canonical code (None otherwise).
     pub fn decode(&self, code: u16) -> Option<Exact> {
         self.code_index.get(code as usize).copied().flatten().map(|i| self.exacts[i as usize])
@@ -440,6 +447,16 @@ mod tests {
         let q = Quantizer::new(&Float::new(8, 4));
         let vals: Vec<f64> = q.values().to_vec();
         assert_eq!(q.mse(&vals), 0.0);
+    }
+
+    #[test]
+    fn zero_code_matches_exact_zero_quantization() {
+        for spec in ["posit8es1", "float8we4", "fixed8q5"] {
+            let fmt = super::super::FormatSpec::parse(spec).unwrap().build();
+            let q = Quantizer::new(fmt.as_ref());
+            assert_eq!(q.zero_code(), q.quantize_exact(&Exact::ZERO).0, "{spec}");
+            assert_eq!(q.decode(q.zero_code()).unwrap(), Exact::ZERO, "{spec}");
+        }
     }
 
     #[test]

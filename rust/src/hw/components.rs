@@ -82,7 +82,12 @@ pub fn adder(w: u32) -> Cost {
 
 /// W-bit two's-complement negate (conditional invert + increment).
 pub fn twos_complement(w: u32) -> Cost {
-    adder(w).then(Cost { luts: w as f64 / 2.0, delay_ns: T_LUT_NS, energy_pj: lut_energy(w as f64 / 2.0), ..Cost::default() })
+    adder(w).then(Cost {
+        luts: w as f64 / 2.0,
+        delay_ns: T_LUT_NS,
+        energy_pj: lut_energy(w as f64 / 2.0),
+        ..Cost::default()
+    })
 }
 
 /// A×B multiplier. Mantissa multipliers of ≤8-bit formats are small enough

@@ -38,7 +38,10 @@ pub fn es_edp_ratios(n: u32, k: usize) -> (f64, f64) {
 /// Render a synthesis table (markdown) for a list of reports.
 pub fn render_table(reports: &[SynthReport]) -> String {
     let mut s = String::new();
-    s.push_str("| config | k | quire | LUTs | FFs | DSPs | delay (ns) | Fmax (MHz) | fill (ns) | energy (pJ) | power (mW) | EDP (pJ·ns) |\n");
+    s.push_str(
+        "| config | k | quire | LUTs | FFs | DSPs | delay (ns) | Fmax (MHz) | fill (ns) | energy (pJ) \
+         | power (mW) | EDP (pJ·ns) |\n",
+    );
     s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
     for r in reports {
         s.push_str(&format!(

@@ -6,6 +6,8 @@
 //! and the Fig. 5 difference heatmaps (MSE_posit − MSE_fixed,
 //! MSE_posit − MSE_float).
 
+use std::collections::HashMap;
+
 use crate::formats::{FormatSpec, Quantizer};
 
 /// MSE of quantizing `xs` under `spec` (Eq. 3).
@@ -93,13 +95,17 @@ pub fn heatmap(tensors: &[NamedTensor], ns: &[u32]) -> Vec<HeatCell> {
 }
 
 /// Render a Fig. 5-style markdown table: rows = bit-widths, cols = layers,
-/// values = the selected difference.
+/// values = the selected difference. Cells are indexed by `(layer, n)` once
+/// up front (a full-scale MNIST grid made the old per-cell linear scan
+/// quadratic in the cell count); duplicate keys keep the last cell.
 pub fn render_heatmap(cells: &[HeatCell], ns: &[u32], diff: impl Fn(&HeatCell) -> f64, title: &str) -> String {
-    let mut layers: Vec<String> = Vec::new();
+    let mut layers: Vec<&str> = Vec::new();
+    let mut index: HashMap<(&str, u32), &HeatCell> = HashMap::with_capacity(cells.len());
     for c in cells {
-        if !layers.contains(&c.layer) {
-            layers.push(c.layer.clone());
+        if !layers.contains(&c.layer.as_str()) {
+            layers.push(&c.layer);
         }
+        index.insert((c.layer.as_str(), c.n), c);
     }
     let mut s = format!("### {title}\n\n| bits | ");
     s.push_str(&layers.join(" | "));
@@ -108,8 +114,8 @@ pub fn render_heatmap(cells: &[HeatCell], ns: &[u32], diff: impl Fn(&HeatCell) -
     s.push('\n');
     for &n in ns {
         s.push_str(&format!("| {n} | "));
-        for l in &layers {
-            let cell = cells.iter().find(|c| c.n == n && &c.layer == l).unwrap();
+        for &l in &layers {
+            let cell = index.get(&(l, n)).copied().unwrap_or_else(|| panic!("heatmap missing cell ({l}, {n})"));
             s.push_str(&format!("{:+.2e} | ", diff(cell)));
         }
         s.push('\n');

@@ -115,7 +115,9 @@ impl Runtime {
         self.artifacts
             .iter()
             .position(|a| a.kind == kind && a.dataset == dataset && a.batch == batch)
-            .ok_or_else(|| anyhow!("no artifact kind={kind:?} dataset={dataset} batch={batch}; re-run `make artifacts`"))
+            .ok_or_else(|| {
+                anyhow!("no artifact kind={kind:?} dataset={dataset} batch={batch}; re-run `make artifacts`")
+            })
     }
 
     /// Batch sizes available for a (kind, dataset), ascending.
@@ -417,8 +419,12 @@ impl<'r> TrainStep<'r> {
                 out[1 + i].to_vec::<f32>().map_err(|e| anyhow!("param {i}: {e}"))?.iter().map(|&v| v as f64).collect();
         }
         for i in 0..np {
-            state.vels[i] =
-                out[1 + np + i].to_vec::<f32>().map_err(|e| anyhow!("vel {i}: {e}"))?.iter().map(|&v| v as f64).collect();
+            state.vels[i] = out[1 + np + i]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("vel {i}: {e}"))?
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
         }
         Ok(loss as f64)
     }

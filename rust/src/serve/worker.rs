@@ -3,6 +3,13 @@
 //! deadline-based dynamic batcher extracted from the original
 //! single-worker server (`coordinator::server`).
 //!
+//! Both engines execute the flushed batch as a batch: XLA through the
+//! compiled fixed-shape executables, Sim through the accelerator's compiled
+//! execution plan ([`DeepPositron::forward_batch`] via
+//! [`DeepPositron::predict_batch`]) — so the batcher's coalescing pays off
+//! on the bit-exact path too, instead of degenerating into a per-sample
+//! loop (DESIGN.md §8).
+//!
 //! Engine-per-thread is load-bearing: XLA handles are not `Send`, so all
 //! device-side state lives and dies on one worker thread. Worker replicas of
 //! the same format do NOT pay the quantization-table build N times — tables
@@ -273,11 +280,11 @@ fn execute(
                     }
                     Err(e) => {
                         eprintln!("serve[{}#{}]: batch failed ({e}); using Sim", ws.shard, ws.index);
-                        batch.iter().map(|r| dp.predict(&r.x)).collect()
+                        sim_predict_batch(dp, &batch)
                     }
                 }
             }
-            None => batch.iter().map(|r| dp.predict(&r.x)).collect(),
+            None => sim_predict_batch(dp, &batch),
         };
         // Reply (and compute latencies) OUTSIDE the shard-metrics lock, so
         // workers finishing batches concurrently never serialize on reply
@@ -297,6 +304,13 @@ fn execute(
         }
         m.latencies_s.extend_from_slice(&latencies);
     }
+}
+
+/// Execute one flushed batch on the Sim engine: a single compiled-plan walk
+/// for the whole batch, bit-identical to per-sample submission.
+fn sim_predict_batch(dp: &DeepPositron, batch: &[Request]) -> Vec<usize> {
+    let rows: Vec<&[f64]> = batch.iter().map(|r| r.x.as_slice()).collect();
+    dp.predict_batch(&rows)
 }
 
 /// Transpose accel (out × in) weights into the AOT artifact's (in × out)

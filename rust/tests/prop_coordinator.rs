@@ -44,9 +44,9 @@ fn prop_best_accuracy_is_max_of_family_sweep() {
     forall("best_accuracy = max over sweep", |rng| {
         let family = ["posit", "float", "fixed"][rng.below(3)];
         let n = 5 + rng.below(4) as u32;
+        let engine = deep_positron::coordinator::Engine::Sim;
         let (best, spec) =
-            deep_positron::coordinator::experiments::best_accuracy(deep_positron::coordinator::Engine::Sim, None, &mlp, &ds, family, n)
-                .unwrap();
+            deep_positron::coordinator::experiments::best_accuracy(engine, None, &mlp, &ds, family, n).unwrap();
         assert_eq!(spec.family(), family);
         assert_eq!(spec.n(), n);
         for s in FormatSpec::sweep_family(n, family) {

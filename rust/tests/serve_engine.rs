@@ -167,6 +167,38 @@ fn round_robin_spreads_load_and_affinity_pins() {
 }
 
 #[test]
+fn flushed_batch_matches_per_sample_submission() {
+    // The Sim engine now executes a flushed multi-request batch through the
+    // accelerator's compiled plan (`forward_batch`); the classes must be
+    // identical to per-sample prediction — dynamic batching is a throughput
+    // optimization, never a semantic one.
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    let dp = deep_positron::accel::DeepPositron::compile(&mlp, spec);
+    let n = 16;
+    let expected: Vec<usize> = (0..n).map(|i| dp.predict(ds.test_row(i))).collect();
+
+    let mut shard = ShardConfig::new(&ds, mlp, spec);
+    // Batch cap = n with a generous deadline: the burst below coalesces into
+    // (at least one) multi-request batch.
+    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(50), sim_batch: n };
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", spec);
+    let rxs: Vec<_> = (0..n).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).unwrap()).collect();
+    let classes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().class).collect();
+    assert_eq!(classes, expected, "batched serving must match per-sample prediction");
+
+    let metrics = engine.shutdown();
+    let shard = &metrics.shards[0];
+    assert_eq!(shard.served, n);
+    assert!(
+        shard.batch_sizes.iter().any(|&b| b > 1),
+        "burst of {n} never coalesced into a multi-request batch: {:?}",
+        shard.batch_sizes
+    );
+}
+
+#[test]
 fn worker_replicas_share_one_quantizer_table() {
     // Pre-build the table for a spec nothing else in this binary uses, then
     // start 4 worker replicas: every replica must attach to the SAME cached
