@@ -1,5 +1,12 @@
 //! Edge-deployment serving demo: a quantized Deep Positron model behind the
-//! dynamic-batching inference server, under open-loop load.
+//! dynamic-batching inference server, under raw open-loop load.
+//!
+//! The client needs no pacing, sleeps, or in-flight window any more: the
+//! engine self-protects with bounded admission (a full worker queue sheds
+//! the submission as `ServeError::Overloaded` instead of queueing without
+//! limit) and per-request deadlines (queued work that outlives its latency
+//! budget is dropped uncomputed). This demo floods, counts sheds and
+//! expiries, and reports accuracy over the requests that were answered.
 //!
 //! Run (sim engine needs no artifacts; xla engine needs `make artifacts`):
 //!   cargo run --release --example edge_serve -- [dataset] [format] [requests] [engine]
@@ -10,6 +17,7 @@ use std::time::Duration;
 use deep_positron::coordinator::{experiments, server, Engine};
 use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
+use deep_positron::serve::ServeError;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,40 +36,64 @@ fn main() -> anyhow::Result<()> {
     let mlp = experiments::train_model(&ds, 7);
     let baseline = mlp.accuracy(&ds);
 
-    let cfg = server::ServeConfig { engine, spec, max_batch_wait: Duration::from_millis(1) };
+    // A deliberately small queue bound so overload behaviour is visible at
+    // demo scale; edge deployments size this to their latency budget.
+    let cfg = server::ServeConfig {
+        engine,
+        spec,
+        max_batch_wait: Duration::from_millis(1),
+        max_queue: 256,
+    };
     let handle = server::serve(&ds, mlp, cfg)?;
 
-    // Paced open-loop load (~70% of the fast path's measured capacity) in
-    // bursts of 32, with a bounded in-flight window so reported latency
-    // reflects batching + compute rather than unbounded queueing.
-    let mut correct = 0usize;
-    let mut pending = std::collections::VecDeque::new();
+    // Open-loop flood: submit everything as fast as the client can, with a
+    // generous per-request latency budget. The engine admits what fits,
+    // sheds the rest, and drops anything that goes stale in the queue.
+    let deadline = Duration::from_millis(500);
+    let mut shed = 0usize;
+    let mut accepted = Vec::with_capacity(requests);
     for i in 0..requests {
         let row = i % ds.test_len();
-        pending.push_back((row, handle.submit(ds.test_row(row).to_vec())));
-        if i % 32 == 31 {
-            std::thread::sleep(Duration::from_millis(3));
-        }
-        while pending.len() > 512 {
-            let (row, rx) = pending.pop_front().unwrap();
-            if rx.recv()?.class == ds.y_test[row] as usize {
-                correct += 1;
-            }
+        match handle.submit_with_deadline(ds.test_row(row).to_vec(), deadline) {
+            Ok(rx) => accepted.push((row, rx)),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
         }
     }
-    for (row, rx) in pending {
-        let reply = rx.recv()?;
-        if reply.class == ds.y_test[row] as usize {
-            correct += 1;
+    let peak_depth = handle.metrics().queue_depths.iter().copied().max().unwrap_or(0);
+
+    let mut correct = 0usize;
+    let mut answered = 0usize;
+    let mut expired = 0usize;
+    for (row, rx) in accepted {
+        match rx.recv() {
+            Ok(reply) => {
+                answered += 1;
+                if reply.class == ds.y_test[row] as usize {
+                    correct += 1;
+                }
+            }
+            Err(_) => expired += 1, // reply channel dropped: deadline passed in queue
         }
     }
     let metrics = handle.shutdown();
     println!("\n{}", metrics.render());
     println!(
-        "\nserved accuracy : {:.2}% (f64 baseline {:.2}%)",
-        correct as f64 / requests as f64 * 100.0,
-        baseline * 100.0
+        "\nsubmitted {requests}: answered {answered}, shed {shed}, expired {expired} \
+         (queue depth seen after flood: {peak_depth})"
     );
+    if answered > 0 {
+        println!(
+            "served accuracy : {:.2}% (f64 baseline {:.2}%)",
+            correct as f64 / answered as f64 * 100.0,
+            baseline * 100.0
+        );
+    }
     println!("batch sizes     : {:?}…", &metrics.batch_sizes[..metrics.batch_sizes.len().min(12)]);
+    assert_eq!(
+        metrics.served + metrics.shed + metrics.expired,
+        requests,
+        "every submission must be accounted for as served, shed, or expired"
+    );
     Ok(())
 }

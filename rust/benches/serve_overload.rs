@@ -1,0 +1,187 @@
+//! Overload-collapse bench (ISSUE 3 acceptance): one Sim worker under 4×
+//! its measured capacity of open-loop offered load, with bounded admission
+//! (`max_queue`) versus the pre-fix unbounded queue (`max_queue = usize::MAX`
+//! reproduces the old enqueue-forever behaviour) measured in the same
+//! harness.
+//!
+//! Asserts, at 4× capacity for the bounded run:
+//!   * sampled worker queue depth never exceeds `max_queue`;
+//!   * excess submissions come back as `ServeError::Overloaded` (shed > 0)
+//!     rather than queueing;
+//!   * `served + shed + expired` accounts for every submission exactly,
+//!     and the engine's counts agree with the client's;
+//!   * accepted-request p99 latency is strictly better than the unbounded
+//!     run's p99 in the same bench.
+//!
+//! Run: `cargo bench --bench serve_overload`
+
+use std::time::{Duration, Instant};
+
+use deep_positron::accel::Mlp;
+use deep_positron::coordinator::experiments::Engine;
+use deep_positron::formats::FormatSpec;
+use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, ShardMetrics, WorkerConfig};
+use deep_positron::util::Rng;
+
+const FEATURES: usize = 64;
+const CLASSES: usize = 10;
+const MAX_QUEUE: usize = 64;
+const OVERLOAD_FACTOR: f64 = 4.0;
+const OFFERED_SECONDS: f64 = 1.0;
+/// Latency budget attached to every 8th request, to exercise deadline
+/// expiry under pressure (reported, not asserted — whether any expire
+/// depends on queue delay vs the budget on this machine).
+const DEADLINE_SLICE: usize = 8;
+const DEADLINE_BUDGET: Duration = Duration::from_millis(20);
+
+fn shard(mlp: &Mlp, max_queue: usize) -> ShardConfig {
+    ShardConfig {
+        dataset: "synth".into(),
+        num_features: FEATURES,
+        num_classes: CLASSES,
+        mlp: mlp.clone(),
+        spec: FormatSpec::Posit { n: 8, es: 1 },
+        engine: Engine::Sim,
+        workers: 1,
+        worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16, max_queue },
+    }
+}
+
+fn rows(rng: &mut Rng, n: usize) -> Vec<Vec<f64>> {
+    (0..n).map(|_| (0..FEATURES).map(|_| rng.normal(0.0, 1.0)).collect()).collect()
+}
+
+/// Closed-loop capacity probe: sequential submit→recv, no queueing.
+fn measure_capacity(mlp: &Mlp, pool: &[Vec<f64>]) -> f64 {
+    let engine = ServeEngine::start(vec![shard(mlp, MAX_QUEUE)]).expect("probe engine");
+    let key = ShardKey::new("synth", FormatSpec::Posit { n: 8, es: 1 });
+    let n = 400;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let rx = engine.submit(&key, pool[i % pool.len()].clone()).expect("probe submit");
+        rx.recv().expect("probe reply");
+    }
+    let rps = n as f64 / t0.elapsed().as_secs_f64();
+    engine.shutdown();
+    rps
+}
+
+struct OverloadRun {
+    metrics: ShardMetrics,
+    submitted: usize,
+    client_shed: usize,
+    client_expired: usize,
+    max_depth_seen: usize,
+    drain: Duration,
+}
+
+/// Offer `offered_rps` of open-loop load for [`OFFERED_SECONDS`], sampling
+/// the live queue depth, then drain every accepted reply and shut down.
+fn run_overload(mlp: &Mlp, pool: &[Vec<f64>], max_queue: usize, offered_rps: f64) -> OverloadRun {
+    let engine = ServeEngine::start(vec![shard(mlp, max_queue)]).expect("engine start");
+    let key = ShardKey::new("synth", FormatSpec::Posit { n: 8, es: 1 });
+    let total = (offered_rps * OFFERED_SECONDS) as usize;
+    let mut accepted = Vec::with_capacity(total);
+    let mut client_shed = 0usize;
+    let mut submitted = 0usize;
+    let mut max_depth_seen = 0usize;
+    let t0 = Instant::now();
+    while submitted < total {
+        // Paced open-loop arrivals: submit whatever the offered rate says
+        // is due by now, never blocking on replies.
+        let due = ((t0.elapsed().as_secs_f64() * offered_rps) as usize).min(total);
+        while submitted < due {
+            let x = pool[submitted % pool.len()].clone();
+            let sub = if submitted % DEADLINE_SLICE == 0 {
+                engine.submit_with_deadline(&key, x, DEADLINE_BUDGET)
+            } else {
+                engine.submit(&key, x)
+            };
+            match sub {
+                Ok(rx) => accepted.push(rx),
+                Err(ServeError::Overloaded { .. }) => client_shed += 1,
+                Err(e) => panic!("overload must shed, not fail: {e}"),
+            }
+            submitted += 1;
+        }
+        // Lock-free gauge: sampling must not contend with the worker's
+        // metrics recording or clone the latency history.
+        let depths = engine.queue_depths(&key).expect("shard exists");
+        max_depth_seen = max_depth_seen.max(depths.iter().copied().max().unwrap_or(0));
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    let t_drain = Instant::now();
+    let mut client_expired = 0usize;
+    for rx in accepted {
+        if rx.recv().is_err() {
+            client_expired += 1;
+        }
+    }
+    let drain = t_drain.elapsed();
+    let metrics = engine.shutdown().shards.into_iter().next().expect("one shard");
+    OverloadRun { metrics, submitted, client_shed, client_expired, max_depth_seen, drain }
+}
+
+fn report(label: &str, run: &OverloadRun) {
+    println!("--- {label} ---");
+    println!("{}", run.metrics.render());
+    println!(
+        "submitted {} | max sampled depth {} | drain {:.2}s | p99 {:.1} ms\n",
+        run.submitted,
+        run.max_depth_seen,
+        run.drain.as_secs_f64(),
+        run.metrics.latency_percentile(99.0) * 1e3
+    );
+}
+
+fn main() {
+    // Untrained synthetic MLP: predictions are meaningless but the EMAC
+    // compute per request (≈37k MACs) is exactly the serving hot path.
+    let mut rng = Rng::new(7);
+    let mlp = Mlp::new(&[FEATURES, 192, 128, CLASSES], &mut rng);
+    let pool = rows(&mut rng, 64);
+
+    let capacity = measure_capacity(&mlp, &pool);
+    let offered = capacity * OVERLOAD_FACTOR;
+    println!(
+        "serve_overload: 1 Sim worker, closed-loop capacity {capacity:.0} req/s, \
+         offering {offered:.0} req/s ({OVERLOAD_FACTOR}x) for {OFFERED_SECONDS}s\n"
+    );
+
+    let unbounded = run_overload(&mlp, &pool, usize::MAX, offered);
+    report("unbounded queue (pre-fix behaviour)", &unbounded);
+
+    let bounded = run_overload(&mlp, &pool, MAX_QUEUE, offered);
+    report(&format!("bounded admission (max_queue = {MAX_QUEUE})"), &bounded);
+
+    // 1. Depth stays bounded.
+    assert!(
+        bounded.max_depth_seen <= MAX_QUEUE,
+        "sampled queue depth {} exceeded max_queue {MAX_QUEUE}",
+        bounded.max_depth_seen
+    );
+    // 2. Excess load sheds instead of queueing.
+    assert!(bounded.metrics.shed > 0, "4x offered load must shed at a {MAX_QUEUE}-deep queue");
+    // 3. Exact accounting, client and engine agreeing.
+    assert_eq!(bounded.metrics.submissions(), bounded.submitted, "served + shed + expired must equal submissions");
+    assert_eq!(bounded.metrics.shed, bounded.client_shed, "engine and client shed counts must agree");
+    assert_eq!(bounded.metrics.expired, bounded.client_expired, "engine and client expiry counts must agree");
+    assert_eq!(unbounded.metrics.submissions(), unbounded.submitted, "unbounded run must account for all too");
+    assert_eq!(unbounded.metrics.shed, 0, "an unbounded queue never sheds — that is the bug being fixed");
+    // 4. Accepted-request tail latency is strictly better than the pre-fix
+    //    unbounded-queue run measured in this same bench.
+    let (p99_b, p99_u) = (bounded.metrics.latency_percentile(99.0), unbounded.metrics.latency_percentile(99.0));
+    assert!(
+        p99_b < p99_u,
+        "bounded p99 ({:.1} ms) must beat the unbounded queue's p99 ({:.1} ms)",
+        p99_b * 1e3,
+        p99_u * 1e3
+    );
+    println!(
+        "PASS: depth <= {MAX_QUEUE}, shed {} of {} submissions, accounting exact, p99 {:.1} ms vs {:.1} ms unbounded",
+        bounded.metrics.shed,
+        bounded.submitted,
+        p99_b * 1e3,
+        p99_u * 1e3
+    );
+}

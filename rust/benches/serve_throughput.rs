@@ -34,7 +34,7 @@ fn run(workers: usize, mlp: &Mlp) -> ShardMetrics {
         spec,
         engine: Engine::Sim,
         workers,
-        worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16 },
+        worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16, ..WorkerConfig::default() },
     };
     let engine = Arc::new(ServeEngine::start(vec![shard]).expect("engine start"));
     let key = ShardKey::new("synth", spec);

@@ -5,8 +5,12 @@
 //! [`serve`] stands up a [`ServeEngine`](crate::serve::ServeEngine) with one
 //! (dataset, format) shard and one worker: exactly the old behaviour
 //! (deadline-based dynamic batching on a dedicated engine-owning thread),
-//! same metrics, same blocking warm-up. New code that wants format sharding,
-//! worker pools, or affinity routing should use [`crate::serve`] directly.
+//! same metrics, same blocking warm-up — plus the engine's bounded
+//! admission: [`ServerHandle::submit`] now returns a `Result` and sheds
+//! with [`ServeError::Overloaded`] instead of queueing without limit when
+//! the worker is [`ServeConfig::max_queue`] deep. New code that wants
+//! format sharding, worker pools, or affinity routing should use
+//! [`crate::serve`] directly.
 
 use std::sync::mpsc;
 use std::time::Duration;
@@ -17,7 +21,7 @@ use crate::accel::Mlp;
 use crate::coordinator::experiments::Engine;
 use crate::datasets::Dataset;
 use crate::formats::FormatSpec;
-use crate::serve::{ServeEngine, ShardConfig, ShardKey, WorkerConfig};
+use crate::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, WorkerConfig};
 
 pub use crate::serve::metrics::ShardMetrics as ServeMetrics;
 pub use crate::serve::worker::InferReply;
@@ -29,8 +33,13 @@ pub struct ServeConfig {
     pub engine: Engine,
     /// Numeric format the model is quantized to.
     pub spec: FormatSpec,
-    /// Max time the batcher waits to fill a batch.
+    /// Max time the batcher waits to fill a batch, anchored to the oldest
+    /// pending request.
     pub max_batch_wait: Duration,
+    /// Admission bound: submissions beyond this queue depth shed with
+    /// [`ServeError::Overloaded`] (see
+    /// [`WorkerConfig::max_queue`](crate::serve::WorkerConfig::max_queue)).
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -39,6 +48,7 @@ impl Default for ServeConfig {
             engine: Engine::Sim,
             spec: FormatSpec::Posit { n: 8, es: 1 },
             max_batch_wait: Duration::from_millis(2),
+            max_queue: WorkerConfig::default().max_queue,
         }
     }
 }
@@ -47,14 +57,29 @@ impl Default for ServeConfig {
 pub struct ServerHandle {
     engine: ServeEngine,
     key: ShardKey,
-    num_features: usize,
 }
 
 impl ServerHandle {
-    /// Submit one feature vector; returns the reply receiver.
-    pub fn submit(&self, x: Vec<f64>) -> mpsc::Receiver<InferReply> {
-        assert_eq!(x.len(), self.num_features, "feature dim mismatch");
-        self.engine.submit(&self.key, x).expect("server gone")
+    /// Submit one feature vector; returns the reply receiver, or a typed
+    /// error ([`ServeError::Overloaded`] when the worker queue is full,
+    /// [`ServeError::BadRequest`] on a dimension mismatch).
+    pub fn submit(&self, x: Vec<f64>) -> std::result::Result<mpsc::Receiver<InferReply>, ServeError> {
+        self.engine.submit(&self.key, x)
+    }
+
+    /// Submit with a latency budget: if still queued once `budget` elapses,
+    /// the request is dropped uncomputed and the receiver's `recv` errors.
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f64>,
+        budget: Duration,
+    ) -> std::result::Result<mpsc::Receiver<InferReply>, ServeError> {
+        self.engine.submit_with_deadline(&self.key, x, budget)
+    }
+
+    /// Live metrics snapshot (queue depth and wall clock stamped as of now).
+    pub fn metrics(&self) -> ServeMetrics {
+        self.engine.shard_metrics(&self.key).unwrap_or_default()
     }
 
     /// Stop the server and collect metrics.
@@ -68,10 +93,11 @@ impl ServerHandle {
 /// time. See [`crate::serve::ServeEngine`] for the multi-shard form.
 pub fn serve(ds: &Dataset, mlp: Mlp, cfg: ServeConfig) -> Result<ServerHandle> {
     let mut shard = ShardConfig::new(ds, mlp, cfg.spec).with_engine(cfg.engine);
-    shard.worker = WorkerConfig { max_batch_wait: cfg.max_batch_wait, ..WorkerConfig::default() };
+    shard.worker =
+        WorkerConfig { max_batch_wait: cfg.max_batch_wait, max_queue: cfg.max_queue, ..WorkerConfig::default() };
     let key = ShardKey::new(&ds.name, cfg.spec);
     let engine = ServeEngine::start(vec![shard]).map_err(|e| anyhow!("serve: {e}"))?;
-    Ok(ServerHandle { engine, key, num_features: ds.num_features })
+    Ok(ServerHandle { engine, key })
 }
 
 #[cfg(test)]
@@ -87,7 +113,7 @@ mod tests {
         let handle = serve(&ds, mlp.clone(), ServeConfig::default()).unwrap();
         let mut correct = 0;
         let n = 30;
-        let rxs: Vec<_> = (0..n).map(|i| (i, handle.submit(ds.test_row(i).to_vec()))).collect();
+        let rxs: Vec<_> = (0..n).map(|i| (i, handle.submit(ds.test_row(i).to_vec()).unwrap())).collect();
         for (i, rx) in rxs {
             let reply = rx.recv().unwrap();
             if reply.class == ds.y_test[i] as usize {
@@ -97,6 +123,7 @@ mod tests {
         }
         let metrics = handle.shutdown();
         assert_eq!(metrics.served, n);
+        assert_eq!(metrics.shed, 0, "well under max_queue, nothing may shed");
         assert!(metrics.batches >= 1 && metrics.batches <= n);
         assert!(correct as f64 / n as f64 > 0.6, "server predictions wrong: {correct}/{n}");
         assert!(metrics.render().contains("req/s"));
@@ -110,12 +137,36 @@ mod tests {
         let handle = serve(&ds, mlp, cfg).unwrap();
         // Fire a burst; with the long wait they should coalesce into few
         // batches.
-        let rxs: Vec<_> = (0..20).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec())).collect();
+        let rxs: Vec<_> = (0..20).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec()).unwrap()).collect();
         for rx in rxs {
             rx.recv().unwrap();
         }
         let metrics = handle.shutdown();
         assert_eq!(metrics.served, 20);
         assert!(metrics.batches < 20, "no coalescing happened: {} batches", metrics.batches);
+    }
+
+    #[test]
+    fn facade_surfaces_overload_and_live_depth() {
+        let ds = datasets::load("iris", 3, Scale::Small);
+        let mlp = train_model(&ds, 3);
+        // A queue bound of 4 with a long coalesce window: the 5th
+        // un-consumed submission must shed, and the live snapshot must see
+        // the queued depth.
+        let cfg = ServeConfig { max_batch_wait: Duration::from_millis(1500), max_queue: 4, ..Default::default() };
+        let handle = serve(&ds, mlp, cfg).unwrap();
+        let rxs: Vec<_> = (0..4).map(|i| handle.submit(ds.test_row(i).to_vec()).unwrap()).collect();
+        let live = handle.metrics();
+        assert_eq!(live.queue_depths, vec![4]);
+        match handle.submit(ds.test_row(4).to_vec()) {
+            Err(ServeError::Overloaded { depth, .. }) => assert_eq!(depth, 4),
+            other => panic!("5th submission must shed, got {other:?}"),
+        }
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.served, 4);
+        assert_eq!(metrics.shed, 1);
+        for rx in rxs {
+            rx.recv().expect("accepted requests are answered on shutdown");
+        }
     }
 }

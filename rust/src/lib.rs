@@ -33,9 +33,10 @@
 //! ```
 //!
 //! For production-style serving — many (dataset, format) shards behind one
-//! router, worker pools with dynamic batching, shared quantization tables,
-//! per-shard latency percentiles — see [`serve`] and the `serve` CLI mode
-//! (`cargo run --release -- serve`).
+//! router, worker pools with deadline-aware dynamic batching, bounded
+//! admission with load shedding, least-loaded routing, shared quantization
+//! tables, per-shard latency percentiles — see [`serve`] and the `serve`
+//! CLI mode (`cargo run --release -- serve`).
 
 #![warn(missing_docs)]
 

@@ -12,7 +12,7 @@ use deep_positron::coordinator::{experiments, report, trainer, Engine};
 use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
 use deep_positron::runtime::{artifacts_dir, Runtime};
-use deep_positron::serve::{ServeEngine, ShardConfig};
+use deep_positron::serve::{ServeEngine, ServeError, ShardConfig};
 use deep_positron::{hw, quant};
 
 const USAGE: &str = "\
@@ -32,6 +32,7 @@ COMMANDS (one per paper artifact):
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
+                                                        [--max-queue 1024] [--deadline-ms N]
   all            run every report at small scale
 
 Common flags: --seed N (default 7), --scale small|full (default small).
@@ -228,6 +229,12 @@ fn run(args: &[String]) -> Result<()> {
             let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
             let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
             let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let max_queue: usize = flags.get("max-queue").map(|s| s.parse()).transpose()?.unwrap_or(1024);
+            let deadline = flags
+                .get("deadline-ms")
+                .map(|s| s.parse::<u64>())
+                .transpose()?
+                .map(std::time::Duration::from_millis);
             let formats: Vec<FormatSpec> = match flags.get("formats") {
                 Some(list) => list
                     .split(',')
@@ -241,31 +248,58 @@ fn run(args: &[String]) -> Result<()> {
             // model — the deployment-time format choice as a routing key.
             let shards: Vec<ShardConfig> = formats
                 .iter()
-                .map(|&spec| ShardConfig::new(&ds, mlp.clone(), spec).with_engine(c.engine).with_workers(workers))
+                .map(|&spec| {
+                    ShardConfig::new(&ds, mlp.clone(), spec)
+                        .with_engine(c.engine)
+                        .with_workers(workers)
+                        .with_max_queue(max_queue)
+                })
                 .collect();
             let engine = ServeEngine::start(shards).map_err(|e| anyhow!("serve: {e}"))?;
             let keys = engine.shard_keys();
-            let rxs: Vec<_> = (0..requests)
-                .map(|i| {
-                    let row = ds.test_row(i % ds.test_len()).to_vec();
-                    (i, engine.submit(&keys[i % keys.len()], row))
-                })
-                .collect();
+            // Open-loop submission: the engine self-protects, so overload
+            // comes back as a typed shed instead of an ever-growing queue.
+            let mut rxs = Vec::with_capacity(requests);
+            let mut shed = 0usize;
+            for i in 0..requests {
+                let row = ds.test_row(i % ds.test_len()).to_vec();
+                let sub = match deadline {
+                    Some(budget) => engine.submit_with_deadline(&keys[i % keys.len()], row, budget),
+                    None => engine.submit(&keys[i % keys.len()], row),
+                };
+                match sub {
+                    Ok(rx) => rxs.push((i, rx)),
+                    Err(ServeError::Overloaded { .. }) => shed += 1,
+                    Err(e) => return Err(anyhow!("submit: {e}")),
+                }
+            }
             let mut correct = 0usize;
+            let mut answered = 0usize;
             for (i, rx) in rxs {
-                let rx = rx.map_err(|e| anyhow!("submit: {e}"))?;
-                if rx.recv()?.class == ds.y_test[i % ds.test_len()] as usize {
-                    correct += 1;
+                // A recv error is the deadline-expiry signal (the worker
+                // dropped the reply channel instead of computing).
+                if let Ok(reply) = rx.recv() {
+                    answered += 1;
+                    if reply.class == ds.y_test[i % ds.test_len()] as usize {
+                        correct += 1;
+                    }
                 }
             }
             let metrics = engine.shutdown();
             let mut s = format!(
-                "sharded inference engine — {dataset}, {} shard(s) × {workers} worker(s), engine {:?}\n\n",
+                "sharded inference engine — {dataset}, {} shard(s) × {workers} worker(s), engine {:?}, \
+                 max_queue {max_queue}\n\n",
                 keys.len(),
                 c.engine
             );
             s.push_str(&metrics.render());
-            s.push_str(&format!("\nserved accuracy: {:.1}%\n", correct as f64 / requests as f64 * 100.0));
+            s.push_str(&format!(
+                "\nsubmitted {requests}: answered {answered}, shed {shed}, expired {}\n",
+                metrics.total_expired()
+            ));
+            if answered > 0 {
+                s.push_str(&format!("served accuracy: {:.1}%\n", correct as f64 / answered as f64 * 100.0));
+            }
             emit(&format!("serve_{dataset}.md"), &s)?;
         }
         "all" => {

@@ -120,12 +120,14 @@ impl Runtime {
             })
     }
 
-    /// Batch sizes available for a (kind, dataset), ascending.
+    /// Batch sizes available for a (kind, dataset), ascending and deduped.
+    ///
+    /// Callers depend on the order: the serve workers pick the smallest
+    /// compiled batch ≥ the flushed rows with a linear `find`, and
+    /// `eval_xla` takes `.last()` as the maximum — an unsorted manifest
+    /// must never make them pick an undersized executable.
     pub fn batches(&self, kind: Kind, dataset: &str) -> Vec<usize> {
-        let mut b: Vec<usize> =
-            self.artifacts.iter().filter(|a| a.kind == kind && a.dataset == dataset).map(|a| a.batch).collect();
-        b.sort_unstable();
-        b
+        sorted_batches(&self.artifacts, kind, dataset)
     }
 
     /// Compile (or fetch from cache) an executable; returns its slot.
@@ -179,6 +181,16 @@ impl Runtime {
         let a = &self.artifacts[idx];
         Ok(TrainStep { rt: self, slot, dims: a.dims.clone(), batch })
     }
+}
+
+/// Ascending, deduped batch sizes for a (kind, dataset) out of an artifact
+/// list in arbitrary manifest order.
+fn sorted_batches(artifacts: &[Artifact], kind: Kind, dataset: &str) -> Vec<usize> {
+    let mut b: Vec<usize> =
+        artifacts.iter().filter(|a| a.kind == kind && a.dataset == dataset).map(|a| a.batch).collect();
+    b.sort_unstable();
+    b.dedup();
+    b
 }
 
 /// f64 tensor literal from a flat slice.
@@ -454,6 +466,32 @@ mod tests {
         assert_eq!(arts[0].kind, Kind::QInfer);
         assert_eq!(arts[0].dims, vec![4, 10, 8, 3]);
         assert_eq!(arts[1].batch, 128);
+    }
+
+    #[test]
+    fn batches_sort_and_dedup_an_unordered_manifest() {
+        // Manifests are hand-editable text; the batch-size list must come
+        // back ascending and unique no matter the on-disk line order, or
+        // the serve workers' `find(|s| s >= rows)` picks an undersized
+        // executable and `eval_xla`'s `.last()` is not the max.
+        let mk = |kind, dataset: &str, batch| Artifact {
+            kind,
+            dataset: dataset.to_string(),
+            batch,
+            dims: vec![4, 3],
+            file: PathBuf::from("x.hlo.txt"),
+        };
+        let arts = vec![
+            mk(Kind::QInfer, "iris", 64),
+            mk(Kind::QInfer, "iris", 1),
+            mk(Kind::Train, "iris", 128),
+            mk(Kind::QInfer, "iris", 16),
+            mk(Kind::QInfer, "mnist", 8),
+            mk(Kind::QInfer, "iris", 16), // duplicate entry
+        ];
+        assert_eq!(sorted_batches(&arts, Kind::QInfer, "iris"), vec![1, 16, 64]);
+        assert_eq!(sorted_batches(&arts, Kind::QInfer, "mnist"), vec![8]);
+        assert_eq!(sorted_batches(&arts, Kind::Train, "mnist"), Vec::<usize>::new());
     }
 
     #[test]

@@ -1,10 +1,17 @@
-//! Serving metrics: per-shard throughput, batch occupancy, and latency
-//! percentiles (p50/p95/p99), aggregated engine-wide on shutdown.
+//! Serving metrics: per-shard throughput, batch occupancy, latency
+//! percentiles (p50/p95/p99), and overload accounting (requests shed at
+//! admission, deadline-expired drops, live queue depths), aggregated
+//! engine-wide on shutdown.
 //!
 //! Workers append into one shared [`ShardMetrics`] per shard (a brief mutex
-//! hold per executed batch — negligible next to EMAC compute);
-//! [`crate::serve::ServeEngine::shutdown`] stamps the wall-clock and returns
-//! the full [`EngineMetrics`] snapshot.
+//! hold per executed batch — negligible next to EMAC compute); the router
+//! counts sheds on the same struct.
+//! [`crate::serve::ServeEngine::shard_metrics`] returns a live snapshot with
+//! queue depths stamped; [`crate::serve::ServeEngine::shutdown`] stamps the
+//! wall-clock and returns the full [`EngineMetrics`] snapshot. On a clean
+//! shutdown every submission is accounted for exactly once:
+//! `served + shed + expired` equals the number of accepted-or-shed
+//! submissions (dimension-rejected requests are never counted).
 
 use crate::util::stats::{mean, percentile};
 
@@ -15,6 +22,13 @@ pub struct ShardMetrics {
     pub shard: String,
     /// Total requests served.
     pub served: usize,
+    /// Requests shed at admission because the routed worker's queue was at
+    /// [`max_queue`](crate::serve::WorkerConfig::max_queue); they were never
+    /// enqueued and never computed.
+    pub shed: usize,
+    /// Accepted requests dropped at flush time because their deadline had
+    /// already passed — no compute was spent on them.
+    pub expired: usize,
     /// Batches executed.
     pub batches: usize,
     /// Per-request end-to-end latency (queue + batch wait + compute), seconds.
@@ -23,6 +37,10 @@ pub struct ShardMetrics {
     pub batch_sizes: Vec<usize>,
     /// Requests served by each worker (index = worker id within the shard).
     pub per_worker: Vec<usize>,
+    /// Per-worker queue depth at snapshot time (a live gauge — nonzero only
+    /// on [`shard_metrics`](crate::serve::ServeEngine::shard_metrics)
+    /// snapshots taken under load; always zero after shutdown drains).
+    pub queue_depths: Vec<usize>,
     /// Workers that run the PJRT/XLA fast path (the rest fell back to Sim).
     pub xla_workers: usize,
     /// Engine start → shutdown wall clock, seconds (stamped on shutdown).
@@ -46,7 +64,7 @@ impl ShardMetrics {
     }
 
     /// Latency percentile in seconds, `p` in [0, 100] (0 when nothing was
-    /// served).
+    /// served). Nearest-rank (ceil-based), so p100 is the max observed.
     pub fn latency_percentile(&self, p: f64) -> f64 {
         if self.latencies_s.is_empty() {
             0.0
@@ -55,15 +73,22 @@ impl ShardMetrics {
         }
     }
 
+    /// Every submission that reached this shard's admission gate: served +
+    /// shed + expired (dimension-rejected requests never reach admission).
+    pub fn submissions(&self) -> usize {
+        self.served + self.shed + self.expired
+    }
+
     /// Human-readable per-shard report (latency in ms, throughput in req/s).
     pub fn render(&self) -> String {
-        if self.latencies_s.is_empty() {
+        if self.latencies_s.is_empty() && self.submissions() == 0 {
             return format!("[{}] no requests served", self.shard);
         }
         format!(
             "[{}] served {} requests in {} batches ({:.1} req/s)\n\
              \x20 latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms (mean {:.2} ms)\n\
-             \x20 batch occupancy {:.2} | workers {} ({} xla) | per-worker {:?}",
+             \x20 batch occupancy {:.2} | workers {} ({} xla) | per-worker {:?}\n\
+             \x20 admission: shed {} | expired {} | queue depths {:?}",
             self.shard,
             self.served,
             self.batches,
@@ -76,6 +101,9 @@ impl ShardMetrics {
             self.per_worker.len(),
             self.xla_workers,
             self.per_worker,
+            self.shed,
+            self.expired,
+            self.queue_depths,
         )
     }
 }
@@ -91,6 +119,16 @@ impl EngineMetrics {
     /// Requests served across every shard.
     pub fn total_served(&self) -> usize {
         self.shards.iter().map(|s| s.served).sum()
+    }
+
+    /// Requests shed at admission across every shard.
+    pub fn total_shed(&self) -> usize {
+        self.shards.iter().map(|s| s.shed).sum()
+    }
+
+    /// Deadline-expired drops across every shard.
+    pub fn total_expired(&self) -> usize {
+        self.shards.iter().map(|s| s.expired).sum()
     }
 
     /// Aggregate requests per second over the engine's lifetime.
@@ -111,8 +149,10 @@ impl EngineMetrics {
             s.push('\n');
         }
         s.push_str(&format!(
-            "aggregate: {} requests across {} shard(s), {:.1} req/s",
+            "aggregate: {} served / {} shed / {} expired across {} shard(s), {:.1} req/s",
             self.total_served(),
+            self.total_shed(),
+            self.total_expired(),
             self.shards.len(),
             self.throughput()
         ));
@@ -128,10 +168,13 @@ mod tests {
         ShardMetrics {
             shard: "iris/posit8es1".into(),
             served: 4,
+            shed: 2,
+            expired: 1,
             batches: 2,
             latencies_s: vec![0.001, 0.002, 0.003, 0.004],
             batch_sizes: vec![3, 1],
             per_worker: vec![3, 1],
+            queue_depths: vec![0, 0],
             xla_workers: 0,
             wall_seconds: 2.0,
         }
@@ -142,10 +185,16 @@ mod tests {
         let m = sample();
         assert_eq!(m.throughput(), 2.0);
         assert_eq!(m.occupancy(), 2.0);
-        assert!(m.latency_percentile(50.0) >= 0.002);
-        assert!(m.latency_percentile(99.0) <= 0.004);
+        // Ceil-based nearest-rank over 4 samples: p50 is the 2nd-ranked
+        // value, p95 and p99 the 4th (the max) — high percentiles are never
+        // understated.
+        assert_eq!(m.latency_percentile(50.0), 0.002);
+        assert_eq!(m.latency_percentile(95.0), 0.004);
+        assert_eq!(m.latency_percentile(99.0), 0.004);
+        assert_eq!(m.submissions(), 7);
         let r = m.render();
         assert!(r.contains("req/s") && r.contains("p99"));
+        assert!(r.contains("shed 2") && r.contains("expired 1"), "{r}");
     }
 
     #[test]
@@ -157,9 +206,18 @@ mod tests {
     }
 
     #[test]
+    fn all_shed_shard_still_renders_accounting() {
+        let m = ShardMetrics { shard: "iris/posit8es1".into(), shed: 5, ..Default::default() };
+        assert_eq!(m.submissions(), 5);
+        assert!(m.render().contains("shed 5"), "a shard that shed everything must still report it");
+    }
+
+    #[test]
     fn engine_aggregates() {
         let e = EngineMetrics { shards: vec![sample(), sample()] };
         assert_eq!(e.total_served(), 8);
+        assert_eq!(e.total_shed(), 4);
+        assert_eq!(e.total_expired(), 2);
         assert_eq!(e.throughput(), 4.0);
         assert!(e.render().contains("aggregate"));
     }

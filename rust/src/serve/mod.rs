@@ -5,23 +5,33 @@
 //!
 //! * **Router** ([`router`]) — requests address a [`ShardKey`] (one shard
 //!   per dataset × numeric format, the deployment-time choice Deep Positron
-//!   makes per model); within a shard, requests spread round-robin across
-//!   workers or pin to one via an affinity hash.
+//!   makes per model); within a shard, requests go to the least-loaded of
+//!   two candidate workers (power-of-two-choices over live queue depths) or
+//!   pin to one via an affinity hash. Admission is bounded: a full worker
+//!   queue sheds with [`ServeError::Overloaded`] instead of queueing
+//!   without limit, so the engine degrades gracefully under sustained
+//!   overload (DESIGN.md §9).
 //! * **Worker pool** ([`worker`]) — each worker thread owns its engine (the
 //!   bit-exact Sim datapath, or the PJRT/XLA fast path when artifacts
-//!   exist; XLA handles are not `Send`) and runs deadline-based dynamic
-//!   batching. A shard with a format that has no compiled artifact degrades
-//!   to Sim automatically.
+//!   exist; XLA handles are not `Send`) and runs deadline-heap dynamic
+//!   batching: the coalesce window is anchored to the oldest pending
+//!   request, and per-request deadlines
+//!   ([`ServeEngine::submit_with_deadline`]) drop expired work at flush
+//!   time without computing it. A shard with a format that has no compiled
+//!   artifact degrades to Sim automatically.
 //! * **Shared tables** — workers obtain quantization tables from the
 //!   process-wide [`crate::formats::Quantizer::shared`] cache, so N replicas
 //!   of one format build the sorted value/boundary tables once, not N times.
-//! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy, and
-//!   p50/p95/p99 latency, aggregated on shutdown.
+//! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy,
+//!   p50/p95/p99 latency, and overload accounting (shed / expired / live
+//!   queue depths), aggregated on shutdown.
 //!
 //! The single-shard server the repository started with lives on as a thin
 //! facade over this engine in [`crate::coordinator::server`]. The scaling
 //! behaviour (1 → 4 workers) is demonstrated by
-//! `rust/benches/serve_throughput.rs`.
+//! `rust/benches/serve_throughput.rs`; the overload behaviour (bounded
+//! depth, shedding, p99 under 4× offered load vs an unbounded queue) by
+//! `rust/benches/serve_overload.rs`.
 
 pub mod metrics;
 pub mod router;

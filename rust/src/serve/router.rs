@@ -1,13 +1,18 @@
 //! Request routing: a [`ServeEngine`] owns one shard per (dataset, format)
 //! pair; each shard owns a pool of warm workers. Requests address a shard by
-//! [`ShardKey`] and are spread across its workers round-robin, or pinned by
-//! an affinity hash (sticky sessions).
+//! [`ShardKey`]. Within a shard the router picks the **least-loaded of two
+//! candidate workers** (power-of-two-choices over the per-worker queue
+//! depths, tie going to the round-robin candidate), or pins by an affinity
+//! hash (sticky sessions). Admission is **bounded**: once the picked
+//! worker's queue depth reaches [`WorkerConfig::max_queue`] the submission
+//! is shed with [`ServeError::Overloaded`] instead of queueing without
+//! limit (DESIGN.md §9).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::accel::Mlp;
 use crate::coordinator::experiments::Engine;
@@ -42,9 +47,10 @@ impl ShardKey {
 pub struct ShardConfig {
     /// Dataset name (routing-key half + AOT-artifact lookup key).
     pub dataset: String,
-    /// Input feature count; requests are validated against this.
+    /// Input feature count; requests are validated against this, and this
+    /// is validated against the model topology at [`ServeEngine::start`].
     pub num_features: usize,
-    /// Output class count.
+    /// Output class count (validated against the model topology at start).
     pub num_classes: usize,
     /// The trained f64 network this shard serves (quantized per `spec`).
     pub mlp: Mlp,
@@ -55,13 +61,13 @@ pub struct ShardConfig {
     pub engine: Engine,
     /// Worker replicas (each owns its own engine instance).
     pub workers: usize,
-    /// Batching knobs shared by the workers.
+    /// Batching + admission knobs shared by the workers.
     pub worker: WorkerConfig,
 }
 
 impl ShardConfig {
     /// Shard for a loaded dataset and trained model: 1 worker, Sim engine,
-    /// default batching.
+    /// default batching and admission bounds.
     pub fn new(ds: &Dataset, mlp: Mlp, spec: FormatSpec) -> ShardConfig {
         ShardConfig {
             dataset: ds.name.clone(),
@@ -86,35 +92,118 @@ impl ShardConfig {
         self.engine = engine;
         self
     }
+
+    /// Set the per-worker admission bound; see [`WorkerConfig::max_queue`].
+    /// A bound of 0 is rejected as [`ServeError::BadShard`] at
+    /// [`ServeEngine::start`] rather than silently rewritten.
+    pub fn with_max_queue(mut self, max_queue: usize) -> ShardConfig {
+        self.worker.max_queue = max_queue;
+        self
+    }
+
+    /// Reject configs whose redundant fields disagree with the model
+    /// topology — a mismatch would validate requests against the wrong
+    /// dimension or slice logits out of bounds at serve time.
+    fn validate(&self, label: &str) -> Result<(), ServeError> {
+        let bad = |reason: String| ServeError::BadShard { shard: label.to_string(), reason };
+        let Some(first) = self.mlp.layers.first() else {
+            return Err(bad("model has no layers".into()));
+        };
+        let last = self.mlp.layers.last().expect("non-empty layer list has a last");
+        if self.num_features != first.in_dim {
+            return Err(bad(format!("num_features {} != model input dim {}", self.num_features, first.in_dim)));
+        }
+        if self.num_classes != last.out_dim {
+            return Err(bad(format!("num_classes {} != model output dim {}", self.num_classes, last.out_dim)));
+        }
+        if self.worker.max_queue == 0 {
+            return Err(bad("max_queue must be >= 1 (0 would shed every request)".into()));
+        }
+        if self.worker.sim_batch == 0 {
+            return Err(bad("sim_batch must be >= 1".into()));
+        }
+        Ok(())
+    }
 }
 
 struct Shard {
     key: ShardKey,
     num_features: usize,
+    max_queue: usize,
     workers: Vec<WorkerHandle>,
     next: AtomicUsize,
     metrics: Arc<Mutex<ShardMetrics>>,
 }
 
 impl Shard {
-    fn submit(&self, worker_idx: usize, x: Vec<f64>) -> Result<mpsc::Receiver<InferReply>, ServeError> {
+    /// Pick a worker: round-robin candidate vs. a hashed second candidate,
+    /// take whichever has the shallower queue (power-of-two-choices). Ties
+    /// go to the round-robin candidate, so an idle shard still cycles its
+    /// workers deterministically; under skew, one slow worker stops
+    /// attracting new requests as soon as its queue is deeper.
+    fn pick(&self) -> usize {
+        let n = self.workers.len();
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        let a = seq % n;
+        if n == 1 {
+            return a;
+        }
+        let mut b = (mix64(seq as u64) % n as u64) as usize;
+        if b == a {
+            b = (a + 1) % n;
+        }
+        if self.workers[b].depth.load(Ordering::Relaxed) < self.workers[a].depth.load(Ordering::Relaxed) {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Bounded admission: reserve a queue slot on the worker (shed with
+    /// [`ServeError::Overloaded`] when its depth is at `max_queue`), then
+    /// enqueue. The worker releases the slot when the request leaves its
+    /// queue (for execution or deadline expiry).
+    fn submit(
+        &self,
+        worker_idx: usize,
+        x: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<InferReply>, ServeError> {
         if x.len() != self.num_features {
             return Err(ServeError::BadRequest { got: x.len(), want: self.num_features });
         }
+        let worker = &self.workers[worker_idx];
+        let admit = worker.depth.fetch_update(Ordering::AcqRel, Ordering::Relaxed, |d| {
+            if d < self.max_queue {
+                Some(d + 1)
+            } else {
+                None
+            }
+        });
+        if let Err(depth) = admit {
+            self.metrics.lock().unwrap().shed += 1;
+            return Err(ServeError::Overloaded { shard: self.key.label(), depth });
+        }
         let (tx, rx) = mpsc::channel();
-        self.workers[worker_idx]
-            .tx
-            .send(Control::Req(Request { x, submitted: Instant::now(), resp: tx }))
-            .map_err(|_| ServeError::Closed)?;
+        let req = Request { x, submitted: Instant::now(), deadline, resp: tx };
+        if worker.tx.send(Control::Req(req)).is_err() {
+            worker.depth.fetch_sub(1, Ordering::Release);
+            return Err(ServeError::Closed);
+        }
         Ok(rx)
+    }
+
+    fn queue_depths(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.depth.load(Ordering::Relaxed)).collect()
     }
 }
 
 /// The sharded, multi-worker serving engine.
 ///
 /// One shard per (dataset, format); N warm workers per shard, each owning
-/// its own engine (Sim or PJRT) and running deadline-based dynamic batching;
-/// quantization tables shared process-wide
+/// its own engine (Sim or PJRT) and running deadline-heap dynamic batching;
+/// bounded admission with load shedding ([`ServeError::Overloaded`]) and
+/// least-loaded two-choice routing; quantization tables shared process-wide
 /// ([`crate::formats::Quantizer::shared`]); per-shard metrics collected on
 /// [`ServeEngine::shutdown`].
 ///
@@ -144,11 +233,20 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     /// Start every shard and block until all workers are warm, so no
-    /// request ever pays compile time. Every worker of every shard spawns
-    /// first and warm-up runs in parallel; readiness is collected after.
-    /// Duplicate (dataset, format) configs collapse onto one shard (last
-    /// wins; the superseded workers shut down when their channels close).
+    /// request ever pays compile time. Configs are validated against their
+    /// model topology first ([`ServeError::BadShard`]); then every worker
+    /// of every shard spawns and warm-up runs in parallel; readiness is
+    /// collected after. Duplicate (dataset, format) configs collapse onto
+    /// one shard (last wins; the superseded workers shut down when their
+    /// channels close).
     pub fn start(shards: Vec<ShardConfig>) -> Result<ServeEngine, ServeError> {
+        // Phase 0: validate every config before any thread spawns, so a bad
+        // config is rejected side-effect-free (no live workers mid-compile
+        // abandoned behind an Err).
+        for cfg in &shards {
+            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.spec.name() };
+            cfg.validate(&key.label())?;
+        }
         // Phase 1: spawn everything, no waiting.
         let mut staged = Vec::with_capacity(shards.len());
         for cfg in shards {
@@ -176,11 +274,11 @@ impl ServeEngine {
                 workers.push(handle);
                 readies.push(ready);
             }
-            staged.push((key, cfg.num_features, workers, readies, metrics));
+            staged.push((key, cfg.num_features, cfg.worker.max_queue, workers, readies, metrics));
         }
         // Phase 2: collect readiness (a dead worker thread drops its sender).
         let mut map = HashMap::new();
-        for (key, num_features, workers, readies, metrics) in staged {
+        for (key, num_features, max_queue, workers, readies, metrics) in staged {
             for ready in readies {
                 match ready.recv() {
                     Ok(xla_active) => {
@@ -191,7 +289,9 @@ impl ServeEngine {
                     Err(_) => return Err(ServeError::Closed),
                 }
             }
-            map.insert(key.clone(), Shard { key, num_features, workers, next: AtomicUsize::new(0), metrics });
+            let shard =
+                Shard { key: key.clone(), num_features, max_queue, workers, next: AtomicUsize::new(0), metrics };
+            map.insert(key, shard);
         }
         Ok(ServeEngine { shards: map, started: Instant::now() })
     }
@@ -207,17 +307,35 @@ impl ServeEngine {
         self.shards.get(key).ok_or_else(|| ServeError::UnknownShard(key.label()))
     }
 
-    /// Submit one feature vector to a shard; round-robins across its
-    /// workers. Returns the receiver the reply will arrive on.
+    /// Submit one feature vector to a shard; routes to the least-loaded of
+    /// two candidate workers (round-robin order when idle). Returns the
+    /// receiver the reply will arrive on, or sheds with
+    /// [`ServeError::Overloaded`] when the picked worker's queue is full.
     pub fn submit(&self, key: &ShardKey, x: Vec<f64>) -> Result<mpsc::Receiver<InferReply>, ServeError> {
         let shard = self.shard(key)?;
-        let w = shard.next.fetch_add(1, Ordering::Relaxed) % shard.workers.len();
-        shard.submit(w, x)
+        shard.submit(shard.pick(), x, None)
+    }
+
+    /// [`submit`](ServeEngine::submit) with a latency budget: if the request
+    /// is still queued once `budget` has elapsed, the worker drops it
+    /// WITHOUT computing it (the reply channel closes, so `recv` errors and
+    /// the shard's `expired` count grows). Use this so stale work — clients
+    /// that have already timed out — never occupies the accelerator.
+    pub fn submit_with_deadline(
+        &self,
+        key: &ShardKey,
+        x: Vec<f64>,
+        budget: Duration,
+    ) -> Result<mpsc::Receiver<InferReply>, ServeError> {
+        let shard = self.shard(key)?;
+        shard.submit(shard.pick(), x, Some(Instant::now() + budget))
     }
 
     /// Submit with an affinity hash: requests carrying the same `affinity`
     /// (session id, user id, …) always land on the same worker of the shard,
-    /// keeping per-session batches warm on one engine.
+    /// keeping per-session batches warm on one engine. Affinity overrides
+    /// least-loaded routing, but admission stays bounded: a full pinned
+    /// worker sheds with [`ServeError::Overloaded`].
     pub fn submit_with_affinity(
         &self,
         key: &ShardKey,
@@ -226,14 +344,23 @@ impl ServeEngine {
     ) -> Result<mpsc::Receiver<InferReply>, ServeError> {
         let shard = self.shard(key)?;
         let w = (mix64(affinity) % shard.workers.len() as u64) as usize;
-        shard.submit(w, x)
+        shard.submit(w, x, None)
     }
 
-    /// Live metrics snapshot for one shard (wall clock stamped as of now).
+    /// Live per-worker queue depths for one shard, straight off the
+    /// admission atomics — the cheap overload gauge (no metrics-mutex
+    /// hold, no latency-history clone). `None` for an unknown key.
+    pub fn queue_depths(&self, key: &ShardKey) -> Option<Vec<usize>> {
+        self.shards.get(key).map(|s| s.queue_depths())
+    }
+
+    /// Live metrics snapshot for one shard: wall clock and per-worker queue
+    /// depths stamped as of now.
     pub fn shard_metrics(&self, key: &ShardKey) -> Option<ShardMetrics> {
         self.shards.get(key).map(|s| {
             let mut m = s.metrics.lock().unwrap().clone();
             m.wall_seconds = self.started.elapsed().as_secs_f64();
+            m.queue_depths = s.queue_depths();
             m
         })
     }
@@ -259,6 +386,7 @@ impl ServeEngine {
             }
             let mut m = shard.metrics.lock().unwrap().clone();
             m.wall_seconds = wall;
+            m.queue_depths = shard.queue_depths();
             out.push(m);
         }
         EngineMetrics { shards: out }

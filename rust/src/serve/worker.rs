@@ -1,7 +1,7 @@
 //! Shard workers: each worker thread owns its inference engine (bit-exact
 //! Sim, or the PJRT/XLA fast path when artifacts exist) and runs the
-//! deadline-based dynamic batcher extracted from the original
-//! single-worker server (`coordinator::server`).
+//! deadline-heap dynamic batcher evolved from the original single-worker
+//! server (`coordinator::server`).
 //!
 //! Both engines execute the flushed batch as a batch: XLA through the
 //! compiled fixed-shape executables, Sim through the accelerator's compiled
@@ -9,6 +9,23 @@
 //! [`DeepPositron::predict_batch`]) — so the batcher's coalescing pays off
 //! on the bit-exact path too, instead of degenerating into a per-sample
 //! loop (DESIGN.md §8).
+//!
+//! Overload semantics (DESIGN.md §9): each worker carries an atomic queue
+//! depth, incremented by the router at admission and decremented here the
+//! moment a request leaves the queue for execution (or for the floor, when
+//! its deadline has passed). The router sheds with
+//! [`ServeError::Overloaded`] once the depth reaches
+//! [`WorkerConfig::max_queue`], so worker memory is bounded no matter how
+//! hard clients flood.
+//!
+//! The batcher keeps pending requests in a min-heap keyed by each request's
+//! *flush-by* instant: `submitted + max_batch_wait`, tightened by the
+//! request's own deadline when one was set. The coalesce timer always waits
+//! on the heap top, so (a) the window is anchored to the **oldest** pending
+//! request — requests that queued during a slow batch are not made to wait a
+//! fresh full window — and (b) an expired deadline wakes the worker to drop
+//! the request (no compute, queue slot freed, client unblocked by the
+//! dropped reply channel) instead of letting it ride to the next flush.
 //!
 //! Engine-per-thread is load-bearing: XLA handles are not `Send`, so all
 //! device-side state lives and dies on one worker thread. Worker replicas of
@@ -20,6 +37,8 @@
 //! degrades to Sim when the PJRT runtime cannot start, when the dataset has
 //! no compiled `q_infer` artifact, or — per batch — when an execution fails.
 
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -54,6 +73,26 @@ pub enum ServeError {
         /// Features the shard's model expects.
         want: usize,
     },
+    /// The routed worker's queue is full: the request was shed at admission
+    /// instead of being queued without bound. Back off and retry, or route
+    /// elsewhere — nothing was enqueued.
+    Overloaded {
+        /// Shard label (`dataset/format`) that shed the request.
+        shard: String,
+        /// Worker queue depth observed at admission time (= `max_queue`).
+        depth: usize,
+    },
+    /// A shard configuration was rejected at [`start`] time because it is
+    /// internally inconsistent (feature/class counts that disagree with the
+    /// model topology, a zero queue bound, …).
+    ///
+    /// [`start`]: crate::serve::ServeEngine::start
+    BadShard {
+        /// Shard label (`dataset/format`) of the rejected config.
+        shard: String,
+        /// What was inconsistent.
+        reason: String,
+    },
     /// The engine (or the routed worker) has already shut down.
     Closed,
 }
@@ -65,6 +104,10 @@ impl std::fmt::Display for ServeError {
             ServeError::BadRequest { got, want } => {
                 write!(f, "bad request: {got} features submitted, shard expects {want}")
             }
+            ServeError::Overloaded { shard, depth } => {
+                write!(f, "shard {shard} overloaded: worker queue full at depth {depth}, request shed")
+            }
+            ServeError::BadShard { shard, reason } => write!(f, "bad shard config {shard}: {reason}"),
             ServeError::Closed => write!(f, "serving engine is shut down"),
         }
     }
@@ -72,24 +115,34 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// Batching knobs shared by a shard's workers.
+/// Batching and admission knobs shared by a shard's workers.
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
-    /// Max time the batcher waits to fill a batch before executing it.
+    /// Max time the batcher waits to fill a batch, measured from the oldest
+    /// pending request's submission instant.
     pub max_batch_wait: Duration,
     /// Batch cap when no compiled artifact dictates one (Sim engine).
     pub sim_batch: usize,
+    /// Admission bound: max requests a single worker may hold queued
+    /// (channel + batcher heap, not yet executing). Submissions beyond this
+    /// depth fail fast with [`ServeError::Overloaded`] instead of growing
+    /// the queue — bounded memory and bounded queueing delay under
+    /// sustained overload.
+    pub max_queue: usize,
 }
 
 impl Default for WorkerConfig {
     fn default() -> Self {
-        WorkerConfig { max_batch_wait: Duration::from_millis(2), sim_batch: 64 }
+        WorkerConfig { max_batch_wait: Duration::from_millis(2), sim_batch: 64, max_queue: 1024 }
     }
 }
 
 pub(crate) struct Request {
     pub x: Vec<f64>,
     pub submitted: Instant,
+    /// Serve-by instant; at flush time an expired request is dropped
+    /// uncomputed (its reply channel closes, so the client's `recv` errors).
+    pub deadline: Option<Instant>,
     pub resp: mpsc::Sender<InferReply>,
 }
 
@@ -100,6 +153,9 @@ pub(crate) enum Control {
 
 pub(crate) struct WorkerHandle {
     pub tx: mpsc::Sender<Control>,
+    /// Admitted-but-not-yet-flushed request count; the router's admission
+    /// gate and the power-of-two-choices load signal.
+    pub depth: Arc<AtomicUsize>,
     pub join: Option<JoinHandle<()>>,
 }
 
@@ -124,8 +180,10 @@ pub(crate) struct WorkerSpec {
 pub(crate) fn spawn(ws: WorkerSpec) -> (WorkerHandle, mpsc::Receiver<bool>) {
     let (tx, rx) = mpsc::channel::<Control>();
     let (ready_tx, ready_rx) = mpsc::channel::<bool>();
-    let join = std::thread::spawn(move || worker_loop(rx, ready_tx, ws));
-    (WorkerHandle { tx, join: Some(join) }, ready_rx)
+    let depth = Arc::new(AtomicUsize::new(0));
+    let worker_depth = Arc::clone(&depth);
+    let join = std::thread::spawn(move || worker_loop(rx, ready_tx, worker_depth, ws));
+    (WorkerHandle { tx, depth, join: Some(join) }, ready_rx)
 }
 
 /// Per-worker XLA fast-path state (thread-local by construction).
@@ -146,6 +204,8 @@ fn build_xla(shard: &str, dataset: &str, dp: &DeepPositron, mlp: &Mlp, spec: For
             return None;
         }
     };
+    // Ascending + deduped by `Runtime::batches`'s contract — load-bearing
+    // for padded-executable selection (`find(|s| s >= rows)`, `last()`).
     let batches = rt.batches(Kind::QInfer, dataset);
     if batches.is_empty() {
         eprintln!("serve[{shard}]: no q_infer artifact for {dataset}, falling back to Sim");
@@ -156,7 +216,57 @@ fn build_xla(shard: &str, dataset: &str, dp: &DeepPositron, mlp: &Mlp, spec: For
     Some(XlaState { rt, weights, biases, tables, batches })
 }
 
-fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, ws: WorkerSpec) {
+/// One queued request plus its flush-by instant: the coalesce anchor
+/// (`submitted + max_batch_wait`), tightened by the request deadline.
+struct Pending {
+    flush_by: Instant,
+    /// Arrival tiebreak so equal instants stay FIFO.
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.flush_by == other.flush_by && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    /// Reversed on purpose: `BinaryHeap` is a max-heap, so the greatest
+    /// element must be the EARLIEST flush-by (with the lowest seq).
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.flush_by.cmp(&self.flush_by).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Everything the flush path needs, bundled so the batcher's helpers stay
+/// readable.
+struct BatchCtx<'a> {
+    ws: &'a WorkerSpec,
+    depth: &'a AtomicUsize,
+    dp: &'a DeepPositron,
+    xla: &'a Option<XlaState>,
+    max_batch: usize,
+}
+
+fn push_pending(pending: &mut BinaryHeap<Pending>, seq: &mut u64, wait: Duration, req: Request) {
+    let mut flush_by = req.submitted + wait;
+    if let Some(d) = req.deadline {
+        flush_by = flush_by.min(d);
+    }
+    pending.push(Pending { flush_by, seq: *seq, req });
+    *seq += 1;
+}
+
+fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth: Arc<AtomicUsize>, ws: WorkerSpec) {
     let dp = DeepPositron::compile(&ws.mlp, ws.spec);
     let xla = if ws.engine == Engine::Xla { build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec) } else { None };
     let batch_sizes: Vec<usize> = match &xla {
@@ -178,132 +288,187 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, ws: Wo
     let _ = ready_tx.send(xla.is_some());
     if std::env::var("SERVE_TRACE").is_ok() {
         eprintln!(
-            "[trace] worker {}#{} ready: engine={:?} xla={} batch_sizes={batch_sizes:?}",
+            "[trace] worker {}#{} ready: engine={:?} xla={} batch_sizes={batch_sizes:?} max_queue={}",
             ws.shard,
             ws.index,
             ws.engine,
-            xla.is_some()
+            xla.is_some(),
+            ws.cfg.max_queue
         );
     }
-    let mut pending: Vec<Request> = Vec::new();
+    let wait = ws.cfg.max_batch_wait;
+    let ctx = BatchCtx { ws: &ws, depth: &depth, dp: &dp, xla: &xla, max_batch };
+    let mut pending: BinaryHeap<Pending> = BinaryHeap::new();
+    let mut seq = 0u64;
     loop {
         // Block for the first request (or control message).
         if pending.is_empty() {
             match rx.recv() {
-                Ok(Control::Req(r)) => pending.push(r),
+                Ok(Control::Req(r)) => push_pending(&mut pending, &mut seq, wait, r),
                 Ok(Control::Shutdown(done)) => {
-                    finish(&rx, &mut pending, &ws, &dp, &xla, max_batch);
+                    finish(&rx, &mut pending, &ctx);
                     let _ = done.send(());
                     return;
                 }
                 Err(_) => return,
             }
+            continue;
         }
-        // Coalesce until the batch fills or the wait deadline passes.
-        let deadline = Instant::now() + ws.cfg.max_batch_wait;
+        // Coalesce until the batch fills or the heap's earliest flush-by
+        // passes. The top of the heap is the oldest pending request's
+        // coalesce anchor — or a sooner per-request deadline.
         let mut shutdown: Option<mpsc::Sender<()>> = None;
+        let mut disconnected = false;
         while pending.len() < max_batch {
+            let wake = pending.peek().expect("pending is non-empty").flush_by;
             let now = Instant::now();
-            if now >= deadline {
+            if now >= wake {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Control::Req(r)) => pending.push(r),
+            match rx.recv_timeout(wake - now) {
+                Ok(Control::Req(r)) => push_pending(&mut pending, &mut seq, wait, r),
                 Ok(Control::Shutdown(done)) => {
                     shutdown = Some(done);
                     break;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
             }
         }
-        execute(&mut pending, &ws, &dp, &xla, max_batch);
         if let Some(done) = shutdown {
-            finish(&rx, &mut pending, &ws, &dp, &xla, max_batch);
+            finish(&rx, &mut pending, &ctx);
             let _ = done.send(());
             return;
         }
+        if disconnected {
+            // Engine dropped without a shutdown handshake: serve what we
+            // hold best-effort, then exit (re-entering coalesce would spin
+            // on the dead channel).
+            while !pending.is_empty() {
+                flush(&mut pending, &ctx, true);
+            }
+            return;
+        }
+        // Batch full ⇒ forced flush; otherwise the coalesce timer fired.
+        let force = pending.len() >= max_batch;
+        flush(&mut pending, &ctx, force);
     }
 }
 
 /// Drain whatever is already queued and serve it before acknowledging
-/// shutdown: every request submitted before `Shutdown` gets a reply.
-fn finish(
-    rx: &mpsc::Receiver<Control>,
-    pending: &mut Vec<Request>,
-    ws: &WorkerSpec,
-    dp: &DeepPositron,
-    xla: &Option<XlaState>,
-    max_batch: usize,
-) {
+/// shutdown: every request *accepted* before `Shutdown` gets a reply
+/// (expired-deadline requests are still dropped, same as any flush).
+fn finish(rx: &mpsc::Receiver<Control>, pending: &mut BinaryHeap<Pending>, ctx: &BatchCtx<'_>) {
+    let mut seq = u64::MAX / 2; // after any live seq; only relative order matters
     while let Ok(ctl) = rx.try_recv() {
         if let Control::Req(r) = ctl {
-            pending.push(r);
+            push_pending(pending, &mut seq, ctx.ws.cfg.max_batch_wait, r);
         }
     }
-    execute(pending, ws, dp, xla, max_batch);
+    while !pending.is_empty() {
+        flush(pending, ctx, true);
+    }
 }
 
-/// Execute everything in `pending` (in chunks of at most `max_batch`),
-/// reply per request, and record shard metrics.
-fn execute(
-    pending: &mut Vec<Request>,
-    ws: &WorkerSpec,
-    dp: &DeepPositron,
-    xla: &Option<XlaState>,
-    max_batch: usize,
-) {
-    while !pending.is_empty() {
-        let take = pending.len().min(max_batch);
-        let batch: Vec<Request> = pending.drain(..take).collect();
-        let rows = batch.len();
-        let preds: Vec<usize> = match xla {
-            Some(x) => {
-                // Smallest compiled batch that fits (pad the remainder).
-                let b = *x.batches.iter().find(|&&s| s >= rows).unwrap_or(&max_batch);
-                let mut flat = Vec::with_capacity(rows * batch[0].x.len());
-                for r in &batch {
-                    flat.extend_from_slice(&r.x);
+/// Pop one heap entry into `batch` or, if its deadline already passed,
+/// onto the floor (no compute; the client's `recv` errors when the reply
+/// sender drops). Either way the request leaves the queue here — so
+/// admission sees the slot free before any reply lands. Returns the
+/// expired increment (0 or 1).
+fn pop_into(pending: &mut BinaryHeap<Pending>, batch: &mut Vec<Request>, ctx: &BatchCtx<'_>, now: Instant) -> usize {
+    let Some(p) = pending.pop() else { return 0 };
+    ctx.depth.fetch_sub(1, Ordering::Release);
+    if matches!(p.req.deadline, Some(d) if now >= d) {
+        1
+    } else {
+        batch.push(p.req);
+        0
+    }
+}
+
+/// Flush one batch of up to `max_batch` requests in flush-by order.
+///
+/// `force` (batch full, shutdown drain, dead channel) pops
+/// unconditionally. A timer-fired flush (`force == false`) pops only the
+/// due prefix (`flush_by` ≤ now) — expired requests are dropped on the
+/// way, and only once a *live* due request seeds the batch may everything
+/// still pending ride along, so an expired deadline alone frees its queue
+/// slot and unblocks its client without dragging younger requests into an
+/// early, under-filled batch.
+fn flush(pending: &mut BinaryHeap<Pending>, ctx: &BatchCtx<'_>, force: bool) {
+    let now = Instant::now();
+    let mut batch: Vec<Request> = Vec::with_capacity(pending.len().min(ctx.max_batch));
+    let mut expired = 0usize;
+    while batch.len() < ctx.max_batch
+        && pending.peek().is_some_and(|p| force || !batch.is_empty() || p.flush_by <= now)
+    {
+        expired += pop_into(pending, &mut batch, ctx, now);
+    }
+    if expired > 0 {
+        ctx.ws.metrics.lock().unwrap().expired += expired;
+    }
+    if !batch.is_empty() {
+        execute(batch, ctx);
+    }
+}
+
+/// Execute one already-popped batch on the fast path (or Sim), reply per
+/// request, and record shard metrics.
+fn execute(batch: Vec<Request>, ctx: &BatchCtx<'_>) {
+    let ws = ctx.ws;
+    let rows = batch.len();
+    let preds: Vec<usize> = match ctx.xla {
+        Some(x) => {
+            // Smallest compiled batch that fits (pad the remainder).
+            let b = *x.batches.iter().find(|&&s| s >= rows).unwrap_or(&ctx.max_batch);
+            let mut flat = Vec::with_capacity(rows * batch[0].x.len());
+            for r in &batch {
+                flat.extend_from_slice(&r.x);
+            }
+            let t_exec = Instant::now();
+            match x
+                .rt
+                .quantized_infer(&ws.dataset, b)
+                .and_then(|exe| exe.run(&flat, rows, &x.weights, &x.biases, &x.tables))
+            {
+                Ok(logits) => {
+                    if std::env::var("SERVE_TRACE").is_ok() {
+                        let dt = t_exec.elapsed();
+                        eprintln!("[trace] {}#{} batch rows={rows} pad={b} exec={dt:?}", ws.shard, ws.index);
+                    }
+                    (0..rows).map(|r| argmax(&logits[r * ws.classes..(r + 1) * ws.classes])).collect()
                 }
-                let t_exec = Instant::now();
-                match x
-                    .rt
-                    .quantized_infer(&ws.dataset, b)
-                    .and_then(|exe| exe.run(&flat, rows, &x.weights, &x.biases, &x.tables))
-                {
-                    Ok(logits) => {
-                        if std::env::var("SERVE_TRACE").is_ok() {
-                            let dt = t_exec.elapsed();
-                            eprintln!("[trace] {}#{} batch rows={rows} pad={b} exec={dt:?}", ws.shard, ws.index);
-                        }
-                        (0..rows).map(|r| argmax(&logits[r * ws.classes..(r + 1) * ws.classes])).collect()
-                    }
-                    Err(e) => {
-                        eprintln!("serve[{}#{}]: batch failed ({e}); using Sim", ws.shard, ws.index);
-                        sim_predict_batch(dp, &batch)
-                    }
+                Err(e) => {
+                    eprintln!("serve[{}#{}]: batch failed ({e}); using Sim", ws.shard, ws.index);
+                    sim_predict_batch(ctx.dp, &batch)
                 }
             }
-            None => sim_predict_batch(dp, &batch),
-        };
-        // Reply (and compute latencies) OUTSIDE the shard-metrics lock, so
-        // workers finishing batches concurrently never serialize on reply
-        // delivery; then record the whole batch under one short lock.
-        let mut latencies = Vec::with_capacity(rows);
-        for (req, class) in batch.into_iter().zip(preds) {
-            let latency_s = req.submitted.elapsed().as_secs_f64();
-            latencies.push(latency_s);
-            let _ = req.resp.send(InferReply { class, latency_s, worker: ws.index });
         }
-        let mut m = ws.metrics.lock().unwrap();
-        m.batches += 1;
-        m.batch_sizes.push(rows);
-        m.served += rows;
-        if let Some(count) = m.per_worker.get_mut(ws.index) {
-            *count += rows;
-        }
-        m.latencies_s.extend_from_slice(&latencies);
+        None => sim_predict_batch(ctx.dp, &batch),
+    };
+    // Reply (and compute latencies) OUTSIDE the shard-metrics lock, so
+    // workers finishing batches concurrently never serialize on reply
+    // delivery; then record the whole batch under one short lock.
+    let mut latencies = Vec::with_capacity(rows);
+    for (req, class) in batch.into_iter().zip(preds) {
+        let latency_s = req.submitted.elapsed().as_secs_f64();
+        latencies.push(latency_s);
+        let _ = req.resp.send(InferReply { class, latency_s, worker: ws.index });
     }
+    let mut m = ws.metrics.lock().unwrap();
+    m.batches += 1;
+    m.batch_sizes.push(rows);
+    m.served += rows;
+    // Infallible per-worker accounting: grow the vector rather than
+    // silently dropping counts if it was ever mis-sized.
+    if m.per_worker.len() <= ws.index {
+        m.per_worker.resize(ws.index + 1, 0);
+    }
+    m.per_worker[ws.index] += rows;
+    m.latencies_s.extend_from_slice(&latencies);
 }
 
 /// Execute one flushed batch on the Sim engine: a single compiled-plan walk
@@ -329,4 +494,66 @@ fn python_layout(dp: &DeepPositron, mlp: &Mlp) -> (Vec<Vec<f64>>, Vec<Vec<f64>>)
         weights.push(wio);
     }
     (weights, bq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_display_covers_new_variants() {
+        let e = ServeError::Overloaded { shard: "iris/posit8es1".into(), depth: 64 };
+        let s = e.to_string();
+        assert!(s.contains("iris/posit8es1") && s.contains("64") && s.contains("shed"), "{s}");
+        let e = ServeError::BadShard { shard: "iris/posit8es1".into(), reason: "num_features 5 != 4".into() };
+        assert!(e.to_string().contains("num_features 5 != 4"));
+    }
+
+    #[test]
+    fn default_worker_config_is_bounded() {
+        let cfg = WorkerConfig::default();
+        assert!(cfg.max_queue >= cfg.sim_batch, "queue bound should hold at least one full batch");
+        assert!(cfg.max_queue < usize::MAX, "default admission must be bounded");
+    }
+
+    #[test]
+    fn pending_heap_orders_by_flush_by_then_seq() {
+        let t0 = Instant::now();
+        let mk = |offset_ms: u64, seq: u64| {
+            let (tx, _rx) = mpsc::channel();
+            Pending {
+                flush_by: t0 + Duration::from_millis(offset_ms),
+                seq,
+                req: Request { x: vec![], submitted: t0, deadline: None, resp: tx },
+            }
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(mk(30, 0));
+        heap.push(mk(10, 1));
+        heap.push(mk(10, 2));
+        heap.push(mk(20, 3));
+        let mut order = Vec::new();
+        while let Some(p) = heap.pop() {
+            order.push(((p.flush_by - t0).as_millis() as u64, p.seq));
+        }
+        assert_eq!(order, vec![(10, 1), (10, 2), (20, 3), (30, 0)], "min flush-by first, FIFO on ties");
+    }
+
+    #[test]
+    fn push_pending_tightens_flush_by_with_deadline() {
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(50);
+        let (tx, _rx) = mpsc::channel();
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0;
+        let req = Request { x: vec![], submitted: t0, deadline: Some(t0 + Duration::from_millis(5)), resp: tx };
+        push_pending(&mut heap, &mut seq, wait, req);
+        assert_eq!(heap.peek().unwrap().flush_by, t0 + Duration::from_millis(5));
+        let (tx, _rx) = mpsc::channel();
+        let req = Request { x: vec![], submitted: t0, deadline: None, resp: tx };
+        push_pending(&mut heap, &mut seq, wait, req);
+        assert_eq!(heap.len(), 2);
+        // The deadline-tightened entry stays on top of the no-deadline one.
+        assert_eq!(heap.peek().unwrap().flush_by, t0 + Duration::from_millis(5));
+    }
 }

@@ -19,12 +19,20 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile (nearest-rank on a sorted copy), p in [0, 100].
+///
+/// Uses the ceil-based nearest-rank definition `⌈p/100 · n⌉`: the smallest
+/// value with at least p% of the samples at or below it. The previous
+/// `round(p/100 · (n−1))` variant was not nearest-rank at all — it
+/// mis-ranked both ways (the median of 4 samples came back as the
+/// 3rd-ranked value, while p-values landing between ranks rounded *down*
+/// half the time, understating latency tails — the wrong direction for
+/// SLOs).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.saturating_sub(1).min(v.len() - 1)]
 }
 
 /// Min/max of a slice.
@@ -131,6 +139,22 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 50.0), 50.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_is_ceil_based_nearest_rank() {
+        // Median of an even count is the lower-middle rank (⌈0.5·4⌉ = 2nd),
+        // not the upper-middle the old round((n−1)·p) rule picked.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 75.0), 3.0);
+        // Tail percentiles never understate: p99 of 100 samples is the
+        // 99th-ranked value, anything above lands on the max.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 99.5), 100.0);
+        // Degenerate inputs stay in range.
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
     }
 
     #[test]

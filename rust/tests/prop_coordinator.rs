@@ -20,7 +20,8 @@ fn prop_server_serves_every_request_exactly_once() {
         let cfg = ServeConfig { max_batch_wait: Duration::from_micros(rng.below(3000) as u64), ..Default::default() };
         let handle = serve(&ds, mlp.clone(), cfg).unwrap();
         let n = 1 + rng.below(40);
-        let rxs: Vec<_> = (0..n).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec())).collect();
+        let rxs: Vec<_> =
+            (0..n).map(|i| handle.submit(ds.test_row(i % ds.test_len()).to_vec()).expect("admitted")).collect();
         let mut replies = 0;
         for rx in rxs {
             let reply = rx.recv().expect("no reply");

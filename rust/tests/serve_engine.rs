@@ -74,7 +74,7 @@ fn partial_batch_flushes_on_deadline() {
     let mut shard = ShardConfig::new(&ds, mlp, spec);
     // Large batch cap + long-ish deadline: 3 requests can never fill the
     // batch, so replies prove the deadline flush path works.
-    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(25), sim_batch: 64 };
+    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(25), sim_batch: 64, ..WorkerConfig::default() };
     let engine = ServeEngine::start(vec![shard]).unwrap();
     let key = ShardKey::new("iris", spec);
 
@@ -95,7 +95,8 @@ fn shutdown_serves_in_flight_requests() {
     let spec = FormatSpec::parse("posit8es1").unwrap();
     let mut shard = ShardConfig::new(&ds, mlp, spec);
     // Long deadline so the batch is still open when shutdown arrives.
-    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(200), sim_batch: 64 };
+    shard.worker =
+        WorkerConfig { max_batch_wait: Duration::from_millis(200), sim_batch: 64, ..WorkerConfig::default() };
     let engine = ServeEngine::start(vec![shard]).unwrap();
     let key = ShardKey::new("iris", spec);
 
@@ -181,7 +182,7 @@ fn flushed_batch_matches_per_sample_submission() {
     let mut shard = ShardConfig::new(&ds, mlp, spec);
     // Batch cap = n with a generous deadline: the burst below coalesces into
     // (at least one) multi-request batch.
-    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(50), sim_batch: n };
+    shard.worker = WorkerConfig { max_batch_wait: Duration::from_millis(50), sim_batch: n, ..WorkerConfig::default() };
     let engine = ServeEngine::start(vec![shard]).unwrap();
     let key = ShardKey::new("iris", spec);
     let rxs: Vec<_> = (0..n).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).unwrap()).collect();

@@ -1,0 +1,215 @@
+//! Saturation tests for the serving engine's overload behaviour (ISSUE 3):
+//! bounded admission (flooding a shard sheds with a typed error instead of
+//! growing memory or deadlocking), exact shed/expired/served accounting,
+//! deadline expiry without compute, shutdown answering every accepted
+//! request, and least-loaded two-choice routing around a jammed worker.
+
+use std::time::Duration;
+
+use deep_positron::accel::Mlp;
+use deep_positron::coordinator::experiments::train_model;
+use deep_positron::datasets::{self, Dataset, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, WorkerConfig};
+
+fn iris() -> (Dataset, Mlp) {
+    let ds = datasets::load("iris", 3, Scale::Small);
+    let mlp = train_model(&ds, 3);
+    (ds, mlp)
+}
+
+/// A shard whose worker coalesces for `wait` with an effectively unbounded
+/// batch cap, so queued requests sit (and count against `max_queue`) until
+/// the anchored window expires — overload behaviour becomes deterministic.
+fn slow_shard(ds: &Dataset, mlp: Mlp, workers: usize, max_queue: usize, wait: Duration) -> ShardConfig {
+    let mut shard = ShardConfig::new(ds, mlp, FormatSpec::parse("posit8es1").unwrap()).with_workers(workers);
+    shard.worker = WorkerConfig { max_batch_wait: wait, sim_batch: 4096, max_queue };
+    shard
+}
+
+#[test]
+fn flood_sheds_with_typed_error_and_shutdown_answers_every_accepted_request() {
+    let (ds, mlp) = iris();
+    let max_queue = 8;
+    let total = 40;
+    let shard = slow_shard(&ds, mlp, 1, max_queue, Duration::from_secs(2));
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..total {
+        match engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Overloaded { shard, depth }) => {
+                assert_eq!(depth, max_queue, "shed must report the saturated depth");
+                assert_eq!(shard, "iris/posit8es1");
+                shed += 1;
+            }
+            Err(e) => panic!("flood must shed, not fail with {e}"),
+        }
+    }
+    // The queue is bounded — exactly max_queue admitted, the flood shed,
+    // nothing queued beyond the bound (no unbounded memory, no deadlock).
+    assert_eq!(accepted.len(), max_queue, "exactly max_queue submissions fit");
+    assert_eq!(shed, total - max_queue);
+    let live = engine.shard_metrics(&key).expect("shard exists");
+    assert!(live.queue_depths.iter().all(|&d| d <= max_queue), "depth leak: {:?}", live.queue_depths);
+    assert_eq!(live.shed, shed);
+
+    // Shutdown before consuming a single reply: every accepted request must
+    // still be answered.
+    let metrics = engine.shutdown();
+    let m = &metrics.shards[0];
+    assert_eq!(m.served, max_queue);
+    assert_eq!(m.shed, shed);
+    assert_eq!(m.expired, 0);
+    assert_eq!(m.submissions(), total, "served + shed + expired must account for every submission");
+    assert_eq!(m.queue_depths, vec![0], "shutdown drains the queue");
+    for rx in accepted {
+        rx.recv().expect("accepted request must be answered before shutdown completes");
+    }
+}
+
+#[test]
+fn queue_slots_free_after_flush_and_serving_recovers() {
+    let (ds, mlp) = iris();
+    let max_queue = 4;
+    let shard = slow_shard(&ds, mlp, 1, max_queue, Duration::from_millis(100));
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..12 {
+        match engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(shed > 0, "12 instant submissions over a 4-deep queue must shed");
+    // The anchored window flushes the accepted batch without any shutdown;
+    // replies arrive and the queue drains…
+    for rx in &accepted {
+        rx.recv().expect("bounded queue must still serve accepted requests");
+    }
+    // …so the engine accepts traffic again after overload passes.
+    let rx = engine.submit(&key, ds.test_row(0).to_vec()).expect("queue slot must be free after flush");
+    rx.recv().expect("post-overload request is served");
+    let metrics = engine.shutdown();
+    let m = &metrics.shards[0];
+    assert_eq!(m.served, accepted.len() + 1);
+    assert_eq!(m.shed, shed);
+    assert_eq!(m.submissions(), 13);
+}
+
+#[test]
+fn expired_deadline_requests_get_no_compute() {
+    let (ds, mlp) = iris();
+    let shard = slow_shard(&ds, mlp, 1, 1024, Duration::from_millis(200));
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+
+    // Interleave hopeless requests (zero latency budget: expired by any
+    // flush) with normal ones.
+    let mut doomed = Vec::new();
+    let mut healthy = Vec::new();
+    for i in 0..10 {
+        let x = ds.test_row(i % ds.test_len()).to_vec();
+        if i % 2 == 0 {
+            doomed.push(engine.submit_with_deadline(&key, x, Duration::ZERO).unwrap());
+        } else {
+            healthy.push(engine.submit(&key, x).unwrap());
+        }
+    }
+    for rx in healthy {
+        rx.recv().expect("no-deadline requests must be served normally");
+    }
+    for rx in doomed {
+        rx.recv().expect_err("expired request must be dropped, not answered");
+    }
+    let metrics = engine.shutdown();
+    let m = &metrics.shards[0];
+    assert_eq!(m.served, 5);
+    assert_eq!(m.expired, 5);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.submissions(), 10);
+    // "No compute" is visible in the batch log: only served rows were ever
+    // executed.
+    assert_eq!(m.batch_sizes.iter().sum::<usize>(), 5, "expired rows must never reach an executed batch");
+    assert_eq!(m.latencies_s.len(), 5);
+}
+
+#[test]
+fn least_loaded_two_choice_routing_beats_blind_round_robin_on_skew() {
+    let (ds, mlp) = iris();
+    let shard = slow_shard(&ds, mlp, 2, 64, Duration::from_millis(700));
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+
+    // Jam one worker through affinity pinning (affinity bypasses the
+    // balancer on purpose): 20 requests pile onto a single queue.
+    let jam_n = 20;
+    let jammed: Vec<_> = (0..jam_n)
+        .map(|i| engine.submit_with_affinity(&key, 0xFEED, ds.test_row(i % ds.test_len()).to_vec()).unwrap())
+        .collect();
+    let depths = engine.queue_depths(&key).unwrap();
+    let jam = if depths[0] >= depths[1] { 0 } else { 1 };
+    let idle = 1 - jam;
+    assert_eq!(depths[jam], jam_n, "affinity must pile onto one worker: {depths:?}");
+    assert_eq!(depths[idle], 0);
+
+    // Plain submissions now choose between the two candidates by live queue
+    // depth: every one must dodge the jammed worker. Blind round-robin
+    // would have sent half (6 of 12) into the 20-deep queue.
+    let spread_n = 12;
+    let routed: Vec<_> =
+        (0..spread_n).map(|i| engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()).unwrap()).collect();
+    let depths = engine.queue_depths(&key).unwrap();
+    assert_eq!(depths[idle], spread_n, "least-loaded routing must fill the idle worker: {depths:?}");
+    assert_eq!(depths[jam], jam_n, "the jammed worker must attract nothing new: {depths:?}");
+
+    let metrics = engine.shutdown();
+    for rx in routed {
+        let reply = rx.recv().expect("routed request answered");
+        assert_eq!(reply.worker, idle, "every balanced request must land on the idle worker");
+    }
+    for rx in jammed {
+        rx.recv().expect("jammed requests are still answered eventually");
+    }
+    let m = &metrics.shards[0];
+    assert_eq!(m.per_worker[jam], jam_n);
+    assert_eq!(m.per_worker[idle], spread_n);
+    assert_eq!(m.served, jam_n + spread_n);
+}
+
+#[test]
+fn inconsistent_shard_configs_are_rejected_at_start() {
+    let (ds, mlp) = iris();
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+
+    let mut bad = ShardConfig::new(&ds, mlp.clone(), spec);
+    bad.num_features += 1;
+    match ServeEngine::start(vec![bad]).map(|_| ()) {
+        Err(ServeError::BadShard { shard, reason }) => {
+            assert_eq!(shard, "iris/posit8es1");
+            assert!(reason.contains("num_features"), "{reason}");
+        }
+        other => panic!("feature-dim mismatch must be rejected, got {other:?}"),
+    }
+
+    let mut bad = ShardConfig::new(&ds, mlp.clone(), spec);
+    bad.num_classes = 99;
+    match ServeEngine::start(vec![bad]).map(|_| ()) {
+        Err(ServeError::BadShard { reason, .. }) => assert!(reason.contains("num_classes"), "{reason}"),
+        other => panic!("class-count mismatch must be rejected, got {other:?}"),
+    }
+
+    let mut bad = ShardConfig::new(&ds, mlp, spec);
+    bad.worker.max_queue = 0;
+    match ServeEngine::start(vec![bad]).map(|_| ()) {
+        Err(ServeError::BadShard { reason, .. }) => assert!(reason.contains("max_queue"), "{reason}"),
+        other => panic!("zero queue bound must be rejected, got {other:?}"),
+    }
+}
