@@ -1,0 +1,61 @@
+//! Mixed-precision auto-tuning walkthrough (DESIGN.md §10): train iris and
+//! wdbc, search the per-layer format space under an accuracy budget, print
+//! the Pareto frontier, and stand up a serving shard straight from the
+//! tuned plan.
+//!
+//! The story in three acts per task:
+//!   1. TUNE  — hold accuracy within one point of the best uniform 8-bit
+//!      posit while minimizing the modeled network energy-delay product.
+//!   2. PLAN  — serialize the winning `TunePlan` and parse it back (this
+//!      text block is what a deployment would check in).
+//!   3. SERVE — start a `ServeEngine` shard from the plan: its workers
+//!      compile the heterogeneous execution plan, and the routing key is
+//!      the assignment's `+`-joined name.
+//!
+//! Run: cargo run --release --example autotune
+
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::serve::ServeEngine;
+use deep_positron::tune::{self, TuneConfig, TunePlan};
+
+fn main() -> anyhow::Result<()> {
+    for dataset in ["iris", "wdbc"] {
+        println!("==== {dataset} ====\n");
+        let ds = datasets::load(dataset, 7, Scale::Small);
+        println!("training the model (Rust substrate trainer)…");
+        let mlp = experiments::train_model(&ds, 7);
+
+        // Act 1: tune under the Cheetah-style budget.
+        let budget = tune::default_budget(&ds, &mlp, usize::MAX);
+        let report = tune::tune(&ds, &mlp, &TuneConfig::new(budget).with_beam(2));
+        println!("{}", report.render());
+
+        // Act 2: the plan round-trips through its serialized form.
+        let text = report.plan.to_text();
+        let parsed = TunePlan::parse(&text).expect("a plan we just emitted parses back");
+        assert_eq!(parsed.assignment, report.plan.assignment);
+        assert_eq!(parsed.cost, report.plan.cost, "cost recomputes identically from the assignment");
+
+        // Act 3: serve from the plan — workers compile the mixed plan.
+        let engine = ServeEngine::start(vec![parsed.shard_config(&ds, mlp.clone()).with_workers(2)])
+            .map_err(|e| anyhow::anyhow!("serve: {e}"))?;
+        let key = engine.shard_keys().into_iter().next().expect("one shard");
+        println!("serving shard {} from the tuned plan…", key.label());
+        let n = ds.test_len().min(64);
+        let rxs: Vec<_> = (0..n).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).expect("admitted")).collect();
+        let mut correct = 0usize;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            if rx.recv()?.class == ds.y_test[i] as usize {
+                correct += 1;
+            }
+        }
+        println!(
+            "served {n} requests at {:.1}% accuracy (tuner measured {:.1}%)",
+            correct as f64 / n as f64 * 100.0,
+            report.plan.accuracy * 100.0
+        );
+        println!("{}", engine.shutdown().render());
+    }
+    Ok(())
+}

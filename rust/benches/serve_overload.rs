@@ -41,6 +41,7 @@ fn shard(mlp: &Mlp, max_queue: usize) -> ShardConfig {
         num_classes: CLASSES,
         mlp: mlp.clone(),
         spec: FormatSpec::Posit { n: 8, es: 1 },
+        mixed: None,
         engine: Engine::Sim,
         workers: 1,
         worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16, max_queue },

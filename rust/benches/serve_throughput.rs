@@ -32,6 +32,7 @@ fn run(workers: usize, mlp: &Mlp) -> ShardMetrics {
         num_classes: CLASSES,
         mlp: mlp.clone(),
         spec,
+        mixed: None,
         engine: Engine::Sim,
         workers,
         worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16, ..WorkerConfig::default() },

@@ -1,0 +1,69 @@
+//! Tuner search throughput and frontier quality (DESIGN.md §10): runs the
+//! full greedy/beam descent on iris and wdbc under the acceptance budget
+//! (accuracy within 1 pt of the best uniform 8-bit posit, EDP minimized)
+//! and reports assignments-evaluated-per-second plus the frontier size.
+//!
+//! Asserted claims: the frontier is non-empty and contains no dominated
+//! point, the descent converges to a feasible plan, and the tuned mixed
+//! assignment undercuts the uniform 8-bit posit's modeled network EDP
+//! strictly while staying within one accuracy point of it.
+
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::tune::{self, TuneConfig};
+use deep_positron::util::stats::{mean, BenchTimer};
+
+fn main() {
+    for dataset in ["iris", "wdbc"] {
+        let ds = datasets::load(dataset, 7, Scale::Small);
+        let mlp = experiments::train_model(&ds, 7);
+        let budget = tune::default_budget(&ds, &mlp, usize::MAX);
+        let mut timer = BenchTimer::new(&format!("tune/{dataset} beam=2"));
+        let report = timer.sample(|| tune::tune(&ds, &mlp, &TuneConfig::new(budget).with_beam(2)));
+        let secs = mean(timer.samples());
+        println!("{}", timer.report());
+        println!(
+            "  -> {dataset}: {} assignments in {:.2}s = {:.0} assignments/s, {} rounds, frontier size {}",
+            report.evaluated,
+            secs,
+            report.evaluated as f64 / secs,
+            report.rounds,
+            report.frontier.len()
+        );
+        println!(
+            "  -> tuned {} @ {:.2}% acc, EDP {:.3e} (uniform posit8 {}: {:.2}%, EDP {:.3e})",
+            report.plan.assignment.name(),
+            report.plan.accuracy * 100.0,
+            report.plan.cost.edp_pj_ns,
+            report.reference.mixed.name(),
+            report.reference.accuracy * 100.0,
+            report.reference.cost.edp_pj_ns,
+        );
+
+        assert!(!report.frontier.is_empty(), "{dataset}: empty Pareto frontier");
+        for a in &report.frontier {
+            for b in &report.frontier {
+                assert!(
+                    !a.dominates(b),
+                    "{dataset}: frontier point {} dominates {}",
+                    a.mixed.name(),
+                    b.mixed.name()
+                );
+            }
+        }
+        assert!(report.plan.feasible, "{dataset}: default budget must be attainable");
+        assert!(
+            report.plan.accuracy >= report.reference.accuracy - 0.01 - 1e-12,
+            "{dataset}: tuned accuracy {} fell more than 1pt below uniform posit8 {}",
+            report.plan.accuracy,
+            report.reference.accuracy
+        );
+        assert!(
+            report.plan.cost.edp_pj_ns < report.reference.cost.edp_pj_ns,
+            "{dataset}: tuned EDP {} not strictly below uniform posit8 {}",
+            report.plan.cost.edp_pj_ns,
+            report.reference.cost.edp_pj_ns
+        );
+    }
+    println!("\ntuned mixed plans undercut uniform posit8 EDP within 1 accuracy pt on iris + wdbc — OK");
+}

@@ -59,6 +59,14 @@ impl Mlp {
         d
     }
 
+    /// Largest layer fan-in — the Eq. (2) dot-product length `k` a deployed
+    /// accelerator must size its accumulator for. The hardware sweeps and
+    /// the per-layer tuner costing ([`crate::tune`]) derive `k` from this
+    /// instead of the blanket MNIST-sized [`crate::hw::DEFAULT_K`].
+    pub fn max_fan_in(&self) -> usize {
+        self.layers.iter().map(|l| l.in_dim).max().expect("mlp has layers")
+    }
+
     /// Forward pass of one sample; returns the pre-softmax logits.
     pub fn forward(&self, x: &[f64]) -> Vec<f64> {
         let mut act = x.to_vec();
@@ -276,6 +284,7 @@ mod tests {
         let mlp = Mlp::new(&[4, 10, 3], &mut rng);
         assert_eq!(mlp.forward(&[0.1, -0.2, 0.3, 0.0]).len(), 3);
         assert_eq!(mlp.dims(), vec![4, 10, 3]);
+        assert_eq!(mlp.max_fan_in(), 10);
     }
 
     #[test]

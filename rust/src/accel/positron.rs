@@ -16,6 +16,14 @@
 //! [`DeepPositron::forward_codes_with`] is the batch-of-one special case and
 //! is bit-identical to the old per-sample EMAC loop (asserted by
 //! `tests/batch_parity.rs` against an independent scalar oracle).
+//!
+//! Plans are **heterogeneous** (DESIGN.md §10): [`DeepPositron::compile_mixed`]
+//! accepts a per-layer [`MixedSpec`], each layer carrying its own shared
+//! `Quantizer`/`DecodeLut` pair — the layer-wise EMAC banks of Deep Positron,
+//! with the inter-layer recode folded into each layer's single terminal round
+//! (the quire value rounds once, directly into the next layer's format).
+//! The uniform [`DeepPositron::compile`] is the all-layers-equal case and
+//! stays bit-identical to the pre-mixed accelerator.
 
 use std::sync::Arc;
 
@@ -23,7 +31,7 @@ use super::mlp::Mlp;
 use crate::datasets::Dataset;
 use crate::formats::emac::{DecodeLut, DecodedOp};
 use crate::formats::ops::ScalarAlu;
-use crate::formats::{Exact, FormatSpec, Quantizer};
+use crate::formats::{Exact, FormatSpec, MixedSpec, Quantizer};
 
 /// Test-set evaluation batch size: large enough to amortize per-batch
 /// setup, small enough to keep the feature-major activation blocks
@@ -45,12 +53,31 @@ pub enum Datapath {
 
 /// One layer of the compiled execution plan (DESIGN.md §8): weight codes
 /// pre-decoded into flat EMAC operands and biases pre-shifted into quire
-/// units, ready for the batched kernel.
+/// units, ready for the batched kernel. Each layer carries its own shared
+/// table set — the heterogeneous (mixed-precision) case of DESIGN.md §10;
+/// uniform networks simply hold `Arc` clones of one table set everywhere.
 struct LayerPlan {
     /// Fan-in of the layer.
     in_dim: usize,
     /// Fan-out of the layer.
     out_dim: usize,
+    /// Decoded-operand table of the layer's own format: decodes both the
+    /// pre-quantized weights and the incoming activation codes (which the
+    /// previous layer's terminal round already emitted in this format).
+    lut: Arc<DecodeLut>,
+    /// The layer format's quantization tables (weight/bias quantization;
+    /// the inexact-MAC ablation's per-step rounder).
+    quantizer: Arc<Quantizer>,
+    /// Terminal rounder: the exact quire value rounds ONCE, directly into
+    /// the NEXT layer's format — the recode-at-boundary of DESIGN.md §10.
+    /// (The last layer rounds into its own format; uniform networks recode
+    /// into the same format, reducing bit-for-bit to the single-format
+    /// terminal round.)
+    out_q: Arc<Quantizer>,
+    /// Zero code of the layer format (inexact-MAC accumulator seed).
+    zero: u16,
+    /// Zero code of the OUTPUT format (ReLU clamp target).
+    out_zero: u16,
     /// Pre-decoded weight operands, row-major `[out][in]`.
     w_ops: Vec<DecodedOp>,
     /// Per-output bias, pre-shifted into quire units (`2^lsb_exp`).
@@ -59,31 +86,30 @@ struct LayerPlan {
     relu: bool,
 }
 
-/// A network instantiated on Deep Positron with one numeric format.
+/// A network instantiated on Deep Positron with one numeric format per
+/// layer (a uniform network is the all-layers-equal special case).
 pub struct DeepPositron {
-    spec: FormatSpec,
-    /// Shared, read-only quantization tables (one build per format per
-    /// process — [`Quantizer::shared`]).
+    /// The per-layer format assignment this instance was compiled for.
+    mixed: MixedSpec,
+    /// Input-layer quantization tables (requests quantize into the first
+    /// layer's format), shared process-wide ([`Quantizer::shared`]).
     quantizer: Arc<Quantizer>,
-    /// Shared decoded-operand table (one build per format per process —
-    /// [`DecodeLut::shared`]); the batched kernel's activation lookup.
-    lut: Arc<DecodeLut>,
     /// Per-layer weight codes, row-major `[out][in]` (consumed by the
     /// inexact-MAC ablation and the dequantized accessors).
     weights: Vec<Vec<u16>>,
     /// Per-layer bias values, kept exact (the accelerator feeds biases into
-    /// the quire directly, after their own quantization to the format).
+    /// the quire directly, after their own quantization to the layer
+    /// format).
     biases: Vec<Vec<Exact>>,
     /// The compiled execution plan, one entry per layer.
     plan: Vec<LayerPlan>,
-    /// Code of value 0.0 (ReLU clamp target, inexact-MAC accumulator seed).
-    zero_code: u16,
     dims: Vec<usize>,
 }
 
 impl DeepPositron {
-    /// Quantize a trained f64 network onto the accelerator, drawing the
-    /// quantization tables from the process-wide shared cache.
+    /// Quantize a trained f64 network onto the accelerator with one format
+    /// everywhere, drawing the quantization tables from the process-wide
+    /// shared cache.
     pub fn compile(mlp: &Mlp, spec: FormatSpec) -> DeepPositron {
         DeepPositron::compile_with(mlp, spec, Quantizer::shared(spec))
     }
@@ -92,17 +118,43 @@ impl DeepPositron {
     /// point for serving workers (or tests) that manage table sharing
     /// themselves. `quantizer` must have been built for `spec`.
     pub fn compile_with(mlp: &Mlp, spec: FormatSpec, quantizer: Arc<Quantizer>) -> DeepPositron {
-        let lut = DecodeLut::shared(spec);
+        let mixed = MixedSpec::uniform(spec, mlp.layers.len());
+        DeepPositron::build(mlp, mixed, &|s| {
+            if s == spec {
+                Arc::clone(&quantizer)
+            } else {
+                Quantizer::shared(s)
+            }
+        })
+    }
+
+    /// Quantize a trained f64 network onto the accelerator with a per-layer
+    /// format assignment (DESIGN.md §10). Layer `i`'s weights, incoming
+    /// activations, and quire live in `mixed.layers()[i]`; each layer's
+    /// terminal round recodes directly into layer `i + 1`'s format. Panics
+    /// unless the assignment has exactly one format per dense layer.
+    pub fn compile_mixed(mlp: &Mlp, mixed: MixedSpec) -> DeepPositron {
+        DeepPositron::build(mlp, mixed, &Quantizer::shared)
+    }
+
+    fn build(mlp: &Mlp, mixed: MixedSpec, tables: &dyn Fn(FormatSpec) -> Arc<Quantizer>) -> DeepPositron {
+        assert_eq!(mixed.len(), mlp.layers.len(), "mixed assignment must carry exactly one format per layer");
         let dims = mlp.dims();
-        // Eq. (2) width check, once at compile time (it used to run inside
-        // every per-sample Emac construction): widest dot product + 1 bias.
-        lut.assert_quire_fits(dims.iter().max().unwrap() + 1);
+        let specs = mixed.layers();
+        let last = mlp.layers.len() - 1;
         let mut weights = Vec::with_capacity(mlp.layers.len());
         let mut biases = Vec::with_capacity(mlp.layers.len());
-        for layer in &mlp.layers {
+        let mut plan = Vec::with_capacity(mlp.layers.len());
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let spec = specs[li];
+            let quantizer = tables(spec);
+            let lut = DecodeLut::shared(spec);
+            // Eq. (2) width check, once at compile time per layer (it used
+            // to run inside every per-sample Emac construction): this
+            // layer's dot-product length + 1 bias term.
+            lut.assert_quire_fits(dims[li] + 1);
             let (codes, _) = quantizer.quantize_slice(&layer.w);
-            weights.push(codes);
-            let bias_exact = layer
+            let bias_exact: Vec<Exact> = layer
                 .b
                 .iter()
                 .map(|&b| {
@@ -110,43 +162,59 @@ impl DeepPositron {
                     quantizer.decode(code).unwrap_or(Exact::ZERO)
                 })
                 .collect();
+            let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
+            debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
+            let out_spec = specs.get(li + 1).copied().unwrap_or(spec);
+            let out_q = if out_spec == spec { Arc::clone(&quantizer) } else { tables(out_spec) };
+            plan.push(LayerPlan {
+                in_dim: dims[li],
+                out_dim: dims[li + 1],
+                zero: quantizer.zero_code(),
+                out_zero: out_q.zero_code(),
+                bias_q: bias_exact.iter().map(|b| lut.to_quire(b)).collect(),
+                relu: li < last,
+                w_ops,
+                lut,
+                out_q,
+                quantizer,
+            });
+            weights.push(codes);
             biases.push(bias_exact);
         }
-        let last = weights.len() - 1;
-        let plan = weights
-            .iter()
-            .zip(&biases)
-            .enumerate()
-            .map(|(li, (codes, bias))| {
-                let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
-                debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
-                LayerPlan {
-                    in_dim: dims[li],
-                    out_dim: dims[li + 1],
-                    w_ops,
-                    bias_q: bias.iter().map(|b| lut.to_quire(b)).collect(),
-                    relu: li < last,
-                }
-            })
-            .collect();
-        let zero_code = quantizer.zero_code();
-        DeepPositron { spec, quantizer, lut, weights, biases, plan, zero_code, dims }
+        let quantizer = Arc::clone(&plan[0].quantizer);
+        DeepPositron { mixed, quantizer, weights, biases, plan, dims }
     }
 
-    /// The format this instance was compiled for.
+    /// The network's input-layer format. Uniform networks (compiled via
+    /// [`DeepPositron::compile`]) carry this format everywhere; the full
+    /// per-layer assignment is [`DeepPositron::mixed`].
     pub fn spec(&self) -> FormatSpec {
-        self.spec
+        self.mixed.layers()[0]
     }
 
-    /// The (shared) quantization tables backing this instance.
+    /// The per-layer format assignment this instance was compiled for.
+    pub fn mixed(&self) -> &MixedSpec {
+        &self.mixed
+    }
+
+    /// The (shared) input-layer quantization tables backing this instance —
+    /// the tables requests quantize through. Mixed networks carry further
+    /// per-layer tables inside their execution plan.
     pub fn quantizer(&self) -> &Quantizer {
         &self.quantizer
+    }
+
+    /// The quantizer of the network's OUTPUT codes (the last layer's
+    /// terminal-round target — equal to [`DeepPositron::quantizer`] for
+    /// uniform networks).
+    fn output_quantizer(&self) -> &Quantizer {
+        &self.plan.last().expect("plan has layers").out_q
     }
 
     /// The dequantized weight values per layer (what the XLA fast path
     /// consumes as its `weights` input).
     pub fn dequantized_weights(&self) -> Vec<Vec<f64>> {
-        self.weights.iter().map(|codes| self.quantizer.dequantize_slice(codes)).collect()
+        self.plan.iter().zip(&self.weights).map(|(lp, codes)| lp.quantizer.dequantize_slice(codes)).collect()
     }
 
     /// The dequantized bias values per layer (fast-path input).
@@ -209,17 +277,19 @@ impl DeepPositron {
 
     /// The batched EMAC kernel: per output neuron, seed every sample's quire
     /// with the pre-shifted bias, stream the pre-decoded weight row across
-    /// the batch, and round once at the terminal stage.
+    /// the batch, and round once at the terminal stage — directly into the
+    /// next layer's format (the §10 boundary recode; a no-op change of
+    /// target for uniform networks).
     fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>) -> Vec<Vec<u16>> {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
-        let lsb = self.lut.lsb_exp();
-        let ops = self.lut.ops();
         let mut act = vec![0u16; b * max_dim];
         let mut next = vec![0u16; b * max_dim];
         let mut quires = vec![0i128; b];
         self.quantize_block(rows, &mut act);
         for lp in &self.plan {
+            let lsb = lp.lut.lsb_exp();
+            let ops = lp.lut.ops();
             for o in 0..lp.out_dim {
                 let wrow = &lp.w_ops[o * lp.in_dim..(o + 1) * lp.in_dim];
                 quires.fill(lp.bias_q[o]);
@@ -254,10 +324,11 @@ impl DeepPositron {
                         q = (q << sh) >> sh;
                     }
                     *out_code = if lp.relu && q < 0 {
-                        // ReLU(x) = max(x, 0): negative sums clamp to zero.
-                        self.zero_code
+                        // ReLU(x) = max(x, 0): negative sums clamp to the
+                        // output format's zero code.
+                        lp.out_zero
                     } else {
-                        self.quantizer.quantize_exact(&Exact::new(q < 0, q.unsigned_abs(), lsb)).0
+                        lp.out_q.quantize_exact(&Exact::new(q < 0, q.unsigned_abs(), lsb)).0
                     };
                 }
             }
@@ -268,34 +339,33 @@ impl DeepPositron {
 
     /// The batched conventional-MAC ablation: round after every multiply and
     /// every add, preserving the scalar per-sample operation order exactly.
+    /// Under a mixed assignment each layer's ALU rounds in that layer's
+    /// format and the finished sum recodes into the next layer's format —
+    /// identity for uniform networks (quantize of a representable value).
     fn batch_inexact(&self, rows: &[&[f64]]) -> Vec<Vec<u16>> {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
-        let alu = ScalarAlu::new(&self.quantizer);
         let mut act = vec![0u16; b * max_dim];
         let mut next = vec![0u16; b * max_dim];
         let mut accs = vec![0u16; b];
         self.quantize_block(rows, &mut act);
-        let last = self.weights.len() - 1;
-        for (li, (codes, biases)) in self.weights.iter().zip(&self.biases).enumerate() {
-            let in_dim = self.dims[li];
-            let out_dim = self.dims[li + 1];
-            let relu = li < last;
-            for o in 0..out_dim {
-                let wrow = &codes[o * in_dim..(o + 1) * in_dim];
-                accs.fill(self.zero_code);
+        for (lp, (codes, biases)) in self.plan.iter().zip(self.weights.iter().zip(&self.biases)) {
+            let alu = ScalarAlu::new(&lp.quantizer);
+            for o in 0..lp.out_dim {
+                let wrow = &codes[o * lp.in_dim..(o + 1) * lp.in_dim];
+                accs.fill(lp.zero);
                 for (i, &wc) in wrow.iter().enumerate() {
                     let acol = &act[i * b..(i + 1) * b];
                     for (s, &ac) in acol.iter().enumerate() {
                         accs[s] = alu.add(accs[s], alu.mul(wc, ac));
                     }
                 }
-                let (bcode, _) = self.quantizer.quantize_exact(&biases[o]);
+                let (bcode, _) = lp.quantizer.quantize_exact(&biases[o]);
                 let out = &mut next[o * b..(o + 1) * b];
                 for (s, out_code) in out.iter_mut().enumerate() {
                     let acc = alu.add(accs[s], bcode);
-                    let v = self.quantizer.decode(acc).expect("rounded code decodes");
-                    *out_code = if relu && v.sign { self.zero_code } else { acc };
+                    let v = lp.quantizer.decode(acc).expect("rounded code decodes");
+                    *out_code = if lp.relu && v.sign { lp.out_zero } else { lp.out_q.quantize_exact(&v).0 };
                 }
             }
             std::mem::swap(&mut act, &mut next);
@@ -303,13 +373,15 @@ impl DeepPositron {
         self.gather_rows(&act, b)
     }
 
-    /// Argmax over the decoded values of an output-code row. Returns `None`
-    /// when no code decodes to a real value (an all-NaR row) — callers must
-    /// not mistake an undecodable row for class 0.
+    /// Argmax over the decoded values of an output-code row (decoded through
+    /// the last layer's output format). Returns `None` when no code decodes
+    /// to a real value (an all-NaR row) — callers must not mistake an
+    /// undecodable row for class 0.
     pub fn decoded_argmax(&self, codes: &[u16]) -> Option<usize> {
+        let out_q = self.output_quantizer();
         let mut best: Option<(usize, f64)> = None;
         for (i, &c) in codes.iter().enumerate() {
-            if let Some(e) = self.quantizer.decode(c) {
+            if let Some(e) = out_q.decode(c) {
                 let v = e.to_f64();
                 if best.map_or(true, |(_, bv)| v > bv) {
                     best = Some((i, v));
@@ -337,14 +409,17 @@ impl DeepPositron {
             .collect()
     }
 
-    /// Test accuracy under a selected datapath, evaluated through
-    /// [`DeepPositron::forward_batch`] in chunks of [`EVAL_BATCH`] samples.
-    /// Undecodable output rows count as wrong, never as class 0.
-    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
+    /// Accuracy over the first `rows.min(test_len)` test rows under a
+    /// selected datapath — the capped batched evaluator the auto-tuner
+    /// ([`crate::tune`]) scores candidate assignments with. Chunks of
+    /// [`EVAL_BATCH`] samples per plan walk; undecodable output rows count
+    /// as wrong, never as class 0.
+    pub fn accuracy_on(&self, ds: &Dataset, mode: Datapath, rows: usize) -> f64 {
+        let total = ds.test_len().min(rows.max(1));
         let mut correct = 0usize;
         let mut i = 0;
-        while i < ds.test_len() {
-            let take = EVAL_BATCH.min(ds.test_len() - i);
+        while i < total {
+            let take = EVAL_BATCH.min(total - i);
             let rows: Vec<&[f64]> = (i..i + take).map(|j| ds.test_row(j)).collect();
             for (j, out) in self.forward_batch(&rows, mode).iter().enumerate() {
                 if self.decoded_argmax(out) == Some(ds.y_test[i + j] as usize) {
@@ -353,7 +428,14 @@ impl DeepPositron {
             }
             i += take;
         }
-        correct as f64 / ds.test_len() as f64
+        correct as f64 / total as f64
+    }
+
+    /// Test accuracy under a selected datapath, evaluated through
+    /// [`DeepPositron::forward_batch`] over the whole test split
+    /// (the uncapped case of [`DeepPositron::accuracy_on`]).
+    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
+        self.accuracy_on(ds, mode, usize::MAX)
     }
 
     /// Test-set accuracy on the EMAC datapath (batched evaluation).
@@ -367,19 +449,18 @@ impl DeepPositron {
     /// quires), this matches [`Self::forward_codes`] bit for bit.
     pub fn forward_dequantized(&self, x: &[f64]) -> Vec<f64> {
         let (_, mut act) = self.quantizer.quantize_slice(x);
-        let last = self.weights.len() - 1;
-        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
-            let in_dim = self.dims[li];
-            let out_dim = self.dims[li + 1];
-            let wv = self.quantizer.dequantize_slice(w);
-            let mut next = Vec::with_capacity(out_dim);
-            for o in 0..out_dim {
+        for (lp, (w, b)) in self.plan.iter().zip(self.weights.iter().zip(&self.biases)) {
+            let wv = lp.quantizer.dequantize_slice(w);
+            let mut next = Vec::with_capacity(lp.out_dim);
+            for o in 0..lp.out_dim {
                 let mut acc = b[o].to_f64();
-                for i in 0..in_dim {
-                    acc += wv[o * in_dim + i] * act[i];
+                for i in 0..lp.in_dim {
+                    acc += wv[o * lp.in_dim + i] * act[i];
                 }
-                let (_, rounded) = self.quantizer.quantize_f64(acc);
-                next.push(if li < last { rounded.max(0.0) } else { rounded });
+                // Terminal round into the output (next-layer) format — same
+                // target the EMAC's boundary recode rounds into.
+                let (_, rounded) = lp.out_q.quantize_f64(acc);
+                next.push(if lp.relu { rounded.max(0.0) } else { rounded });
             }
             act = next;
         }
@@ -481,6 +562,41 @@ mod tests {
         let posit = best("posit");
         let fixed = best("fixed");
         assert!(posit >= fixed, "posit {posit} < fixed {fixed}");
+    }
+
+    #[test]
+    fn mixed_assignment_compiles_and_tracks_uniform() {
+        // The exhaustive uniform-parity sweep lives in `tests/tune.rs`; this
+        // is the in-crate smoke test: a genuinely mixed plan runs end to
+        // end, recodes at every boundary, and stays in the accuracy
+        // ballpark of its widest uniform member.
+        let (mlp, ds) = trained_iris();
+        let mixed = MixedSpec::new(vec![
+            FormatSpec::Posit { n: 8, es: 1 },
+            FormatSpec::Float { n: 7, we: 3 },
+            FormatSpec::Posit { n: 6, es: 1 },
+        ]);
+        let dp = DeepPositron::compile_mixed(&mlp, mixed.clone());
+        assert_eq!(dp.mixed(), &mixed);
+        assert_eq!(dp.spec(), FormatSpec::Posit { n: 8, es: 1 });
+        let acc = dp.accuracy(&ds);
+        let acc8 = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 }).accuracy(&ds);
+        assert!(acc >= acc8 - 0.2, "mixed plan collapsed: {acc} vs uniform {acc8}");
+        // Scalar == batched on the mixed plan too (batch-of-one wrapper).
+        let rows: Vec<&[f64]> = (0..6).map(|i| ds.test_row(i)).collect();
+        for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(32)] {
+            let batched = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one format per layer")]
+    fn mixed_assignment_must_match_layer_count() {
+        let (mlp, _) = trained_iris();
+        let _ = DeepPositron::compile_mixed(&mlp, MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 2));
     }
 
     #[test]

@@ -103,6 +103,17 @@ pub fn eval_xla(rt: &Runtime, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Resu
     Ok(correct as f64 / ds.test_len() as f64)
 }
 
+/// Eq. (2) accumulator-sizing `k` for a set of trained tasks: the largest
+/// layer fan-in any of the networks presents — the dot-product length the
+/// deployed EMACs must actually absorb. The sweeps used to pass
+/// [`hw::DEFAULT_K`] (MNIST's 784) for every task, which sized the Fig. 6/7
+/// hardware axes of 4–30-feature tabular tasks for an accumulator they
+/// would never provision; the tuner ([`crate::tune`]) applies the same
+/// fan-in rule per layer.
+pub fn eq2_k<'a>(mlps: impl Iterator<Item = &'a Mlp>) -> usize {
+    mlps.map(Mlp::max_fan_in).max().unwrap_or(hw::DEFAULT_K)
+}
+
 /// Evaluate with the selected engine.
 pub fn eval(engine: Engine, rt: Option<&Runtime>, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Result<f64> {
     match engine {
@@ -212,6 +223,9 @@ pub fn tradeoff_sweep(
         let baseline = mlp.accuracy(&ds);
         tasks.push((ds, mlp, baseline));
     }
+    // Size the Eq. (2) accumulator for the largest fan-in among the tasks
+    // actually swept, not a blanket MNIST-sized k.
+    let k = eq2_k(tasks.iter().map(|(_, mlp, _)| mlp));
     let mut points = Vec::new();
     for n in 5..=8u32 {
         for family in ["posit", "float", "fixed"] {
@@ -239,7 +253,7 @@ pub fn tradeoff_sweep(
                 .iter()
                 .max_by_key(|s| chosen.iter().filter(|c| c == s).count())
                 .unwrap();
-            let synth = hw::synthesize(spec, hw::DEFAULT_K);
+            let synth = hw::synthesize(spec, k);
             points.push(TradeoffPoint {
                 spec,
                 avg_degradation: deg,
@@ -307,7 +321,8 @@ pub fn es_study(engine: Engine, rt: Option<&Runtime>, scale: Scale, seed: u64, t
     for a in avg_acc.iter_mut() {
         *a /= count as f64;
     }
-    let (r1, r2) = hw::es_edp_ratios(8, hw::DEFAULT_K);
+    // EDP ratios at the accumulator size the swept tasks actually need.
+    let (r1, r2) = hw::es_edp_ratios(8, eq2_k(tasks.iter().map(|(_, mlp)| mlp)));
     Ok(EsStudy { avg_acc, edp_ratio: [1.0, r1, r2] })
 }
 
@@ -349,6 +364,16 @@ mod tests {
             let at = |n: u32| cells.iter().find(|c| c.layer == layer && c.n == n).unwrap().mse_posit;
             assert!(at(8) < at(5), "{layer}: posit MSE not shrinking with bits");
         }
+    }
+
+    #[test]
+    fn eq2_k_uses_task_fan_in_not_mnist() {
+        let ds = datasets::load("iris", 11, Scale::Small);
+        let mlp = train_model(&ds, 11);
+        // iris: 4 → 10 → 8 → 3, so the widest dot product is 10 — not 784.
+        assert_eq!(eq2_k([&mlp].into_iter()), 10);
+        // No tasks ⇒ fall back to the paper-wide default.
+        assert_eq!(eq2_k(std::iter::empty()), hw::DEFAULT_K);
     }
 
     #[test]

@@ -223,6 +223,96 @@ impl std::fmt::Display for FormatSpec {
     }
 }
 
+/// A per-layer format assignment — the unit the mixed-precision auto-tuner
+/// (`crate::tune`) searches over and the heterogeneous accelerator compiles
+/// (DESIGN.md §10).
+///
+/// Invariants: one [`FormatSpec`] per dense layer (never empty); layer `i`'s
+/// weights, incoming activation codes, and quire all live in `layers()[i]`;
+/// the *recode at the layer boundary* is layer `i`'s terminal round, which
+/// rounds the exact quire value once, directly into layer `i + 1`'s format
+/// (the last layer rounds into its own format). A uniform assignment is
+/// therefore bit-identical to the classic single-format accelerator — the
+/// recode target equals the layer format everywhere.
+///
+/// ```
+/// use deep_positron::formats::{FormatSpec, MixedSpec};
+///
+/// let m = MixedSpec::parse("posit8es1+float6we3+fixed5q3").unwrap();
+/// assert_eq!(m.len(), 3);
+/// assert_eq!(m.name(), "posit8es1+float6we3+fixed5q3");
+/// assert_eq!(m.is_uniform(), None);
+/// let u = MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3);
+/// assert_eq!(u.is_uniform(), Some(FormatSpec::Posit { n: 8, es: 1 }));
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MixedSpec {
+    layers: Vec<FormatSpec>,
+}
+
+impl MixedSpec {
+    /// Assignment from an explicit per-layer list (panics if empty).
+    pub fn new(layers: Vec<FormatSpec>) -> MixedSpec {
+        assert!(!layers.is_empty(), "a MixedSpec needs at least one layer");
+        MixedSpec { layers }
+    }
+
+    /// The all-layers-equal assignment — the classic uniform accelerator.
+    pub fn uniform(spec: FormatSpec, num_layers: usize) -> MixedSpec {
+        MixedSpec::new(vec![spec; num_layers])
+    }
+
+    /// The per-layer formats, input layer first.
+    pub fn layers(&self) -> &[FormatSpec] {
+        &self.layers
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Always false (the constructor rejects empty assignments).
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// `Some(spec)` when every layer carries the same format.
+    pub fn is_uniform(&self) -> Option<FormatSpec> {
+        let first = self.layers[0];
+        self.layers.iter().all(|&s| s == first).then_some(first)
+    }
+
+    /// A copy with layer `i` reassigned — the tuner's per-layer search move.
+    pub fn with_layer(&self, i: usize, spec: FormatSpec) -> MixedSpec {
+        let mut layers = self.layers.clone();
+        layers[i] = spec;
+        MixedSpec { layers }
+    }
+
+    /// Machine name: the per-layer names joined with `+`, e.g.
+    /// `posit8es1+float6we3+fixed5q3` (parseable by [`MixedSpec::parse`];
+    /// doubles as the serving engine's routing-key label for tuned shards).
+    pub fn name(&self) -> String {
+        self.layers.iter().map(FormatSpec::name).collect::<Vec<_>>().join("+")
+    }
+
+    /// Parse a `+`-joined assignment name (inverse of [`MixedSpec::name`]).
+    pub fn parse(s: &str) -> Option<MixedSpec> {
+        if s.is_empty() {
+            return None;
+        }
+        let layers = s.split('+').map(FormatSpec::parse).collect::<Option<Vec<_>>>()?;
+        Some(MixedSpec::new(layers))
+    }
+}
+
+impl std::fmt::Display for MixedSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +341,29 @@ mod tests {
     fn sweep_family_filters() {
         assert!(FormatSpec::sweep_family(8, "posit").iter().all(|s| s.family() == "posit"));
         assert_eq!(FormatSpec::sweep_family(8, "posit").len(), 3);
+    }
+
+    #[test]
+    fn mixed_spec_round_trips_and_uniformity() {
+        let m = MixedSpec::parse("posit8es1+float6we3+fixed5q3").unwrap();
+        assert_eq!(MixedSpec::parse(&m.name()), Some(m.clone()));
+        assert_eq!(m.is_uniform(), None);
+        assert_eq!(m.len(), 3);
+        let u = MixedSpec::uniform(FormatSpec::Float { n: 7, we: 3 }, 4);
+        assert_eq!(u.is_uniform(), Some(FormatSpec::Float { n: 7, we: 3 }));
+        assert_eq!(u.name(), "float7we3+float7we3+float7we3+float7we3");
+        assert!(MixedSpec::parse("").is_none());
+        assert!(MixedSpec::parse("posit8es1+bogus").is_none());
+    }
+
+    #[test]
+    fn mixed_spec_with_layer_replaces_one_slot() {
+        let u = MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3);
+        let m = u.with_layer(1, FormatSpec::Fixed { n: 5, q: 3 });
+        assert_eq!(m.layers()[0], FormatSpec::Posit { n: 8, es: 1 });
+        assert_eq!(m.layers()[1], FormatSpec::Fixed { n: 5, q: 3 });
+        assert_eq!(m.layers()[2], FormatSpec::Posit { n: 8, es: 1 });
+        // The original is untouched (value semantics for search moves).
+        assert_eq!(u.is_uniform(), Some(FormatSpec::Posit { n: 8, es: 1 }));
     }
 }

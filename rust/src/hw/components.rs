@@ -48,10 +48,17 @@ impl Cost {
     }
 }
 
-/// ceil(log2(x)), for x ≥ 1.
+/// ceil(log2(x)), made **total**: `clog2(0)` and `clog2(1)` both return 0.
+///
+/// Contract: a structure with zero or one entries needs no index bits. The
+/// previous implementation `debug_assert!`ed `x >= 1` — in release builds
+/// the assert vanishes and `x - 1` wrapped to `u32::MAX`, silently
+/// returning 32 for `clog2(0)` and corrupting every downstream width.
 pub fn clog2(x: u32) -> u32 {
-    debug_assert!(x >= 1);
-    32 - (x - 1).leading_zeros().min(32)
+    if x <= 1 {
+        return 0;
+    }
+    32 - (x - 1).leading_zeros()
 }
 
 // ---- calibration constants (Virtex-7 -2 speed grade ballpark) ----
@@ -168,6 +175,7 @@ mod tests {
 
     #[test]
     fn clog2_values() {
+        assert_eq!(clog2(0), 0, "clog2 is total: zero entries need no index bits");
         assert_eq!(clog2(1), 0);
         assert_eq!(clog2(2), 1);
         assert_eq!(clog2(3), 2);

@@ -12,7 +12,10 @@ pub use emac_model::{synthesize, SynthReport};
 use crate::formats::FormatSpec;
 
 /// Default dot-product length the paper-style synthesis sizes Eq. (2) for
-/// (the largest layer fan-in across the five tasks is MNIST's 784).
+/// (the largest layer fan-in across the five tasks is MNIST's 784). The
+/// standalone `synth-report` CLI uses this; the accuracy×hardware sweeps
+/// and the tuner derive `k` from the swept tasks' actual fan-ins instead
+/// (`coordinator::experiments::eq2_k`, `crate::tune`).
 pub const DEFAULT_K: usize = 784;
 
 /// Synthesis sweep over every format config at bit-widths `ns`.

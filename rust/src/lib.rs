@@ -15,7 +15,8 @@
 //!   FPGA cost model ([`hw`]), dataset generators ([`datasets`]),
 //!   quantization-error analysis ([`quant`]), a PJRT runtime that executes
 //!   the AOT artifacts ([`runtime`]), the sharded multi-worker serving
-//!   engine ([`serve`]), and the experiment coordinator ([`coordinator`]).
+//!   engine ([`serve`]), the mixed-precision auto-tuner ([`tune`]), and the
+//!   experiment coordinator ([`coordinator`]).
 //!
 //! Quick taste (pure-Rust path, no artifacts needed):
 //!
@@ -48,4 +49,5 @@ pub mod hw;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod tune;
 pub mod util;

@@ -13,7 +13,7 @@ use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
 use deep_positron::runtime::{artifacts_dir, Runtime};
 use deep_positron::serve::{ServeEngine, ServeError, ShardConfig};
-use deep_positron::{hw, quant};
+use deep_positron::{hw, quant, tune};
 
 const USAGE: &str = "\
 repro — Deep Positron (CoNGA'19) reproduction driver
@@ -29,6 +29,8 @@ COMMANDS (one per paper artifact):
   fig7           degradation vs delay and power         (same flags as fig6)
   es-study       §5.1 posit es trade-off                (same flags)
   table2         posit-hardware comparison table
+  tune           mixed-precision auto-tuner (§10)       [--dataset iris] [--budget min-acc=0.95|max-edp=X|max-luts=N]
+                                                        [--beam 2] [--eval-rows N]
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
@@ -187,6 +189,23 @@ fn run(args: &[String]) -> Result<()> {
             emit("es_study.md", &report::render_es_study(&study))?;
         }
         "table2" => emit("table2.md", &report::render_table2())?,
+        "tune" => {
+            let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
+            let beam: usize = flags.get("beam").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let eval_rows: usize = flags.get("eval-rows").map(|s| s.parse()).transpose()?.unwrap_or(usize::MAX);
+            let ds = datasets::load(&dataset, c.seed, c.scale);
+            let mlp = experiments::train_model(&ds, c.seed);
+            let budget = match flags.get("budget") {
+                Some(s) => tune::Budget::parse(s)
+                    .ok_or_else(|| anyhow!("unparseable budget {s} (min-acc=0.95 | max-edp=X | max-luts=N)"))?,
+                // Default: hold the best uniform 8-bit posit accuracy
+                // within one point while minimizing network EDP.
+                None => tune::default_budget(&ds, &mlp, eval_rows),
+            };
+            let cfg = tune::TuneConfig::new(budget).with_beam(beam).with_eval_rows(eval_rows);
+            let report_ = tune::tune(&ds, &mlp, &cfg);
+            emit(&format!("tune_{dataset}.md"), &report_.render())?;
+        }
         "sweep" => {
             // Diagnostic: per-(task, config) accuracy at one bit-width.
             let n: u32 = flags.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
@@ -303,7 +322,7 @@ fn run(args: &[String]) -> Result<()> {
             emit(&format!("serve_{dataset}.md"), &s)?;
         }
         "all" => {
-            for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7"] {
+            for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7", "tune"] {
                 println!("==== {sub} ====");
                 run(&[sub.to_string(), "--seed".into(), c.seed.to_string()])?;
             }

@@ -22,6 +22,12 @@
 //! * **Shared tables** — workers obtain quantization tables from the
 //!   process-wide [`crate::formats::Quantizer::shared`] cache, so N replicas
 //!   of one format build the sorted value/boundary tables once, not N times.
+//! * **Tuned shards** — a shard may deploy a per-layer format assignment
+//!   ([`ShardConfig::with_mixed`], typically built from a
+//!   `crate::tune::TunePlan`): its workers compile the heterogeneous
+//!   execution plan and its routing key is the assignment's `+`-joined
+//!   name (DESIGN.md §10). Mixed shards always run the bit-exact Sim
+//!   engine — the AOT artifact bakes in a uniform table shape.
 //! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy,
 //!   p50/p95/p99 latency, and overload accounting (shed / expired / live
 //!   queue depths), aggregated on shutdown.

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::accel::Mlp;
 use crate::coordinator::experiments::Engine;
 use crate::datasets::Dataset;
-use crate::formats::FormatSpec;
+use crate::formats::{FormatSpec, MixedSpec};
 use crate::serve::metrics::{EngineMetrics, ShardMetrics};
 use crate::serve::worker::{self, Control, InferReply, Request, ServeError, WorkerConfig, WorkerHandle, WorkerSpec};
 
@@ -34,6 +34,12 @@ impl ShardKey {
     /// Key for a dataset × format pair.
     pub fn new(dataset: &str, spec: FormatSpec) -> ShardKey {
         ShardKey { dataset: dataset.to_string(), format: spec.name() }
+    }
+
+    /// Key for a dataset × tuned per-layer assignment (the format half is
+    /// the assignment's `+`-joined name).
+    pub fn for_mixed(dataset: &str, mixed: &MixedSpec) -> ShardKey {
+        ShardKey { dataset: dataset.to_string(), format: mixed.name() }
     }
 
     /// `dataset/format` label used in metrics and traces.
@@ -54,8 +60,15 @@ pub struct ShardConfig {
     pub num_classes: usize,
     /// The trained f64 network this shard serves (quantized per `spec`).
     pub mlp: Mlp,
-    /// Numeric format the shard quantizes to (routing-key half).
+    /// Numeric format the shard quantizes to (routing-key half, unless a
+    /// mixed assignment overrides it).
     pub spec: FormatSpec,
+    /// Optional per-layer format assignment (a tuned deployment plan,
+    /// DESIGN.md §10): when set, workers compile the heterogeneous
+    /// execution plan instead of the uniform `spec`, the routing key
+    /// carries the assignment's `+`-joined name, and the shard always runs
+    /// the bit-exact Sim engine (the AOT artifact is uniform-only).
+    pub mixed: Option<MixedSpec>,
     /// Preferred engine; workers fall back to Sim when PJRT or the compiled
     /// artifact is missing.
     pub engine: Engine,
@@ -75,9 +88,28 @@ impl ShardConfig {
             num_classes: ds.num_classes,
             mlp,
             spec,
+            mixed: None,
             engine: Engine::Sim,
             workers: 1,
             worker: WorkerConfig::default(),
+        }
+    }
+
+    /// Deploy a per-layer format assignment on this shard — typically a
+    /// tuned plan (`crate::tune::TunePlan::shard_config` builds this for
+    /// you). The assignment must carry one format per model layer
+    /// (validated at [`ServeEngine::start`]).
+    pub fn with_mixed(mut self, mixed: MixedSpec) -> ShardConfig {
+        self.mixed = Some(mixed);
+        self
+    }
+
+    /// The routing-key format label: the uniform spec's name, or the
+    /// `+`-joined assignment name when a mixed plan is attached.
+    pub fn format_name(&self) -> String {
+        match &self.mixed {
+            Some(m) => m.name(),
+            None => self.spec.name(),
         }
     }
 
@@ -121,6 +153,15 @@ impl ShardConfig {
         }
         if self.worker.sim_batch == 0 {
             return Err(bad("sim_batch must be >= 1".into()));
+        }
+        if let Some(m) = &self.mixed {
+            if m.len() != self.mlp.layers.len() {
+                return Err(bad(format!(
+                    "mixed assignment carries {} formats for a {}-layer model",
+                    m.len(),
+                    self.mlp.layers.len()
+                )));
+            }
         }
         Ok(())
     }
@@ -244,13 +285,13 @@ impl ServeEngine {
         // config is rejected side-effect-free (no live workers mid-compile
         // abandoned behind an Err).
         for cfg in &shards {
-            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.spec.name() };
+            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.format_name() };
             cfg.validate(&key.label())?;
         }
         // Phase 1: spawn everything, no waiting.
         let mut staged = Vec::with_capacity(shards.len());
         for cfg in shards {
-            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.spec.name() };
+            let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.format_name() };
             let nworkers = cfg.workers.max(1);
             let metrics = Arc::new(Mutex::new(ShardMetrics {
                 shard: key.label(),
@@ -266,6 +307,7 @@ impl ServeEngine {
                     index,
                     mlp: cfg.mlp.clone(),
                     spec: cfg.spec,
+                    mixed: cfg.mixed.clone(),
                     engine: cfg.engine,
                     classes: cfg.num_classes,
                     cfg: cfg.worker.clone(),

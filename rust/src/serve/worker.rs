@@ -46,7 +46,7 @@ use std::time::{Duration, Instant};
 
 use crate::accel::{argmax, DeepPositron, Mlp};
 use crate::coordinator::experiments::Engine;
-use crate::formats::FormatSpec;
+use crate::formats::{FormatSpec, MixedSpec};
 use crate::runtime::{artifacts_dir, FormatTables, Kind, Runtime};
 use crate::serve::metrics::ShardMetrics;
 
@@ -166,6 +166,8 @@ pub(crate) struct WorkerSpec {
     pub index: usize,
     pub mlp: Mlp,
     pub spec: FormatSpec,
+    /// Per-layer assignment of a tuned shard; `None` = uniform `spec`.
+    pub mixed: Option<MixedSpec>,
     pub engine: Engine,
     pub classes: usize,
     pub cfg: WorkerConfig,
@@ -267,8 +269,21 @@ fn push_pending(pending: &mut BinaryHeap<Pending>, seq: &mut u64, wait: Duration
 }
 
 fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth: Arc<AtomicUsize>, ws: WorkerSpec) {
-    let dp = DeepPositron::compile(&ws.mlp, ws.spec);
-    let xla = if ws.engine == Engine::Xla { build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec) } else { None };
+    // A tuned shard compiles the heterogeneous plan; the uniform path is
+    // the classic single-format compile (bit-identical for all-equal
+    // assignments, so either way the batcher executes the same math).
+    let dp = match &ws.mixed {
+        Some(m) => DeepPositron::compile_mixed(&ws.mlp, m.clone()),
+        None => DeepPositron::compile(&ws.mlp, ws.spec),
+    };
+    let xla = if ws.engine == Engine::Xla && ws.mixed.is_none() {
+        build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec)
+    } else {
+        if ws.engine == Engine::Xla {
+            eprintln!("serve[{}]: mixed-precision plans are Sim-only (uniform AOT artifact), using Sim", ws.shard);
+        }
+        None
+    };
     let batch_sizes: Vec<usize> = match &xla {
         Some(x) => x.batches.clone(),
         None => vec![ws.cfg.sim_batch.max(1)],

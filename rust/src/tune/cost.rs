@@ -1,0 +1,134 @@
+//! Network-level hardware costing for per-layer format assignments.
+//!
+//! The paper's Figs. 6–7 cost ONE EMAC at a fixed dot-product length; a
+//! deployment plan needs the cost of the whole network. Deep Positron's
+//! dataflow is a bank of EMACs per layer (one per output neuron) with the
+//! layers running serially, so per layer `i` with formats `F_i`:
+//!
+//! * resources (LUTs/FFs/DSPs) = `fan_out_i ×` the per-EMAC synthesis of
+//!   `F_i`, with the Eq. (2) accumulator sized for `fan_in_i + 1` terms —
+//!   the layer's dot product plus its bias, exactly the bound
+//!   `DeepPositron::compile*` asserts the quire against — per the
+//!   per-task/per-layer `k` rule (a 4-feature layer no longer pays for a
+//!   784-product quire);
+//! * energy of one inference = `fan_in_i × fan_out_i ×` per-MAC energy
+//!   (every EMAC in the bank streams the layer's fan-in);
+//! * latency of one inference = `fan_in_i ×` critical path (the bank runs
+//!   its fan-in in lock-step cycles) + the pipeline fill latency;
+//! * network EDP = total energy × total latency — the tuner's default
+//!   budget/objective axis, the network analogue of Fig. 6's x-axis.
+//!
+//! Every term is monotone in format width, so any single-layer downgrade
+//! strictly reduces the modeled EDP — the property the Pareto search leans
+//! on (guarded by `tests/prop_hw.rs`).
+
+use crate::formats::MixedSpec;
+use crate::hw;
+
+/// Modeled whole-network deployment cost of one per-layer assignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkCost {
+    /// Look-up tables across every layer's EMAC bank.
+    pub luts: f64,
+    /// Flip-flops across every bank.
+    pub ffs: f64,
+    /// DSP slices across every bank.
+    pub dsps: f64,
+    /// Switched energy of one full inference pass (every MAC of every
+    /// layer), pJ.
+    pub energy_pj: f64,
+    /// Latency of one inference (layers serial, banks internally parallel),
+    /// ns.
+    pub delay_ns: f64,
+    /// Energy-delay product of one inference, pJ·ns.
+    pub edp_pj_ns: f64,
+    /// Widest Eq. (2) quire any layer provisions, bits.
+    pub max_quire_bits: u32,
+}
+
+/// Cost a per-layer assignment for a network with layer widths `dims`
+/// (`[in, h1, ..., out]`; one assignment entry per adjacent pair).
+pub fn network_cost(mixed: &MixedSpec, dims: &[usize]) -> NetworkCost {
+    assert_eq!(mixed.len() + 1, dims.len(), "dims must be [in, h1, ..., out] with one format per layer");
+    let mut c = NetworkCost {
+        luts: 0.0,
+        ffs: 0.0,
+        dsps: 0.0,
+        energy_pj: 0.0,
+        delay_ns: 0.0,
+        edp_pj_ns: 0.0,
+        max_quire_bits: 0,
+    };
+    for (li, &spec) in mixed.layers().iter().enumerate() {
+        let (fan_in, fan_out) = (dims[li], dims[li + 1]);
+        // k = fan-in + 1: the bias is one more quire addend, matching the
+        // compile-time `assert_quire_fits(dims[li] + 1)` bound.
+        let r = hw::synthesize(spec, fan_in + 1);
+        let macs = (fan_in * fan_out) as f64;
+        c.luts += r.luts * fan_out as f64;
+        c.ffs += r.ffs * fan_out as f64;
+        c.dsps += r.dsps * fan_out as f64;
+        c.energy_pj += r.energy_pj * macs;
+        c.delay_ns += r.critical_path_ns * fan_in as f64 + r.latency_ns;
+        c.max_quire_bits = c.max_quire_bits.max(r.quire_bits);
+    }
+    c.edp_pj_ns = c.energy_pj * c.delay_ns;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FormatSpec;
+
+    const DIMS: [usize; 4] = [30, 16, 8, 2];
+
+    fn uniform(name: &str) -> MixedSpec {
+        MixedSpec::uniform(FormatSpec::parse(name).unwrap(), DIMS.len() - 1)
+    }
+
+    #[test]
+    fn narrower_uniform_assignment_costs_strictly_less() {
+        let wide = network_cost(&uniform("posit8es1"), &DIMS);
+        let narrow = network_cost(&uniform("posit6es1"), &DIMS);
+        assert!(narrow.luts < wide.luts);
+        assert!(narrow.energy_pj < wide.energy_pj);
+        assert!(narrow.delay_ns < wide.delay_ns);
+        assert!(narrow.edp_pj_ns < wide.edp_pj_ns);
+        assert!(narrow.max_quire_bits < wide.max_quire_bits);
+    }
+
+    #[test]
+    fn single_layer_downgrade_strictly_reduces_edp() {
+        // The descent invariant: every per-layer downgrade move the search
+        // considers lowers the modeled network EDP.
+        let base = uniform("posit8es1");
+        let base_cost = network_cost(&base, &DIMS);
+        for li in 0..base.len() {
+            for down in ["posit7es1", "posit8es0", "float8we4", "fixed8q5", "fixed5q3"] {
+                let m = base.with_layer(li, FormatSpec::parse(down).unwrap());
+                let c = network_cost(&m, &DIMS);
+                assert!(c.edp_pj_ns < base_cost.edp_pj_ns, "layer {li} -> {down} did not reduce EDP");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_k_follows_fan_in() {
+        // A big-fan-in first layer must provision a wider quire than the
+        // same format on the 8-wide penultimate layer (k = fan-in + 1, the
+        // bias-inclusive bound the compiled plan asserts against).
+        let m = uniform("posit8es1");
+        let r_in = hw::synthesize(m.layers()[0], DIMS[0] + 1);
+        let r_mid = hw::synthesize(m.layers()[2], DIMS[2] + 1);
+        assert!(r_in.quire_bits > r_mid.quire_bits);
+        // And the network-wide max reports the widest of them.
+        assert_eq!(network_cost(&m, &DIMS).max_quire_bits, r_in.quire_bits);
+    }
+
+    #[test]
+    #[should_panic(expected = "one format per layer")]
+    fn dims_and_assignment_must_agree() {
+        let _ = network_cost(&uniform("posit8es1"), &[4, 3]);
+    }
+}

@@ -1,0 +1,36 @@
+//! Mixed-precision auto-tuning: per-layer format search over the
+//! accuracy × hardware Pareto frontier (DESIGN.md §10).
+//!
+//! The paper samples the performance-efficiency trade-off one uniform
+//! format at a time; Cheetah (Langroudi et al., 2019) shows the same EMAC
+//! substrate wins hardest when precision is assigned **per layer**. This
+//! subsystem turns the repository's two existing measurement axes into an
+//! automatic deployment planner:
+//!
+//! * **Accuracy axis** — every candidate assignment compiles through the
+//!   heterogeneous execution plans ([`DeepPositron::compile_mixed`]) and
+//!   evaluates on the task's held-out split via the batched evaluator.
+//! * **Hardware axis** — [`network_cost`] sums per-layer
+//!   [`hw::synthesize`] reports, each layer's EMAC bank sized by Eq. (2)
+//!   for *that layer's* fan-in, into network LUT/energy/delay/EDP totals.
+//!
+//! [`tune`] enumerates uniform candidates from `FormatSpec::sweep(5..=8)`,
+//! runs a deterministic greedy/beam per-layer descent under a user budget
+//! ([`Budget`]), extracts the non-dominated frontier
+//! ([`pareto_frontier`]) from everything it evaluated, and emits a
+//! serializable [`TunePlan`] that serving shards can start from directly
+//! ([`TunePlan::shard_config`]).
+//!
+//! Entry points: the `tune` CLI subcommand, `examples/autotune.rs`, and
+//! `benches/tune_search.rs` (search throughput + frontier size).
+//!
+//! [`DeepPositron::compile_mixed`]: crate::accel::DeepPositron::compile_mixed
+//! [`hw::synthesize`]: crate::hw::synthesize
+
+pub mod cost;
+pub mod pareto;
+pub mod search;
+
+pub use cost::{network_cost, NetworkCost};
+pub use pareto::{pareto_frontier, ParetoPoint};
+pub use search::{default_budget, tune, Budget, TuneConfig, TunePlan, TuneReport};

@@ -1,0 +1,150 @@
+//! Non-dominated frontier extraction over the accuracy × hardware plane.
+//!
+//! A point dominates another when it is at least as accurate AND at most
+//! as expensive (network EDP), strictly better on at least one axis. The
+//! tuner logs every assignment it evaluates and reports the non-dominated
+//! subset — the reproduction's searched analogue of the paper's sampled
+//! Fig. 6 trade-off curve.
+
+use crate::formats::MixedSpec;
+use crate::tune::cost::NetworkCost;
+
+/// One scored assignment: validation accuracy (higher is better) and
+/// modeled network cost (lower EDP is better).
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// The per-layer format assignment.
+    pub mixed: MixedSpec,
+    /// Validation accuracy of the compiled mixed plan.
+    pub accuracy: f64,
+    /// Modeled whole-network hardware cost.
+    pub cost: NetworkCost,
+}
+
+impl ParetoPoint {
+    /// Whether `self` dominates `other`: no worse on both axes
+    /// (accuracy ↑, EDP ↓) and strictly better on at least one.
+    pub fn dominates(&self, other: &ParetoPoint) -> bool {
+        let no_worse = self.accuracy >= other.accuracy && self.cost.edp_pj_ns <= other.cost.edp_pj_ns;
+        no_worse && (self.accuracy > other.accuracy || self.cost.edp_pj_ns < other.cost.edp_pj_ns)
+    }
+}
+
+/// Extract the non-dominated subset of `points`, sorted by ascending EDP.
+///
+/// Deterministic: ties sort by descending accuracy, then assignment name;
+/// coincident (accuracy, EDP) pairs keep the name-first representative.
+/// The result contains no point dominated by any *input* point.
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut sorted: Vec<&ParetoPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.cost
+            .edp_pj_ns
+            .partial_cmp(&b.cost.edp_pj_ns)
+            .expect("EDP is never NaN")
+            .then(b.accuracy.partial_cmp(&a.accuracy).expect("accuracy is never NaN"))
+            .then_with(|| a.mixed.name().cmp(&b.mixed.name()))
+    });
+    // One ascending-EDP sweep: a point joins the frontier iff it improves
+    // on the best accuracy seen so far (anything else is dominated by an
+    // earlier, cheaper-or-equal point).
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.accuracy > best_acc {
+            out.push(p.clone());
+            best_acc = p.accuracy;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FormatSpec;
+    use crate::tune::cost::network_cost;
+
+    fn point(name: &str, accuracy: f64, edp: f64) -> ParetoPoint {
+        let mixed = MixedSpec::parse(name).unwrap();
+        let mut cost = network_cost(&mixed, &[4, 3]);
+        cost.edp_pj_ns = edp; // synthetic axis value for the dominance tests
+        ParetoPoint { mixed, accuracy, cost }
+    }
+
+    #[test]
+    fn dominance_requires_strictness_on_one_axis() {
+        let a = point("posit8es1", 0.9, 10.0);
+        let b = point("posit7es1", 0.9, 10.0);
+        assert!(!a.dominates(&b), "coincident points do not dominate each other");
+        assert!(!b.dominates(&a));
+        assert!(point("posit8es1", 0.9, 9.0).dominates(&b));
+        assert!(point("posit8es1", 0.95, 10.0).dominates(&b));
+        assert!(!point("posit8es1", 0.95, 11.0).dominates(&b), "trade-off points are incomparable");
+    }
+
+    #[test]
+    fn frontier_drops_every_dominated_point() {
+        let pts = vec![
+            point("posit5es0", 0.60, 1.0),
+            point("posit6es0", 0.80, 2.0),
+            point("fixed6q3", 0.70, 2.5),  // dominated by posit6es0
+            point("posit8es1", 0.95, 8.0),
+            point("float8we4", 0.94, 9.0), // dominated by posit8es1
+        ];
+        let f = pareto_frontier(&pts);
+        let names: Vec<String> = f.iter().map(|p| p.mixed.name()).collect();
+        assert_eq!(names, vec!["posit5es0", "posit6es0", "posit8es1"]);
+        for a in &f {
+            for b in &pts {
+                assert!(!b.dominates(a), "{} dominates frontier point {}", b.mixed.name(), a.mixed.name());
+            }
+        }
+        // Sorted by ascending EDP with strictly increasing accuracy.
+        for w in f.windows(2) {
+            assert!(w[0].cost.edp_pj_ns < w[1].cost.edp_pj_ns);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn frontier_is_deterministic_under_permutation() {
+        let a = vec![point("posit5es0", 0.6, 1.0), point("posit6es0", 0.8, 2.0), point("posit8es1", 0.9, 3.0)];
+        let mut b = a.clone();
+        b.reverse();
+        let fa: Vec<String> = pareto_frontier(&a).iter().map(|p| p.mixed.name()).collect();
+        let fb: Vec<String> = pareto_frontier(&b).iter().map(|p| p.mixed.name()).collect();
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn coincident_points_keep_one_representative() {
+        let pts = vec![point("posit8es1", 0.9, 5.0), point("float8we4", 0.9, 5.0)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].mixed.name(), "float8we4", "name-order tie-break is deterministic");
+    }
+
+    #[test]
+    fn real_sweep_frontier_contains_no_dominated_point() {
+        // Cost real uniform assignments over a WDBC-shaped net; accuracy is
+        // a synthetic monotone-ish stand-in so the test stays hardware-only.
+        let dims = [30usize, 16, 8, 2];
+        let mut pts = Vec::new();
+        for n in 5..=8u32 {
+            for spec in FormatSpec::sweep(n) {
+                let mixed = MixedSpec::uniform(spec, dims.len() - 1);
+                let cost = network_cost(&mixed, &dims);
+                let accuracy = n as f64 / 10.0 + if spec.family() == "posit" { 0.02 } else { 0.0 };
+                pts.push(ParetoPoint { mixed, accuracy, cost });
+            }
+        }
+        let f = pareto_frontier(&pts);
+        assert!(!f.is_empty());
+        for a in &f {
+            for b in &pts {
+                assert!(!b.dominates(a));
+            }
+        }
+    }
+}

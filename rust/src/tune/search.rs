@@ -1,0 +1,514 @@
+//! Deterministic greedy/beam per-layer descent under a hardware or
+//! accuracy budget, and the serializable [`TunePlan`] it emits.
+//!
+//! The search space is `candidates^layers` (candidates =
+//! `FormatSpec::sweep(5..=8)`, ~43 configs) — far too large to enumerate,
+//! but single-layer moves compose well because each layer's EMAC bank is
+//! independent in the cost model and quantization error is approximately
+//! layer-local. The descent therefore: (1) scores every *uniform*
+//! candidate, (2) seeds a beam with the best feasible start, (3) per
+//! round, expands every beam state by every single-layer reassignment,
+//! keeps the top `beam` feasible states, and stops when the round fails
+//! to improve the incumbent. Everything is evaluated through one memoized
+//! evaluator, every ranking tie-breaks on the assignment name, and no
+//! randomness enters anywhere — the same inputs always produce the same
+//! [`TunePlan`].
+
+use std::collections::HashMap;
+use std::ops::RangeInclusive;
+
+use crate::accel::{Datapath, DeepPositron, Mlp};
+use crate::datasets::Dataset;
+use crate::formats::{FormatSpec, MixedSpec};
+use crate::quant;
+use crate::serve::ShardConfig;
+use crate::tune::cost::{network_cost, NetworkCost};
+use crate::tune::pareto::{pareto_frontier, ParetoPoint};
+
+/// The user-supplied constraint the descent optimizes under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Budget {
+    /// Maximize accuracy subject to network EDP ≤ this many pJ·ns
+    /// (CLI: `--budget max-edp=1.5e6`).
+    MaxEdp(f64),
+    /// Maximize accuracy subject to total network LUTs ≤ this
+    /// (CLI: `--budget max-luts=40000`).
+    MaxLuts(f64),
+    /// Minimize network EDP subject to accuracy ≥ this
+    /// (CLI: `--budget min-acc=0.95`).
+    MinAcc(f64),
+}
+
+impl Budget {
+    /// Parse a CLI budget: `max-edp=X`, `max-luts=X`, or `min-acc=X`.
+    pub fn parse(s: &str) -> Option<Budget> {
+        let (kind, value) = s.split_once('=')?;
+        let v: f64 = value.parse().ok()?;
+        match kind {
+            "max-edp" => Some(Budget::MaxEdp(v)),
+            "max-luts" => Some(Budget::MaxLuts(v)),
+            "min-acc" => Some(Budget::MinAcc(v)),
+            _ => None,
+        }
+    }
+
+    /// Whether a scored assignment satisfies the budget.
+    pub fn feasible(&self, accuracy: f64, cost: &NetworkCost) -> bool {
+        match *self {
+            Budget::MaxEdp(e) => cost.edp_pj_ns <= e,
+            Budget::MaxLuts(l) => cost.luts <= l,
+            Budget::MinAcc(a) => accuracy >= a,
+        }
+    }
+
+    /// Minimization key for ranking feasible assignments: cost-budgets
+    /// maximize accuracy (tie: cheaper EDP), the accuracy budget minimizes
+    /// EDP (tie: higher accuracy). Lower key = better.
+    fn key(&self, accuracy: f64, cost: &NetworkCost) -> (f64, f64) {
+        match self {
+            Budget::MaxEdp(_) | Budget::MaxLuts(_) => (-accuracy, cost.edp_pj_ns),
+            Budget::MinAcc(_) => (cost.edp_pj_ns, -accuracy),
+        }
+    }
+
+    /// Human label for reports.
+    pub fn label(&self) -> String {
+        match *self {
+            Budget::MaxEdp(e) => format!("max-edp={e:.4}"),
+            Budget::MaxLuts(l) => format!("max-luts={l:.1}"),
+            Budget::MinAcc(a) => format!("min-acc={a:.4}"),
+        }
+    }
+}
+
+/// Tuner knobs. Construct with [`TuneConfig::new`] and chain the `with_*`
+/// setters.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// The constraint to optimize under.
+    pub budget: Budget,
+    /// Per-layer candidate bit-widths (the paper's sweep range).
+    pub bits: RangeInclusive<u32>,
+    /// Beam width; 1 is pure greedy descent.
+    pub beam: usize,
+    /// Safety cap on descent rounds.
+    pub max_rounds: usize,
+    /// Cap on validation rows per evaluation (the full held-out split by
+    /// default; tests shrink it).
+    pub eval_rows: usize,
+}
+
+impl TuneConfig {
+    /// Defaults: bits 5..=8, beam 2, 16 rounds, full validation split.
+    pub fn new(budget: Budget) -> TuneConfig {
+        TuneConfig { budget, bits: 5..=8, beam: 2, max_rounds: 16, eval_rows: usize::MAX }
+    }
+
+    /// Set the beam width (min 1; 1 = greedy).
+    pub fn with_beam(mut self, beam: usize) -> TuneConfig {
+        self.beam = beam.max(1);
+        self
+    }
+
+    /// Set the candidate bit-width range.
+    pub fn with_bits(mut self, bits: RangeInclusive<u32>) -> TuneConfig {
+        self.bits = bits;
+        self
+    }
+
+    /// Cap the validation rows per evaluation.
+    pub fn with_eval_rows(mut self, rows: usize) -> TuneConfig {
+        self.eval_rows = rows.max(1);
+        self
+    }
+}
+
+/// The tuned deployment plan: a per-layer assignment plus the scores it
+/// was selected on. Serializable ([`TunePlan::to_text`] /
+/// [`TunePlan::parse`]) and directly servable
+/// ([`TunePlan::shard_config`]).
+#[derive(Debug, Clone)]
+pub struct TunePlan {
+    /// Task the plan was tuned for.
+    pub dataset: String,
+    /// Network layer widths, `[in, h1, ..., out]`.
+    pub dims: Vec<usize>,
+    /// The selected per-layer format assignment.
+    pub assignment: MixedSpec,
+    /// Validation accuracy of the compiled mixed plan.
+    pub accuracy: f64,
+    /// Modeled whole-network hardware cost.
+    pub cost: NetworkCost,
+    /// Whether the plan satisfies the budget it was tuned under (false
+    /// means the budget was unattainable and this is the closest point).
+    pub feasible: bool,
+}
+
+impl TunePlan {
+    /// Serialize to a line-oriented `key=value` text block. Hardware cost
+    /// is *not* stored — [`TunePlan::parse`] recomputes it from the
+    /// assignment and dims, so the cost model stays the single source of
+    /// truth.
+    pub fn to_text(&self) -> String {
+        format!(
+            "dataset={}\ndims={}\nlayers={}\naccuracy={:.6}\nfeasible={}\n",
+            self.dataset,
+            self.dims.iter().map(usize::to_string).collect::<Vec<_>>().join(","),
+            self.assignment.name(),
+            self.accuracy,
+            self.feasible,
+        )
+    }
+
+    /// Parse the [`TunePlan::to_text`] form; recomputes [`NetworkCost`]
+    /// from the assignment. Returns `None` on any malformed field.
+    pub fn parse(s: &str) -> Option<TunePlan> {
+        let mut fields: HashMap<&str, &str> = HashMap::new();
+        for line in s.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=')?;
+            fields.insert(k, v);
+        }
+        let dataset = (*fields.get("dataset")?).to_string();
+        let dims = fields
+            .get("dims")?
+            .split(',')
+            .map(|d| d.parse().ok())
+            .collect::<Option<Vec<usize>>>()?;
+        let assignment = MixedSpec::parse(fields.get("layers")?)?;
+        if assignment.len() + 1 != dims.len() {
+            return None;
+        }
+        let accuracy: f64 = fields.get("accuracy")?.parse().ok()?;
+        let feasible: bool = fields.get("feasible")?.parse().ok()?;
+        let cost = network_cost(&assignment, &dims);
+        Some(TunePlan { dataset, dims, assignment, accuracy, cost, feasible })
+    }
+
+    /// A serving-shard config that deploys this plan: the shard's workers
+    /// compile the mixed execution plan instead of a uniform spec, and the
+    /// shard's routing key carries the assignment's joined name.
+    pub fn shard_config(&self, ds: &Dataset, mlp: Mlp) -> ShardConfig {
+        ShardConfig::new(ds, mlp, self.assignment.layers()[0]).with_mixed(self.assignment.clone())
+    }
+}
+
+/// Everything one [`tune`] run produced.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// The selected plan.
+    pub plan: TunePlan,
+    /// Non-dominated subset of every assignment the search evaluated,
+    /// ascending EDP.
+    pub frontier: Vec<ParetoPoint>,
+    /// The comparison anchor: the best-accuracy uniform 8-bit posit.
+    pub reference: ParetoPoint,
+    /// Budget the search ran under.
+    pub budget: Budget,
+    /// Distinct assignments evaluated (compile + validation passes).
+    pub evaluated: usize,
+    /// Descent rounds executed before convergence.
+    pub rounds: usize,
+    /// Weight-tensor quantization MSE (paper Eq. 3) of each layer under
+    /// its assigned format — the "why" column of the per-layer report.
+    pub layer_mse: Vec<f64>,
+}
+
+impl TuneReport {
+    /// Render the markdown report the `tune` CLI emits.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "# Mixed-precision tune — {} (budget {}, {} assignments evaluated, {} rounds)\n\n",
+            self.plan.dataset,
+            self.budget.label(),
+            self.evaluated,
+            self.rounds,
+        );
+        let line = |label: &str, p: &ParetoPoint| {
+            format!(
+                "| {label} | {} | {:.2} | {:.3e} | {:.0} | {:.1} | {:.1} |\n",
+                p.mixed.name(),
+                p.accuracy * 100.0,
+                p.cost.edp_pj_ns,
+                p.cost.luts,
+                p.cost.energy_pj,
+                p.cost.delay_ns,
+            )
+        };
+        s.push_str("| | assignment | acc % | EDP (pJ·ns) | LUTs | energy (pJ) | delay (ns) |\n");
+        s.push_str("|---|---|---|---|---|---|---|\n");
+        s.push_str(&line("uniform posit8 (ref)", &self.reference));
+        let plan_pt =
+            ParetoPoint { mixed: self.plan.assignment.clone(), accuracy: self.plan.accuracy, cost: self.plan.cost };
+        s.push_str(&line(if self.plan.feasible { "tuned plan" } else { "tuned plan (budget unattainable)" }, &plan_pt));
+        s.push_str(&format!(
+            "\ntuned vs reference: {:+.2} acc pts at {:.2}× the EDP, {:.2}× the LUTs\n",
+            (self.plan.accuracy - self.reference.accuracy) * 100.0,
+            self.plan.cost.edp_pj_ns / self.reference.cost.edp_pj_ns,
+            self.plan.cost.luts / self.reference.cost.luts,
+        ));
+        s.push_str(&format!("\n## Pareto frontier ({} points)\n\n", self.frontier.len()));
+        s.push_str("| # | assignment | acc % | EDP (pJ·ns) | LUTs | quire bits |\n|---|---|---|---|---|---|\n");
+        for (i, p) in self.frontier.iter().enumerate() {
+            s.push_str(&format!(
+                "| {i} | {} | {:.2} | {:.3e} | {:.0} | {} |\n",
+                p.mixed.name(),
+                p.accuracy * 100.0,
+                p.cost.edp_pj_ns,
+                p.cost.luts,
+                p.cost.max_quire_bits,
+            ));
+        }
+        s.push_str("\n## Per-layer assignment\n\n");
+        s.push_str("| layer | fan-in | fan-out | format | weight MSE (Eq. 3) | quire bits |\n");
+        s.push_str("|---|---|---|---|---|---|\n");
+        for (li, (&spec, &mse)) in self.plan.assignment.layers().iter().zip(&self.layer_mse).enumerate() {
+            // k = fan-in + 1 (bias term), the same sizing `network_cost`
+            // and the compile-time quire check use.
+            let r = crate::hw::synthesize(spec, self.plan.dims[li] + 1);
+            s.push_str(&format!(
+                "| dense{} | {} | {} | {} | {:.3e} | {} |\n",
+                li + 1,
+                self.plan.dims[li],
+                self.plan.dims[li + 1],
+                spec.name(),
+                mse,
+                r.quire_bits,
+            ));
+        }
+        s.push_str("\n## Plan\n\n```\n");
+        s.push_str(&self.plan.to_text());
+        s.push_str("```\n");
+        s
+    }
+}
+
+/// Memoizing scorer: compiles the mixed plan once per distinct assignment
+/// and evaluates accuracy on (a capped prefix of) the held-out split via
+/// the batched evaluator; logs every score for frontier extraction.
+struct Evaluator<'a> {
+    ds: &'a Dataset,
+    mlp: &'a Mlp,
+    dims: Vec<usize>,
+    rows: usize,
+    cache: HashMap<MixedSpec, (f64, NetworkCost)>,
+    log: Vec<ParetoPoint>,
+}
+
+impl Evaluator<'_> {
+    fn score(&mut self, mixed: &MixedSpec) -> (f64, NetworkCost) {
+        if let Some(&hit) = self.cache.get(mixed) {
+            return hit;
+        }
+        let dp = DeepPositron::compile_mixed(self.mlp, mixed.clone());
+        let accuracy = dp.accuracy_on(self.ds, Datapath::Emac, self.rows);
+        let cost = network_cost(mixed, &self.dims);
+        self.cache.insert(mixed.clone(), (accuracy, cost));
+        self.log.push(ParetoPoint { mixed: mixed.clone(), accuracy, cost });
+        (accuracy, cost)
+    }
+}
+
+/// The acceptance-style default budget: hold accuracy within one point of
+/// the best uniform 8-bit posit while minimizing network EDP — the
+/// Cheetah-style "same accuracy, cheaper hardware" objective.
+pub fn default_budget(ds: &Dataset, mlp: &Mlp, eval_rows: usize) -> Budget {
+    let best = FormatSpec::sweep_family(8, "posit")
+        .into_iter()
+        .map(|spec| DeepPositron::compile(mlp, spec).accuracy_on(ds, Datapath::Emac, eval_rows))
+        .fold(0.0f64, f64::max);
+    Budget::MinAcc(best - 0.01)
+}
+
+/// Run the tuner: enumerate uniform candidates, descend per layer under
+/// the budget, and report the plan + frontier. Deterministic in its
+/// inputs (see the module docs for the argument).
+pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
+    let dims = mlp.dims();
+    let nlayers = mlp.layers.len();
+    let candidates: Vec<FormatSpec> = cfg.bits.clone().flat_map(FormatSpec::sweep).collect();
+    assert!(!candidates.is_empty(), "empty candidate sweep");
+    let mut ev = Evaluator { ds, mlp, dims, rows: cfg.eval_rows, cache: HashMap::new(), log: Vec::new() };
+
+    // Phase 1: score every uniform candidate (plus the 8-bit posit
+    // reference family, even when `bits` excludes 8).
+    let mut uniforms: Vec<MixedSpec> = candidates.iter().map(|&c| MixedSpec::uniform(c, nlayers)).collect();
+    for spec in FormatSpec::sweep_family(8, "posit") {
+        let u = MixedSpec::uniform(spec, nlayers);
+        if !uniforms.contains(&u) {
+            uniforms.push(u);
+        }
+    }
+    let reference = FormatSpec::sweep_family(8, "posit")
+        .into_iter()
+        .map(|spec| {
+            let mixed = MixedSpec::uniform(spec, nlayers);
+            let (accuracy, cost) = ev.score(&mixed);
+            ParetoPoint { mixed, accuracy, cost }
+        })
+        .max_by(|a, b| {
+            a.accuracy
+                .partial_cmp(&b.accuracy)
+                .expect("accuracy is never NaN")
+                .then(b.cost.edp_pj_ns.partial_cmp(&a.cost.edp_pj_ns).expect("EDP is never NaN"))
+        })
+        .expect("posit sweep is non-empty");
+
+    // Phase 2: pick the start — best feasible uniform by the budget's
+    // objective; if the budget is unattainable even among uniforms, the
+    // closest uniform (most accurate for MinAcc, cheapest otherwise).
+    let scored: Vec<(MixedSpec, f64, NetworkCost)> =
+        uniforms.iter().map(|u| (u.clone(), ev.score(u))).map(|(u, (a, c))| (u, a, c)).collect();
+    let by_key = |key: fn(&Budget, f64, &NetworkCost) -> (f64, f64), budget: &Budget| {
+        move |x: &&(MixedSpec, f64, NetworkCost), y: &&(MixedSpec, f64, NetworkCost)| {
+            key(budget, x.1, &x.2)
+                .partial_cmp(&key(budget, y.1, &y.2))
+                .expect("keys are never NaN")
+                .then_with(|| x.0.name().cmp(&y.0.name()))
+        }
+    };
+    let feasible_start = scored
+        .iter()
+        .filter(|(_, a, c)| cfg.budget.feasible(*a, c))
+        .min_by(by_key(objective_key, &cfg.budget))
+        .map(|(m, _, _)| m.clone());
+    let start = feasible_start.clone().unwrap_or_else(|| {
+        scored
+            .iter()
+            .min_by(by_key(closest_key, &cfg.budget))
+            .map(|(m, _, _)| m.clone())
+            .expect("uniform candidates are non-empty")
+    });
+
+    // Phase 3: beam descent over single-layer reassignments. Converges
+    // because the incumbent only ever moves to a strictly better feasible
+    // key (or from infeasible to feasible once), and the evaluator
+    // memoizes every visited assignment.
+    let mut incumbent = start.clone();
+    let mut incumbent_feasible = feasible_start.is_some();
+    let mut incumbent_key = {
+        let (a, c) = ev.score(&incumbent);
+        cfg.budget.key(a, &c)
+    };
+    let mut beam: Vec<MixedSpec> = vec![start];
+    let mut rounds = 0usize;
+    for _ in 0..cfg.max_rounds {
+        let mut next: Vec<((f64, f64), String, MixedSpec)> = Vec::new();
+        for state in &beam {
+            for li in 0..nlayers {
+                for &c in &candidates {
+                    if state.layers()[li] == c {
+                        continue;
+                    }
+                    let cand = state.with_layer(li, c);
+                    let (accuracy, cost) = ev.score(&cand);
+                    if cfg.budget.feasible(accuracy, &cost) {
+                        next.push((cfg.budget.key(accuracy, &cost), cand.name(), cand));
+                    }
+                }
+            }
+        }
+        if next.is_empty() {
+            break; // no feasible neighbor anywhere in the beam
+        }
+        next.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("keys are never NaN").then_with(|| a.1.cmp(&b.1)));
+        next.dedup_by(|a, b| a.2 == b.2);
+        rounds += 1;
+        let best_key = next[0].0;
+        if incumbent_feasible && best_key >= incumbent_key {
+            break; // converged: no feasible move improves the incumbent
+        }
+        incumbent = next[0].2.clone();
+        incumbent_key = best_key;
+        incumbent_feasible = true;
+        beam = next.into_iter().take(cfg.beam).map(|(_, _, m)| m).collect();
+    }
+
+    let (accuracy, cost) = ev.score(&incumbent);
+    let feasible = cfg.budget.feasible(accuracy, &cost);
+    let dims = ev.dims.clone();
+    let plan = TunePlan { dataset: ds.name.clone(), dims, assignment: incumbent, accuracy, cost, feasible };
+    // Per-layer weight-quantization MSE under the chosen assignment (the
+    // Fig. 5 metric, repurposed as the plan's explanation column).
+    let layer_mse: Vec<f64> =
+        plan.assignment.layers().iter().zip(&mlp.layers).map(|(&s, l)| quant::mse(s, &l.w)).collect();
+    let frontier = pareto_frontier(&ev.log);
+    TuneReport { plan, frontier, reference, budget: cfg.budget, evaluated: ev.cache.len(), rounds, layer_mse }
+}
+
+/// Free-function form of [`Budget::key`] (so start selection can rank by
+/// either objective with one comparator builder).
+fn objective_key(budget: &Budget, accuracy: f64, cost: &NetworkCost) -> (f64, f64) {
+    budget.key(accuracy, cost)
+}
+
+/// Ranking for an unattainable budget: how close an infeasible assignment
+/// comes (lower = closer).
+fn closest_key(budget: &Budget, accuracy: f64, cost: &NetworkCost) -> (f64, f64) {
+    match *budget {
+        Budget::MaxEdp(_) => (cost.edp_pj_ns, -accuracy),
+        Budget::MaxLuts(_) => (cost.luts, -accuracy),
+        Budget::MinAcc(_) => (-accuracy, cost.edp_pj_ns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_parse_round_trips() {
+        assert_eq!(Budget::parse("min-acc=0.95"), Some(Budget::MinAcc(0.95)));
+        assert_eq!(Budget::parse("max-edp=1.5e6"), Some(Budget::MaxEdp(1.5e6)));
+        assert_eq!(Budget::parse("max-luts=40000"), Some(Budget::MaxLuts(40000.0)));
+        assert_eq!(Budget::parse("min-acc"), None);
+        assert_eq!(Budget::parse("max-watts=3"), None);
+    }
+
+    #[test]
+    fn budget_keys_rank_as_documented() {
+        let cheap = NetworkCost {
+            luts: 10.0,
+            ffs: 0.0,
+            dsps: 0.0,
+            energy_pj: 1.0,
+            delay_ns: 1.0,
+            edp_pj_ns: 1.0,
+            max_quire_bits: 10,
+        };
+        let pricey = NetworkCost { edp_pj_ns: 9.0, luts: 90.0, ..cheap };
+        // Accuracy budget: cheaper EDP wins at equal accuracy.
+        assert!(Budget::MinAcc(0.5).key(0.9, &cheap) < Budget::MinAcc(0.5).key(0.9, &pricey));
+        // Cost budget: higher accuracy wins even when pricier.
+        assert!(Budget::MaxEdp(10.0).key(0.95, &pricey) < Budget::MaxEdp(10.0).key(0.9, &cheap));
+    }
+
+    #[test]
+    fn plan_text_round_trips() {
+        let assignment = MixedSpec::parse("posit8es1+float6we3+fixed5q3").unwrap();
+        let dims = vec![4, 10, 8, 3];
+        let cost = network_cost(&assignment, &dims);
+        let plan = TunePlan {
+            dataset: "iris".into(),
+            dims,
+            assignment,
+            accuracy: 0.9667,
+            cost,
+            feasible: true,
+        };
+        let parsed = TunePlan::parse(&plan.to_text()).expect("round trip");
+        assert_eq!(parsed.dataset, plan.dataset);
+        assert_eq!(parsed.dims, plan.dims);
+        assert_eq!(parsed.assignment, plan.assignment);
+        assert!((parsed.accuracy - plan.accuracy).abs() < 1e-9);
+        assert_eq!(parsed.feasible, plan.feasible);
+        // Cost is recomputed, not stored: bit-equal to the cost model.
+        assert_eq!(parsed.cost, plan.cost);
+        // Malformed inputs are rejected, not mis-parsed.
+        assert!(TunePlan::parse("dataset=iris\n").is_none());
+        assert!(TunePlan::parse(&plan.to_text().replace("posit8es1", "bogus9")).is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Property tests over the FPGA cost model — the tuner's hardware axis
+//! (DESIGN.md §10). Two families of guarantees:
+//!
+//! * every swept spec's accumulator width equals the paper's Eq. (2)
+//!   closed form, recomputed here independently from the format's own
+//!   max/min magnitudes;
+//! * LUTs / energy / EDP are monotonically non-decreasing in bit-width `n`
+//!   at fixed family, sub-parameter, and `k` — so a calibration-constant
+//!   regression cannot silently invert the tuner's cost orderings.
+
+use deep_positron::formats::{quire_width_bits, Format, FormatSpec};
+use deep_positron::hw;
+
+const KS: [usize; 5] = [4, 16, 100, 256, 784];
+
+#[test]
+fn quire_bits_match_eq2_closed_form_for_every_swept_spec() {
+    for &k in &KS {
+        for n in 5..=8u32 {
+            for spec in FormatSpec::sweep(n) {
+                let fmt = spec.build();
+                // Eq. (2), recomputed from scratch:
+                //   w_a = ceil(log2 k) + 2·ceil(log2(max/min)) + 2
+                let kk = k.max(2) as f64;
+                let range = (fmt.max_value() / fmt.min_pos()).log2().ceil() as u32;
+                let closed_form = kk.log2().ceil() as u32 + 2 * range + 2;
+                let r = hw::synthesize(spec, k);
+                assert_eq!(r.quire_bits, closed_form, "{spec} at k={k}");
+                assert_eq!(
+                    r.quire_bits,
+                    quire_width_bits(k, fmt.max_value(), fmt.min_pos()),
+                    "{spec} at k={k}: synthesize and quire_width_bits disagree"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quire_bits_are_monotone_in_k() {
+    for n in 5..=8u32 {
+        for spec in FormatSpec::sweep(n) {
+            for w in KS.windows(2) {
+                let small = hw::synthesize(spec, w[0]);
+                let big = hw::synthesize(spec, w[1]);
+                assert!(big.quire_bits >= small.quire_bits, "{spec}: k={} vs k={}", w[0], w[1]);
+            }
+        }
+    }
+}
+
+/// All (family, sub-parameter) chains the sweep contains, as constructors.
+fn chain_spec(family: &str, n: u32, sub: u32) -> FormatSpec {
+    match family {
+        "posit" => FormatSpec::Posit { n, es: sub },
+        "float" => FormatSpec::Float { n, we: sub },
+        "fixed" => FormatSpec::Fixed { n, q: sub },
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn cost_is_monotone_in_bit_width_at_fixed_sub_parameter() {
+    for &k in &[16usize, 784] {
+        for (family, subs) in [("posit", 0u32..=2), ("float", 2..=5), ("fixed", 1..=6)] {
+            for sub in subs {
+                let mut prev: Option<(u32, hw::SynthReport)> = None;
+                for n in 5..=8u32 {
+                    let spec = chain_spec(family, n, sub);
+                    // Only chain through configs the paper actually sweeps
+                    // (e.g. float we=5 first exists at n=7, fixed q ≤ n−2).
+                    if !FormatSpec::sweep(n).contains(&spec) {
+                        continue;
+                    }
+                    let r = hw::synthesize(spec, k);
+                    if let Some((pn, p)) = &prev {
+                        assert!(r.luts >= p.luts, "{family} sub={sub} k={k}: LUTs fell from n={pn} to n={n}");
+                        assert!(
+                            r.energy_pj >= p.energy_pj,
+                            "{family} sub={sub} k={k}: energy fell from n={pn} to n={n}"
+                        );
+                        assert!(
+                            r.edp_pj_ns >= p.edp_pj_ns,
+                            "{family} sub={sub} k={k}: EDP fell from n={pn} to n={n}"
+                        );
+                    }
+                    prev = Some((n, r));
+                }
+                // End-to-end the growth must be strict: an 8-bit EMAC is
+                // never as cheap as the 5/6-bit one of the same config.
+                let first_n = (5..=8u32).find(|&n| FormatSpec::sweep(n).contains(&chain_spec(family, n, sub)));
+                if let (Some(fnn), Some((ln, last))) = (first_n, &prev) {
+                    if fnn < *ln {
+                        let first = hw::synthesize(chain_spec(family, fnn, sub), k);
+                        assert!(last.luts > first.luts, "{family} sub={sub} k={k}: no net LUT growth");
+                        assert!(last.edp_pj_ns > first.edp_pj_ns, "{family} sub={sub} k={k}: no net EDP growth");
+                    }
+                }
+            }
+        }
+    }
+}
