@@ -1,0 +1,587 @@
+//! The typed layer IR the whole stack compiles from (DESIGN.md §11).
+//!
+//! The repository started dense-only: `Mlp` was a bare `Vec` of
+//! fully-connected layers, and every consumer — the EMAC compiler, the
+//! hardware cost model, the tuner, serve-side validation — hard-coded the
+//! dense assumptions (`fan-in == input width`, one EMAC per output). This
+//! module generalizes the network representation into a small typed IR:
+//!
+//! * [`Shape`] — what an activation vector *is* (a flat feature vector, or
+//!   a `C×H×W` image block);
+//! * [`LayerKind`] — what a layer *does* (dense matmul, valid 2-D
+//!   convolution, average pooling, flatten);
+//! * [`LayerGeom`] — one IR node with its inferred input/output shapes,
+//!   from which every derived quantity (receptive-field fan-in, the
+//!   Eq. (2) accumulator length `k`, EMAC bank count, outputs per bank)
+//!   is computed in ONE place;
+//! * [`NetIr`] — the whole network's geometry, serializable
+//!   ([`NetIr::name`] / [`NetIr::parse`]) so tuned deployment plans
+//!   (`crate::tune::TunePlan`) can carry conv topologies through text.
+//!
+//! Deep Positron's dataflow maps onto the IR as in Cheetah (Langroudi et
+//! al., 1908.02386): a dense layer is a bank of `out_dim` EMACs each firing
+//! once per inference; a conv layer is a bank of `out_ch` EMACs each
+//! sweeping its `oh×ow` output pixels, accumulating the `kh·kw·in_ch`
+//! receptive field per pixel in the quire; average pooling reuses the
+//! accumulate-only half of an EMAC (the divide by `k²` is an exact
+//! exponent shift — window areas are constrained to powers of two);
+//! flatten is pure wiring (a recode point under mixed per-layer formats,
+//! otherwise free).
+
+use crate::util::Rng;
+
+/// Spatial interpretation of an activation vector.
+///
+/// The accelerator stores every activation block as a flat, feature-major
+/// code vector; `Shape` is the metadata that says how spatial layers index
+/// into it (`CHW` order: channel-major, then rows, then columns — so
+/// [`Shape::Flat`] of the same length is exactly the flattened view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// A plain feature vector of the given width.
+    Flat(usize),
+    /// A channels × height × width image block, flattened channel-major.
+    Chw {
+        /// Channels.
+        c: usize,
+        /// Height, pixels.
+        h: usize,
+        /// Width, pixels.
+        w: usize,
+    },
+}
+
+impl Shape {
+    /// Total element count (the flat width of the activation vector).
+    pub fn len(&self) -> usize {
+        match *self {
+            Shape::Flat(n) => n,
+            Shape::Chw { c, h, w } => c * h * w,
+        }
+    }
+
+    /// Whether the shape holds no elements (never true for a valid layer).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spatial dims `(h, w)` of a `C×H×W` block. Panics on a flat shape —
+    /// only spatial layers (conv/pool) ask, and shape inference has already
+    /// rejected flat inputs for them.
+    pub fn hw(&self) -> (usize, usize) {
+        match *self {
+            Shape::Chw { h, w, .. } => (h, w),
+            Shape::Flat(_) => panic!("spatial access on a flat shape"),
+        }
+    }
+
+    /// Channel count of a `C×H×W` block (panics on a flat shape, as
+    /// [`Shape::hw`]).
+    pub fn channels(&self) -> usize {
+        match *self {
+            Shape::Chw { c, .. } => c,
+            Shape::Flat(_) => panic!("spatial access on a flat shape"),
+        }
+    }
+
+    /// Machine name: `784` for flat, `1x28x28` for C×H×W (parseable by
+    /// [`Shape::parse`]).
+    pub fn name(&self) -> String {
+        match *self {
+            Shape::Flat(n) => n.to_string(),
+            Shape::Chw { c, h, w } => format!("{c}x{h}x{w}"),
+        }
+    }
+
+    /// Parse the [`Shape::name`] form.
+    pub fn parse(s: &str) -> Option<Shape> {
+        let parts: Vec<&str> = s.split('x').collect();
+        match parts.as_slice() {
+            [n] => Some(Shape::Flat(n.parse().ok()?)),
+            [c, h, w] => Some(Shape::Chw { c: c.parse().ok()?, h: h.parse().ok()?, w: w.parse().ok()? }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// What one IR node computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Fully-connected: `out = W·in + b` (weights row-major `[out][in]`).
+    Dense,
+    /// Valid (no-padding) 2-D convolution, weights `[out_ch][in_ch][kh][kw]`
+    /// flattened row-major, one bias per output channel.
+    Conv2d {
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Stride (same in both spatial dims).
+        stride: usize,
+        /// Input channels (must match the input shape's `c`).
+        in_ch: usize,
+        /// Output channels.
+        out_ch: usize,
+    },
+    /// Per-channel average pooling over `k×k` windows. `k` must be a power
+    /// of two so the divide by `k²` is an exact exponent shift in the quire
+    /// (the datapaths never need a real divider).
+    AvgPool {
+        /// Window side length (power of two).
+        k: usize,
+        /// Stride.
+        stride: usize,
+    },
+    /// Shape cast `C×H×W → Flat` — pure wiring (CHW flattening is the
+    /// identity on the underlying vector), and a recode point when the next
+    /// layer runs in a different numeric format.
+    Flatten,
+}
+
+impl LayerKind {
+    /// Whether this node carries trainable parameters (weights + biases).
+    pub fn has_weights(&self) -> bool {
+        matches!(self, LayerKind::Dense | LayerKind::Conv2d { .. })
+    }
+
+    /// Output shape for the given input shape. `None` when the input is
+    /// incompatible — or for [`LayerKind::Dense`], whose output width is
+    /// free (callers supply it; see [`LayerGeom::infer`]).
+    pub fn infer(&self, input: Shape) -> Option<Shape> {
+        match *self {
+            LayerKind::Dense => None,
+            LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                let Shape::Chw { c, h, w } = input else { return None };
+                if c != in_ch || kh == 0 || kw == 0 || stride == 0 || out_ch == 0 || h < kh || w < kw {
+                    return None;
+                }
+                Some(Shape::Chw { c: out_ch, h: (h - kh) / stride + 1, w: (w - kw) / stride + 1 })
+            }
+            LayerKind::AvgPool { k, stride } => {
+                let Shape::Chw { c, h, w } = input else { return None };
+                if k == 0 || !k.is_power_of_two() || stride == 0 || h < k || w < k {
+                    return None;
+                }
+                Some(Shape::Chw { c, h: (h - k) / stride + 1, w: (w - k) / stride + 1 })
+            }
+            LayerKind::Flatten => Some(Shape::Flat(input.len())),
+        }
+    }
+}
+
+/// One IR node with its inferred shapes — the unit every derived geometry
+/// question (fan-in, Eq. (2) `k`, EMAC banks, latency) is answered from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerGeom {
+    /// What the node computes.
+    pub kind: LayerKind,
+    /// Shape of the incoming activation block.
+    pub in_shape: Shape,
+    /// Shape of the produced activation block.
+    pub out_shape: Shape,
+}
+
+impl LayerGeom {
+    /// Build a node, inferring the output shape. For [`LayerKind::Dense`]
+    /// the free output width comes from `dense_out` (ignored otherwise).
+    /// `None` when the kind rejects the input shape.
+    pub fn infer(kind: LayerKind, in_shape: Shape, dense_out: usize) -> Option<LayerGeom> {
+        let out_shape = match kind {
+            LayerKind::Dense => {
+                if in_shape.is_empty() || dense_out == 0 {
+                    return None;
+                }
+                Shape::Flat(dense_out)
+            }
+            _ => kind.infer(in_shape)?,
+        };
+        Some(LayerGeom { kind, in_shape, out_shape })
+    }
+
+    /// Dot-product length each output element accumulates — the
+    /// receptive-field fan-in. Dense: the input width; conv:
+    /// `kh·kw·in_ch`; pool: the `k²` window; flatten: 0 (no arithmetic).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.in_shape.len(),
+            LayerKind::Conv2d { kh, kw, in_ch, .. } => kh * kw * in_ch,
+            LayerKind::AvgPool { k, .. } => k * k,
+            LayerKind::Flatten => 0,
+        }
+    }
+
+    /// The Eq. (2) accumulation length `k` the layer's quire must absorb:
+    /// the receptive-field fan-in plus one bias term for weighted layers.
+    /// This is exactly what `DeepPositron` asserts the quire against at
+    /// compile time and what the hardware costing sizes the accumulator
+    /// for — a 26-term conv EMAC no longer pays for a 784-term quire.
+    pub fn eq2_k(&self) -> usize {
+        self.fan_in() + usize::from(self.kind.has_weights())
+    }
+
+    /// Parallel EMAC units the layer's bank instantiates: one per output
+    /// neuron (dense), one per output channel (conv — each unit sweeps its
+    /// own output pixels), one accumulate-only unit per channel (pool),
+    /// none for flatten.
+    pub fn banks(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.out_shape.len(),
+            LayerKind::Conv2d { out_ch, .. } => out_ch,
+            LayerKind::AvgPool { .. } => match self.out_shape {
+                Shape::Chw { c, .. } => c,
+                Shape::Flat(_) => 0,
+            },
+            LayerKind::Flatten => 0,
+        }
+    }
+
+    /// Output elements each EMAC of the bank produces serially per
+    /// inference (1 for dense; `oh·ow` for conv/pool; 0 for flatten).
+    pub fn outputs_per_bank(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => 1,
+            LayerKind::Conv2d { .. } | LayerKind::AvgPool { .. } => match self.out_shape {
+                Shape::Chw { h, w, .. } => h * w,
+                Shape::Flat(n) => n,
+            },
+            LayerKind::Flatten => 0,
+        }
+    }
+
+    /// Trainable weight count (0 for weightless nodes).
+    pub fn num_weights(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.in_shape.len() * self.out_shape.len(),
+            LayerKind::Conv2d { kh, kw, in_ch, out_ch, .. } => out_ch * in_ch * kh * kw,
+            _ => 0,
+        }
+    }
+
+    /// Trainable bias count (0 for weightless nodes).
+    pub fn num_biases(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.out_shape.len(),
+            LayerKind::Conv2d { out_ch, .. } => out_ch,
+            _ => 0,
+        }
+    }
+
+    /// Short kind label for reports: `dense`, `conv`, `pool`, `flatten`.
+    pub fn kind_label(&self) -> &'static str {
+        match self.kind {
+            LayerKind::Dense => "dense",
+            LayerKind::Conv2d { .. } => "conv",
+            LayerKind::AvgPool { .. } => "pool",
+            LayerKind::Flatten => "flatten",
+        }
+    }
+
+    /// Machine node name (parseable by [`NetIr::parse`]): `dense10`,
+    /// `conv4k5x5s2`, `pool2s2`, `flatten`.
+    pub fn node_name(&self) -> String {
+        match self.kind {
+            LayerKind::Dense => format!("dense{}", self.out_shape.len()),
+            LayerKind::Conv2d { kh, kw, stride, out_ch, .. } => format!("conv{out_ch}k{kh}x{kw}s{stride}"),
+            LayerKind::AvgPool { k, stride } => format!("pool{k}s{stride}"),
+            LayerKind::Flatten => "flatten".to_string(),
+        }
+    }
+}
+
+/// The whole network's layer geometry: one [`LayerGeom`] per layer, with a
+/// validated shape chain. This is what the hardware costing
+/// (`crate::tune::cost::network_cost_ir`), serve-side shard validation, and
+/// `TunePlan` serialization consume — derived from a trained network via
+/// `Mlp::ir`, or parsed back from text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetIr {
+    geoms: Vec<LayerGeom>,
+}
+
+impl NetIr {
+    /// Wrap a validated node list. Panics on an empty list or a broken
+    /// shape chain (use [`NetIr::try_new`] for a fallible version).
+    pub fn new(geoms: Vec<LayerGeom>) -> NetIr {
+        match NetIr::try_new(geoms) {
+            Ok(ir) => ir,
+            Err(e) => panic!("invalid layer IR: {e}"),
+        }
+    }
+
+    /// Fallible [`NetIr::new`]: returns the chain-validation error instead
+    /// of panicking.
+    pub fn try_new(geoms: Vec<LayerGeom>) -> Result<NetIr, String> {
+        let ir = NetIr { geoms };
+        ir.check()?;
+        Ok(ir)
+    }
+
+    /// The classic dense-only chain for layer widths
+    /// `dims = [in, h1, ..., out]`.
+    pub fn dense(dims: &[usize]) -> NetIr {
+        assert!(dims.len() >= 2, "dense IR needs [in, out] at least");
+        let geoms = dims
+            .windows(2)
+            .map(|d| LayerGeom {
+                kind: LayerKind::Dense,
+                in_shape: Shape::Flat(d[0]),
+                out_shape: Shape::Flat(d[1]),
+            })
+            .collect();
+        NetIr::new(geoms)
+    }
+
+    /// Validate the shape chain: non-empty, every node's inferred output
+    /// matches its stored one, adjacent flat widths agree, and spatial
+    /// consumers (conv/pool) see exactly the `C×H×W` block their geometry
+    /// was built for.
+    pub fn check(&self) -> Result<(), String> {
+        if self.geoms.is_empty() {
+            return Err("network has no layers".into());
+        }
+        for (li, g) in self.geoms.iter().enumerate() {
+            if g.in_shape.is_empty() || g.out_shape.is_empty() {
+                return Err(format!("layer {li} ({}) has an empty shape", g.node_name()));
+            }
+            match g.kind {
+                LayerKind::Dense => {}
+                _ => {
+                    if g.kind.infer(g.in_shape) != Some(g.out_shape) {
+                        return Err(format!("layer {li} ({}) shape inference mismatch", g.node_name()));
+                    }
+                }
+            }
+        }
+        for (li, pair) in self.geoms.windows(2).enumerate() {
+            let (a, b) = (&pair[0], &pair[1]);
+            if a.out_shape.len() != b.in_shape.len() {
+                return Err(format!(
+                    "layer {li} produces {} elements but layer {} expects {}",
+                    a.out_shape.len(),
+                    li + 1,
+                    b.in_shape.len()
+                ));
+            }
+            let spatial = matches!(b.kind, LayerKind::Conv2d { .. } | LayerKind::AvgPool { .. });
+            if spatial && a.out_shape != b.in_shape {
+                return Err(format!(
+                    "layer {} needs block {} but layer {li} produces {}",
+                    li + 1,
+                    b.in_shape,
+                    a.out_shape
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-layer nodes, input-first.
+    pub fn geoms(&self) -> &[LayerGeom] {
+        &self.geoms
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.geoms.len()
+    }
+
+    /// Always false (constructors reject empty chains).
+    pub fn is_empty(&self) -> bool {
+        self.geoms.is_empty()
+    }
+
+    /// The network's input shape.
+    pub fn input(&self) -> Shape {
+        self.geoms[0].in_shape
+    }
+
+    /// The network's output shape.
+    pub fn output(&self) -> Shape {
+        self.geoms.last().expect("IR has layers").out_shape
+    }
+
+    /// Flat layer widths `[in, l1, ..., out]` — the dense-era view, still
+    /// what buffers are sized from.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.geoms[0].in_shape.len()];
+        d.extend(self.geoms.iter().map(|g| g.out_shape.len()));
+        d
+    }
+
+    /// Whether every node is [`LayerKind::Dense`] (the XLA fast path and
+    /// the pre-IR serialization cover exactly this case).
+    pub fn is_dense(&self) -> bool {
+        self.geoms.iter().all(|g| g.kind == LayerKind::Dense)
+    }
+
+    /// Machine name: `<input shape>:<node>+<node>+...`, e.g.
+    /// `1x28x28:conv4k5x5s2+pool2s2+flatten+dense10` (parseable by
+    /// [`NetIr::parse`]).
+    pub fn name(&self) -> String {
+        let nodes: Vec<String> = self.geoms.iter().map(LayerGeom::node_name).collect();
+        format!("{}:{}", self.input().name(), nodes.join("+"))
+    }
+
+    /// Parse the [`NetIr::name`] form, re-running shape inference node by
+    /// node. `None` on any malformed node or inference failure.
+    pub fn parse(s: &str) -> Option<NetIr> {
+        let (input, nodes) = s.split_once(':')?;
+        let mut shape = Shape::parse(input)?;
+        let mut geoms = Vec::new();
+        for node in nodes.split('+') {
+            let geom = parse_node(node, shape)?;
+            shape = geom.out_shape;
+            geoms.push(geom);
+        }
+        if geoms.is_empty() {
+            return None;
+        }
+        let ir = NetIr { geoms };
+        ir.check().ok()?;
+        Some(ir)
+    }
+}
+
+impl std::fmt::Display for NetIr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Parse one `dense10` / `conv4k5x5s2` / `pool2s2` / `flatten` node against
+/// the current input shape.
+fn parse_node(node: &str, in_shape: Shape) -> Option<LayerGeom> {
+    if node == "flatten" {
+        return LayerGeom::infer(LayerKind::Flatten, in_shape, 0);
+    }
+    if let Some(rest) = node.strip_prefix("dense") {
+        let out: usize = rest.parse().ok()?;
+        return LayerGeom::infer(LayerKind::Dense, in_shape, out);
+    }
+    if let Some(rest) = node.strip_prefix("conv") {
+        // conv<out_ch>k<kh>x<kw>s<stride>
+        let (out_ch, rest) = rest.split_once('k')?;
+        let (kh, rest) = rest.split_once('x')?;
+        let (kw, stride) = rest.split_once('s')?;
+        let in_ch = match in_shape {
+            Shape::Chw { c, .. } => c,
+            Shape::Flat(_) => return None,
+        };
+        let kind = LayerKind::Conv2d {
+            kh: kh.parse().ok()?,
+            kw: kw.parse().ok()?,
+            stride: stride.parse().ok()?,
+            in_ch,
+            out_ch: out_ch.parse().ok()?,
+        };
+        return LayerGeom::infer(kind, in_shape, 0);
+    }
+    if let Some(rest) = node.strip_prefix("pool") {
+        let (k, stride) = rest.split_once('s')?;
+        let kind = LayerKind::AvgPool { k: k.parse().ok()?, stride: stride.parse().ok()? };
+        return LayerGeom::infer(kind, in_shape, 0);
+    }
+    None
+}
+
+/// He-initialized weights for a layer with the given fan-in (the same
+/// initializer the dense-only substrate always used).
+pub(crate) fn he_init(fan_in: usize, count: usize, rng: &mut Rng) -> Vec<f64> {
+    let std = (2.0 / fan_in as f64).sqrt();
+    (0..count).map(|_| rng.normal(0.0, std)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MNIST_IN: Shape = Shape::Chw { c: 1, h: 28, w: 28 };
+
+    fn conv_ir() -> NetIr {
+        let conv = LayerGeom::infer(LayerKind::Conv2d { kh: 5, kw: 5, stride: 2, in_ch: 1, out_ch: 4 }, MNIST_IN, 0)
+            .unwrap();
+        let pool = LayerGeom::infer(LayerKind::AvgPool { k: 2, stride: 2 }, conv.out_shape, 0).unwrap();
+        let flat = LayerGeom::infer(LayerKind::Flatten, pool.out_shape, 0).unwrap();
+        let dense = LayerGeom::infer(LayerKind::Dense, flat.out_shape, 10).unwrap();
+        NetIr::new(vec![conv, pool, flat, dense])
+    }
+
+    #[test]
+    fn shape_inference_on_the_conv_mnist_net() {
+        let ir = conv_ir();
+        assert_eq!(ir.dims(), vec![784, 576, 144, 144, 10]);
+        assert_eq!(ir.geoms()[0].out_shape, Shape::Chw { c: 4, h: 12, w: 12 });
+        assert_eq!(ir.geoms()[1].out_shape, Shape::Chw { c: 4, h: 6, w: 6 });
+        assert_eq!(ir.output(), Shape::Flat(10));
+        assert!(!ir.is_dense());
+    }
+
+    #[test]
+    fn eq2_k_follows_the_receptive_field_not_the_input_width() {
+        let ir = conv_ir();
+        // conv: 5·5·1 products + 1 bias — NOT the 784-wide input.
+        assert_eq!(ir.geoms()[0].eq2_k(), 26);
+        assert_eq!(ir.geoms()[1].eq2_k(), 4); // 2×2 window, no bias
+        assert_eq!(ir.geoms()[2].eq2_k(), 0); // flatten: wiring only
+        assert_eq!(ir.geoms()[3].eq2_k(), 145); // 144 products + bias
+    }
+
+    #[test]
+    fn banks_and_outputs_per_bank() {
+        let ir = conv_ir();
+        assert_eq!(ir.geoms()[0].banks(), 4);
+        assert_eq!(ir.geoms()[0].outputs_per_bank(), 144);
+        assert_eq!(ir.geoms()[1].banks(), 4);
+        assert_eq!(ir.geoms()[1].outputs_per_bank(), 36);
+        assert_eq!(ir.geoms()[2].banks(), 0);
+        assert_eq!(ir.geoms()[3].banks(), 10);
+        assert_eq!(ir.geoms()[3].outputs_per_bank(), 1);
+    }
+
+    #[test]
+    fn ir_name_round_trips() {
+        let ir = conv_ir();
+        assert_eq!(ir.name(), "1x28x28:conv4k5x5s2+pool2s2+flatten+dense10");
+        assert_eq!(NetIr::parse(&ir.name()), Some(ir));
+        let dense = NetIr::dense(&[30, 16, 8, 2]);
+        assert_eq!(dense.name(), "30:dense16+dense8+dense2");
+        assert_eq!(NetIr::parse(&dense.name()), Some(dense.clone()));
+        assert!(dense.is_dense());
+        assert_eq!(dense.dims(), vec![30, 16, 8, 2]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_chains() {
+        assert!(NetIr::parse("784:").is_none());
+        assert!(NetIr::parse("784:conv4k5x5s2").is_none(), "conv needs a CHW input");
+        assert!(NetIr::parse("1x28x28:pool3s3").is_none(), "pool window must be a power of two");
+        assert!(NetIr::parse("1x28x28:conv4k5x5s0").is_none(), "stride 0");
+        assert!(NetIr::parse("1x28x28:dense0").is_none());
+        assert!(NetIr::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn avg_pool_window_must_be_power_of_two() {
+        let kind = LayerKind::AvgPool { k: 3, stride: 1 };
+        assert_eq!(kind.infer(Shape::Chw { c: 1, h: 8, w: 8 }), None);
+        let kind = LayerKind::AvgPool { k: 4, stride: 4 };
+        assert_eq!(kind.infer(Shape::Chw { c: 2, h: 8, w: 8 }), Some(Shape::Chw { c: 2, h: 2, w: 2 }));
+    }
+
+    #[test]
+    fn dense_ir_matches_dense_geometry() {
+        let ir = NetIr::dense(&[4, 10, 3]);
+        for (g, (fan_in, out)) in ir.geoms().iter().zip([(4usize, 10usize), (10, 3)]) {
+            assert_eq!(g.fan_in(), fan_in);
+            assert_eq!(g.eq2_k(), fan_in + 1);
+            assert_eq!(g.banks(), out);
+            assert_eq!(g.outputs_per_bank(), 1);
+        }
+    }
+}

@@ -1,86 +1,288 @@
-//! Plain feedforward MLP substrate: 64-bit float reference forward pass and
-//! an SGD-with-momentum trainer (softmax cross-entropy).
+//! Plain feedforward network substrate over the typed layer IR
+//! ([`crate::accel::ir`]): 64-bit float reference forward pass and an
+//! SGD-with-momentum trainer (softmax cross-entropy) for dense, conv2d,
+//! average-pool, and flatten layers.
 //!
 //! This is the "trained with 32-bit floating point" baseline of the paper's
 //! Table 1 (we train in f64 — bit-identical conclusions at these scales, and
 //! the quantization experiments only consume the resulting weights). The
-//! same training math is AOT-compiled to HLO by `python/compile/model.py`;
-//! the Rust trainer is the dependency-free substrate used by tests and the
-//! tabular tasks, and cross-validates the artifact path.
+//! same training math is AOT-compiled to HLO by `python/compile/model.py`
+//! for the dense topologies; the Rust trainer is the dependency-free
+//! substrate used by tests and the tabular tasks, cross-validates the
+//! artifact path, and is the only trainer for the conv topologies
+//! (DESIGN.md §11).
 
+use crate::accel::ir::{he_init, LayerGeom, LayerKind, NetIr, Shape};
 use crate::datasets::Dataset;
 use crate::util::Rng;
 
-/// One dense layer: row-major `w[out][in]`, bias `b[out]`.
+/// One network layer: its IR node plus (for weighted kinds) parameters.
+///
+/// Layout: dense weights are row-major `w[out][in]`; conv weights are
+/// `w[out_ch][in_ch][kh][kw]` flattened row-major with one bias per output
+/// channel; pool/flatten carry no parameters (`w`/`b` empty).
 #[derive(Debug, Clone)]
 pub struct Layer {
-    /// Input width (fan-in).
+    /// Flat input width (`in_shape.len()`).
     pub in_dim: usize,
-    /// Output width (fan-out).
+    /// Flat output width (`out_shape.len()`).
     pub out_dim: usize,
-    /// Weights, row-major `w[out][in]`.
+    /// Weights (see layout note above; empty for weightless kinds).
     pub w: Vec<f64>,
-    /// Biases, `b[out]`.
+    /// Biases, one per output neuron (dense) or output channel (conv);
+    /// empty for weightless kinds.
     pub b: Vec<f64>,
+    /// What this layer computes.
+    pub kind: LayerKind,
+    /// Shape of the incoming activation block.
+    pub in_shape: Shape,
+    /// Shape of the produced activation block.
+    pub out_shape: Shape,
 }
 
-/// A feedforward network with ReLU hidden activations and linear output
-/// (softmax applied in the loss), matching Deep Positron's dataflow.
+impl Layer {
+    /// He-initialized dense layer `in_dim → out_dim`.
+    pub fn dense(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Layer {
+        Layer::dense_with(in_dim, out_dim, he_init(in_dim, in_dim * out_dim, rng), vec![0.0; out_dim])
+    }
+
+    /// Dense layer from explicit parameters (the PJRT state importer uses
+    /// this). `w` must be row-major `[out][in]`.
+    pub fn dense_with(in_dim: usize, out_dim: usize, w: Vec<f64>, b: Vec<f64>) -> Layer {
+        assert_eq!(w.len(), in_dim * out_dim);
+        assert_eq!(b.len(), out_dim);
+        Layer {
+            in_dim,
+            out_dim,
+            w,
+            b,
+            kind: LayerKind::Dense,
+            in_shape: Shape::Flat(in_dim),
+            out_shape: Shape::Flat(out_dim),
+        }
+    }
+
+    /// He-initialized valid 2-D convolution over a `C×H×W` input block.
+    pub fn conv2d(in_shape: Shape, out_ch: usize, kh: usize, kw: usize, stride: usize, rng: &mut Rng) -> Layer {
+        let in_ch = match in_shape {
+            Shape::Chw { c, .. } => c,
+            Shape::Flat(_) => panic!("conv2d needs a CxHxW input shape"),
+        };
+        let kind = LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch };
+        let geom = LayerGeom::infer(kind, in_shape, 0).expect("conv2d shape inference failed");
+        Layer {
+            in_dim: in_shape.len(),
+            out_dim: geom.out_shape.len(),
+            w: he_init(kh * kw * in_ch, geom.num_weights(), rng),
+            b: vec![0.0; out_ch],
+            kind,
+            in_shape,
+            out_shape: geom.out_shape,
+        }
+    }
+
+    /// Per-channel average pooling over `k×k` windows (k a power of two —
+    /// the exact-datapath constraint, see [`LayerKind::AvgPool`]).
+    pub fn avg_pool(in_shape: Shape, k: usize, stride: usize) -> Layer {
+        let kind = LayerKind::AvgPool { k, stride };
+        let geom = LayerGeom::infer(kind, in_shape, 0).expect("avg_pool shape inference failed");
+        Layer {
+            in_dim: in_shape.len(),
+            out_dim: geom.out_shape.len(),
+            w: Vec::new(),
+            b: Vec::new(),
+            kind,
+            in_shape,
+            out_shape: geom.out_shape,
+        }
+    }
+
+    /// Shape cast `C×H×W → Flat` (identity on the underlying vector).
+    pub fn flatten(in_shape: Shape) -> Layer {
+        let n = in_shape.len();
+        Layer {
+            in_dim: n,
+            out_dim: n,
+            w: Vec::new(),
+            b: Vec::new(),
+            kind: LayerKind::Flatten,
+            in_shape,
+            out_shape: Shape::Flat(n),
+        }
+    }
+
+    /// The layer's IR node.
+    pub fn geom(&self) -> LayerGeom {
+        LayerGeom { kind: self.kind, in_shape: self.in_shape, out_shape: self.out_shape }
+    }
+
+    /// Receptive-field fan-in — the dot-product length per output element
+    /// (see [`LayerGeom::fan_in`]).
+    pub fn fan_in(&self) -> usize {
+        self.geom().fan_in()
+    }
+
+    /// The Eq. (2) accumulation length `k` (fan-in + bias term for weighted
+    /// kinds) the layer's quire must absorb.
+    pub fn eq2_k(&self) -> usize {
+        self.geom().eq2_k()
+    }
+
+    /// Forward one activation vector through this layer (f64 reference
+    /// semantics; `relu` clamps negative outputs for hidden weighted
+    /// layers).
+    pub fn forward_f64(&self, input: &[f64], relu: bool) -> Vec<f64> {
+        debug_assert_eq!(input.len(), self.in_dim);
+        match self.kind {
+            LayerKind::Dense => {
+                let mut next = vec![0.0; self.out_dim];
+                for o in 0..self.out_dim {
+                    let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                    let mut acc = self.b[o];
+                    for (wi, ai) in row.iter().zip(input) {
+                        acc += wi * ai;
+                    }
+                    next[o] = if relu { acc.max(0.0) } else { acc };
+                }
+                next
+            }
+            LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                let (ih, iw) = self.in_shape.hw();
+                let (oh, ow) = self.out_shape.hw();
+                let mut next = vec![0.0; self.out_dim];
+                for oc in 0..out_ch {
+                    let wrow = &self.w[oc * in_ch * kh * kw..(oc + 1) * in_ch * kh * kw];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc = self.b[oc];
+                            for ic in 0..in_ch {
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                        acc += wrow[ic * kh * kw + ky * kw + kx] * input[i];
+                                    }
+                                }
+                            }
+                            next[oc * oh * ow + oy * ow + ox] = if relu { acc.max(0.0) } else { acc };
+                        }
+                    }
+                }
+                next
+            }
+            LayerKind::AvgPool { k, stride } => {
+                let (ih, iw) = self.in_shape.hw();
+                let (oh, ow) = self.out_shape.hw();
+                let c = self.in_shape.channels();
+                let area = (k * k) as f64;
+                let mut next = vec![0.0; self.out_dim];
+                for ch in 0..c {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc = 0.0;
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    acc += input[ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx)];
+                                }
+                            }
+                            next[ch * oh * ow + oy * ow + ox] = acc / area;
+                        }
+                    }
+                }
+                next
+            }
+            LayerKind::Flatten => input.to_vec(),
+        }
+    }
+}
+
+/// A feedforward network over the typed layer IR, with ReLU hidden
+/// activations on weighted layers and a linear output (softmax applied in
+/// the loss), matching Deep Positron's dataflow. Dense-only networks are
+/// exactly the pre-IR `Mlp`.
 #[derive(Debug, Clone)]
 pub struct Mlp {
-    /// Dense layers, input-first.
+    /// Layers, input-first.
     pub layers: Vec<Layer>,
 }
 
 impl Mlp {
-    /// He-initialized network: dims = [in, h1, ..., out].
+    /// He-initialized dense network: dims = [in, h1, ..., out].
     pub fn new(dims: &[usize], rng: &mut Rng) -> Mlp {
         assert!(dims.len() >= 2);
-        let layers = dims
-            .windows(2)
-            .map(|d| {
-                let (fan_in, fan_out) = (d[0], d[1]);
-                let std = (2.0 / fan_in as f64).sqrt();
-                Layer {
-                    in_dim: fan_in,
-                    out_dim: fan_out,
-                    w: (0..fan_in * fan_out).map(|_| rng.normal(0.0, std)).collect(),
-                    b: vec![0.0; fan_out],
-                }
-            })
-            .collect();
+        let layers = dims.windows(2).map(|d| Layer::dense(d[0], d[1], rng)).collect();
         Mlp { layers }
     }
 
-    /// Layer widths, `[in, h1, ..., out]`.
+    /// A network from an explicit layer chain (the conv-capable
+    /// constructor). Panics on a broken shape chain.
+    pub fn from_layers(layers: Vec<Layer>) -> Mlp {
+        let mlp = Mlp { layers };
+        if let Err(e) = mlp.check_shapes() {
+            panic!("invalid layer chain: {e}");
+        }
+        mlp
+    }
+
+    /// Validate the layer chain's shape inference (see [`NetIr::check`]).
+    pub fn check_shapes(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("network has no layers".into());
+        }
+        for (li, l) in self.layers.iter().enumerate() {
+            let g = l.geom();
+            if l.in_dim != l.in_shape.len() || l.out_dim != l.out_shape.len() {
+                return Err(format!("layer {li}: dims disagree with shapes"));
+            }
+            if l.w.len() != g.num_weights() || l.b.len() != g.num_biases() {
+                return Err(format!("layer {li} ({}): parameter count disagrees with geometry", g.node_name()));
+            }
+        }
+        NetIr::try_new(self.layers.iter().map(Layer::geom).collect())?;
+        Ok(())
+    }
+
+    /// The network's typed IR (geometry only — what costing, serving
+    /// validation, and plan serialization consume).
+    pub fn ir(&self) -> NetIr {
+        NetIr::new(self.layers.iter().map(Layer::geom).collect())
+    }
+
+    /// Whether every layer is dense (the XLA fast path covers exactly this).
+    pub fn is_dense(&self) -> bool {
+        self.layers.iter().all(|l| l.kind == LayerKind::Dense)
+    }
+
+    /// Whether layer `li` applies ReLU at its output: weighted hidden
+    /// layers do; the output layer and weightless wiring (pool/flatten)
+    /// never do. Dense-only networks reduce to the classic
+    /// `li < last` rule.
+    pub fn relu_at(&self, li: usize) -> bool {
+        self.layers[li].kind.has_weights() && li + 1 < self.layers.len()
+    }
+
+    /// Flat layer widths, `[in, l1, ..., out]`.
     pub fn dims(&self) -> Vec<usize> {
         let mut d: Vec<usize> = vec![self.layers[0].in_dim];
         d.extend(self.layers.iter().map(|l| l.out_dim));
         d
     }
 
-    /// Largest layer fan-in — the Eq. (2) dot-product length `k` a deployed
-    /// accelerator must size its accumulator for. The hardware sweeps and
-    /// the per-layer tuner costing ([`crate::tune`]) derive `k` from this
-    /// instead of the blanket MNIST-sized [`crate::hw::DEFAULT_K`].
+    /// Largest Eq. (2) dot-product length any layer presents — the
+    /// receptive-field fan-in a deployed accelerator must size its
+    /// accumulator for (a conv layer contributes `kh·kw·in_ch`, NOT its
+    /// flat input width). The hardware sweeps and the per-layer tuner
+    /// costing ([`crate::tune`]) derive `k` from this instead of the
+    /// blanket MNIST-sized [`crate::hw::DEFAULT_K`]. Dense layers
+    /// contribute their input width, so dense-only networks are unchanged.
     pub fn max_fan_in(&self) -> usize {
-        self.layers.iter().map(|l| l.in_dim).max().expect("mlp has layers")
+        self.layers.iter().map(Layer::fan_in).max().expect("mlp has layers")
     }
 
     /// Forward pass of one sample; returns the pre-softmax logits.
     pub fn forward(&self, x: &[f64]) -> Vec<f64> {
         let mut act = x.to_vec();
         for (li, layer) in self.layers.iter().enumerate() {
-            let mut next = vec![0.0; layer.out_dim];
-            for o in 0..layer.out_dim {
-                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
-                let mut acc = layer.b[o];
-                for (wi, ai) in row.iter().zip(&act) {
-                    acc += wi * ai;
-                }
-                next[o] = if li + 1 < self.layers.len() { acc.max(0.0) } else { acc };
-            }
-            act = next;
+            act = layer.forward_f64(&act, self.relu_at(li));
         }
         act
     }
@@ -98,13 +300,18 @@ impl Mlp {
     }
 
     /// All parameter tensors, named, for the quantization-error analysis
-    /// (Fig. 5's rows; "dense" = fully-connected layer, per the paper).
+    /// (Fig. 5's rows; "dense" = fully-connected layer, per the paper —
+    /// conv layers report as `conv{i}`; weightless layers carry no
+    /// tensors).
     pub fn named_tensors(&self) -> Vec<crate::quant::NamedTensor> {
         let mut out = Vec::new();
         for (i, l) in self.layers.iter().enumerate() {
+            if !l.kind.has_weights() {
+                continue;
+            }
             let mut data = l.w.clone();
             data.extend_from_slice(&l.b);
-            out.push(crate::quant::NamedTensor { name: format!("dense{}", i + 1), data });
+            out.push(crate::quant::NamedTensor { name: format!("{}{}", l.geom().kind_label(), i + 1), data });
         }
         // The paper's "avg" column: all parameters pooled.
         let mut all = Vec::new();
@@ -122,9 +329,11 @@ impl Mlp {
 /// `Σ w·(x−μ)/σ + b  =  Σ (w/σ)·x + (b − Σ (w/σ)·μ)`.
 /// This is the standard deployment transform — and the source of the
 /// paper's WDBC dynamic-range stress: raw-scale inputs force tiny
-/// first-layer weights that narrow formats cannot represent.
+/// first-layer weights that narrow formats cannot represent. Dense input
+/// layers only (the image tasks train on raw pixels).
 pub fn fold_input_normalization(mlp: &mut Mlp, means: &[f64], stds: &[f64]) {
     let l0 = &mut mlp.layers[0];
+    assert_eq!(l0.kind, LayerKind::Dense, "normalization folding needs a dense input layer");
     assert_eq!(means.len(), l0.in_dim);
     for o in 0..l0.out_dim {
         let row = &mut l0.w[o * l0.in_dim..(o + 1) * l0.in_dim];
@@ -172,14 +381,13 @@ impl Default for TrainConfig {
 }
 
 /// Train with SGD + momentum on softmax cross-entropy. Returns the
-/// per-epoch mean training loss (the "loss curve").
+/// per-epoch mean training loss (the "loss curve"). Works for any layer
+/// chain the IR admits; dense-only training is numerically identical to
+/// the pre-IR trainer.
 pub fn train(mlp: &mut Mlp, ds: &Dataset, cfg: &TrainConfig) -> Vec<f64> {
     let mut rng = Rng::new(cfg.seed);
-    let mut vel: Vec<Layer> = mlp
-        .layers
-        .iter()
-        .map(|l| Layer { in_dim: l.in_dim, out_dim: l.out_dim, w: vec![0.0; l.w.len()], b: vec![0.0; l.b.len()] })
-        .collect();
+    let mut vel: Vec<Layer> =
+        mlp.layers.iter().map(|l| Layer { w: vec![0.0; l.w.len()], b: vec![0.0; l.b.len()], ..l.clone() }).collect();
     let n = ds.train_len();
     let mut order: Vec<usize> = (0..n).collect();
     let mut curve = Vec::with_capacity(cfg.epochs);
@@ -194,6 +402,93 @@ pub fn train(mlp: &mut Mlp, ds: &Dataset, cfg: &TrainConfig) -> Vec<f64> {
     curve
 }
 
+/// Accumulate one sample's parameter gradients for `layer` and (when
+/// `want_input_delta`) return the loss gradient w.r.t. the layer's input.
+/// `delta` is the gradient w.r.t. this layer's (pre-ReLU) output.
+fn backward_layer(
+    layer: &Layer,
+    prev: &[f64],
+    delta: &[f64],
+    gw: &mut [f64],
+    gb: &mut [f64],
+    want_input_delta: bool,
+) -> Option<Vec<f64>> {
+    match layer.kind {
+        LayerKind::Dense => {
+            for o in 0..layer.out_dim {
+                let d = delta[o];
+                gb[o] += d;
+                let grow = &mut gw[o * layer.in_dim..(o + 1) * layer.in_dim];
+                for (g, &a) in grow.iter_mut().zip(prev) {
+                    *g += d * a;
+                }
+            }
+            if !want_input_delta {
+                return None;
+            }
+            let mut next_delta = vec![0.0; layer.in_dim];
+            for o in 0..layer.out_dim {
+                let d = delta[o];
+                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                for (nd, &w) in next_delta.iter_mut().zip(row) {
+                    *nd += d * w;
+                }
+            }
+            Some(next_delta)
+        }
+        LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+            let (ih, iw) = layer.in_shape.hw();
+            let (oh, ow) = layer.out_shape.hw();
+            let mut next_delta = if want_input_delta { Some(vec![0.0; layer.in_dim]) } else { None };
+            for oc in 0..out_ch {
+                let wbase = oc * in_ch * kh * kw;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let d = delta[oc * oh * ow + oy * ow + ox];
+                        gb[oc] += d;
+                        for ic in 0..in_ch {
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                    gw[wbase + ic * kh * kw + ky * kw + kx] += d * prev[i];
+                                    if let Some(nd) = next_delta.as_mut() {
+                                        nd[i] += d * layer.w[wbase + ic * kh * kw + ky * kw + kx];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            next_delta
+        }
+        LayerKind::AvgPool { k, stride } => {
+            if !want_input_delta {
+                return None;
+            }
+            let (ih, iw) = layer.in_shape.hw();
+            let (oh, ow) = layer.out_shape.hw();
+            let c = layer.in_shape.channels();
+            let scale = 1.0 / (k * k) as f64;
+            let mut next_delta = vec![0.0; layer.in_dim];
+            for ch in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let d = delta[ch * oh * ow + oy * ow + ox] * scale;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                next_delta[ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx)] += d;
+                            }
+                        }
+                    }
+                }
+            }
+            Some(next_delta)
+        }
+        LayerKind::Flatten => want_input_delta.then(|| delta.to_vec()),
+    }
+}
+
 fn train_batch(mlp: &mut Mlp, ds: &Dataset, idx: &[usize], cfg: &TrainConfig, vel: &mut [Layer]) -> f64 {
     let nl = mlp.layers.len();
     // Accumulated gradients.
@@ -204,16 +499,7 @@ fn train_batch(mlp: &mut Mlp, ds: &Dataset, idx: &[usize], cfg: &TrainConfig, ve
         // Forward, keeping activations.
         let mut acts: Vec<Vec<f64>> = vec![ds.train_row(s).to_vec()];
         for (li, layer) in mlp.layers.iter().enumerate() {
-            let prev = &acts[li];
-            let mut next = vec![0.0; layer.out_dim];
-            for o in 0..layer.out_dim {
-                let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
-                let mut acc = layer.b[o];
-                for (wi, ai) in row.iter().zip(prev) {
-                    acc += wi * ai;
-                }
-                next[o] = if li + 1 < nl { acc.max(0.0) } else { acc };
-            }
+            let next = layer.forward_f64(&acts[li], mlp.relu_at(li));
             acts.push(next);
         }
         // Softmax CE backward.
@@ -227,28 +513,16 @@ fn train_batch(mlp: &mut Mlp, ds: &Dataset, idx: &[usize], cfg: &TrainConfig, ve
         delta[label] -= 1.0;
         for li in (0..nl).rev() {
             let layer = &mlp.layers[li];
-            let prev = &acts[li];
-            for o in 0..layer.out_dim {
-                let d = delta[o];
-                gb[li][o] += d;
-                let grow = &mut gw[li][o * layer.in_dim..(o + 1) * layer.in_dim];
-                for (g, &a) in grow.iter_mut().zip(prev) {
-                    *g += d * a;
-                }
-            }
+            let next_delta = backward_layer(layer, &acts[li], &delta, &mut gw[li], &mut gb[li], li > 0);
             if li > 0 {
-                let mut next_delta = vec![0.0; layer.in_dim];
-                for o in 0..layer.out_dim {
-                    let d = delta[o];
-                    let row = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
-                    for (nd, &w) in next_delta.iter_mut().zip(row) {
-                        *nd += d * w;
-                    }
-                }
-                // ReLU mask on the pre-layer activation.
-                for (nd, &a) in next_delta.iter_mut().zip(&acts[li]) {
-                    if a <= 0.0 {
-                        *nd = 0.0;
+                let mut next_delta = next_delta.expect("input delta requested");
+                // ReLU mask on the pre-layer activation (only when the
+                // producing layer applied ReLU — always, in dense nets).
+                if mlp.relu_at(li - 1) {
+                    for (nd, &a) in next_delta.iter_mut().zip(&acts[li]) {
+                        if a <= 0.0 {
+                            *nd = 0.0;
+                        }
                     }
                 }
                 delta = next_delta;
@@ -285,6 +559,8 @@ mod tests {
         assert_eq!(mlp.forward(&[0.1, -0.2, 0.3, 0.0]).len(), 3);
         assert_eq!(mlp.dims(), vec![4, 10, 3]);
         assert_eq!(mlp.max_fan_in(), 10);
+        assert!(mlp.is_dense());
+        assert_eq!(mlp.ir(), NetIr::dense(&[4, 10, 3]));
     }
 
     #[test]
@@ -344,5 +620,147 @@ mod tests {
     fn argmax_basics() {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[-5.0, -1.0, -3.0]), 1);
+    }
+
+    /// A tiny conv chain on a 1×4×4 block with hand-checkable numbers.
+    fn tiny_conv() -> Mlp {
+        let input = Shape::Chw { c: 1, h: 4, w: 4 };
+        let mut rng = Rng::new(9);
+        let mut conv = Layer::conv2d(input, 2, 3, 3, 1, &mut rng);
+        // Overwrite the random init with a known kernel: channel 0 sums the
+        // 3×3 window, channel 1 picks the center.
+        conv.w = vec![1.0; 9].into_iter().chain((0..9).map(|i| if i == 4 { 1.0 } else { 0.0 })).collect();
+        conv.b = vec![0.5, 0.0];
+        let pool = Layer::avg_pool(conv.out_shape, 2, 2);
+        let flat = Layer::flatten(pool.out_shape);
+        let dense = Layer::dense_with(2, 2, vec![1.0, 0.0, 0.0, 1.0], vec![0.0, 0.0]);
+        Mlp::from_layers(vec![conv, pool, flat, dense])
+    }
+
+    #[test]
+    fn conv_forward_matches_hand_computation() {
+        let mlp = tiny_conv();
+        // Input: all ones. Conv ch0: 9·1 + 0.5 = 9.5 at every output pixel;
+        // ch1: 1.0. Pool over the single 2×2 window: unchanged averages.
+        let out = mlp.forward(&[1.0; 16]);
+        assert_eq!(out, vec![9.5, 1.0]);
+        assert_eq!(mlp.dims(), vec![16, 8, 2, 2, 2]);
+        assert_eq!(mlp.max_fan_in(), 9);
+        assert!(!mlp.is_dense());
+        assert_eq!(mlp.ir().name(), "1x4x4:conv2k3x3s1+pool2s2+flatten+dense2");
+    }
+
+    #[test]
+    fn avg_pool_averages_windows() {
+        let input = Shape::Chw { c: 1, h: 2, w: 2 };
+        let pool = Layer::avg_pool(input, 2, 2);
+        assert_eq!(pool.forward_f64(&[1.0, 2.0, 3.0, 6.0], false), vec![3.0]);
+    }
+
+    #[test]
+    fn conv_training_reduces_loss_on_a_toy_task() {
+        // 2-class toy: class 0 = bright left half, class 1 = bright right
+        // half, 1×4×4 images. A conv net must fit this quickly.
+        let mut x_train = Vec::new();
+        let mut y_train = Vec::new();
+        let mut rng = Rng::new(11);
+        for i in 0..64 {
+            let class = (i % 2) as u32;
+            let mut img = [0.0f64; 16];
+            for y in 0..4 {
+                for x in 0..4 {
+                    let lit = if class == 0 { x < 2 } else { x >= 2 };
+                    img[y * 4 + x] = if lit { rng.range(0.7, 1.0) } else { rng.range(0.0, 0.2) };
+                }
+            }
+            x_train.extend_from_slice(&img);
+            y_train.push(class);
+        }
+        let ds = Dataset {
+            name: "toy".into(),
+            num_features: 16,
+            num_classes: 2,
+            x_train: x_train.clone(),
+            y_train: y_train.clone(),
+            x_test: x_train,
+            y_test: y_train,
+        };
+        let input = Shape::Chw { c: 1, h: 4, w: 4 };
+        let mut rng = Rng::new(5);
+        let conv = Layer::conv2d(input, 3, 3, 3, 1, &mut rng);
+        let pool = Layer::avg_pool(conv.out_shape, 2, 1);
+        let flat = Layer::flatten(pool.out_shape);
+        let dense = Layer::dense(flat.out_dim, 2, &mut rng);
+        let mut mlp = Mlp::from_layers(vec![conv, pool, flat, dense]);
+        let curve = train(&mut mlp, &ds, &TrainConfig { epochs: 40, batch: 8, ..Default::default() });
+        assert!(
+            curve.last().unwrap() < &(curve[0] * 0.5),
+            "conv training barely moved: {} -> {}",
+            curve[0],
+            curve.last().unwrap()
+        );
+        assert!(mlp.accuracy(&ds) >= 0.9, "toy conv accuracy {}", mlp.accuracy(&ds));
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_differences() {
+        // Spot-check the conv/pool backward pass against numeric gradients
+        // on a tiny random net and a one-sample "dataset".
+        let input = Shape::Chw { c: 1, h: 4, w: 4 };
+        let mut rng = Rng::new(21);
+        let conv = Layer::conv2d(input, 2, 2, 2, 1, &mut rng);
+        let pool = Layer::avg_pool(conv.out_shape, 2, 1);
+        let flat = Layer::flatten(pool.out_shape);
+        let dense = Layer::dense(flat.out_dim, 2, &mut rng);
+        let mlp0 = Mlp::from_layers(vec![conv, pool, flat, dense]);
+        let x: Vec<f64> = (0..16).map(|i| (i as f64) / 16.0 - 0.4).collect();
+        let label = 1usize;
+        let loss_of = |m: &Mlp| -> f64 {
+            let logits = m.forward(&x);
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let zsum: f64 = logits.iter().map(|&z| (z - mx).exp()).sum();
+            zsum.ln() + mx - logits[label]
+        };
+        // Analytic gradient via one zero-momentum, zero-decay SGD step of
+        // lr = 1 on a single-sample batch: w' = w - g.
+        let ds = Dataset {
+            name: "one".into(),
+            num_features: 16,
+            num_classes: 2,
+            x_train: x.clone(),
+            y_train: vec![label as u32],
+            x_test: x.clone(),
+            y_test: vec![label as u32],
+        };
+        let mut stepped = mlp0.clone();
+        train(
+            &mut stepped,
+            &ds,
+            &TrainConfig { epochs: 1, batch: 1, lr: 1.0, momentum: 0.0, decay: 0.0, seed: 1 },
+        );
+        let eps = 1e-5;
+        for li in [0usize, 3] {
+            for wi in [0usize, 1, 3] {
+                let analytic = mlp0.layers[li].w[wi] - stepped.layers[li].w[wi]; // = gradient
+                let mut plus = mlp0.clone();
+                plus.layers[li].w[wi] += eps;
+                let mut minus = mlp0.clone();
+                minus.layers[li].w[wi] -= eps;
+                let numeric = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+                assert!(
+                    (analytic - numeric).abs() < 1e-5,
+                    "layer {li} w[{wi}]: analytic {analytic} vs numeric {numeric}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid layer chain")]
+    fn broken_shape_chain_is_rejected() {
+        let mut rng = Rng::new(1);
+        let a = Layer::dense(4, 5, &mut rng);
+        let b = Layer::dense(6, 3, &mut rng); // 5 != 6
+        let _ = Mlp::from_layers(vec![a, b]);
     }
 }

@@ -1,14 +1,19 @@
-//! The Deep Positron accelerator (paper §4) and its substrates: a plain
-//! f64 MLP (training + baseline inference) and the bit-exact EMAC datapath
-//! simulator the low-precision results are measured on.
+//! The Deep Positron accelerator (paper §4) and its substrates: the typed
+//! layer IR ([`ir`] — dense / conv2d / avg-pool / flatten with shape
+//! inference, DESIGN.md §11), a plain f64 network (training + baseline
+//! inference) over that IR, and the bit-exact EMAC datapath simulator the
+//! low-precision results are measured on.
 //!
 //! Inference compiles once into a per-layer execution plan (pre-decoded
-//! weight operands, quire-staged biases — DESIGN.md §8) and runs many via
-//! [`DeepPositron::forward_batch`]; the scalar entry points are the
+//! weight operands, quire-staged biases — DESIGN.md §8; conv layers map to
+//! per-output-pixel quire accumulation over the receptive field) and runs
+//! many via [`DeepPositron::forward_batch`]; the scalar entry points are the
 //! batch-of-one special case.
 
+pub mod ir;
 pub mod mlp;
 pub mod positron;
 
-pub use mlp::{argmax, train, Mlp, TrainConfig};
+pub use ir::{LayerGeom, LayerKind, NetIr, Shape};
+pub use mlp::{argmax, train, Layer, Mlp, TrainConfig};
 pub use positron::{Datapath, DeepPositron, EVAL_BATCH};

@@ -1,11 +1,13 @@
-//! The Deep Positron accelerator simulator (paper §4).
+//! The Deep Positron accelerator simulator (paper §4), generalized over the
+//! typed layer IR (DESIGN.md §11).
 //!
 //! Bit-exact software model of the FPGA datapath: a trained network's
 //! weights/biases and all inter-layer activations live as n-bit format
-//! codes; every neuron's weighted sum runs through the format's EMAC
-//! (exact quire accumulation, single deferred round, ReLU stage for hidden
-//! layers). This is the golden path Table 1's low-precision columns are
-//! measured on; the AOT/XLA fast path is validated against it.
+//! codes; every output element's weighted sum runs through the format's
+//! EMAC (exact quire accumulation, single deferred round, ReLU stage for
+//! hidden weighted layers). This is the golden path Table 1's low-precision
+//! columns are measured on; the AOT/XLA fast path is validated against it
+//! (dense topologies only — conv networks are Sim-native).
 //!
 //! Execution follows a compile-once / run-many plan (DESIGN.md §8): at
 //! [`DeepPositron::compile`] time every layer's weight codes are pre-decoded
@@ -17,6 +19,20 @@
 //! is bit-identical to the old per-sample EMAC loop (asserted by
 //! `tests/batch_parity.rs` against an independent scalar oracle).
 //!
+//! Per layer kind (DESIGN.md §11, the Cheetah-style conv mapping):
+//!
+//! * **Dense** — one quire per output neuron, seeded with the bias,
+//!   accumulating the full input row (the classic Deep Positron dataflow).
+//! * **Conv2d** — one quire per *output pixel*, seeded with the channel
+//!   bias, accumulating the `kh·kw·in_ch` receptive field exactly; the
+//!   Eq. (2) width check runs at `k = kh·kw·in_ch + 1` per layer.
+//! * **AvgPool** — accumulate the `k²` window in the quire (no products),
+//!   then divide by `k²` as an exact exponent shift at the terminal round
+//!   (window areas are powers of two by IR construction).
+//! * **Flatten** — pure wiring; under a mixed per-layer assignment it is a
+//!   recode point (each code rounds once into the next layer's format),
+//!   otherwise a copy.
+//!
 //! Plans are **heterogeneous** (DESIGN.md §10): [`DeepPositron::compile_mixed`]
 //! accepts a per-layer [`MixedSpec`], each layer carrying its own shared
 //! `Quantizer`/`DecodeLut` pair — the layer-wise EMAC banks of Deep Positron,
@@ -27,6 +43,7 @@
 
 use std::sync::Arc;
 
+use super::ir::{LayerKind, Shape};
 use super::mlp::Mlp;
 use crate::datasets::Dataset;
 use crate::formats::emac::{DecodeLut, DecodedOp};
@@ -57,9 +74,15 @@ pub enum Datapath {
 /// table set — the heterogeneous (mixed-precision) case of DESIGN.md §10;
 /// uniform networks simply hold `Arc` clones of one table set everywhere.
 struct LayerPlan {
-    /// Fan-in of the layer.
+    /// The IR node this plan entry executes.
+    kind: LayerKind,
+    /// Shape of the incoming activation block.
+    in_shape: Shape,
+    /// Shape of the produced activation block.
+    out_shape: Shape,
+    /// Flat fan-in of the layer (`in_shape.len()`).
     in_dim: usize,
-    /// Fan-out of the layer.
+    /// Flat fan-out of the layer (`out_shape.len()`).
     out_dim: usize,
     /// Decoded-operand table of the layer's own format: decodes both the
     /// pre-quantized weights and the incoming activation codes (which the
@@ -78,11 +101,14 @@ struct LayerPlan {
     zero: u16,
     /// Zero code of the OUTPUT format (ReLU clamp target).
     out_zero: u16,
-    /// Pre-decoded weight operands, row-major `[out][in]`.
+    /// Pre-decoded weight operands (dense: row-major `[out][in]`; conv:
+    /// `[out_ch][in_ch][kh][kw]`; empty for weightless kinds).
     w_ops: Vec<DecodedOp>,
-    /// Per-output bias, pre-shifted into quire units (`2^lsb_exp`).
+    /// Per-output-neuron (dense) / per-output-channel (conv) bias,
+    /// pre-shifted into quire units (`2^lsb_exp`).
     bias_q: Vec<i128>,
-    /// Hidden layers apply ReLU in format space at the terminal round.
+    /// Hidden weighted layers apply ReLU in format space at the terminal
+    /// round; weightless wiring (pool/flatten) never does.
     relu: bool,
 }
 
@@ -94,8 +120,8 @@ pub struct DeepPositron {
     /// Input-layer quantization tables (requests quantize into the first
     /// layer's format), shared process-wide ([`Quantizer::shared`]).
     quantizer: Arc<Quantizer>,
-    /// Per-layer weight codes, row-major `[out][in]` (consumed by the
-    /// inexact-MAC ablation and the dequantized accessors).
+    /// Per-layer weight codes (same layout as `LayerPlan::w_ops`; consumed
+    /// by the inexact-MAC ablation and the dequantized accessors).
     weights: Vec<Vec<u16>>,
     /// Per-layer bias values, kept exact (the accelerator feeds biases into
     /// the quire directly, after their own quantization to the layer
@@ -132,7 +158,8 @@ impl DeepPositron {
     /// format assignment (DESIGN.md §10). Layer `i`'s weights, incoming
     /// activations, and quire live in `mixed.layers()[i]`; each layer's
     /// terminal round recodes directly into layer `i + 1`'s format. Panics
-    /// unless the assignment has exactly one format per dense layer.
+    /// unless the assignment has exactly one format per IR layer (weightless
+    /// wiring layers count — they are recode points).
     pub fn compile_mixed(mlp: &Mlp, mixed: MixedSpec) -> DeepPositron {
         DeepPositron::build(mlp, mixed, &Quantizer::shared)
     }
@@ -149,10 +176,12 @@ impl DeepPositron {
             let spec = specs[li];
             let quantizer = tables(spec);
             let lut = DecodeLut::shared(spec);
-            // Eq. (2) width check, once at compile time per layer (it used
-            // to run inside every per-sample Emac construction): this
-            // layer's dot-product length + 1 bias term.
-            lut.assert_quire_fits(dims[li] + 1);
+            // Eq. (2) width check, once at compile time per layer, at the
+            // layer's OWN accumulation length: receptive-field fan-in + 1
+            // bias term for weighted layers (dense: in_dim + 1, exactly the
+            // pre-IR bound; conv: kh·kw·in_ch + 1 — the conv EMAC no longer
+            // provisions an input-width quire).
+            lut.assert_quire_fits(layer.eq2_k());
             let (codes, _) = quantizer.quantize_slice(&layer.w);
             let bias_exact: Vec<Exact> = layer
                 .b
@@ -167,12 +196,15 @@ impl DeepPositron {
             let out_spec = specs.get(li + 1).copied().unwrap_or(spec);
             let out_q = if out_spec == spec { Arc::clone(&quantizer) } else { tables(out_spec) };
             plan.push(LayerPlan {
+                kind: layer.kind,
+                in_shape: layer.in_shape,
+                out_shape: layer.out_shape,
                 in_dim: dims[li],
                 out_dim: dims[li + 1],
                 zero: quantizer.zero_code(),
                 out_zero: out_q.zero_code(),
                 bias_q: bias_exact.iter().map(|b| lut.to_quire(b)).collect(),
-                relu: li < last,
+                relu: layer.kind.has_weights() && li < last,
                 w_ops,
                 lut,
                 out_q,
@@ -212,7 +244,8 @@ impl DeepPositron {
     }
 
     /// The dequantized weight values per layer (what the XLA fast path
-    /// consumes as its `weights` input).
+    /// consumes as its `weights` input; empty entries for weightless
+    /// layers).
     pub fn dequantized_weights(&self) -> Vec<Vec<f64>> {
         self.plan.iter().zip(&self.weights).map(|(lp, codes)| lp.quantizer.dequantize_slice(codes)).collect()
     }
@@ -275,11 +308,12 @@ impl DeepPositron {
         (0..b).map(|s| (0..out_dim).map(|o| act[o * b + s]).collect()).collect()
     }
 
-    /// The batched EMAC kernel: per output neuron, seed every sample's quire
-    /// with the pre-shifted bias, stream the pre-decoded weight row across
-    /// the batch, and round once at the terminal stage — directly into the
-    /// next layer's format (the §10 boundary recode; a no-op change of
-    /// target for uniform networks).
+    /// The batched EMAC kernel: per output element, seed every sample's
+    /// quire with the pre-shifted bias, stream the layer's pre-decoded
+    /// weights (dense row / conv receptive field / pool window) across the
+    /// batch, and round once at the terminal stage — directly into the next
+    /// layer's format (the §10 boundary recode; a no-op change of target
+    /// for uniform networks).
     fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>) -> Vec<Vec<u16>> {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
@@ -290,46 +324,71 @@ impl DeepPositron {
         for lp in &self.plan {
             let lsb = lp.lut.lsb_exp();
             let ops = lp.lut.ops();
-            for o in 0..lp.out_dim {
-                let wrow = &lp.w_ops[o * lp.in_dim..(o + 1) * lp.in_dim];
-                quires.fill(lp.bias_q[o]);
-                for (i, w) in wrow.iter().enumerate() {
-                    if w.mag == 0 {
-                        continue; // zero weight annihilates the whole column
-                    }
-                    let acol = &act[i * b..(i + 1) * b];
-                    for (s, &code) in acol.iter().enumerate() {
-                        let a = ops[code as usize];
-                        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
-                        if a.mag == 0 {
-                            continue;
+            match lp.kind {
+                LayerKind::Dense => {
+                    for o in 0..lp.out_dim {
+                        let wrow = &lp.w_ops[o * lp.in_dim..(o + 1) * lp.in_dim];
+                        quires.fill(lp.bias_q[o]);
+                        for (i, w) in wrow.iter().enumerate() {
+                            if w.mag == 0 {
+                                continue; // zero weight annihilates the whole column
+                            }
+                            mac_column(&mut quires, w, &act[i * b..(i + 1) * b], ops, lsb);
                         }
-                        // The exact product term of `Emac::mac`: magnitudes
-                        // are ≤16-bit, so the product fits u64.
-                        let mag = w.mag * a.mag;
-                        let shift = (w.exp + a.exp - lsb) as u32;
-                        let term = (mag as i128) << shift;
-                        quires[s] += if w.neg ^ a.neg { -term } else { term };
+                        round_columns(lp, lsb, 0, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
                     }
                 }
-                let out = &mut next[o * b..(o + 1) * b];
-                for (s, out_code) in out.iter_mut().enumerate() {
-                    let mut q = quires[s];
-                    if let Some(bits) = width_limit {
-                        // Two's-complement wrap of the undersized register.
-                        // Wrapping once here is bit-identical to the scalar
-                        // per-step wrap: sign extension picks the same
-                        // representative of the sum mod 2^bits.
-                        let sh = 128 - bits;
-                        q = (q << sh) >> sh;
+                LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    for oc in 0..out_ch {
+                        let wrow = &lp.w_ops[oc * in_ch * kh * kw..(oc + 1) * in_ch * kh * kw];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                quires.fill(lp.bias_q[oc]);
+                                for ic in 0..in_ch {
+                                    for ky in 0..kh {
+                                        for kx in 0..kw {
+                                            let w = &wrow[ic * kh * kw + ky * kw + kx];
+                                            if w.mag == 0 {
+                                                continue;
+                                            }
+                                            let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                            mac_column(&mut quires, w, &act[i * b..(i + 1) * b], ops, lsb);
+                                        }
+                                    }
+                                }
+                                let o = oc * oh * ow + oy * ow + ox;
+                                round_columns(lp, lsb, 0, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
+                            }
+                        }
                     }
-                    *out_code = if lp.relu && q < 0 {
-                        // ReLU(x) = max(x, 0): negative sums clamp to the
-                        // output format's zero code.
-                        lp.out_zero
-                    } else {
-                        lp.out_q.quantize_exact(&Exact::new(q < 0, q.unsigned_abs(), lsb)).0
-                    };
+                }
+                LayerKind::AvgPool { k, stride } => {
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    let c = lp.in_shape.channels();
+                    // k is a power of two (IR invariant), so dividing the
+                    // window sum by k² is an exact exponent down-shift.
+                    let down = (k * k).trailing_zeros() as i32;
+                    for ch in 0..c {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                quires.fill(0);
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        let i = ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                        sum_column(&mut quires, &act[i * b..(i + 1) * b], ops, lsb);
+                                    }
+                                }
+                                let o = ch * oh * ow + oy * ow + ox;
+                                round_columns(lp, lsb, down, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
+                            }
+                        }
+                    }
+                }
+                LayerKind::Flatten => {
+                    recode_columns(lp, &act[..lp.in_dim * b], &mut next[..lp.in_dim * b]);
                 }
             }
             std::mem::swap(&mut act, &mut next);
@@ -342,6 +401,8 @@ impl DeepPositron {
     /// Under a mixed assignment each layer's ALU rounds in that layer's
     /// format and the finished sum recodes into the next layer's format —
     /// identity for uniform networks (quantize of a representable value).
+    /// Average pooling multiplies the window sum by the rounded code of
+    /// `1/k²` (a conventional unit has no exact shift); flatten recodes.
     fn batch_inexact(&self, rows: &[&[f64]]) -> Vec<Vec<u16>> {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
@@ -351,21 +412,90 @@ impl DeepPositron {
         self.quantize_block(rows, &mut act);
         for (lp, (codes, biases)) in self.plan.iter().zip(self.weights.iter().zip(&self.biases)) {
             let alu = ScalarAlu::new(&lp.quantizer);
-            for o in 0..lp.out_dim {
-                let wrow = &codes[o * lp.in_dim..(o + 1) * lp.in_dim];
-                accs.fill(lp.zero);
-                for (i, &wc) in wrow.iter().enumerate() {
-                    let acol = &act[i * b..(i + 1) * b];
-                    for (s, &ac) in acol.iter().enumerate() {
-                        accs[s] = alu.add(accs[s], alu.mul(wc, ac));
+            match lp.kind {
+                LayerKind::Dense => {
+                    for o in 0..lp.out_dim {
+                        let wrow = &codes[o * lp.in_dim..(o + 1) * lp.in_dim];
+                        accs.fill(lp.zero);
+                        for (i, &wc) in wrow.iter().enumerate() {
+                            let acol = &act[i * b..(i + 1) * b];
+                            for (s, &ac) in acol.iter().enumerate() {
+                                accs[s] = alu.add(accs[s], alu.mul(wc, ac));
+                            }
+                        }
+                        let (bcode, _) = lp.quantizer.quantize_exact(&biases[o]);
+                        let out = &mut next[o * b..(o + 1) * b];
+                        for (s, out_code) in out.iter_mut().enumerate() {
+                            let acc = alu.add(accs[s], bcode);
+                            let v = lp.quantizer.decode(acc).expect("rounded code decodes");
+                            *out_code = if lp.relu && v.sign { lp.out_zero } else { lp.out_q.quantize_exact(&v).0 };
+                        }
                     }
                 }
-                let (bcode, _) = lp.quantizer.quantize_exact(&biases[o]);
-                let out = &mut next[o * b..(o + 1) * b];
-                for (s, out_code) in out.iter_mut().enumerate() {
-                    let acc = alu.add(accs[s], bcode);
-                    let v = lp.quantizer.decode(acc).expect("rounded code decodes");
-                    *out_code = if lp.relu && v.sign { lp.out_zero } else { lp.out_q.quantize_exact(&v).0 };
+                LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    for oc in 0..out_ch {
+                        let wrow = &codes[oc * in_ch * kh * kw..(oc + 1) * in_ch * kh * kw];
+                        let (bcode, _) = lp.quantizer.quantize_exact(&biases[oc]);
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                accs.fill(lp.zero);
+                                for ic in 0..in_ch {
+                                    for ky in 0..kh {
+                                        for kx in 0..kw {
+                                            let wc = wrow[ic * kh * kw + ky * kw + kx];
+                                            let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                            let acol = &act[i * b..(i + 1) * b];
+                                            for (s, &ac) in acol.iter().enumerate() {
+                                                accs[s] = alu.add(accs[s], alu.mul(wc, ac));
+                                            }
+                                        }
+                                    }
+                                }
+                                let o = oc * oh * ow + oy * ow + ox;
+                                let out = &mut next[o * b..(o + 1) * b];
+                                for (s, out_code) in out.iter_mut().enumerate() {
+                                    let acc = alu.add(accs[s], bcode);
+                                    let v = lp.quantizer.decode(acc).expect("rounded code decodes");
+                                    *out_code =
+                                        if lp.relu && v.sign { lp.out_zero } else { lp.out_q.quantize_exact(&v).0 };
+                                }
+                            }
+                        }
+                    }
+                }
+                LayerKind::AvgPool { k, stride } => {
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    let c = lp.in_shape.channels();
+                    let (recip, _) = lp.quantizer.quantize_f64(1.0 / (k * k) as f64);
+                    for ch in 0..c {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                accs.fill(lp.zero);
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        let i = ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                        let acol = &act[i * b..(i + 1) * b];
+                                        for (s, &ac) in acol.iter().enumerate() {
+                                            accs[s] = alu.add(accs[s], ac);
+                                        }
+                                    }
+                                }
+                                let o = ch * oh * ow + oy * ow + ox;
+                                let out = &mut next[o * b..(o + 1) * b];
+                                for (s, out_code) in out.iter_mut().enumerate() {
+                                    let acc = alu.mul(accs[s], recip);
+                                    let v = lp.quantizer.decode(acc).expect("rounded code decodes");
+                                    *out_code = lp.out_q.quantize_exact(&v).0;
+                                }
+                            }
+                        }
+                    }
+                }
+                LayerKind::Flatten => {
+                    recode_columns(lp, &act[..lp.in_dim * b], &mut next[..lp.in_dim * b]);
                 }
             }
             std::mem::swap(&mut act, &mut next);
@@ -444,23 +574,84 @@ impl DeepPositron {
     }
 
     /// Reference forward pass with *dequantized* weights and table-rounded
-    /// activations in f64 — the semantics of the XLA artifact. Where f64
-    /// accumulation is exact (every format here except the widest posit
-    /// quires), this matches [`Self::forward_codes`] bit for bit.
+    /// activations in f64 — the semantics of the XLA artifact (and, for
+    /// conv layers, the independent oracle `tests/conv.rs` checks against).
+    /// Where f64 accumulation is exact (every format here except the widest
+    /// posit quires), this matches [`Self::forward_codes`] bit for bit.
     pub fn forward_dequantized(&self, x: &[f64]) -> Vec<f64> {
         let (_, mut act) = self.quantizer.quantize_slice(x);
         for (lp, (w, b)) in self.plan.iter().zip(self.weights.iter().zip(&self.biases)) {
-            let wv = lp.quantizer.dequantize_slice(w);
-            let mut next = Vec::with_capacity(lp.out_dim);
-            for o in 0..lp.out_dim {
-                let mut acc = b[o].to_f64();
-                for i in 0..lp.in_dim {
-                    acc += wv[o * lp.in_dim + i] * act[i];
-                }
-                // Terminal round into the output (next-layer) format — same
-                // target the EMAC's boundary recode rounds into.
+            let round = |acc: f64, relu: bool| -> f64 {
                 let (_, rounded) = lp.out_q.quantize_f64(acc);
-                next.push(if lp.relu { rounded.max(0.0) } else { rounded });
+                if relu {
+                    rounded.max(0.0)
+                } else {
+                    rounded
+                }
+            };
+            let mut next = Vec::with_capacity(lp.out_dim);
+            match lp.kind {
+                LayerKind::Dense => {
+                    let wv = lp.quantizer.dequantize_slice(w);
+                    for o in 0..lp.out_dim {
+                        let mut acc = b[o].to_f64();
+                        for i in 0..lp.in_dim {
+                            acc += wv[o * lp.in_dim + i] * act[i];
+                        }
+                        // Terminal round into the output (next-layer)
+                        // format — same target the EMAC's boundary recode
+                        // rounds into.
+                        next.push(round(acc, lp.relu));
+                    }
+                }
+                LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                    let wv = lp.quantizer.dequantize_slice(w);
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    next.resize(lp.out_dim, 0.0);
+                    for oc in 0..out_ch {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let mut acc = b[oc].to_f64();
+                                for ic in 0..in_ch {
+                                    for ky in 0..kh {
+                                        for kx in 0..kw {
+                                            let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                            acc += wv[oc * in_ch * kh * kw + ic * kh * kw + ky * kw + kx] * act[i];
+                                        }
+                                    }
+                                }
+                                next[oc * oh * ow + oy * ow + ox] = round(acc, lp.relu);
+                            }
+                        }
+                    }
+                }
+                LayerKind::AvgPool { k, stride } => {
+                    let (ih, iw) = lp.in_shape.hw();
+                    let (oh, ow) = lp.out_shape.hw();
+                    let c = lp.in_shape.channels();
+                    next.resize(lp.out_dim, 0.0);
+                    for ch in 0..c {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let mut acc = 0.0;
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        acc += act[ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx)];
+                                    }
+                                }
+                                // k² is a power of two: the division is
+                                // exact in f64, mirroring the quire shift.
+                                next[ch * oh * ow + oy * ow + ox] = round(acc / (k * k) as f64, false);
+                            }
+                        }
+                    }
+                }
+                LayerKind::Flatten => {
+                    for &v in &act {
+                        next.push(lp.out_q.quantize_f64(v).1);
+                    }
+                }
             }
             act = next;
         }
@@ -468,10 +659,86 @@ impl DeepPositron {
     }
 }
 
+/// Accumulate one pre-decoded weight against one activation column for the
+/// whole batch — the exact product term of `Emac::mac` (magnitudes are
+/// ≤16-bit, so the product fits u64).
+#[inline]
+fn mac_column(quires: &mut [i128], w: &DecodedOp, acol: &[u16], ops: &[DecodedOp], lsb: i32) {
+    for (s, &code) in acol.iter().enumerate() {
+        let a = ops[code as usize];
+        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
+        if a.mag == 0 {
+            continue;
+        }
+        let mag = w.mag * a.mag;
+        let shift = (w.exp + a.exp - lsb) as u32;
+        let term = (mag as i128) << shift;
+        quires[s] += if w.neg ^ a.neg { -term } else { term };
+    }
+}
+
+/// Accumulate one activation column directly (weightless pooling sum): the
+/// value itself shifts into quire units, no product.
+#[inline]
+fn sum_column(quires: &mut [i128], acol: &[u16], ops: &[DecodedOp], lsb: i32) {
+    for (s, &code) in acol.iter().enumerate() {
+        let a = ops[code as usize];
+        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
+        if a.mag == 0 {
+            continue;
+        }
+        let shift = (a.exp - lsb) as u32;
+        let term = (a.mag as i128) << shift;
+        quires[s] += if a.neg { -term } else { term };
+    }
+}
+
+/// Terminal stage for one output column: optional narrow-quire wrap, then
+/// one deferred round straight into the NEXT layer's format. `down` shifts
+/// the quire exponent for the exact pool average (0 everywhere else, which
+/// reduces to the classic dense terminal round bit for bit).
+#[inline]
+fn round_columns(lp: &LayerPlan, lsb: i32, down: i32, width_limit: Option<u32>, quires: &[i128], out: &mut [u16]) {
+    for (&q0, out_code) in quires.iter().zip(out.iter_mut()) {
+        let mut q = q0;
+        if let Some(bits) = width_limit {
+            // Two's-complement wrap of the undersized register. Wrapping
+            // once here is bit-identical to the scalar per-step wrap: sign
+            // extension picks the same representative of the sum mod
+            // 2^bits.
+            let sh = 128 - bits;
+            q = (q << sh) >> sh;
+        }
+        *out_code = if lp.relu && q < 0 {
+            // ReLU(x) = max(x, 0): negative sums clamp to the output
+            // format's zero code.
+            lp.out_zero
+        } else {
+            lp.out_q.quantize_exact(&Exact::new(q < 0, q.unsigned_abs(), lsb - down)).0
+        };
+    }
+}
+
+/// Flatten as a recode point: when the layer and output formats coincide
+/// (uniform networks) the codes copy through untouched; otherwise every
+/// code rounds once into the next layer's format — the same
+/// recode-at-boundary semantics as a weighted layer's terminal round.
+fn recode_columns(lp: &LayerPlan, act: &[u16], next: &mut [u16]) {
+    if lp.quantizer.name() == lp.out_q.name() {
+        next.copy_from_slice(act);
+        return;
+    }
+    for (&code, out_code) in act.iter().zip(next.iter_mut()) {
+        let v = lp.quantizer.decode(code).expect("canonical activation code");
+        *out_code = lp.out_q.quantize_exact(&v).0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::mlp::{train, TrainConfig};
+    use crate::accel::ir::Shape;
+    use crate::accel::mlp::{train, Layer, TrainConfig};
     use crate::datasets::{self, Scale};
     use crate::util::Rng;
 
@@ -483,6 +750,18 @@ mod tests {
         train(&mut mlp, &norm, &TrainConfig { epochs: 80, ..Default::default() });
         super::super::mlp::fold_input_normalization(&mut mlp, &means, &stds);
         (mlp, ds)
+    }
+
+    /// A small random conv net on an 1×8×8 block (fast enough for in-crate
+    /// tests; the full 28×28 conv MNIST coverage lives in `tests/conv.rs`).
+    fn tiny_conv_net() -> Mlp {
+        let input = Shape::Chw { c: 1, h: 8, w: 8 };
+        let mut rng = Rng::new(17);
+        let conv = Layer::conv2d(input, 3, 3, 3, 1, &mut rng);
+        let pool = Layer::avg_pool(conv.out_shape, 2, 2);
+        let flat = Layer::flatten(pool.out_shape);
+        let dense = Layer::dense(flat.out_dim, 4, &mut rng);
+        Mlp::from_layers(vec![conv, pool, flat, dense])
     }
 
     #[test]
@@ -523,6 +802,38 @@ mod tests {
             for (i, row) in rows.iter().enumerate() {
                 assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");
             }
+        }
+    }
+
+    #[test]
+    fn conv_plan_batch_matches_per_sample_calls() {
+        // In-crate smoke parity for the conv kernels (exhaustive format ×
+        // datapath coverage + the independent oracle live in tests/conv.rs).
+        let mlp = tiny_conv_net();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        let mut rng = Rng::new(3);
+        let inputs: Vec<Vec<f64>> = (0..6).map(|_| (0..64).map(|_| rng.range(0.0, 1.0)).collect()).collect();
+        let rows: Vec<&[f64]> = inputs.iter().map(Vec::as_slice).collect();
+        for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(32)] {
+            let batched = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_emac_matches_dequantized_f64_path() {
+        // Conv quire accumulation vs the independent f64 reference with
+        // dequantized weights (exact for these narrow-quire formats).
+        let mlp = tiny_conv_net();
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..64).map(|_| rng.range(0.0, 1.0)).collect();
+        for spec in ["posit8es1", "float8we4", "fixed8q4"] {
+            let dp = DeepPositron::compile(&mlp, FormatSpec::parse(spec).unwrap());
+            let codes = dp.forward_codes(&x);
+            let vals: Vec<f64> = codes.iter().map(|&c| dp.quantizer().decode(c).unwrap().to_f64()).collect();
+            assert_eq!(vals, dp.forward_dequantized(&x), "{spec}");
         }
     }
 
@@ -585,6 +896,25 @@ mod tests {
         // Scalar == batched on the mixed plan too (batch-of-one wrapper).
         let rows: Vec<&[f64]> = (0..6).map(|i| ds.test_row(i)).collect();
         for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(32)] {
+            let batched = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_conv_assignment_recodes_at_every_boundary() {
+        // A genuinely mixed conv plan (4 IR nodes incl. a flatten recode
+        // point) runs end to end, scalar == batched on all datapaths.
+        let mlp = tiny_conv_net();
+        let mixed = MixedSpec::parse("posit8es1+float7we3+posit7es1+posit6es1").unwrap();
+        let dp = DeepPositron::compile_mixed(&mlp, mixed.clone());
+        assert_eq!(dp.mixed(), &mixed);
+        let mut rng = Rng::new(5);
+        let inputs: Vec<Vec<f64>> = (0..4).map(|_| (0..64).map(|_| rng.range(0.0, 1.0)).collect()).collect();
+        let rows: Vec<&[f64]> = inputs.iter().map(Vec::as_slice).collect();
+        for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(40)] {
             let batched = dp.forward_batch(&rows, mode);
             for (i, row) in rows.iter().enumerate() {
                 assert_eq!(batched[i], dp.forward_codes_with(row, mode), "{mode:?} sample {i}");

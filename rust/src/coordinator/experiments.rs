@@ -1,9 +1,9 @@
 //! Experiment drivers: everything the paper's evaluation section reports,
 //! runnable end-to-end from the CLI/benches (DESIGN.md §5 experiment index).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::accel::{self, DeepPositron, Mlp};
+use crate::accel::{self, DeepPositron, Layer, Mlp, Shape};
 use crate::datasets::{self, Dataset, Scale};
 use crate::formats::FormatSpec;
 use crate::hw;
@@ -78,8 +78,13 @@ fn python_layout(dp: &DeepPositron, mlp: &Mlp) -> (Vec<Vec<f64>>, Vec<Vec<f64>>)
     (weights, bq)
 }
 
-/// Quantized test accuracy through the AOT/XLA artifacts.
+/// Quantized test accuracy through the AOT/XLA artifacts (dense
+/// topologies only — the artifact bakes in a dense table shape; conv
+/// networks evaluate on the bit-exact Sim path).
 pub fn eval_xla(rt: &Runtime, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Result<f64> {
+    if !mlp.is_dense() {
+        bail!("conv layer IR is Sim-native: no AOT artifact exists for non-dense topologies");
+    }
     let dp = DeepPositron::compile(mlp, spec);
     let (weights, biases) = python_layout(&dp, mlp);
     let tables = FormatTables::new(spec, dp.quantizer());
@@ -104,14 +109,70 @@ pub fn eval_xla(rt: &Runtime, mlp: &Mlp, ds: &Dataset, spec: FormatSpec) -> Resu
 }
 
 /// Eq. (2) accumulator-sizing `k` for a set of trained tasks: the largest
-/// layer fan-in any of the networks presents — the dot-product length the
-/// deployed EMACs must actually absorb. The sweeps used to pass
-/// [`hw::DEFAULT_K`] (MNIST's 784) for every task, which sized the Fig. 6/7
-/// hardware axes of 4–30-feature tabular tasks for an accumulator they
-/// would never provision; the tuner ([`crate::tune`]) applies the same
-/// fan-in rule per layer.
+/// receptive-field fan-in any of the networks presents — the dot-product
+/// length the deployed EMACs must actually absorb (a conv layer
+/// contributes `kh·kw·in_ch`, not its flat input width). The sweeps used
+/// to pass [`hw::DEFAULT_K`] (MNIST's 784) for every task, which sized the
+/// Fig. 6/7 hardware axes of 4–30-feature tabular tasks for an accumulator
+/// they would never provision; the tuner ([`crate::tune`]) applies the
+/// same fan-in rule per layer.
 pub fn eq2_k<'a>(mlps: impl Iterator<Item = &'a Mlp>) -> usize {
     mlps.map(Mlp::max_fan_in).max().unwrap_or(hw::DEFAULT_K)
+}
+
+// ------------------------------------------------------------- conv study
+
+/// Default training epochs for the conv substrate (slower per epoch than
+/// the dense MLPs; the raster tasks converge in a handful of passes).
+pub const CONV_EPOCHS: usize = 8;
+
+/// The small convolutional topology for the 28×28 raster image tasks
+/// (DESIGN.md §11): `conv(1→4, 5×5, stride 2) → avgpool(2, stride 2) →
+/// flatten → dense(144→10)`, untrained. The conv EMAC's Eq. (2) check runs
+/// at `k = 5·5·1 + 1 = 26` — the receptive field, not the 784-pixel input.
+pub fn conv_model(seed: u64) -> Mlp {
+    let input = Shape::Chw { c: 1, h: 28, w: 28 };
+    let mut rng = Rng::new(seed ^ 0xC04F);
+    let conv = Layer::conv2d(input, 4, 5, 5, 2, &mut rng);
+    let pool = Layer::avg_pool(conv.out_shape, 2, 2);
+    let flat = Layer::flatten(pool.out_shape);
+    let dense = Layer::dense(flat.out_dim, 10, &mut rng);
+    Mlp::from_layers(vec![conv, pool, flat, dense])
+}
+
+/// Train the conv topology on a raster image task (raw [0, 1] pixels — no
+/// normalization folding, same protocol as the image MLPs).
+pub fn train_conv_model(ds: &Dataset, seed: u64, epochs: usize) -> Mlp {
+    assert_eq!(ds.num_features, 28 * 28, "the conv topology consumes 28x28 rasters");
+    let mut mlp = conv_model(seed);
+    let cfg = accel::TrainConfig { epochs, seed: seed ^ 0x7e57, ..Default::default() };
+    accel::train(&mut mlp, ds, &cfg);
+    mlp
+}
+
+/// The conv analogue of Table 1 on the raster image tasks: train the conv
+/// net, then report best-of-sweep 8-bit accuracy per format family through
+/// the bit-exact conv EMAC datapath (Sim-native — no AOT artifact exists
+/// for conv topologies).
+pub fn conv_table(scale: Scale, seed: u64, task_names: &[&str]) -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for name in task_names {
+        let ds = datasets::load(name, seed, scale);
+        let mlp = train_conv_model(&ds, seed, CONV_EPOCHS);
+        let baseline = mlp.accuracy(&ds);
+        let (pa, ps) = best_accuracy(Engine::Sim, None, &mlp, &ds, "posit", 8)?;
+        let (fa, fs) = best_accuracy(Engine::Sim, None, &mlp, &ds, "float", 8)?;
+        let (xa, xs) = best_accuracy(Engine::Sim, None, &mlp, &ds, "fixed", 8)?;
+        rows.push(Table1Row {
+            dataset: format!("{name} (conv)"),
+            inference_size: ds.test_len(),
+            posit: (pa, ps.sub_param()),
+            float: (fa, fs.sub_param()),
+            fixed: (xa, xs.sub_param()),
+            baseline,
+        });
+    }
+    Ok(rows)
 }
 
 /// Evaluate with the selected engine.

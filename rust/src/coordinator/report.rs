@@ -11,9 +11,13 @@ pub fn render_table1(rows: &[Table1Row]) -> String {
     );
     s.push_str("|---|---|---|---|---|---|\n");
     for r in rows {
-        let hi = [r.posit.0, r.float.0, r.fixed.0].into_iter().fold(0.0f64, f64::max);
+        let accs = [r.posit.0, r.float.0, r.fixed.0];
+        let hi = accs.into_iter().fold(0.0f64, f64::max);
+        // Bold only a UNIQUE winner: on an exact accuracy tie no format
+        // "won" the row, and bolding all of them read as three winners.
+        let winners = accs.iter().filter(|&&a| (a - hi).abs() < 1e-12).count();
         let cell = |acc: f64, p: u32| {
-            if (acc - hi).abs() < 1e-12 {
+            if winners == 1 && (acc - hi).abs() < 1e-12 {
                 format!("**{:.1}%** ({p})", acc * 100.0)
             } else {
                 format!("{:.1}% ({p})", acc * 100.0)
@@ -155,6 +159,34 @@ mod tests {
         let s = render_table1(&rows);
         assert!(s.contains("**98.0%** (1)"));
         assert!(s.contains("| iris | 50 |"));
+    }
+
+    #[test]
+    fn table1_does_not_bold_on_exact_ties() {
+        // Two families tie for the row maximum: NO cell may be bolded (a
+        // tie has no unique winner). The old renderer bolded every format
+        // within 1e-12 of the max, i.e. all tied cells.
+        let rows = vec![Table1Row {
+            dataset: "wdbc".into(),
+            inference_size: 190,
+            posit: (0.95, 1),
+            float: (0.95, 4),
+            fixed: (0.90, 5),
+            baseline: 0.96,
+        }];
+        let s = render_table1(&rows);
+        assert!(!s.contains("**"), "tied row must not bold any cell: {s}");
+        assert!(s.contains("95.0% (1)") && s.contains("95.0% (4)") && s.contains("90.0% (5)"));
+        // A unique winner still gets bolded.
+        let rows = vec![Table1Row {
+            dataset: "wdbc".into(),
+            inference_size: 190,
+            posit: (0.95, 1),
+            float: (0.94, 4),
+            fixed: (0.90, 5),
+            baseline: 0.96,
+        }];
+        assert!(render_table1(&rows).contains("**95.0%** (1)"));
     }
 
     #[test]

@@ -29,12 +29,14 @@ COMMANDS (one per paper artifact):
   fig7           degradation vs delay and power         (same flags as fig6)
   es-study       §5.1 posit es trade-off                (same flags)
   table2         posit-hardware comparison table
+  conv           conv-net Table 1 on the raster tasks   [--tasks mnist,fashion] [--scale small|full]
+                 (conv(5x5,s2)->pool(2)->dense, §11)
   tune           mixed-precision auto-tuner (§10)       [--dataset iris] [--budget min-acc=0.95|max-edp=X|max-luts=N]
-                                                        [--beam 2] [--eval-rows N]
+                                                        [--beam 2] [--eval-rows N] [--model mlp|conv]
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
-                                                        [--max-queue 1024] [--deadline-ms N]
+                                                        [--max-queue 1024] [--deadline-ms N] [--model mlp|conv]
   all            run every report at small scale
 
 Common flags: --seed N (default 7), --scale small|full (default small).
@@ -189,12 +191,47 @@ fn run(args: &[String]) -> Result<()> {
             emit("es_study.md", &report::render_es_study(&study))?;
         }
         "table2" => emit("table2.md", &report::render_table2())?,
+        "conv" => {
+            // The conv-capable layer IR end to end (DESIGN.md §11): train
+            // the small conv net on the raster tasks and sweep the 8-bit
+            // families through the conv EMAC datapath.
+            let default_tasks = flags.get("tasks").is_none();
+            let tasks: Vec<&str> = if default_tasks {
+                vec!["mnist", "fashion"]
+            } else {
+                c.tasks.iter().map(String::as_str).collect()
+            };
+            if let Some(bad) = tasks.iter().find(|t| !matches!(**t, "mnist" | "fashion")) {
+                bail!("conv consumes the 28x28 raster tasks (mnist | fashion), not {bad}");
+            }
+            let rows = experiments::conv_table(c.scale, c.seed, &tasks)?;
+            let mut s = String::from(
+                "conv-net Table 1 (conv4k5x5s2+pool2s2+flatten+dense10, conv EMAC datapath, §11)\n\n",
+            );
+            s.push_str(&report::render_table1(&rows));
+            emit("conv_table1.md", &s)?;
+        }
         "tune" => {
             let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
             let beam: usize = flags.get("beam").map(|s| s.parse()).transpose()?.unwrap_or(2);
-            let eval_rows: usize = flags.get("eval-rows").map(|s| s.parse()).transpose()?.unwrap_or(usize::MAX);
+            let conv = match flags.get("model").map(String::as_str) {
+                None | Some("mlp") => false,
+                Some("conv") => true,
+                Some(other) => bail!("unknown model {other} (mlp | conv)"),
+            };
+            // Conv evaluations walk ~50k quire terms per sample: cap the
+            // default validation rows so the descent stays interactive.
+            let default_rows = if conv { 96 } else { usize::MAX };
+            let eval_rows: usize = flags.get("eval-rows").map(|s| s.parse()).transpose()?.unwrap_or(default_rows);
             let ds = datasets::load(&dataset, c.seed, c.scale);
-            let mlp = experiments::train_model(&ds, c.seed);
+            if conv && ds.num_features != 28 * 28 {
+                bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
+            }
+            let mlp = if conv {
+                experiments::train_conv_model(&ds, c.seed, experiments::CONV_EPOCHS)
+            } else {
+                experiments::train_model(&ds, c.seed)
+            };
             let budget = match flags.get("budget") {
                 Some(s) => tune::Budget::parse(s)
                     .ok_or_else(|| anyhow!("unparseable budget {s} (min-acc=0.95 | max-edp=X | max-luts=N)"))?,
@@ -204,7 +241,8 @@ fn run(args: &[String]) -> Result<()> {
             };
             let cfg = tune::TuneConfig::new(budget).with_beam(beam).with_eval_rows(eval_rows);
             let report_ = tune::tune(&ds, &mlp, &cfg);
-            emit(&format!("tune_{dataset}.md"), &report_.render())?;
+            let name = if conv { format!("tune_conv_{dataset}.md") } else { format!("tune_{dataset}.md") };
+            emit(&name, &report_.render())?;
         }
         "sweep" => {
             // Diagnostic: per-(task, config) accuracy at one bit-width.
@@ -248,6 +286,11 @@ fn run(args: &[String]) -> Result<()> {
             let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
             let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
             let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let conv = match flags.get("model").map(String::as_str) {
+                None | Some("mlp") => false,
+                Some("conv") => true,
+                Some(other) => bail!("unknown model {other} (mlp | conv)"),
+            };
             let max_queue: usize = flags.get("max-queue").map(|s| s.parse()).transpose()?.unwrap_or(1024);
             let deadline = flags
                 .get("deadline-ms")
@@ -262,9 +305,17 @@ fn run(args: &[String]) -> Result<()> {
                 None => vec![FormatSpec::Posit { n: 8, es: 1 }],
             };
             let ds = datasets::load(&dataset, c.seed, c.scale);
-            let mlp = experiments::train_model(&ds, c.seed);
+            if conv && ds.num_features != 28 * 28 {
+                bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
+            }
+            let mlp = if conv {
+                experiments::train_conv_model(&ds, c.seed, experiments::CONV_EPOCHS)
+            } else {
+                experiments::train_model(&ds, c.seed)
+            };
             // One shard per requested format, all over the same trained
             // model — the deployment-time format choice as a routing key.
+            // Conv models serve Sim-native (workers degrade Xla requests).
             let shards: Vec<ShardConfig> = formats
                 .iter()
                 .map(|&spec| {
@@ -322,7 +373,7 @@ fn run(args: &[String]) -> Result<()> {
             emit(&format!("serve_{dataset}.md"), &s)?;
         }
         "all" => {
-            for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7", "tune"] {
+            for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7", "tune", "conv"] {
                 println!("==== {sub} ====");
                 run(&[sub.to_string(), "--seed".into(), c.seed.to_string()])?;
             }

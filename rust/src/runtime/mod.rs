@@ -367,7 +367,7 @@ impl TrainState {
                     w[c * i + r] = wio[r * o + c];
                 }
             }
-            layers.push(crate::accel::mlp::Layer { in_dim: i, out_dim: o, w, b: self.params[2 * li + 1].clone() });
+            layers.push(crate::accel::mlp::Layer::dense_with(i, o, w, self.params[2 * li + 1].clone()));
         }
         crate::accel::Mlp { layers }
     }

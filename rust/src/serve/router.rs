@@ -135,18 +135,23 @@ impl ShardConfig {
 
     /// Reject configs whose redundant fields disagree with the model
     /// topology — a mismatch would validate requests against the wrong
-    /// dimension or slice logits out of bounds at serve time.
+    /// dimension or slice logits out of bounds at serve time. Validation
+    /// runs on the model's typed layer IR (DESIGN.md §11): the shape chain
+    /// itself must infer cleanly (a broken conv/pool chain is a BadShard,
+    /// not a worker panic), and the request/response widths are the IR's
+    /// input and output shapes.
     fn validate(&self, label: &str) -> Result<(), ServeError> {
         let bad = |reason: String| ServeError::BadShard { shard: label.to_string(), reason };
-        let Some(first) = self.mlp.layers.first() else {
+        if self.mlp.layers.is_empty() {
             return Err(bad("model has no layers".into()));
-        };
-        let last = self.mlp.layers.last().expect("non-empty layer list has a last");
-        if self.num_features != first.in_dim {
-            return Err(bad(format!("num_features {} != model input dim {}", self.num_features, first.in_dim)));
         }
-        if self.num_classes != last.out_dim {
-            return Err(bad(format!("num_classes {} != model output dim {}", self.num_classes, last.out_dim)));
+        self.mlp.check_shapes().map_err(|e| bad(format!("layer IR rejected: {e}")))?;
+        let ir = self.mlp.ir();
+        if self.num_features != ir.input().len() {
+            return Err(bad(format!("num_features {} != model input dim {}", self.num_features, ir.input().len())));
+        }
+        if self.num_classes != ir.output().len() {
+            return Err(bad(format!("num_classes {} != model output dim {}", self.num_classes, ir.output().len())));
         }
         if self.worker.max_queue == 0 {
             return Err(bad("max_queue must be >= 1 (0 would shed every request)".into()));

@@ -276,11 +276,13 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth:
         Some(m) => DeepPositron::compile_mixed(&ws.mlp, m.clone()),
         None => DeepPositron::compile(&ws.mlp, ws.spec),
     };
-    let xla = if ws.engine == Engine::Xla && ws.mixed.is_none() {
+    let xla = if ws.engine == Engine::Xla && ws.mixed.is_none() && ws.mlp.is_dense() {
         build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec)
     } else {
-        if ws.engine == Engine::Xla {
+        if ws.engine == Engine::Xla && ws.mixed.is_some() {
             eprintln!("serve[{}]: mixed-precision plans are Sim-only (uniform AOT artifact), using Sim", ws.shard);
+        } else if ws.engine == Engine::Xla {
+            eprintln!("serve[{}]: conv layer IR is Sim-native (the AOT artifact is dense-only), using Sim", ws.shard);
         }
         None
     };

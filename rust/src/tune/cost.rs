@@ -1,27 +1,38 @@
-//! Network-level hardware costing for per-layer format assignments.
+//! Network-level hardware costing for per-layer format assignments, over
+//! the typed layer IR.
 //!
 //! The paper's Figs. 6–7 cost ONE EMAC at a fixed dot-product length; a
 //! deployment plan needs the cost of the whole network. Deep Positron's
-//! dataflow is a bank of EMACs per layer (one per output neuron) with the
-//! layers running serially, so per layer `i` with formats `F_i`:
+//! dataflow is a bank of EMACs per layer with the layers running serially;
+//! the IR ([`NetIr`]) says how each layer instantiates its bank, so per
+//! layer `i` with format `F_i` (see [`crate::accel::LayerGeom`]):
 //!
-//! * resources (LUTs/FFs/DSPs) = `fan_out_i ×` the per-EMAC synthesis of
-//!   `F_i`, with the Eq. (2) accumulator sized for `fan_in_i + 1` terms —
-//!   the layer's dot product plus its bias, exactly the bound
-//!   `DeepPositron::compile*` asserts the quire against — per the
-//!   per-task/per-layer `k` rule (a 4-feature layer no longer pays for a
-//!   784-product quire);
-//! * energy of one inference = `fan_in_i × fan_out_i ×` per-MAC energy
-//!   (every EMAC in the bank streams the layer's fan-in);
-//! * latency of one inference = `fan_in_i ×` critical path (the bank runs
-//!   its fan-in in lock-step cycles) + the pipeline fill latency;
+//! * resources (LUTs/FFs/DSPs) = `banks_i ×` the per-EMAC synthesis of
+//!   `F_i`, with the Eq. (2) accumulator sized for the layer's OWN
+//!   accumulation length `k_i` (dense: fan-in + 1 bias; conv:
+//!   `kh·kw·in_ch + 1` — a 26-product conv EMAC no longer pays for a
+//!   784-product quire; pool: the `k²` window) — exactly the bound
+//!   `DeepPositron::compile*` asserts the quire against. Dense banks hold
+//!   one EMAC per output neuron; conv banks one per output channel; pool
+//!   banks one accumulate-only unit per channel (costed as a full EMAC — a
+//!   deliberate, documented over-estimate that keeps the model monotone);
+//!   flatten is wiring and costs nothing.
+//! * energy of one inference = `fan_in_i × num_outputs_i ×` per-MAC energy
+//!   (every unit of the bank streams its receptive field per output);
+//! * latency of one inference = `fan_in_i × outputs_per_bank_i ×` critical
+//!   path (each unit produces its outputs serially, the bank in lock-step)
+//!   + the pipeline fill latency;
 //! * network EDP = total energy × total latency — the tuner's default
 //!   budget/objective axis, the network analogue of Fig. 6's x-axis.
 //!
-//! Every term is monotone in format width, so any single-layer downgrade
-//! strictly reduces the modeled EDP — the property the Pareto search leans
-//! on (guarded by `tests/prop_hw.rs`).
+//! Dense-only networks reduce exactly to the pre-IR formulas (banks =
+//! fan-out, outputs-per-bank = 1), so [`network_cost`] — the dense
+//! `dims`-based entry — is unchanged observable behavior. Every term is
+//! monotone in format width, so any single-layer downgrade strictly
+//! reduces the modeled EDP — the property the Pareto search leans on
+//! (guarded by `tests/prop_hw.rs`).
 
+use crate::accel::{LayerKind, NetIr};
 use crate::formats::MixedSpec;
 use crate::hw;
 
@@ -46,10 +57,10 @@ pub struct NetworkCost {
     pub max_quire_bits: u32,
 }
 
-/// Cost a per-layer assignment for a network with layer widths `dims`
-/// (`[in, h1, ..., out]`; one assignment entry per adjacent pair).
-pub fn network_cost(mixed: &MixedSpec, dims: &[usize]) -> NetworkCost {
-    assert_eq!(mixed.len() + 1, dims.len(), "dims must be [in, h1, ..., out] with one format per layer");
+/// Cost a per-layer assignment against a network's typed IR — the general
+/// entry point ([`network_cost`] is the dense-`dims` special case).
+pub fn network_cost_ir(mixed: &MixedSpec, ir: &NetIr) -> NetworkCost {
+    assert_eq!(mixed.len(), ir.len(), "IR and assignment must carry one format per layer");
     let mut c = NetworkCost {
         luts: 0.0,
         ffs: 0.0,
@@ -59,21 +70,34 @@ pub fn network_cost(mixed: &MixedSpec, dims: &[usize]) -> NetworkCost {
         edp_pj_ns: 0.0,
         max_quire_bits: 0,
     };
-    for (li, &spec) in mixed.layers().iter().enumerate() {
-        let (fan_in, fan_out) = (dims[li], dims[li + 1]);
-        // k = fan-in + 1: the bias is one more quire addend, matching the
-        // compile-time `assert_quire_fits(dims[li] + 1)` bound.
-        let r = hw::synthesize(spec, fan_in + 1);
-        let macs = (fan_in * fan_out) as f64;
-        c.luts += r.luts * fan_out as f64;
-        c.ffs += r.ffs * fan_out as f64;
-        c.dsps += r.dsps * fan_out as f64;
-        c.energy_pj += r.energy_pj * macs;
-        c.delay_ns += r.critical_path_ns * fan_in as f64 + r.latency_ns;
+    for (geom, &spec) in ir.geoms().iter().zip(mixed.layers()) {
+        if matches!(geom.kind, LayerKind::Flatten) {
+            continue; // pure wiring: no EMACs, no cycles
+        }
+        let fan_in = geom.fan_in();
+        let banks = geom.banks();
+        let outputs = geom.out_shape.len();
+        // k per Eq. (2): the layer's own accumulation length (fan-in + bias
+        // for weighted layers), matching the compile-time
+        // `assert_quire_fits(layer.eq2_k())` bound.
+        let r = hw::synthesize(spec, geom.eq2_k());
+        c.luts += r.luts * banks as f64;
+        c.ffs += r.ffs * banks as f64;
+        c.dsps += r.dsps * banks as f64;
+        c.energy_pj += r.energy_pj * (fan_in * outputs) as f64;
+        c.delay_ns += r.critical_path_ns * (fan_in * geom.outputs_per_bank()) as f64 + r.latency_ns;
         c.max_quire_bits = c.max_quire_bits.max(r.quire_bits);
     }
     c.edp_pj_ns = c.energy_pj * c.delay_ns;
     c
+}
+
+/// Cost a per-layer assignment for a dense network with layer widths
+/// `dims` (`[in, h1, ..., out]`; one assignment entry per adjacent pair) —
+/// the classic dense-only view, bit-identical to the pre-IR cost model.
+pub fn network_cost(mixed: &MixedSpec, dims: &[usize]) -> NetworkCost {
+    assert_eq!(mixed.len() + 1, dims.len(), "dims must be [in, h1, ..., out] with one format per layer");
+    network_cost_ir(mixed, &NetIr::dense(dims))
 }
 
 #[cfg(test)]
@@ -85,6 +109,10 @@ mod tests {
 
     fn uniform(name: &str) -> MixedSpec {
         MixedSpec::uniform(FormatSpec::parse(name).unwrap(), DIMS.len() - 1)
+    }
+
+    fn conv_ir() -> NetIr {
+        NetIr::parse("1x28x28:conv4k5x5s2+pool2s2+flatten+dense10").unwrap()
     }
 
     #[test]
@@ -124,6 +152,59 @@ mod tests {
         assert!(r_in.quire_bits > r_mid.quire_bits);
         // And the network-wide max reports the widest of them.
         assert_eq!(network_cost(&m, &DIMS).max_quire_bits, r_in.quire_bits);
+    }
+
+    #[test]
+    fn dense_ir_costing_matches_the_dims_path_exactly() {
+        let m = uniform("posit7es1");
+        let via_dims = network_cost(&m, &DIMS);
+        let via_ir = network_cost_ir(&m, &NetIr::dense(&DIMS));
+        assert_eq!(via_dims, via_ir);
+    }
+
+    #[test]
+    fn conv_quire_is_sized_by_the_receptive_field_not_the_input_width() {
+        let ir = conv_ir();
+        let spec = FormatSpec::parse("posit8es1").unwrap();
+        let m = MixedSpec::uniform(spec, ir.len());
+        let c = network_cost_ir(&m, &ir);
+        // Widest layer k is the dense head (144 + 1), not the 784-wide
+        // input (which a dense net on the same pixels would provision).
+        assert_eq!(c.max_quire_bits, hw::synthesize(spec, 145).quire_bits);
+        let dense_equiv = network_cost(&MixedSpec::uniform(spec, 2), &[784, 100, 10]);
+        assert!(
+            c.max_quire_bits < dense_equiv.max_quire_bits,
+            "conv quire {} not below dense-on-pixels quire {}",
+            c.max_quire_bits,
+            dense_equiv.max_quire_bits
+        );
+        // Conv bank: 4 EMACs (one per output channel) — far fewer units
+        // than the dense head's 10, but each sweeps 144 output pixels, so
+        // the conv layer dominates latency, not resources.
+        let conv_only = network_cost_ir(
+            &MixedSpec::uniform(spec, 1),
+            &NetIr::parse("1x28x28:conv4k5x5s2").unwrap(),
+        );
+        let r = hw::synthesize(spec, 26);
+        assert_eq!(conv_only.luts, r.luts * 4.0);
+        assert_eq!(conv_only.delay_ns, r.critical_path_ns * (25 * 144) as f64 + r.latency_ns);
+        assert_eq!(conv_only.energy_pj, r.energy_pj * (25 * 576) as f64);
+    }
+
+    #[test]
+    fn conv_downgrades_stay_monotone() {
+        let ir = conv_ir();
+        let spec = FormatSpec::parse("posit8es1").unwrap();
+        let base = MixedSpec::uniform(spec, ir.len());
+        let base_cost = network_cost_ir(&base, &ir);
+        for li in [0usize, 1, 3] {
+            // (layer 2 is the flatten: format changes there cost nothing)
+            let m = base.with_layer(li, FormatSpec::parse("posit6es1").unwrap());
+            let c = network_cost_ir(&m, &ir);
+            assert!(c.edp_pj_ns < base_cost.edp_pj_ns, "downgrading layer {li} did not reduce EDP");
+        }
+        let m = base.with_layer(2, FormatSpec::parse("posit6es1").unwrap());
+        assert_eq!(network_cost_ir(&m, &ir).luts, base_cost.luts, "flatten must cost nothing");
     }
 
     #[test]

@@ -10,9 +10,13 @@
 //! * **Accuracy axis** — every candidate assignment compiles through the
 //!   heterogeneous execution plans ([`DeepPositron::compile_mixed`]) and
 //!   evaluates on the task's held-out split via the batched evaluator.
-//! * **Hardware axis** — [`network_cost`] sums per-layer
-//!   [`hw::synthesize`] reports, each layer's EMAC bank sized by Eq. (2)
-//!   for *that layer's* fan-in, into network LUT/energy/delay/EDP totals.
+//! * **Hardware axis** — [`network_cost_ir`] sums per-layer
+//!   [`hw::synthesize`] reports over the network's typed IR
+//!   (`crate::accel::NetIr`), each layer's EMAC bank sized by Eq. (2) for
+//!   *that layer's* receptive-field fan-in (a conv layer provisions its
+//!   `kh·kw·in_ch`-term quire, not an input-width one), into network
+//!   LUT/energy/delay/EDP totals. [`network_cost`] is the dense-`dims`
+//!   special case.
 //!
 //! [`tune`] enumerates uniform candidates from `FormatSpec::sweep(5..=8)`,
 //! runs a deterministic greedy/beam per-layer descent under a user budget
@@ -31,6 +35,6 @@ pub mod cost;
 pub mod pareto;
 pub mod search;
 
-pub use cost::{network_cost, NetworkCost};
+pub use cost::{network_cost, network_cost_ir, NetworkCost};
 pub use pareto::{pareto_frontier, ParetoPoint};
 pub use search::{default_budget, tune, Budget, TuneConfig, TunePlan, TuneReport};

@@ -17,12 +17,12 @@
 use std::collections::HashMap;
 use std::ops::RangeInclusive;
 
-use crate::accel::{Datapath, DeepPositron, Mlp};
+use crate::accel::{Datapath, DeepPositron, LayerKind, Mlp, NetIr};
 use crate::datasets::Dataset;
 use crate::formats::{FormatSpec, MixedSpec};
 use crate::quant;
 use crate::serve::ShardConfig;
-use crate::tune::cost::{network_cost, NetworkCost};
+use crate::tune::cost::{network_cost_ir, NetworkCost};
 use crate::tune::pareto::{pareto_frontier, ParetoPoint};
 
 /// The user-supplied constraint the descent optimizes under.
@@ -131,8 +131,11 @@ impl TuneConfig {
 pub struct TunePlan {
     /// Task the plan was tuned for.
     pub dataset: String,
-    /// Network layer widths, `[in, h1, ..., out]`.
+    /// Network layer widths, `[in, h1, ..., out]` (the flat view of `ir`).
     pub dims: Vec<usize>,
+    /// The network's typed layer IR — what the hardware cost recomputes
+    /// from, and what makes conv plans serializable (DESIGN.md §11).
+    pub ir: NetIr,
     /// The selected per-layer format assignment.
     pub assignment: MixedSpec,
     /// Validation accuracy of the compiled mixed plan.
@@ -147,13 +150,16 @@ pub struct TunePlan {
 impl TunePlan {
     /// Serialize to a line-oriented `key=value` text block. Hardware cost
     /// is *not* stored — [`TunePlan::parse`] recomputes it from the
-    /// assignment and dims, so the cost model stays the single source of
-    /// truth.
+    /// assignment and the layer IR, so the cost model stays the single
+    /// source of truth. The `ir=` line carries the typed topology
+    /// ([`NetIr::name`]); plans written before the IR existed omit it and
+    /// parse as dense.
     pub fn to_text(&self) -> String {
         format!(
-            "dataset={}\ndims={}\nlayers={}\naccuracy={:.6}\nfeasible={}\n",
+            "dataset={}\ndims={}\nir={}\nlayers={}\naccuracy={:.6}\nfeasible={}\n",
             self.dataset,
             self.dims.iter().map(usize::to_string).collect::<Vec<_>>().join(","),
+            self.ir.name(),
             self.assignment.name(),
             self.accuracy,
             self.feasible,
@@ -161,7 +167,8 @@ impl TunePlan {
     }
 
     /// Parse the [`TunePlan::to_text`] form; recomputes [`NetworkCost`]
-    /// from the assignment. Returns `None` on any malformed field.
+    /// from the assignment and IR. Returns `None` on any malformed field,
+    /// or when the `ir=` topology disagrees with `dims=`.
     pub fn parse(s: &str) -> Option<TunePlan> {
         let mut fields: HashMap<&str, &str> = HashMap::new();
         for line in s.lines() {
@@ -178,14 +185,25 @@ impl TunePlan {
             .split(',')
             .map(|d| d.parse().ok())
             .collect::<Option<Vec<usize>>>()?;
+        if dims.len() < 2 {
+            return None;
+        }
+        let ir = match fields.get("ir") {
+            Some(text) => NetIr::parse(text)?,
+            // Pre-IR plans carried only the flat widths: dense topology.
+            None => NetIr::dense(&dims),
+        };
+        if ir.dims() != dims {
+            return None;
+        }
         let assignment = MixedSpec::parse(fields.get("layers")?)?;
-        if assignment.len() + 1 != dims.len() {
+        if assignment.len() != ir.len() {
             return None;
         }
         let accuracy: f64 = fields.get("accuracy")?.parse().ok()?;
         let feasible: bool = fields.get("feasible")?.parse().ok()?;
-        let cost = network_cost(&assignment, &dims);
-        Some(TunePlan { dataset, dims, assignment, accuracy, cost, feasible })
+        let cost = network_cost_ir(&assignment, &ir);
+        Some(TunePlan { dataset, dims, ir, assignment, accuracy, cost, feasible })
     }
 
     /// A serving-shard config that deploys this plan: the shard's workers
@@ -266,17 +284,24 @@ impl TuneReport {
         s.push_str("| layer | fan-in | fan-out | format | weight MSE (Eq. 3) | quire bits |\n");
         s.push_str("|---|---|---|---|---|---|\n");
         for (li, (&spec, &mse)) in self.plan.assignment.layers().iter().zip(&self.layer_mse).enumerate() {
-            // k = fan-in + 1 (bias term), the same sizing `network_cost`
-            // and the compile-time quire check use.
-            let r = crate::hw::synthesize(spec, self.plan.dims[li] + 1);
+            // k = the layer's own Eq. (2) accumulation length (fan-in + 1
+            // bias for weighted layers), the same sizing `network_cost_ir`
+            // and the compile-time quire check use. Flatten is pure wiring
+            // and provisions no quire.
+            let geom = &self.plan.ir.geoms()[li];
+            let quire = match geom.kind {
+                LayerKind::Flatten => 0,
+                _ => crate::hw::synthesize(spec, geom.eq2_k()).quire_bits,
+            };
             s.push_str(&format!(
-                "| dense{} | {} | {} | {} | {:.3e} | {} |\n",
+                "| {}{} | {} | {} | {} | {:.3e} | {} |\n",
+                geom.kind_label(),
                 li + 1,
-                self.plan.dims[li],
+                geom.fan_in(),
                 self.plan.dims[li + 1],
                 spec.name(),
                 mse,
-                r.quire_bits,
+                quire,
             ));
         }
         s.push_str("\n## Plan\n\n```\n");
@@ -292,7 +317,7 @@ impl TuneReport {
 struct Evaluator<'a> {
     ds: &'a Dataset,
     mlp: &'a Mlp,
-    dims: Vec<usize>,
+    ir: NetIr,
     rows: usize,
     cache: HashMap<MixedSpec, (f64, NetworkCost)>,
     log: Vec<ParetoPoint>,
@@ -305,7 +330,7 @@ impl Evaluator<'_> {
         }
         let dp = DeepPositron::compile_mixed(self.mlp, mixed.clone());
         let accuracy = dp.accuracy_on(self.ds, Datapath::Emac, self.rows);
-        let cost = network_cost(mixed, &self.dims);
+        let cost = network_cost_ir(mixed, &self.ir);
         self.cache.insert(mixed.clone(), (accuracy, cost));
         self.log.push(ParetoPoint { mixed: mixed.clone(), accuracy, cost });
         (accuracy, cost)
@@ -327,11 +352,11 @@ pub fn default_budget(ds: &Dataset, mlp: &Mlp, eval_rows: usize) -> Budget {
 /// the budget, and report the plan + frontier. Deterministic in its
 /// inputs (see the module docs for the argument).
 pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
-    let dims = mlp.dims();
+    let ir = mlp.ir();
     let nlayers = mlp.layers.len();
     let candidates: Vec<FormatSpec> = cfg.bits.clone().flat_map(FormatSpec::sweep).collect();
     assert!(!candidates.is_empty(), "empty candidate sweep");
-    let mut ev = Evaluator { ds, mlp, dims, rows: cfg.eval_rows, cache: HashMap::new(), log: Vec::new() };
+    let mut ev = Evaluator { ds, mlp, ir, rows: cfg.eval_rows, cache: HashMap::new(), log: Vec::new() };
 
     // Phase 1: score every uniform candidate (plus the 8-bit posit
     // reference family, even when `bits` excludes 8).
@@ -429,12 +454,19 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
 
     let (accuracy, cost) = ev.score(&incumbent);
     let feasible = cfg.budget.feasible(accuracy, &cost);
-    let dims = ev.dims.clone();
-    let plan = TunePlan { dataset: ds.name.clone(), dims, assignment: incumbent, accuracy, cost, feasible };
+    let ir = ev.ir.clone();
+    let dims = ir.dims();
+    let plan = TunePlan { dataset: ds.name.clone(), dims, ir, assignment: incumbent, accuracy, cost, feasible };
     // Per-layer weight-quantization MSE under the chosen assignment (the
-    // Fig. 5 metric, repurposed as the plan's explanation column).
-    let layer_mse: Vec<f64> =
-        plan.assignment.layers().iter().zip(&mlp.layers).map(|(&s, l)| quant::mse(s, &l.w)).collect();
+    // Fig. 5 metric, repurposed as the plan's explanation column; 0 for
+    // weightless wiring layers, which quantize nothing).
+    let layer_mse: Vec<f64> = plan
+        .assignment
+        .layers()
+        .iter()
+        .zip(&mlp.layers)
+        .map(|(&s, l)| if l.w.is_empty() { 0.0 } else { quant::mse(s, &l.w) })
+        .collect();
     let frontier = pareto_frontier(&ev.log);
     TuneReport { plan, frontier, reference, budget: cfg.budget, evaluated: ev.cache.len(), rounds, layer_mse }
 }
@@ -489,11 +521,12 @@ mod tests {
     #[test]
     fn plan_text_round_trips() {
         let assignment = MixedSpec::parse("posit8es1+float6we3+fixed5q3").unwrap();
-        let dims = vec![4, 10, 8, 3];
-        let cost = network_cost(&assignment, &dims);
+        let ir = NetIr::dense(&[4, 10, 8, 3]);
+        let cost = network_cost_ir(&assignment, &ir);
         let plan = TunePlan {
             dataset: "iris".into(),
-            dims,
+            dims: ir.dims(),
+            ir,
             assignment,
             accuracy: 0.9667,
             cost,
@@ -502,6 +535,7 @@ mod tests {
         let parsed = TunePlan::parse(&plan.to_text()).expect("round trip");
         assert_eq!(parsed.dataset, plan.dataset);
         assert_eq!(parsed.dims, plan.dims);
+        assert_eq!(parsed.ir, plan.ir);
         assert_eq!(parsed.assignment, plan.assignment);
         assert!((parsed.accuracy - plan.accuracy).abs() < 1e-9);
         assert_eq!(parsed.feasible, plan.feasible);
@@ -510,5 +544,34 @@ mod tests {
         // Malformed inputs are rejected, not mis-parsed.
         assert!(TunePlan::parse("dataset=iris\n").is_none());
         assert!(TunePlan::parse(&plan.to_text().replace("posit8es1", "bogus9")).is_none());
+        // Pre-IR plan files (no ir= line) still parse, as dense.
+        let legacy = plan.to_text().lines().filter(|l| !l.starts_with("ir=")).collect::<Vec<_>>().join("\n");
+        let parsed = TunePlan::parse(&legacy).expect("legacy plans parse");
+        assert_eq!(parsed.ir, plan.ir);
+        assert_eq!(parsed.cost, plan.cost);
+    }
+
+    #[test]
+    fn conv_plan_text_round_trips_with_topology() {
+        let ir = NetIr::parse("1x28x28:conv4k5x5s2+pool2s2+flatten+dense10").unwrap();
+        let assignment = MixedSpec::parse("posit8es1+posit7es1+posit7es1+float8we4").unwrap();
+        let cost = network_cost_ir(&assignment, &ir);
+        let plan = TunePlan {
+            dataset: "mnist".into(),
+            dims: ir.dims(),
+            ir: ir.clone(),
+            assignment,
+            accuracy: 0.91,
+            cost,
+            feasible: true,
+        };
+        let text = plan.to_text();
+        assert!(text.contains("ir=1x28x28:conv4k5x5s2+pool2s2+flatten+dense10"), "{text}");
+        let parsed = TunePlan::parse(&text).expect("conv round trip");
+        assert_eq!(parsed.ir, ir);
+        assert_eq!(parsed.cost, plan.cost);
+        // A conv plan with a mangled topology line must not silently parse:
+        // the inferred shapes no longer match the dims= widths.
+        assert!(TunePlan::parse(&text.replace("conv4k5x5s2", "conv4k9x9s2")).is_none());
     }
 }

@@ -1,0 +1,393 @@
+//! Conv layer-IR integration tests (DESIGN.md §11):
+//!
+//! * **f64-reference-quantized oracle** — the conv EMAC's decoded outputs
+//!   equal an independent, in-test f64 forward pass over dequantized
+//!   weights with per-layer table rounding, bit for bit, on formats whose
+//!   quire fits f64's exact window.
+//! * **Scalar-primitive oracle** — `forward_batch` on a conv net is
+//!   bit-identical to driving the public `Emac`/`ScalarAlu` primitives one
+//!   sample, one output element at a time, across formats × all three
+//!   datapaths (EMAC, narrow quire, inexact MAC).
+//! * **Uniform-mixed parity** — a uniform `MixedSpec` conv plan equals the
+//!   uniform compile path exactly (the §10 invariant, now on conv).
+//! * **Tune → serve pipeline** — `tune::tune` on the conv MNIST net
+//!   produces a mixed-precision `TunePlan` that serializes (with its `ir=`
+//!   topology line), parses back, and starts a serving shard whose replies
+//!   match the compiled mixed plan.
+//! * **IR validation at serve start** — a shape-inconsistent conv model is
+//!   rejected as a typed `BadShard`, not a worker panic.
+
+use deep_positron::accel::{Datapath, DeepPositron, LayerKind, Mlp};
+use deep_positron::coordinator::experiments::{conv_model, train_conv_model};
+use deep_positron::datasets::{self, Dataset, Scale};
+use deep_positron::formats::ops::ScalarAlu;
+use deep_positron::formats::{Emac, Exact, FormatSpec, MixedSpec, Quantizer};
+use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey};
+use deep_positron::tune::{self, Budget, TuneConfig, TunePlan};
+
+fn mnist() -> Dataset {
+    datasets::load("mnist", 9, Scale::Small)
+}
+
+/// Independent f64 reference: dequantized weights, exact f64 accumulation,
+/// one table-round per layer output into the layer's (uniform) format.
+/// Reimplements the dataflow from the public `Layer` geometry — it shares
+/// no kernel code with the accelerator.
+fn f64_oracle(mlp: &Mlp, q: &Quantizer, weights: &[Vec<f64>], biases: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+    let mut act: Vec<f64> = x.iter().map(|&v| q.quantize_f64(v).1).collect();
+    let nl = mlp.layers.len();
+    for (li, layer) in mlp.layers.iter().enumerate() {
+        let relu = layer.kind.has_weights() && li + 1 < nl;
+        let mut next = vec![0.0; layer.out_dim];
+        match layer.kind {
+            LayerKind::Dense => {
+                for o in 0..layer.out_dim {
+                    let mut acc = biases[li][o];
+                    for i in 0..layer.in_dim {
+                        acc += weights[li][o * layer.in_dim + i] * act[i];
+                    }
+                    let r = q.quantize_f64(acc).1;
+                    next[o] = if relu { r.max(0.0) } else { r };
+                }
+            }
+            LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                let (ih, iw, oh, ow) = conv_dims(layer.in_dim, layer.out_dim, in_ch, out_ch);
+                for oc in 0..out_ch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc = biases[li][oc];
+                            for ic in 0..in_ch {
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                        let wi = oc * in_ch * kh * kw + ic * kh * kw + ky * kw + kx;
+                                        acc += weights[li][wi] * act[i];
+                                    }
+                                }
+                            }
+                            let r = q.quantize_f64(acc).1;
+                            next[oc * oh * ow + oy * ow + ox] = if relu { r.max(0.0) } else { r };
+                        }
+                    }
+                }
+            }
+            LayerKind::AvgPool { k, stride } => {
+                let c = channels(layer);
+                let ih = side(layer.in_dim / c);
+                let iw = ih;
+                let oh = side(layer.out_dim / c);
+                let ow = oh;
+                for ch in 0..c {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut acc = 0.0;
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    acc += act[ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx)];
+                                }
+                            }
+                            next[ch * oh * ow + oy * ow + ox] = q.quantize_f64(acc / (k * k) as f64).1;
+                        }
+                    }
+                }
+            }
+            LayerKind::Flatten => next.copy_from_slice(&act[..layer.in_dim]),
+        }
+        act = next;
+    }
+    act
+}
+
+/// Square side length (the conv test nets use square blocks).
+fn side(n: usize) -> usize {
+    let s = (n as f64).sqrt().round() as usize;
+    assert_eq!(s * s, n, "non-square block in test net");
+    s
+}
+
+fn channels(layer: &deep_positron::accel::Layer) -> usize {
+    layer.in_shape.channels()
+}
+
+fn conv_dims(in_dim: usize, out_dim: usize, in_ch: usize, out_ch: usize) -> (usize, usize, usize, usize) {
+    let ih = side(in_dim / in_ch);
+    let oh = side(out_dim / out_ch);
+    (ih, ih, oh, oh)
+}
+
+#[test]
+fn conv_emac_matches_independent_f64_quantized_oracle() {
+    // Exact-EMAC conv output vs the f64-reference-quantized oracle, bit for
+    // bit, on formats whose quire fits f64's exact window at these value
+    // ranges (the DESIGN.md §2 exactness argument).
+    let ds = mnist();
+    let mlp = conv_model(9);
+    for spec in ["posit8es1", "float8we4", "fixed8q4"] {
+        let dp = DeepPositron::compile(&mlp, FormatSpec::parse(spec).unwrap());
+        let weights = dp.dequantized_weights();
+        let biases = dp.dequantized_biases();
+        for i in 0..6 {
+            let x = ds.test_row(i);
+            let codes = dp.forward_codes(x);
+            let vals: Vec<f64> = codes.iter().map(|&c| dp.quantizer().decode(c).unwrap().to_f64()).collect();
+            let oracle = f64_oracle(&mlp, dp.quantizer(), &weights, &biases, x);
+            assert_eq!(vals, oracle, "{spec} sample {i}");
+        }
+    }
+}
+
+/// The scalar-primitive oracle: one sample, one output element at a time,
+/// through the public `Emac` (EMAC / narrow-quire) or `ScalarAlu` (inexact
+/// MAC) — the per-element loop the conv accelerator batches.
+fn scalar_conv_oracle(
+    mlp: &Mlp,
+    q: &Quantizer,
+    w_codes: &[Vec<u16>],
+    b_exact: &[Vec<Exact>],
+    x: &[f64],
+    mode: Datapath,
+) -> Vec<u16> {
+    let fmt = FormatSpec::parse(q.name()).unwrap().build();
+    let max_k = mlp.layers.iter().map(|l| l.eq2_k()).max().unwrap().max(2);
+    let mut emac = Emac::new(fmt.as_ref(), q, max_k);
+    if let Datapath::NarrowQuire(bits) = mode {
+        emac.set_width_limit(bits);
+    }
+    let alu = ScalarAlu::new(q);
+    let zero = q.zero_code();
+    let (mut act, _) = q.quantize_slice(x);
+    let nl = mlp.layers.len();
+    for (li, layer) in mlp.layers.iter().enumerate() {
+        let relu = layer.kind.has_weights() && li + 1 < nl;
+        let mut next = vec![0u16; layer.out_dim];
+        match layer.kind {
+            LayerKind::Dense => {
+                for o in 0..layer.out_dim {
+                    let row = &w_codes[li][o * layer.in_dim..(o + 1) * layer.in_dim];
+                    next[o] = match mode {
+                        Datapath::Emac | Datapath::NarrowQuire(_) => emac.dot(row, &act, Some(b_exact[li][o]), relu),
+                        Datapath::InexactMac => {
+                            let mut acc = alu.inexact_dot(row, &act);
+                            acc = alu.add(acc, q.quantize_exact(&b_exact[li][o]).0);
+                            let v = q.decode(acc).unwrap();
+                            if relu && v.sign {
+                                zero
+                            } else {
+                                acc
+                            }
+                        }
+                    };
+                }
+            }
+            LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
+                let (ih, iw, oh, ow) = conv_dims(layer.in_dim, layer.out_dim, in_ch, out_ch);
+                for oc in 0..out_ch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            // Gather the receptive field, then run it as one
+                            // scalar dot product.
+                            let mut wrow = Vec::with_capacity(kh * kw * in_ch);
+                            let mut arow = Vec::with_capacity(kh * kw * in_ch);
+                            for ic in 0..in_ch {
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        wrow.push(w_codes[li][oc * in_ch * kh * kw + ic * kh * kw + ky * kw + kx]);
+                                        arow.push(act[ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx)]);
+                                    }
+                                }
+                            }
+                            let o = oc * oh * ow + oy * ow + ox;
+                            next[o] = match mode {
+                                Datapath::Emac | Datapath::NarrowQuire(_) => {
+                                    emac.dot(&wrow, &arow, Some(b_exact[li][oc]), relu)
+                                }
+                                Datapath::InexactMac => {
+                                    let mut acc = alu.inexact_dot(&wrow, &arow);
+                                    acc = alu.add(acc, q.quantize_exact(&b_exact[li][oc]).0);
+                                    let v = q.decode(acc).unwrap();
+                                    if relu && v.sign {
+                                        zero
+                                    } else {
+                                        acc
+                                    }
+                                }
+                            };
+                        }
+                    }
+                }
+            }
+            LayerKind::AvgPool { k, stride } => {
+                let c = channels(layer);
+                let ih = side(layer.in_dim / c);
+                let oh = side(layer.out_dim / c);
+                let down = ((k * k).trailing_zeros()) as i32;
+                let (recip, _) = q.quantize_f64(1.0 / (k * k) as f64);
+                for ch in 0..c {
+                    for oy in 0..oh {
+                        for ox in 0..oh {
+                            let o = ch * oh * oh + oy * oh + ox;
+                            match mode {
+                                Datapath::Emac | Datapath::NarrowQuire(_) => {
+                                    for ky in 0..k {
+                                        for kx in 0..k {
+                                            let code = act[ch * ih * ih + (oy * stride + ky) * ih + (ox * stride + kx)];
+                                            emac.accumulate_exact(q.decode(code).unwrap());
+                                        }
+                                    }
+                                    let v = emac.quire_value();
+                                    // Exact divide by k² = exponent shift.
+                                    let avg =
+                                        if v.is_zero() { v } else { Exact::new(v.sign, v.mag, v.exp - down) };
+                                    next[o] = q.quantize_exact(&avg).0;
+                                    // Clear the quire for the next element
+                                    // (result() also resets the MAC audit).
+                                    let _ = emac.result(false);
+                                }
+                                Datapath::InexactMac => {
+                                    let mut acc = zero;
+                                    for ky in 0..k {
+                                        for kx in 0..k {
+                                            let code = act[ch * ih * ih + (oy * stride + ky) * ih + (ox * stride + kx)];
+                                            acc = alu.add(acc, code);
+                                        }
+                                    }
+                                    let acc = alu.mul(acc, recip);
+                                    let v = q.decode(acc).unwrap();
+                                    next[o] = q.quantize_exact(&v).0;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            LayerKind::Flatten => next.copy_from_slice(&act[..layer.in_dim]),
+        }
+        act = next;
+    }
+    act
+}
+
+/// Recover the compiled model's quantized parameters through the public
+/// accessors (quantize-of-representable is the identity).
+fn quantized_params(dp: &DeepPositron) -> (Vec<Vec<u16>>, Vec<Vec<Exact>>) {
+    let q = dp.quantizer();
+    let weights = dp.dequantized_weights().iter().map(|w| q.quantize_slice(w).0).collect();
+    let biases = dp
+        .dequantized_biases()
+        .iter()
+        .map(|bs| bs.iter().map(|&b| q.decode(q.quantize_f64(b).0).unwrap_or(Exact::ZERO)).collect())
+        .collect();
+    (weights, biases)
+}
+
+#[test]
+fn conv_batch_is_bit_identical_to_the_scalar_primitive_oracle() {
+    let ds = mnist();
+    let mlp = conv_model(9);
+    for spec_name in ["posit8es1", "float8we4", "fixed8q5"] {
+        let spec = FormatSpec::parse(spec_name).unwrap();
+        let dp = DeepPositron::compile(&mlp, spec);
+        let (w_codes, b_exact) = quantized_params(&dp);
+        let rows: Vec<&[f64]> = (0..3).map(|i| ds.test_row(i)).collect();
+        for mode in [Datapath::Emac, Datapath::NarrowQuire(40), Datapath::InexactMac] {
+            let batched = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                let expect = scalar_conv_oracle(&mlp, dp.quantizer(), &w_codes, &b_exact, row, mode);
+                assert_eq!(batched[i], expect, "{spec_name} {mode:?} sample {i} (batched)");
+                if i == 0 {
+                    assert_eq!(
+                        dp.forward_codes_with(row, mode),
+                        expect,
+                        "{spec_name} {mode:?} sample {i} (scalar wrapper)"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn uniform_mixedspec_is_bit_identical_on_the_conv_net() {
+    let ds = mnist();
+    let mlp = conv_model(9);
+    let nlayers = mlp.layers.len();
+    let rows: Vec<&[f64]> = (0..3).map(|i| ds.test_row(i)).collect();
+    for spec_name in ["posit8es1", "float7we3", "fixed8q5"] {
+        let spec = FormatSpec::parse(spec_name).unwrap();
+        let uniform = DeepPositron::compile(&mlp, spec);
+        let mixed = DeepPositron::compile_mixed(&mlp, MixedSpec::uniform(spec, nlayers));
+        for mode in [Datapath::Emac, Datapath::NarrowQuire(40), Datapath::InexactMac] {
+            assert_eq!(
+                uniform.forward_batch(&rows, mode),
+                mixed.forward_batch(&rows, mode),
+                "{spec_name} {mode:?}: uniform mixed conv plan diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn tune_produces_and_serve_loads_a_mixed_conv_plan() {
+    // The acceptance pipeline: tune the conv MNIST net under a trivially
+    // feasible accuracy floor (the descent then minimizes network EDP),
+    // round-trip the plan text (with its ir= topology), and serve from it.
+    let ds = mnist();
+    let mlp = train_conv_model(&ds, 7, 2);
+    let cfg = TuneConfig::new(Budget::MinAcc(0.0)).with_beam(1).with_bits(8..=8).with_eval_rows(8);
+    let report = tune::tune(&ds, &mlp, &cfg);
+    let plan = &report.plan;
+    assert!(plan.feasible);
+    assert_eq!(plan.ir, mlp.ir());
+    assert_eq!(plan.assignment.len(), mlp.layers.len());
+    assert!(!plan.ir.is_dense());
+
+    // Serialized plan carries the conv topology and parses back with the
+    // identical recomputed cost.
+    let text = plan.to_text();
+    assert!(text.contains("ir=1x28x28:conv4k5x5s2+pool2s2+flatten+dense10"), "{text}");
+    let parsed = TunePlan::parse(&text).expect("conv plan parses");
+    assert_eq!(parsed.assignment, plan.assignment);
+    assert_eq!(parsed.ir, plan.ir);
+    assert_eq!(parsed.cost, plan.cost);
+
+    // Serve from the parsed plan: the shard compiles the mixed conv plan
+    // (Sim-native) and replies match the compiled plan's predictions.
+    let engine = ServeEngine::start(vec![parsed.shard_config(&ds, mlp.clone()).with_workers(2)]).unwrap();
+    let key = ShardKey::for_mixed("mnist", &plan.assignment);
+    assert_eq!(engine.shard_keys(), vec![key.clone()]);
+    let dp = DeepPositron::compile_mixed(&mlp, plan.assignment.clone());
+    let n = 8;
+    let rxs: Vec<_> = (0..n).map(|i| engine.submit(&key, ds.test_row(i).to_vec()).expect("admitted")).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().expect("reply");
+        assert_eq!(reply.class, dp.predict(ds.test_row(i)), "sample {i}");
+    }
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.total_served(), n);
+}
+
+#[test]
+fn shape_inconsistent_conv_model_is_a_typed_bad_shard() {
+    let ds = mnist();
+    let mut mlp = conv_model(3);
+    // Corrupt the chain after construction: the serve-side IR validation
+    // must reject it as BadShard instead of letting a worker panic.
+    mlp.layers[1].out_dim += 1;
+    let spec = FormatSpec::parse("posit8es1").unwrap();
+    match ServeEngine::start(vec![ShardConfig::new(&ds, mlp, spec)]) {
+        Err(ServeError::BadShard { reason, .. }) => {
+            assert!(reason.contains("layer IR rejected"), "{reason}");
+        }
+        Err(other) => panic!("expected BadShard, got {other}"),
+        Ok(_) => panic!("expected BadShard, engine started"),
+    }
+}
+
+#[test]
+fn conv_eq2_k_is_the_receptive_field() {
+    let mlp = conv_model(1);
+    let ks: Vec<usize> = mlp.layers.iter().map(|l| l.eq2_k()).collect();
+    // conv 5·5·1+1, pool 2², flatten 0, dense 144+1 — never the 784 input.
+    assert_eq!(ks, vec![26, 4, 0, 145]);
+    assert_eq!(mlp.max_fan_in(), 144);
+}

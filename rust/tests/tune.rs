@@ -175,3 +175,34 @@ fn mismatched_mixed_assignment_is_rejected_at_start() {
         Ok(_) => panic!("expected BadShard, engine started"),
     }
 }
+
+/// Satellite (PR 5): `MixedSpec` machine names are a faithful codec —
+/// `parse(name()) == self` for EVERY per-layer assignment drawn from the
+/// tuner's full `FormatSpec::sweep(5..=8)` candidate pool, at every layer
+/// count the repo ships (including the 4-node conv IR, whose weightless
+/// pool/flatten slots carry formats too — they are recode points).
+#[test]
+fn prop_mixedspec_names_round_trip() {
+    use deep_positron::util::prop::forall;
+    std::env::set_var("PROP_CASES", std::env::var("PROP_CASES").unwrap_or_else(|_| "64".into()));
+    let candidates: Vec<FormatSpec> = (5..=8u32).flat_map(FormatSpec::sweep).collect();
+    assert!(candidates.len() > 30, "sweep pool unexpectedly small");
+    // Deterministic part: every candidate as a uniform assignment at the
+    // conv net's IR length (one format per node, weightless slots included).
+    let conv_layers = deep_positron::coordinator::experiments::conv_model(7).layers.len();
+    assert_eq!(conv_layers, 4, "conv IR is conv+pool+flatten+dense");
+    for &spec in &candidates {
+        let m = MixedSpec::uniform(spec, conv_layers);
+        assert_eq!(MixedSpec::parse(&m.name()), Some(m.clone()), "uniform {} did not round-trip", m.name());
+    }
+    // Randomized part: arbitrary assignments of arbitrary length.
+    forall("MixedSpec::parse(name()) == self", |rng| {
+        let len = 1 + rng.below(6);
+        let layers: Vec<FormatSpec> = (0..len).map(|_| candidates[rng.below(candidates.len())]).collect();
+        let m = MixedSpec::new(layers);
+        let name = m.name();
+        assert_eq!(MixedSpec::parse(&name), Some(m), "{name} did not round-trip");
+        // The name is the serve routing key: exactly one format per '+'.
+        assert_eq!(name.split('+').count(), len);
+    });
+}
