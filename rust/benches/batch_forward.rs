@@ -1,29 +1,140 @@
 //! Scalar vs batched Sim inference (the compiled-execution-plan payoff,
-//! DESIGN.md §8): samples/sec of per-sample `forward_codes` against
-//! `forward_batch` at growing batch sizes, on the tiny iris net
-//! (overhead-bound) and the mnist-scale net (the real hot path, where the
-//! weight row streaming across the batch is the win).
+//! DESIGN.md §8, tiled + monomorphized in §12): samples/sec of per-sample
+//! `forward_codes` against `forward_batch` at growing batch sizes, on the
+//! tiny iris net (overhead-bound) and the mnist-scale net (the real hot
+//! path, where the weight rows streaming across the batch are the win).
 //!
-//! Asserts two things the refactor promises: the batched path strictly wins
-//! at batch ≥ 8 on the mnist-scale net (iris numbers are informational —
-//! its per-sample cost is dominated by the terminal rounds, identical on
-//! both paths), and the inference loop performs ZERO decode-LUT builds
-//! (`DecodeLut::shared_builds` must not move while samples flow).
+//! Asserts three things the kernels promise:
+//!
+//! 1. the batched path strictly wins at batch ≥ 8 on the mnist-scale net
+//!    (iris numbers are informational — its per-sample cost is dominated by
+//!    the terminal rounds, identical on both paths);
+//! 2. the tiled kernel strictly beats the pre-tiling **element-wise**
+//!    kernel (reconstructed below from the public format primitives: one
+//!    bounds-checked LUT hit per weight×activation pair, no row tiling, no
+//!    pre-decoded activation block) at every batch ≥ 8 — after first
+//!    proving the two bit-identical;
+//! 3. the inference loop performs ZERO decode-LUT builds
+//!    (`DecodeLut::shared_builds` must not move while samples flow).
+//!
+//! Results are recorded into the schema-versioned `BENCH_batch_forward.json`
+//! perf trajectory at the repo root and gated against the committed baseline
+//! (`util::bench_log`): a >10% samples/s regression fails the bench.
 
-use deep_positron::accel::{Datapath, DeepPositron};
+use std::sync::Arc;
+
+use deep_positron::accel::{Datapath, DeepPositron, Mlp};
 use deep_positron::coordinator::experiments;
 use deep_positron::datasets::{self, Scale};
-use deep_positron::formats::{DecodeLut, FormatSpec};
+use deep_positron::formats::{DecodeLut, Exact, FormatSpec, Quantizer};
+use deep_positron::util::bench_log::{self, BenchLog};
 use deep_positron::util::stats::{mean, BenchTimer};
+
+/// The PR-2 era element-wise batched kernel, reconstructed from the public
+/// format primitives so the tiled kernel has an honest in-process rival:
+/// feature-major activation blocks, one quire column per output neuron, and
+/// — the part the tiled kernel removed — a bounds-checked `ops[code]` LUT
+/// lookup for EVERY weight×activation pair.
+struct ElementwisePlan {
+    dims: Vec<usize>,
+    w_codes: Vec<Vec<u16>>,
+    bias_q: Vec<Vec<i128>>,
+    lut: Arc<DecodeLut>,
+    q: Arc<Quantizer>,
+    zero: u16,
+}
+
+impl ElementwisePlan {
+    fn build(dp: &DeepPositron, mlp: &Mlp, spec: FormatSpec) -> ElementwisePlan {
+        let q = Quantizer::shared(spec);
+        let lut = DecodeLut::shared(spec);
+        let w_codes: Vec<Vec<u16>> = dp.dequantized_weights().iter().map(|w| q.quantize_slice(w).0).collect();
+        let bias_q: Vec<Vec<i128>> = dp
+            .dequantized_biases()
+            .iter()
+            .map(|bs| {
+                bs.iter()
+                    .map(|&b| {
+                        let e = q.decode(q.quantize_f64(b).0).unwrap_or(Exact::ZERO);
+                        lut.to_quire(&e)
+                    })
+                    .collect()
+            })
+            .collect();
+        let zero = q.zero_code();
+        ElementwisePlan { dims: mlp.dims(), w_codes, bias_q, lut, q, zero }
+    }
+
+    fn forward_batch(&self, rows: &[&[f64]]) -> Vec<Vec<u16>> {
+        let b = rows.len();
+        let max_dim = *self.dims.iter().max().unwrap();
+        let mut act = vec![0u16; b * max_dim];
+        let mut next = vec![0u16; b * max_dim];
+        let mut quires = vec![0i128; b];
+        for (s, row) in rows.iter().enumerate() {
+            for (i, &x) in row.iter().enumerate() {
+                act[i * b + s] = self.q.quantize_f64(x).0;
+            }
+        }
+        let ops = self.lut.ops();
+        let lsb = self.lut.lsb_exp();
+        let last = self.w_codes.len() - 1;
+        for (li, (codes, biasq)) in self.w_codes.iter().zip(&self.bias_q).enumerate() {
+            let (in_dim, out_dim) = (self.dims[li], self.dims[li + 1]);
+            let relu = li < last;
+            for o in 0..out_dim {
+                quires.fill(biasq[o]);
+                for i in 0..in_dim {
+                    let w = ops[codes[o * in_dim + i] as usize];
+                    if w.mag == 0 {
+                        continue;
+                    }
+                    for (s, quire) in quires.iter_mut().enumerate() {
+                        // The per-pair LUT hit the tiled kernel hoisted out.
+                        let a = ops[act[i * b + s] as usize];
+                        if a.mag == 0 {
+                            continue;
+                        }
+                        let mag = w.mag * a.mag;
+                        let shift = (w.exp + a.exp - lsb) as u32;
+                        let term = (mag as i128) << shift;
+                        *quire += if w.neg ^ a.neg { -term } else { term };
+                    }
+                }
+                for (s, &qv) in quires.iter().enumerate() {
+                    next[o * b + s] = if relu && qv < 0 {
+                        self.zero
+                    } else {
+                        self.q.quantize_exact(&Exact::new(qv < 0, qv.unsigned_abs(), lsb)).0
+                    };
+                }
+            }
+            std::mem::swap(&mut act, &mut next);
+        }
+        let out_dim = *self.dims.last().unwrap();
+        (0..b).map(|s| (0..out_dim).map(|o| act[o * b + s]).collect()).collect()
+    }
+}
 
 fn main() {
     let spec = FormatSpec::parse("posit8es1").unwrap();
+    let budget = bench_log::bench_budget(0.4);
+    let mut log = BenchLog::new("batch_forward");
     for dataset in ["iris", "mnist"] {
         let ds = datasets::load(dataset, 7, Scale::Small);
         let mlp = experiments::train_model(&ds, 7);
         let dp = DeepPositron::compile(&mlp, spec);
+        let ew = ElementwisePlan::build(&dp, &mlp, spec);
         let nrows = ds.test_len().min(64);
         let rows: Vec<&[f64]> = (0..nrows).map(|i| ds.test_row(i)).collect();
+
+        // The element-wise rival must be bit-identical before it is timed —
+        // a faster wrong kernel proves nothing.
+        assert_eq!(
+            dp.forward_batch(&rows, Datapath::Emac),
+            ew.forward_batch(&rows),
+            "{dataset}: element-wise baseline diverged from the tiled kernel"
+        );
 
         // Warm every cache (tables, LUT, plan) before the counter snapshot.
         let _ = dp.forward_batch(&rows[..1], Datapath::Emac);
@@ -31,7 +142,7 @@ fn main() {
 
         let mut sink = 0u32;
         let mut timer = BenchTimer::new(&format!("{dataset}/scalar forward_codes ×{nrows}"));
-        timer.run(0.4, || {
+        timer.run(budget, || {
             for r in &rows {
                 sink = sink.wrapping_add(dp.forward_codes(r)[0] as u32);
             }
@@ -39,35 +150,51 @@ fn main() {
         let scalar_sps = nrows as f64 / mean(timer.samples());
         println!("{}", timer.report());
         println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
+        log.push(&format!("{dataset}/scalar"), scalar_sps);
 
+        let mut flat = Vec::new();
         let mut wins = Vec::new();
         for b in [8usize, 32, 64] {
-            let b = b.min(nrows);
-            let batch = &rows[..b];
+            let batch = &rows[..b.min(nrows)];
             let mut timer = BenchTimer::new(&format!("{dataset}/forward_batch B={b}"));
-            timer.run(0.4, || {
-                sink = sink.wrapping_add(dp.forward_batch(batch, Datapath::Emac)[0][0] as u32);
+            timer.run(budget, || {
+                dp.forward_batch_into(batch, Datapath::Emac, &mut flat);
+                sink = sink.wrapping_add(flat[0] as u32);
             });
-            let sps = b as f64 / mean(timer.samples());
+            let sps = batch.len() as f64 / mean(timer.samples());
+            let mut timer_ew = BenchTimer::new(&format!("{dataset}/elementwise B={b}"));
+            timer_ew.run(budget, || {
+                sink = sink.wrapping_add(ew.forward_batch(batch)[0][0] as u32);
+            });
+            let ew_sps = batch.len() as f64 / mean(timer_ew.samples());
             println!("{}", timer.report());
-            println!("  -> {sps:.0} samples/s batched (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
-            wins.push((b, sps));
+            println!("  -> {sps:.0} samples/s tiled (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
+            println!("{}", timer_ew.report());
+            println!("  -> {ew_sps:.0} samples/s element-wise (tiled is ×{:.2})", sps / ew_sps);
+            log.push(&format!("{dataset}/forward_batch/B={b}"), sps);
+            wins.push((b, sps, ew_sps));
         }
         assert_eq!(
             DecodeLut::shared_builds(),
             lut_builds_before,
             "{dataset}: inference rebuilt a decode LUT — the compile-once contract is broken"
         );
-        for (b, sps) in wins {
+        for (b, sps, ew_sps) in wins {
             if dataset == "mnist" {
                 assert!(
                     sps > scalar_sps,
                     "{dataset}: forward_batch at B={b} ({sps:.0}/s) must beat the scalar path ({scalar_sps:.0}/s)"
+                );
+                assert!(
+                    sps > ew_sps,
+                    "{dataset}: tiled kernel at B={b} ({sps:.0}/s) must strictly beat the \
+                     PR-2 element-wise path ({ew_sps:.0}/s)"
                 );
             } else if sps <= scalar_sps {
                 println!("  (note: {dataset} B={b} did not beat scalar — tiny-net overheads, not the hot path)");
             }
         }
     }
-    println!("\nbatched execution plan beats the per-sample path at every B >= 8 on the mnist-scale net — OK");
+    println!("\ntiled kernel beats scalar AND the element-wise path at every B >= 8 on the mnist-scale net — OK");
+    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
 }

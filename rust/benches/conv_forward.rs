@@ -13,6 +13,10 @@
 //!   with zero decode-LUT rebuilds on the inference loop;
 //! * the quantized conv net tracks its own f64 baseline (Table 1's story,
 //!   conv edition).
+//!
+//! Throughput results land in the schema-versioned `BENCH_conv_forward.json`
+//! trajectory at the repo root and are gated against the committed baseline
+//! (`util::bench_log`).
 
 use deep_positron::accel::{Datapath, DeepPositron};
 use deep_positron::coordinator::experiments;
@@ -20,6 +24,7 @@ use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::{DecodeLut, FormatSpec, MixedSpec};
 use deep_positron::hw;
 use deep_positron::tune::network_cost_ir;
+use deep_positron::util::bench_log::{self, BenchLog};
 use deep_positron::util::stats::{mean, BenchTimer};
 
 fn main() {
@@ -59,6 +64,8 @@ fn main() {
     assert!(fired, "the Eq.(2) quire guard must fire on an absurd k");
 
     // --- Throughput: scalar vs batched conv plan walks. ---
+    let budget = bench_log::bench_budget(0.4);
+    let mut log = BenchLog::new("conv_forward");
     let dp = DeepPositron::compile(&mlp, spec);
     let nrows = ds.test_len().min(64);
     let rows: Vec<&[f64]> = (0..nrows).map(|i| ds.test_row(i)).collect();
@@ -67,7 +74,7 @@ fn main() {
 
     let mut sink = 0u32;
     let mut timer = BenchTimer::new(&format!("conv-mnist/scalar forward_codes ×{nrows}"));
-    timer.run(0.4, || {
+    timer.run(budget, || {
         for r in &rows {
             sink = sink.wrapping_add(dp.forward_codes(r)[0] as u32);
         }
@@ -75,18 +82,21 @@ fn main() {
     let scalar_sps = nrows as f64 / mean(timer.samples());
     println!("{}", timer.report());
     println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
+    log.push("conv-mnist/scalar", scalar_sps);
 
+    let mut flat = Vec::new();
     let mut batched_at_32 = 0.0;
     for b in [8usize, 32] {
-        let b = b.min(nrows);
-        let batch = &rows[..b];
+        let batch = &rows[..b.min(nrows)];
         let mut timer = BenchTimer::new(&format!("conv-mnist/forward_batch B={b}"));
-        timer.run(0.4, || {
-            sink = sink.wrapping_add(dp.forward_batch(batch, Datapath::Emac)[0][0] as u32);
+        timer.run(budget, || {
+            dp.forward_batch_into(batch, Datapath::Emac, &mut flat);
+            sink = sink.wrapping_add(flat[0] as u32);
         });
-        let sps = b as f64 / mean(timer.samples());
+        let sps = batch.len() as f64 / mean(timer.samples());
         println!("{}", timer.report());
         println!("  -> {sps:.0} samples/s batched (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
+        log.push(&format!("conv-mnist/forward_batch/B={b}"), sps);
         if b == 32 {
             batched_at_32 = sps;
         }
@@ -108,4 +118,5 @@ fn main() {
     assert!(acc >= baseline - 0.08, "posit8 conv EMAC lost too much: {acc} vs {baseline}");
 
     println!("\nconv EMAC provisions the 26-term receptive-field quire and batching wins at B=32 — OK");
+    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
 }

@@ -2,25 +2,35 @@
 //! throughput, quantizer throughput, full Deep Positron sample latency, and
 //! the XLA fast path (when artifacts exist). These are the numbers the
 //! performance pass iterates on (EXPERIMENTS.md §Perf).
+//!
+//! Every table and plan is built ONCE before the measured closures (timing
+//! `DecodeLut`/`Quantizer` construction would measure the wrong thing), and
+//! the bench asserts zero shared-LUT rebuilds across the whole measured
+//! region — the compile-once contract, enforced where it is easiest to
+//! break silently.
 
 use deep_positron::accel::DeepPositron;
 use deep_positron::coordinator::experiments;
 use deep_positron::datasets::{self, Scale};
-use deep_positron::formats::{Emac, FormatSpec, Quantizer};
+use deep_positron::formats::{DecodeLut, Emac, FormatSpec, Quantizer};
 use deep_positron::runtime::{artifacts_dir, FormatTables, Runtime};
 use deep_positron::util::stats::{fmt_time, mean, BenchTimer};
 use deep_positron::util::Rng;
 
 fn main() {
     let spec = FormatSpec::parse("posit8es1").unwrap();
-    let fmt = spec.build();
-    let q = Quantizer::new(fmt.as_ref());
+    // Shared process-wide tables, exactly like production callers — NOT a
+    // private `Quantizer::new`/`DecodeLut::new` pair, which would sidestep
+    // the cache this bench asserts on.
+    let q = Quantizer::shared(spec);
+    let lut = DecodeLut::shared(spec);
 
     // --- EMAC MAC ops/s ---
     let mut rng = Rng::new(1);
     let codes: Vec<u16> = (0..784).map(|_| q.codes()[rng.below(q.len())]).collect();
     let weights: Vec<u16> = (0..784).map(|_| q.codes()[rng.below(q.len())]).collect();
-    let mut emac = Emac::new(fmt.as_ref(), &q, 785);
+    let mut emac = Emac::with_lut(lut, &q, 785);
+    let lut_builds_before = DecodeLut::shared_builds();
     let mut timer = BenchTimer::new("emac/dot-784 (posit8es1)");
     let mut sink = 0u32;
     timer.run(0.5, || {
@@ -66,6 +76,15 @@ fn main() {
     let sim_per_sample = mean(timer.samples());
     println!("{}", timer.report());
     println!("  -> {:.1} samples/s  [sink {hits}]", 1.0 / sim_per_sample);
+
+    // The whole measured region above — MAC loop, quantizer loop, both
+    // compiled-plan walks — must not have rebuilt a single shared decode
+    // LUT (compiles are cache hits; inference decodes through the plan).
+    assert_eq!(
+        DecodeLut::shared_builds(),
+        lut_builds_before,
+        "measured region rebuilt a decode LUT — the compile-once contract is broken"
+    );
 
     // --- XLA fast path, when artifacts exist ---
     let dir = artifacts_dir();

@@ -21,6 +21,7 @@ use deep_positron::accel::Mlp;
 use deep_positron::coordinator::experiments::Engine;
 use deep_positron::formats::FormatSpec;
 use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, ShardMetrics, WorkerConfig};
+use deep_positron::util::bench_log::{self, BenchLog};
 use deep_positron::util::Rng;
 
 const FEATURES: usize = 64;
@@ -185,4 +186,16 @@ fn main() {
         p99_b * 1e3,
         p99_u * 1e3
     );
+
+    // Perf trajectory: record into BENCH_serve_overload.json and gate. The
+    // tolerance is deliberately loose (50%) — end-to-end serving throughput
+    // on a shared machine is far noisier than the pure kernel benches, and
+    // this gate exists to catch collapses, not jitter.
+    let mut log = BenchLog::new("serve_overload");
+    log.push("synth/closed_loop_capacity", capacity);
+    log.push(
+        "synth/bounded_served_per_s",
+        bounded.metrics.served as f64 / (OFFERED_SECONDS + bounded.drain.as_secs_f64()),
+    );
+    bench_log::record_and_gate(&log, 0.5);
 }

@@ -19,6 +19,27 @@
 //! is bit-identical to the old per-sample EMAC loop (asserted by
 //! `tests/batch_parity.rs` against an independent scalar oracle).
 //!
+//! The EMAC kernels are tiled and monomorphized (DESIGN.md §12):
+//!
+//! * each layer's incoming activation codes decode **once** into a flat
+//!   [`DecodedOp`] block (instead of one LUT hit per weight×activation
+//!   pair — a factor of fan-out fewer lookups), through the 256-entry
+//!   [`DecodeLut::ops8`] table whose `u8` indexing is bounds-check free by
+//!   construction for every ≤8-bit paper format;
+//! * the inner loops run over [`ROW_TILE`] weight rows × [`LANE_BLOCK`]
+//!   batch lanes, so one decoded activation column feeds several output
+//!   quires while the live quire tile (4 × 32 × 16 B) stays L1-resident;
+//! * outputs land in caller-reused flat buffers
+//!   ([`DeepPositron::forward_batch_into`] — no per-row `Vec` allocations),
+//!   and large batches fan out across the process-wide
+//!   [`WorkerPool`] as independent contiguous sample chunks.
+//!
+//! All of this is bit-identity preserving: quire accumulation is exact
+//! integer addition (order-free), the narrow-quire wrap happens once at the
+//! terminal stage (a homomorphism mod 2^bits), and chunking a batch never
+//! changes any sample's own operation order. The inexact-MAC ablation keeps
+//! its per-sample, per-step rounding order untouched.
+//!
 //! Per layer kind (DESIGN.md §11, the Cheetah-style conv mapping):
 //!
 //! * **Dense** — one quire per output neuron, seeded with the bias,
@@ -49,11 +70,24 @@ use crate::datasets::Dataset;
 use crate::formats::emac::{DecodeLut, DecodedOp};
 use crate::formats::ops::ScalarAlu;
 use crate::formats::{Exact, FormatSpec, MixedSpec, Quantizer};
+use crate::util::pool::WorkerPool;
 
 /// Test-set evaluation batch size: large enough to amortize per-batch
 /// setup, small enough to keep the feature-major activation blocks
 /// cache-resident.
 pub const EVAL_BATCH: usize = 64;
+
+/// Weight rows (dense neurons / conv output channels) processed per tile:
+/// each decoded activation column loaded once feeds this many quire rows.
+pub const ROW_TILE: usize = 4;
+
+/// Batch lanes per tile: the live quire tile is `ROW_TILE × LANE_BLOCK`
+/// i128s (2 KiB) — comfortably L1-resident alongside the activation column.
+pub const LANE_BLOCK: usize = 32;
+
+/// Smallest batch worth fanning out across the shared worker pool (scoped
+/// thread spawns are microseconds; tiny batches run inline).
+const PAR_MIN_ROWS: usize = 16;
 
 /// Which multiply-accumulate datapath the accelerator uses (ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -267,26 +301,82 @@ impl DeepPositron {
         self.forward_batch(&[x], mode).pop().expect("one row in, one row out")
     }
 
+    /// Flat fan-out of the network: the length of one output-code row.
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().expect("network has layers")
+    }
+
     /// Run a batch of samples through a selected datapath, walking every
     /// layer once for the whole batch. Bit-identical to running each sample
     /// through the scalar EMAC loop: quire accumulation is exact integer
     /// addition (order-free), the narrow-quire wrap is a homomorphism mod
     /// 2^bits (so one terminal wrap equals the scalar per-step wrap), and the
     /// inexact path keeps the scalar per-sample operation order.
+    ///
+    /// Convenience wrapper over [`DeepPositron::forward_batch_into`] that
+    /// allocates one `Vec` per row; hot callers (serving, evaluation) use
+    /// the flat-buffer entry point directly.
     pub fn forward_batch(&self, rows: &[&[f64]], mode: Datapath) -> Vec<Vec<u16>> {
+        let mut flat = Vec::new();
+        self.forward_batch_into(rows, mode, &mut flat);
+        flat.chunks(self.out_dim()).map(<[u16]>::to_vec).collect()
+    }
+
+    /// [`DeepPositron::forward_batch`] into a caller-reused flat buffer:
+    /// `out` is cleared and filled sample-major (sample `s`'s output codes
+    /// occupy `out[s * out_dim .. (s + 1) * out_dim]`), with no per-row
+    /// allocations. Batches of at least `PAR_MIN_ROWS` fan out across the
+    /// process-wide [`WorkerPool`] as independent contiguous sample chunks —
+    /// results are bit-identical at any pool width.
+    pub fn forward_batch_into(&self, rows: &[&[f64]], mode: Datapath, out: &mut Vec<u16>) {
+        let pool = WorkerPool::global();
+        if pool.threads() > 1 && rows.len() >= PAR_MIN_ROWS {
+            self.forward_batch_into_with(rows, mode, pool, out);
+        } else {
+            self.prepare_out(rows, out);
+            if !rows.is_empty() {
+                self.run_block(rows, mode, out);
+            }
+        }
+    }
+
+    /// [`DeepPositron::forward_batch_into`] through an explicit pool (the
+    /// injection point for tests and for callers managing their own
+    /// parallelism budget). Always chunks by the pool's width — a pool wider
+    /// than the batch simply runs one-sample chunks.
+    pub fn forward_batch_into_with(&self, rows: &[&[f64]], mode: Datapath, pool: &WorkerPool, out: &mut Vec<u16>) {
+        self.prepare_out(rows, out);
+        if rows.is_empty() {
+            return;
+        }
+        let chunk = rows.len().div_ceil(pool.threads());
+        let jobs: Vec<_> = rows
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk * self.out_dim()))
+            .map(|(rchunk, ochunk)| move || self.run_block(rchunk, mode, ochunk))
+            .collect();
+        pool.run(jobs);
+    }
+
+    /// Validate the batch and size the flat output buffer (`b × out_dim`).
+    fn prepare_out(&self, rows: &[&[f64]], out: &mut Vec<u16>) {
         for row in rows {
             assert_eq!(row.len(), self.dims[0], "feature dim mismatch");
         }
-        if rows.is_empty() {
-            return Vec::new();
-        }
+        out.clear();
+        out.resize(rows.len() * self.out_dim(), 0);
+    }
+
+    /// One contiguous sample chunk through the selected datapath (the unit
+    /// of worker-pool fan-out). `out` is the chunk's sample-major region.
+    fn run_block(&self, rows: &[&[f64]], mode: Datapath, out: &mut [u16]) {
         match mode {
-            Datapath::Emac => self.batch_emac(rows, None),
+            Datapath::Emac => self.batch_emac(rows, None, out),
             Datapath::NarrowQuire(bits) => {
                 assert!((2..=127).contains(&bits));
-                self.batch_emac(rows, Some(bits))
+                self.batch_emac(rows, Some(bits), out)
             }
-            Datapath::InexactMac => self.batch_inexact(rows),
+            Datapath::InexactMac => self.batch_inexact(rows, out),
         }
     }
 
@@ -301,65 +391,120 @@ impl DeepPositron {
         }
     }
 
-    /// Transpose the final feature-major activation block back into one code
-    /// row per sample.
-    fn gather_rows(&self, act: &[u16], b: usize) -> Vec<Vec<u16>> {
-        let out_dim = *self.dims.last().unwrap();
-        (0..b).map(|s| (0..out_dim).map(|o| act[o * b + s]).collect()).collect()
+    /// Transpose the final feature-major activation block into the flat
+    /// sample-major output region (no per-row allocations).
+    fn gather_into(&self, act: &[u16], b: usize, out: &mut [u16]) {
+        let out_dim = self.out_dim();
+        for (s, orow) in out.chunks_mut(out_dim).enumerate().take(b) {
+            for (o, code) in orow.iter_mut().enumerate() {
+                *code = act[o * b + s];
+            }
+        }
     }
 
-    /// The batched EMAC kernel: per output element, seed every sample's
-    /// quire with the pre-shifted bias, stream the layer's pre-decoded
-    /// weights (dense row / conv receptive field / pool window) across the
-    /// batch, and round once at the terminal stage — directly into the next
-    /// layer's format (the §10 boundary recode; a no-op change of target
-    /// for uniform networks).
-    fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>) -> Vec<Vec<u16>> {
+    /// The tiled, monomorphized batched EMAC kernel (DESIGN.md §12): per
+    /// layer, decode the incoming activation block ONCE through the
+    /// monomorphized table, then walk [`ROW_TILE`] weight rows ×
+    /// [`LANE_BLOCK`] batch lanes — each decoded activation column feeds
+    /// the whole row tile while the quire tile stays register/L1 resident —
+    /// and round once at the terminal stage, directly into the next layer's
+    /// format (the §10 boundary recode; a no-op change of target for
+    /// uniform networks).
+    fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>, out: &mut [u16]) {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
         let mut act = vec![0u16; b * max_dim];
         let mut next = vec![0u16; b * max_dim];
-        let mut quires = vec![0i128; b];
+        let mut dec = vec![DecodedOp::INVALID; b * max_dim];
+        // The live quire tile: ROW_TILE rows at a fixed LANE_BLOCK stride
+        // (2 KiB total) — reused across every tile of every layer.
+        let mut quires = [0i128; ROW_TILE * LANE_BLOCK];
         self.quantize_block(rows, &mut act);
         for lp in &self.plan {
             let lsb = lp.lut.lsb_exp();
-            let ops = lp.lut.ops();
+            if !matches!(lp.kind, LayerKind::Flatten) {
+                // One decode per input element per layer — the tiles below
+                // reuse these operands fan-out many times.
+                decode_block(&lp.lut, &act[..lp.in_dim * b], &mut dec[..lp.in_dim * b]);
+            }
             match lp.kind {
                 LayerKind::Dense => {
-                    for o in 0..lp.out_dim {
-                        let wrow = &lp.w_ops[o * lp.in_dim..(o + 1) * lp.in_dim];
-                        quires.fill(lp.bias_q[o]);
-                        for (i, w) in wrow.iter().enumerate() {
-                            if w.mag == 0 {
-                                continue; // zero weight annihilates the whole column
+                    for o0 in (0..lp.out_dim).step_by(ROW_TILE) {
+                        let o1 = (o0 + ROW_TILE).min(lp.out_dim);
+                        for s0 in (0..b).step_by(LANE_BLOCK) {
+                            let lanes = LANE_BLOCK.min(b - s0);
+                            for (r, o) in (o0..o1).enumerate() {
+                                quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[o]);
                             }
-                            mac_column(&mut quires, w, &act[i * b..(i + 1) * b], ops, lsb);
+                            for i in 0..lp.in_dim {
+                                let acol = &dec[i * b + s0..i * b + s0 + lanes];
+                                for (r, o) in (o0..o1).enumerate() {
+                                    let w = lp.w_ops[o * lp.in_dim + i];
+                                    if w.mag == 0 {
+                                        continue; // zero weight annihilates the lane
+                                    }
+                                    mac_lane(&mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes], w, acol, lsb);
+                                }
+                            }
+                            for (r, o) in (o0..o1).enumerate() {
+                                round_lane(
+                                    lp,
+                                    lsb,
+                                    0,
+                                    width_limit,
+                                    &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
+                                    &mut next[o * b + s0..o * b + s0 + lanes],
+                                );
+                            }
                         }
-                        round_columns(lp, lsb, 0, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
                     }
                 }
                 LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
                     let (ih, iw) = lp.in_shape.hw();
                     let (oh, ow) = lp.out_shape.hw();
-                    for oc in 0..out_ch {
-                        let wrow = &lp.w_ops[oc * in_ch * kh * kw..(oc + 1) * in_ch * kh * kw];
+                    let ksz = in_ch * kh * kw;
+                    for oc0 in (0..out_ch).step_by(ROW_TILE) {
+                        let oc1 = (oc0 + ROW_TILE).min(out_ch);
                         for oy in 0..oh {
                             for ox in 0..ow {
-                                quires.fill(lp.bias_q[oc]);
-                                for ic in 0..in_ch {
-                                    for ky in 0..kh {
-                                        for kx in 0..kw {
-                                            let w = &wrow[ic * kh * kw + ky * kw + kx];
-                                            if w.mag == 0 {
-                                                continue;
+                                for s0 in (0..b).step_by(LANE_BLOCK) {
+                                    let lanes = LANE_BLOCK.min(b - s0);
+                                    for (r, oc) in (oc0..oc1).enumerate() {
+                                        quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[oc]);
+                                    }
+                                    for ic in 0..in_ch {
+                                        for ky in 0..kh {
+                                            for kx in 0..kw {
+                                                let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                                let acol = &dec[i * b + s0..i * b + s0 + lanes];
+                                                let koff = ic * kh * kw + ky * kw + kx;
+                                                for (r, oc) in (oc0..oc1).enumerate() {
+                                                    let w = lp.w_ops[oc * ksz + koff];
+                                                    if w.mag == 0 {
+                                                        continue;
+                                                    }
+                                                    mac_lane(
+                                                        &mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
+                                                        w,
+                                                        acol,
+                                                        lsb,
+                                                    );
+                                                }
                                             }
-                                            let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
-                                            mac_column(&mut quires, w, &act[i * b..(i + 1) * b], ops, lsb);
                                         }
                                     }
+                                    for (r, oc) in (oc0..oc1).enumerate() {
+                                        let o = oc * oh * ow + oy * ow + ox;
+                                        round_lane(
+                                            lp,
+                                            lsb,
+                                            0,
+                                            width_limit,
+                                            &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
+                                            &mut next[o * b + s0..o * b + s0 + lanes],
+                                        );
+                                    }
                                 }
-                                let o = oc * oh * ow + oy * ow + ox;
-                                round_columns(lp, lsb, 0, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
                             }
                         }
                     }
@@ -374,15 +519,25 @@ impl DeepPositron {
                     for ch in 0..c {
                         for oy in 0..oh {
                             for ox in 0..ow {
-                                quires.fill(0);
-                                for ky in 0..k {
-                                    for kx in 0..k {
-                                        let i = ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
-                                        sum_column(&mut quires, &act[i * b..(i + 1) * b], ops, lsb);
+                                for s0 in (0..b).step_by(LANE_BLOCK) {
+                                    let lanes = LANE_BLOCK.min(b - s0);
+                                    quires[..lanes].fill(0);
+                                    for ky in 0..k {
+                                        for kx in 0..k {
+                                            let i = ch * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                            sum_lane(&mut quires[..lanes], &dec[i * b + s0..i * b + s0 + lanes], lsb);
+                                        }
                                     }
+                                    let o = ch * oh * ow + oy * ow + ox;
+                                    round_lane(
+                                        lp,
+                                        lsb,
+                                        down,
+                                        width_limit,
+                                        &quires[..lanes],
+                                        &mut next[o * b + s0..o * b + s0 + lanes],
+                                    );
                                 }
-                                let o = ch * oh * ow + oy * ow + ox;
-                                round_columns(lp, lsb, down, width_limit, &quires, &mut next[o * b..(o + 1) * b]);
                             }
                         }
                     }
@@ -393,7 +548,7 @@ impl DeepPositron {
             }
             std::mem::swap(&mut act, &mut next);
         }
-        self.gather_rows(&act, b)
+        self.gather_into(&act, b, out);
     }
 
     /// The batched conventional-MAC ablation: round after every multiply and
@@ -403,7 +558,7 @@ impl DeepPositron {
     /// identity for uniform networks (quantize of a representable value).
     /// Average pooling multiplies the window sum by the rounded code of
     /// `1/k²` (a conventional unit has no exact shift); flatten recodes.
-    fn batch_inexact(&self, rows: &[&[f64]]) -> Vec<Vec<u16>> {
+    fn batch_inexact(&self, rows: &[&[f64]], out: &mut [u16]) {
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
         let mut act = vec![0u16; b * max_dim];
@@ -500,7 +655,7 @@ impl DeepPositron {
             }
             std::mem::swap(&mut act, &mut next);
         }
-        self.gather_rows(&act, b)
+        self.gather_into(&act, b, out);
     }
 
     /// Argmax over the decoded values of an output-code row (decoded through
@@ -531,11 +686,13 @@ impl DeepPositron {
     }
 
     /// Batched predictions on the EMAC datapath — one compiled-plan walk for
-    /// the whole batch (the serving engine's Sim execution path).
+    /// the whole batch through the flat-buffer fast path (the serving
+    /// engine's Sim execution path).
     pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<usize> {
-        self.forward_batch(rows, Datapath::Emac)
-            .iter()
-            .map(|out| self.decoded_argmax(out).expect("output row decoded to no real value"))
+        let mut flat = Vec::new();
+        self.forward_batch_into(rows, Datapath::Emac, &mut flat);
+        flat.chunks(self.out_dim())
+            .map(|codes| self.decoded_argmax(codes).expect("output row decoded to no real value"))
             .collect()
     }
 
@@ -548,11 +705,13 @@ impl DeepPositron {
         let total = ds.test_len().min(rows.max(1));
         let mut correct = 0usize;
         let mut i = 0;
+        let mut flat = Vec::new();
         while i < total {
             let take = EVAL_BATCH.min(total - i);
             let rows: Vec<&[f64]> = (i..i + take).map(|j| ds.test_row(j)).collect();
-            for (j, out) in self.forward_batch(&rows, mode).iter().enumerate() {
-                if self.decoded_argmax(out) == Some(ds.y_test[i + j] as usize) {
+            self.forward_batch_into(&rows, mode, &mut flat);
+            for (j, codes) in flat.chunks(self.out_dim()).enumerate() {
+                if self.decoded_argmax(codes) == Some(ds.y_test[i + j] as usize) {
                     correct += 1;
                 }
             }
@@ -659,46 +818,66 @@ impl DeepPositron {
     }
 }
 
-/// Accumulate one pre-decoded weight against one activation column for the
-/// whole batch — the exact product term of `Emac::mac` (magnitudes are
-/// ≤16-bit, so the product fits u64).
+/// Decode one activation-code block into flat EMAC operands — once per
+/// layer, instead of once per weight×activation pair. For every ≤8-bit
+/// format the monomorphized 256-entry [`DecodeLut::ops8`] table is indexed
+/// with `code as u8`, which can never be out of bounds, so the optimizer
+/// drops the bounds check from this loop; wider formats keep the generic
+/// slice path.
 #[inline]
-fn mac_column(quires: &mut [i128], w: &DecodedOp, acol: &[u16], ops: &[DecodedOp], lsb: i32) {
-    for (s, &code) in acol.iter().enumerate() {
-        let a = ops[code as usize];
-        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
+fn decode_block(lut: &DecodeLut, act: &[u16], dec: &mut [DecodedOp]) {
+    if let Some(table) = lut.ops8() {
+        for (d, &code) in dec.iter_mut().zip(act) {
+            debug_assert!(code < 256, "code wider than the monomorphized table");
+            *d = table[code as u8 as usize];
+            debug_assert!(!d.is_invalid(), "non-canonical activation code {code:#x}");
+        }
+    } else {
+        let ops = lut.ops();
+        for (d, &code) in dec.iter_mut().zip(act) {
+            *d = ops[code as usize];
+            debug_assert!(!d.is_invalid(), "non-canonical activation code {code:#x}");
+        }
+    }
+}
+
+/// Accumulate one pre-decoded weight against one pre-decoded activation
+/// lane — the exact product term of `Emac::mac` (canonical magnitudes are
+/// ≤16-bit, so the product fits u64). The zip over equal-length lanes keeps
+/// the loop bounds-check free.
+#[inline]
+fn mac_lane(quires: &mut [i128], w: DecodedOp, acol: &[DecodedOp], lsb: i32) {
+    for (q, a) in quires.iter_mut().zip(acol) {
         if a.mag == 0 {
             continue;
         }
         let mag = w.mag * a.mag;
         let shift = (w.exp + a.exp - lsb) as u32;
         let term = (mag as i128) << shift;
-        quires[s] += if w.neg ^ a.neg { -term } else { term };
+        *q += if w.neg ^ a.neg { -term } else { term };
     }
 }
 
-/// Accumulate one activation column directly (weightless pooling sum): the
-/// value itself shifts into quire units, no product.
+/// Accumulate one pre-decoded activation lane directly (weightless pooling
+/// sum): the value itself shifts into quire units, no product.
 #[inline]
-fn sum_column(quires: &mut [i128], acol: &[u16], ops: &[DecodedOp], lsb: i32) {
-    for (s, &code) in acol.iter().enumerate() {
-        let a = ops[code as usize];
-        debug_assert!(!a.is_invalid(), "non-canonical activation code {code:#x}");
+fn sum_lane(quires: &mut [i128], acol: &[DecodedOp], lsb: i32) {
+    for (q, a) in quires.iter_mut().zip(acol) {
         if a.mag == 0 {
             continue;
         }
         let shift = (a.exp - lsb) as u32;
         let term = (a.mag as i128) << shift;
-        quires[s] += if a.neg { -term } else { term };
+        *q += if a.neg { -term } else { term };
     }
 }
 
-/// Terminal stage for one output column: optional narrow-quire wrap, then
+/// Terminal stage for one output lane: optional narrow-quire wrap, then
 /// one deferred round straight into the NEXT layer's format. `down` shifts
 /// the quire exponent for the exact pool average (0 everywhere else, which
 /// reduces to the classic dense terminal round bit for bit).
 #[inline]
-fn round_columns(lp: &LayerPlan, lsb: i32, down: i32, width_limit: Option<u32>, quires: &[i128], out: &mut [u16]) {
+fn round_lane(lp: &LayerPlan, lsb: i32, down: i32, width_limit: Option<u32>, quires: &[i128], out: &mut [u16]) {
     for (&q0, out_code) in quires.iter().zip(out.iter_mut()) {
         let mut q = q0;
         if let Some(bits) = width_limit {
@@ -835,6 +1014,35 @@ mod tests {
             let vals: Vec<f64> = codes.iter().map(|&c| dp.quantizer().decode(c).unwrap().to_f64()).collect();
             assert_eq!(vals, dp.forward_dequantized(&x), "{spec}");
         }
+    }
+
+    #[test]
+    fn flat_buffer_and_pooled_entry_points_match_nested() {
+        // forward_batch_into (flat, sample-major, buffer-reusing) and the
+        // explicit-pool variant must agree bit-for-bit with the nested
+        // wrapper — including a batch crossing LANE_BLOCK (33 > 32) and a
+        // pool wider than the batch.
+        let (mlp, ds) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        let rows: Vec<&[f64]> = (0..33).map(|i| ds.test_row(i % ds.test_len())).collect();
+        let pool = crate::util::pool::WorkerPool::new(8);
+        let mut flat = vec![0xFFFFu16; 3]; // stale contents must be cleared
+        let mut pooled = Vec::new();
+        for mode in [Datapath::Emac, Datapath::InexactMac, Datapath::NarrowQuire(24)] {
+            let nested = dp.forward_batch(&rows, mode);
+            dp.forward_batch_into(&rows, mode, &mut flat);
+            dp.forward_batch_into_with(&rows, mode, &pool, &mut pooled);
+            assert_eq!(flat.len(), rows.len() * dp.out_dim());
+            assert_eq!(flat, pooled, "{mode:?}: pool width must not change results");
+            for (i, row) in nested.iter().enumerate() {
+                assert_eq!(&flat[i * dp.out_dim()..(i + 1) * dp.out_dim()], &row[..], "{mode:?} sample {i}");
+            }
+        }
+        // Zero-length batch: empty output, no panic, buffer cleared.
+        dp.forward_batch_into(&[], Datapath::Emac, &mut flat);
+        assert!(flat.is_empty());
+        dp.forward_batch_into_with(&[], Datapath::Emac, &pool, &mut pooled);
+        assert!(pooled.is_empty());
     }
 
     #[test]

@@ -84,6 +84,12 @@ impl DecodedOp {
 pub struct DecodeLut {
     name: String,
     ops: Vec<DecodedOp>,
+    /// The ≤8-bit monomorphized table: the same operands as `ops`, padded
+    /// with [`DecodedOp::INVALID`] to exactly 256 entries so a `u8` index
+    /// can never be out of bounds and the optimizer drops the bounds check
+    /// from the tiled inner loops (DESIGN.md §12). `None` for formats wider
+    /// than 8 bits, which keep the generic slice path.
+    ops8: Option<Box<[DecodedOp; 256]>>,
     /// Quire LSB weight exponent: 2 × (smallest canonical-value exponent).
     lsb_exp: i32,
     /// Highest set-bit position of any canonical value (exp + mag bits).
@@ -115,9 +121,15 @@ impl DecodeLut {
                 }
             }
         }
+        let ops8 = (ops.len() <= 256).then(|| {
+            let mut table = Box::new([DecodedOp::INVALID; 256]);
+            table[..ops.len()].copy_from_slice(&ops);
+            table
+        });
         DecodeLut {
             name: fmt.name(),
             ops,
+            ops8,
             lsb_exp: 2 * min_exp,
             max_top,
             max_value: quantizer.max_value(),
@@ -168,6 +180,15 @@ impl DecodeLut {
     /// activation lookup).
     pub fn ops(&self) -> &[DecodedOp] {
         &self.ops
+    }
+
+    /// The monomorphized ≤8-bit operand table: always exactly 256 entries
+    /// (code space padded with [`DecodedOp::INVALID`]), so indexing with
+    /// `code as u8 as usize` is bounds-check free by construction. `None`
+    /// for formats wider than 8 bits; callers fall back to [`DecodeLut::ops`].
+    #[inline]
+    pub fn ops8(&self) -> Option<&[DecodedOp; 256]> {
+        self.ops8.as_deref()
     }
 
     /// Quire bits needed for dot products of length ≤ `max_k`, relative to
@@ -482,6 +503,24 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "shared() must reuse the cached decode LUT");
         assert!(DecodeLut::shared_builds() >= 1);
         assert_eq!(a.name(), "posit7es1");
+    }
+
+    #[test]
+    fn ops8_mirrors_ops_padded_with_invalid() {
+        // Every swept (≤8-bit) format gets the monomorphized 256-entry table;
+        // real codes agree bit-for-bit with the generic slice, padding traps.
+        for n in 5..=8 {
+            for spec in FormatSpec::sweep(n) {
+                let lut = DecodeLut::shared(spec);
+                let t = lut.ops8().expect("≤8-bit formats must monomorphize");
+                for (i, op) in lut.ops().iter().enumerate() {
+                    assert_eq!((t[i].mag, t[i].exp, t[i].neg), (op.mag, op.exp, op.neg), "{spec} code {i}");
+                }
+                for pad in &t[lut.ops().len()..] {
+                    assert!(pad.is_invalid(), "{spec}: padding must be INVALID");
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,13 @@
 //! execution plan ([`DeepPositron::forward_batch`] via
 //! [`DeepPositron::predict_batch`]) — so the batcher's coalescing pays off
 //! on the bit-exact path too, instead of degenerating into a per-sample
-//! loop (DESIGN.md §8).
+//! loop (DESIGN.md §8). Large flushed batches additionally fan out inside
+//! `predict_batch` across the process-wide
+//! [`WorkerPool`](crate::util::pool::WorkerPool) — ONE shared parallelism
+//! budget for serve workers and batched inference, so `shards × workers`
+//! threads plus within-batch fan-out never oversubscribe the machine
+//! (DESIGN.md §12; `DEEP_POSITRON_POOL=1` pins every batch to its worker
+//! thread).
 //!
 //! Overload semantics (DESIGN.md §9): each worker carries an atomic queue
 //! depth, incremented by the router at admission and decremented here the

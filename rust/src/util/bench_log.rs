@@ -1,0 +1,651 @@
+//! The recorded perf trajectory (DESIGN.md §12): schema-versioned
+//! `BENCH_<name>.json` files at the repository root, written by the
+//! throughput benches and gated against the committed baseline so a PR
+//! cannot silently regress samples/s.
+//!
+//! The flow, per bench run ([`record_and_gate`]):
+//!
+//! 1. the bench measures its throughput figures and collects them into a
+//!    [`BenchLog`] (one `samples_per_s` entry per labeled measurement);
+//! 2. the committed baseline (`BENCH_<name>.json`) is loaded — a missing
+//!    file is a **soft pass** (first run on a fresh checkout) and is
+//!    written; a file with the wrong [`SCHEMA_VERSION`] is a hard error
+//!    (regenerate it, don't guess);
+//! 3. every baseline entry is compared against the fresh measurement of the
+//!    same name: a drop of more than the tolerance (default
+//!    [`DEFAULT_TOLERANCE`], 10%) **fails the bench**, improvements and
+//!    small noise pass, and a baseline entry whose measurement disappeared
+//!    entirely also fails (a gate must not rot away silently);
+//! 4. on pass, the fresh numbers overwrite the file — committing that diff
+//!    is how the baseline ratchets forward, and git history *is* the
+//!    trajectory across PRs.
+//!
+//! Baseline entries with `samples_per_s = 0.0` are **seeds**: placeholders
+//! marking a tracked measurement that has never been recorded on a real
+//! machine (this repo's CI containers differ from dev boxes, so committed
+//! absolute numbers start unmeasured). Any real measurement beats a seed,
+//! so the first bench run arms the gate by overwriting it.
+//!
+//! The JSON codec is hand-rolled (the offline build has no `serde`,
+//! DESIGN.md §Substitutions): the writer emits a fixed pretty layout and
+//! the reader is a small recursive-descent parser over the JSON subset the
+//! writer produces (objects, arrays, strings with basic escapes, finite
+//! numbers) — strict enough to reject hand-edits that would corrupt the
+//! gate.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Version stamp written into (and demanded from) every `BENCH_*.json`.
+/// Bump it when the schema changes shape; old files then fail loudly with
+/// [`BenchLogError::SchemaMismatch`] instead of being misread.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default regression tolerance: a tracked entry may lose up to 10% of its
+/// baseline samples/s before the gate fails (machine noise passes, real
+/// regressions don't).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// One labeled throughput measurement (higher is better).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// Measurement label, e.g. `mnist/forward_batch/B=32`.
+    pub name: String,
+    /// Throughput in samples per second; `0.0` marks an unmeasured seed.
+    pub samples_per_s: f64,
+}
+
+/// A schema-versioned set of throughput measurements from one bench binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchLog {
+    /// Schema version ([`SCHEMA_VERSION`] for logs built in-process).
+    pub schema: u32,
+    /// Bench name; the on-disk file is `BENCH_<bench>.json`.
+    pub bench: String,
+    /// Measurements, in bench emission order.
+    pub entries: Vec<BenchEntry>,
+}
+
+/// Errors loading or parsing a bench log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BenchLogError {
+    /// The file's schema version is not [`SCHEMA_VERSION`].
+    SchemaMismatch {
+        /// Version found in the file.
+        found: u32,
+        /// Version this build expects.
+        want: u32,
+    },
+    /// The file is not the JSON shape the writer emits.
+    Malformed(String),
+    /// Filesystem error reading the file.
+    Io(String),
+}
+
+impl fmt::Display for BenchLogError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BenchLogError::SchemaMismatch { found, want } => {
+                write!(f, "bench log schema {found} != supported {want}; regenerate the file")
+            }
+            BenchLogError::Malformed(why) => write!(f, "malformed bench log: {why}"),
+            BenchLogError::Io(why) => write!(f, "bench log io error: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for BenchLogError {}
+
+impl BenchLog {
+    /// An empty log for `bench` at the current [`SCHEMA_VERSION`].
+    pub fn new(bench: &str) -> BenchLog {
+        BenchLog { schema: SCHEMA_VERSION, bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Append one measurement (finite and non-negative; benches must not
+    /// record NaN/∞ — that is always a harness bug, not a slow machine).
+    pub fn push(&mut self, name: &str, samples_per_s: f64) {
+        assert!(
+            samples_per_s.is_finite() && samples_per_s >= 0.0,
+            "bench entry {name}: samples/s must be finite and >= 0, got {samples_per_s}"
+        );
+        self.entries.push(BenchEntry { name: name.to_string(), samples_per_s });
+    }
+
+    /// The entry named `name`, if recorded.
+    pub fn entry(&self, name: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The on-disk home of a bench's baseline: `BENCH_<bench>.json` at the
+    /// repository root (the crate manifest directory).
+    pub fn path(bench: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{bench}.json"))
+    }
+
+    /// Load the committed baseline for `bench` from the repository root;
+    /// `Ok(None)` when no file exists (first run — soft pass).
+    pub fn load(bench: &str) -> Result<Option<BenchLog>, BenchLogError> {
+        BenchLog::load_from(&BenchLog::path(bench))
+    }
+
+    /// [`BenchLog::load`] from an explicit path (tests point this at temp
+    /// files).
+    pub fn load_from(path: &Path) -> Result<Option<BenchLog>, BenchLogError> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(BenchLogError::Io(format!("{}: {e}", path.display()))),
+        };
+        BenchLog::from_json(&text).map(Some)
+    }
+
+    /// Write this log to its repository-root baseline path; returns the
+    /// path written.
+    pub fn save(&self) -> Result<PathBuf, BenchLogError> {
+        let path = BenchLog::path(&self.bench);
+        self.save_to(&path)?;
+        Ok(path)
+    }
+
+    /// [`BenchLog::save`] to an explicit path.
+    pub fn save_to(&self, path: &Path) -> Result<(), BenchLogError> {
+        std::fs::write(path, self.to_json()).map_err(|e| BenchLogError::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Serialize to the canonical pretty JSON layout (ends with a newline,
+    /// diff- and git-friendly: one entry per line).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", self.schema));
+        out.push_str(&format!("  \"bench\": {},\n", json_string(&self.bench)));
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 == self.entries.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"samples_per_s\": {}}}{sep}\n",
+                json_string(&e.name),
+                json_number(e.samples_per_s)
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a bench log, enforcing the schema version and the writer's
+    /// shape (unknown keys are rejected — a typo must not silently disarm
+    /// the gate).
+    pub fn from_json(text: &str) -> Result<BenchLog, BenchLogError> {
+        let bad = |why: &str| BenchLogError::Malformed(why.to_string());
+        let top = Json::parse(text)?;
+        let Json::Obj(fields) = top else { return Err(bad("top level must be an object")) };
+        let mut schema = None;
+        let mut bench = None;
+        let mut entries = None;
+        for (key, value) in fields {
+            match (key.as_str(), value) {
+                ("schema", Json::Num(v)) if v >= 0.0 && v.fract() == 0.0 => schema = Some(v as u32),
+                ("schema", _) => return Err(bad("\"schema\" must be a non-negative integer")),
+                ("bench", Json::Str(s)) => bench = Some(s),
+                ("bench", _) => return Err(bad("\"bench\" must be a string")),
+                ("entries", Json::Arr(items)) => {
+                    let mut list = Vec::with_capacity(items.len());
+                    for item in items {
+                        list.push(parse_entry(item)?);
+                    }
+                    entries = Some(list);
+                }
+                ("entries", _) => return Err(bad("\"entries\" must be an array")),
+                (other, _) => return Err(BenchLogError::Malformed(format!("unknown key {other:?}"))),
+            }
+        }
+        let schema = schema.ok_or_else(|| bad("missing \"schema\""))?;
+        if schema != SCHEMA_VERSION {
+            return Err(BenchLogError::SchemaMismatch { found: schema, want: SCHEMA_VERSION });
+        }
+        Ok(BenchLog {
+            schema,
+            bench: bench.ok_or_else(|| bad("missing \"bench\""))?,
+            entries: entries.ok_or_else(|| bad("missing \"entries\""))?,
+        })
+    }
+}
+
+fn parse_entry(item: Json) -> Result<BenchEntry, BenchLogError> {
+    let bad = |why: &str| BenchLogError::Malformed(why.to_string());
+    let Json::Obj(fields) = item else { return Err(bad("entry must be an object")) };
+    let mut name = None;
+    let mut sps = None;
+    for (key, value) in fields {
+        match (key.as_str(), value) {
+            ("name", Json::Str(s)) => name = Some(s),
+            ("samples_per_s", Json::Num(v)) if v.is_finite() && v >= 0.0 => sps = Some(v),
+            ("samples_per_s", _) => return Err(bad("\"samples_per_s\" must be a finite non-negative number")),
+            (other, _) => return Err(BenchLogError::Malformed(format!("unknown entry key {other:?}"))),
+        }
+    }
+    Ok(BenchEntry {
+        name: name.ok_or_else(|| bad("entry missing \"name\""))?,
+        samples_per_s: sps.ok_or_else(|| bad("entry missing \"samples_per_s\""))?,
+    })
+}
+
+/// Compare fresh measurements against a committed baseline. `Ok` carries
+/// one human-readable line per tracked entry; `Err` carries one line per
+/// gate violation (regression beyond `tolerance`, or a baseline entry whose
+/// measurement vanished). Seed entries (`0.0` baseline) always pass; fresh
+/// entries with no baseline counterpart are reported but never fail (they
+/// arm on the next baseline commit).
+pub fn compare(current: &BenchLog, baseline: &BenchLog, tolerance: f64) -> Result<Vec<String>, Vec<String>> {
+    assert!((0.0..1.0).contains(&tolerance), "tolerance is a fraction in [0, 1)");
+    let mut report = Vec::new();
+    let mut failures = Vec::new();
+    for base in &baseline.entries {
+        let Some(cur) = current.entry(&base.name) else {
+            failures.push(format!("{}: tracked entry disappeared from the bench", base.name));
+            continue;
+        };
+        if base.samples_per_s == 0.0 {
+            report.push(format!("{}: {:.0}/s (seed baseline armed)", base.name, cur.samples_per_s));
+            continue;
+        }
+        let ratio = cur.samples_per_s / base.samples_per_s;
+        if ratio < 1.0 - tolerance {
+            failures.push(format!(
+                "{}: {:.0}/s is {:.1}% below baseline {:.0}/s (tolerance {:.0}%)",
+                base.name,
+                cur.samples_per_s,
+                (1.0 - ratio) * 100.0,
+                base.samples_per_s,
+                tolerance * 100.0
+            ));
+        } else {
+            report.push(format!(
+                "{}: {:.0}/s vs baseline {:.0}/s ({:+.1}%)",
+                base.name,
+                cur.samples_per_s,
+                base.samples_per_s,
+                (ratio - 1.0) * 100.0
+            ));
+        }
+    }
+    for cur in &current.entries {
+        if baseline.entry(&cur.name).is_none() {
+            report.push(format!("{}: {:.0}/s (new, untracked until committed)", cur.name, cur.samples_per_s));
+        }
+    }
+    if failures.is_empty() {
+        Ok(report)
+    } else {
+        Err(failures)
+    }
+}
+
+/// The bench-side entry point: gate `current` against the committed
+/// baseline at the default repository-root path, then persist the fresh
+/// numbers. Panics (failing the bench, and CI with it) on any regression
+/// beyond `tolerance` or an unreadable/mis-versioned baseline; a missing
+/// baseline is a soft pass that writes one.
+pub fn record_and_gate(current: &BenchLog, tolerance: f64) {
+    match BenchLog::load(&current.bench) {
+        Ok(Some(baseline)) => match compare(current, &baseline, tolerance) {
+            Ok(report) => {
+                for line in report {
+                    println!("bench_log[{}]: {line}", current.bench);
+                }
+            }
+            Err(failures) => {
+                for line in &failures {
+                    eprintln!("bench_log[{}]: REGRESSION {line}", current.bench);
+                }
+                panic!("bench_log[{}]: {} throughput regression(s) beyond tolerance", current.bench, failures.len());
+            }
+        },
+        Ok(None) => println!("bench_log[{}]: no committed baseline — writing one (soft pass)", current.bench),
+        Err(e) => panic!("bench_log[{}]: cannot gate against baseline: {e}", current.bench),
+    }
+    let path = current.save().expect("bench log write");
+    println!("bench_log[{}]: wrote {}", current.bench, path.display());
+}
+
+/// Time budget for one bench timer, scaled by the `BENCH_BUDGET` env var
+/// (a multiplier; CI sets a fraction like `0.25` so the three throughput
+/// benches finish quickly, dev boxes default to 1.0 for steadier numbers).
+pub fn bench_budget(default_secs: f64) -> f64 {
+    let scale = std::env::var("BENCH_BUDGET").ok().and_then(|v| v.parse::<f64>().ok()).unwrap_or(1.0);
+    let scale = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+    default_secs * scale
+}
+
+/// JSON-escape a string (the writer side of the hand-rolled codec).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a finite f64 as a JSON number (Rust's shortest round-trip form,
+/// with a `.0` forced onto integral values so the type stays visibly
+/// floating-point in diffs).
+fn json_number(v: f64) -> String {
+    debug_assert!(v.is_finite());
+    let s = format!("{v}");
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        s
+    } else {
+        format!("{s}.0")
+    }
+}
+
+/// The JSON subset the reader understands (exactly what the writer emits,
+/// plus whitespace freedom for hand edits).
+enum Json {
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json, BenchLogError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing data after the top-level value"));
+        }
+        Ok(v)
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, why: &str) -> BenchLogError {
+        BenchLogError::Malformed(format!("{why} (at byte {})", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), BenchLogError> {
+        self.skip_ws();
+        if self.bytes.get(self.pos) == Some(&b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, BenchLogError> {
+        self.skip_ws();
+        match self.bytes.get(self.pos) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, BenchLogError> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.bytes.get(self.pos) == Some(&b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            self.skip_ws();
+            match self.bytes.get(self.pos) {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, BenchLogError> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.bytes.get(self.pos) == Some(&b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bytes.get(self.pos) {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, BenchLogError> {
+        if self.bytes.get(self.pos) != Some(&b'"') {
+            return Err(self.err("expected a string"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        let mut out = String::new();
+        while let Some(&b) = self.bytes.get(self.pos) {
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.bytes.get(self.pos).copied().ok_or_else(|| self.err("dangling escape"))?;
+                    out.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex).unwrap_or("zz"), 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            char::from_u32(code).ok_or_else(|| self.err("bad \\u code point"))?
+                        }
+                        _ => return Err(self.err("unsupported escape")),
+                    });
+                    self.pos += 1;
+                }
+                _ => {
+                    // UTF-8 passthrough: consume one whole char.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8 in string"))?;
+                    let c = rest.chars().next().ok_or_else(|| self.err("unterminated string"))?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+        self.pos = start;
+        Err(self.err("unterminated string"))
+    }
+
+    fn number(&mut self) -> Result<Json, BenchLogError> {
+        let start = self.pos;
+        while matches!(self.bytes.get(self.pos), Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| self.err("bad number"))?;
+        let v: f64 = text.parse().map_err(|_| self.err("bad number"))?;
+        if !v.is_finite() {
+            return Err(self.err("non-finite number"));
+        }
+        Ok(Json::Num(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> BenchLog {
+        let mut log = BenchLog::new("batch_forward");
+        log.push("mnist/scalar", 812.5);
+        log.push("mnist/forward_batch/B=32", 9640.0);
+        log.push("iris/forward_batch/B=8", 125000.0);
+        log
+    }
+
+    #[test]
+    fn json_round_trips_bit_exactly() {
+        let log = sample_log();
+        let text = log.to_json();
+        let back = BenchLog::from_json(&text).expect("round trip");
+        assert_eq!(back, log);
+        // Canonical layout is stable: re-serializing the parse is identity.
+        assert_eq!(back.to_json(), text);
+        // Escapes survive too.
+        let mut tricky = BenchLog::new("weird");
+        tricky.push("a \"quoted\"\\name\nwith tabs\t", 1.0);
+        assert_eq!(BenchLog::from_json(&tricky.to_json()).unwrap(), tricky);
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected_with_a_typed_error() {
+        let text = sample_log().to_json().replace("\"schema\": 1", "\"schema\": 99");
+        match BenchLog::from_json(&text) {
+            Err(BenchLogError::SchemaMismatch { found: 99, want }) => assert_eq!(want, SCHEMA_VERSION),
+            other => panic!("expected SchemaMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_logs_are_rejected() {
+        for bad in [
+            "",
+            "[]",
+            "{\"schema\": 1}",
+            "{\"schema\": 1, \"bench\": \"x\", \"entries\": [{}]}",
+            "{\"schema\": 1, \"bench\": \"x\", \"entries\": [{\"name\": \"a\", \"samples_per_s\": -1}]}",
+            "{\"schema\": 1, \"bench\": \"x\", \"entries\": [], \"extra\": 1}",
+            "{\"schema\": 1.5, \"bench\": \"x\", \"entries\": []}",
+            "{\"schema\": 1, \"bench\": \"x\", \"entries\": []} trailing",
+        ] {
+            assert!(
+                matches!(BenchLog::from_json(bad), Err(BenchLogError::Malformed(_))),
+                "should reject: {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn comparator_passes_improvements_and_noise() {
+        let baseline = sample_log();
+        let mut current = BenchLog::new("batch_forward");
+        current.push("mnist/scalar", 812.5 * 1.4); // improvement
+        current.push("mnist/forward_batch/B=32", 9640.0 * 0.95); // within 10%
+        current.push("iris/forward_batch/B=8", 125000.0);
+        current.push("mnist/forward_batch/B=64", 15000.0); // new, untracked
+        let report = compare(&current, &baseline, DEFAULT_TOLERANCE).expect("no regression");
+        assert_eq!(report.len(), 4);
+        assert!(report.iter().any(|l| l.contains("untracked")), "{report:?}");
+    }
+
+    #[test]
+    fn comparator_fails_a_regression_beyond_tolerance() {
+        let baseline = sample_log();
+        let mut current = BenchLog::new("batch_forward");
+        current.push("mnist/scalar", 812.5);
+        current.push("mnist/forward_batch/B=32", 9640.0 * 0.85); // >10% drop
+        current.push("iris/forward_batch/B=8", 125000.0);
+        let failures = compare(&current, &baseline, DEFAULT_TOLERANCE).expect_err("must fail");
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("mnist/forward_batch/B=32"), "{failures:?}");
+        // A wider tolerance lets the same drop through.
+        assert!(compare(&current, &baseline, 0.20).is_ok());
+    }
+
+    #[test]
+    fn comparator_fails_when_a_tracked_entry_disappears() {
+        let baseline = sample_log();
+        let mut current = BenchLog::new("batch_forward");
+        current.push("mnist/scalar", 900.0);
+        let failures = compare(&current, &baseline, DEFAULT_TOLERANCE).expect_err("must fail");
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        assert!(failures.iter().all(|l| l.contains("disappeared")));
+    }
+
+    #[test]
+    fn seed_baselines_always_pass_and_report_arming() {
+        let mut baseline = BenchLog::new("batch_forward");
+        baseline.push("mnist/scalar", 0.0);
+        let mut current = BenchLog::new("batch_forward");
+        current.push("mnist/scalar", 3.0); // any real number beats a seed
+        let report = compare(&current, &baseline, DEFAULT_TOLERANCE).expect("seeds never fail");
+        assert!(report[0].contains("seed baseline armed"), "{report:?}");
+    }
+
+    #[test]
+    fn load_save_round_trip_and_missing_file_soft_path() {
+        let dir = std::env::temp_dir().join(format!("bench_log_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        // Missing baseline: Ok(None), the record_and_gate soft-pass arm.
+        assert_eq!(BenchLog::load_from(&path), Ok(None));
+        let log = sample_log();
+        log.save_to(&path).unwrap();
+        assert_eq!(BenchLog::load_from(&path), Ok(Some(log)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_budget_scales_or_defaults() {
+        // No env manipulation here (tests run in parallel); just the default
+        // path and the numeric guard.
+        let scale = std::env::var("BENCH_BUDGET").ok().and_then(|v| v.parse::<f64>().ok()).unwrap_or(1.0);
+        let scale = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+        assert_eq!(bench_budget(0.4), 0.4 * scale);
+    }
+
+    #[test]
+    fn repo_root_path_shape() {
+        let p = BenchLog::path("batch_forward");
+        assert!(p.ends_with("BENCH_batch_forward.json"), "{}", p.display());
+    }
+}

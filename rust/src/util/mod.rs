@@ -1,7 +1,10 @@
 //! Small self-contained utilities: a deterministic RNG (the offline build has
-//! no `rand` crate), lightweight statistics, and a property-test driver used
-//! by the test suites in lieu of `proptest`.
+//! no `rand` crate), lightweight statistics, a property-test driver used by
+//! the test suites in lieu of `proptest`, the perf-trajectory bench log, and
+//! the shared worker pool behind within-batch parallelism.
 
+pub mod bench_log;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

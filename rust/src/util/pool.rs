@@ -1,0 +1,171 @@
+//! A small, process-wide worker pool for within-batch parallelism
+//! (DESIGN.md §12).
+//!
+//! The batched EMAC kernels ([`crate::accel::DeepPositron::forward_batch`])
+//! split large batches into independent sample chunks; the serving engine's
+//! Sim workers execute their flushed batches through the same kernels. Both
+//! therefore draw from ONE shared parallelism budget — this pool — so a
+//! machine running `shards × workers` serve threads plus batched inference
+//! never oversubscribes its cores: the pool's width caps the *additional*
+//! threads any single batch may fan out to, process-wide.
+//!
+//! Design notes:
+//!
+//! * **Scoped fan-out, not resident threads.** Jobs borrow their caller's
+//!   stack data (activation blocks, output slices), so the pool runs them on
+//!   [`std::thread::scope`] threads — safe with non-`'static` borrows and
+//!   unsafe-free, at the cost of a spawn per job batch. The kernels only
+//!   engage the pool for batches large enough to amortize that (microseconds
+//!   against milliseconds of quire accumulation).
+//! * **Determinism.** The pool only ever runs *independent* jobs (disjoint
+//!   sample chunks writing disjoint output regions), so results are
+//!   bit-identical to sequential execution regardless of width or
+//!   scheduling. `tests/batch_parity.rs` asserts this including the
+//!   more-threads-than-rows edge.
+//! * **Sizing.** [`WorkerPool::global`] defaults to the machine's available
+//!   parallelism capped at 8 (beyond that, the ≤8-bit kernels are
+//!   memory-bound); `DEEP_POSITRON_POOL=n` overrides, and `n = 1` disables
+//!   fan-out entirely (every job runs inline on the caller's thread).
+
+use std::sync::OnceLock;
+
+/// Hard cap on the default pool width: the tiled kernels are cache/memory
+/// bound well before this, and serve deployments already run one thread per
+/// worker.
+const DEFAULT_MAX_THREADS: usize = 8;
+
+/// Process-wide pool behind [`WorkerPool::global`].
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// A bounded fan-out helper: runs a batch of independent jobs across at most
+/// `threads` scoped threads (inline when `threads == 1` or there is a single
+/// job). See the module docs for the sharing/determinism contract.
+#[derive(Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of the given width (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// The process-wide shared pool: available parallelism capped at 8,
+    /// overridable with `DEEP_POSITRON_POOL=n` (n ≥ 1; `1` forces inline
+    /// execution everywhere).
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL_POOL.get_or_init(|| {
+            let default = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let threads = std::env::var("DEEP_POSITRON_POOL")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or_else(|| default.min(DEFAULT_MAX_THREADS));
+            WorkerPool::new(threads)
+        })
+    }
+
+    /// The pool's width (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every job to completion. Jobs may borrow caller data (they only
+    /// need to outlive this call); with a single job or a width-1 pool they
+    /// run inline on the caller's thread. Jobs are partitioned round-free
+    /// into at most `threads` contiguous groups, one scoped thread each —
+    /// callers pass uniform chunks, so static partitioning balances. A
+    /// panicking job propagates the panic to the caller (scope join).
+    pub fn run<F: FnOnce() + Send>(&self, mut jobs: Vec<F>) {
+        if self.threads == 1 || jobs.len() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let groups = self.threads.min(jobs.len());
+        let per = jobs.len().div_ceil(groups);
+        std::thread::scope(|s| {
+            while jobs.len() > per {
+                let tail = jobs.split_off(jobs.len() - per);
+                s.spawn(move || {
+                    for job in tail {
+                        job();
+                    }
+                });
+            }
+            // Run the first group on the caller's thread: one fewer spawn,
+            // and a width-n pool uses exactly n threads including this one.
+            for job in jobs {
+                job();
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        for threads in [1, 2, 4, 16] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..10)
+                .map(|_| {
+                    || {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            pool.run(jobs);
+            assert_eq!(hits.load(Ordering::Relaxed), 10, "width {threads}");
+        }
+    }
+
+    #[test]
+    fn jobs_write_disjoint_borrowed_slices() {
+        let mut out = vec![0usize; 24];
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = out
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, chunk)| {
+                move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = i * 100 + j;
+                    }
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i / 7) * 100 + i % 7);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        let pool = WorkerPool::new(64);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..3)
+            .map(|_| {
+                || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+        // Zero jobs: a no-op, never a panic.
+        pool.run(Vec::<fn()>::new());
+    }
+
+    #[test]
+    fn width_clamps_to_one() {
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+        assert!(WorkerPool::global().threads() >= 1);
+    }
+}

@@ -8,12 +8,19 @@
 //! `Emac`/`ScalarAlu` primitives one sample at a time — the exact loop the
 //! accelerator ran before the compiled-plan refactor — so a systematic bug
 //! in the batched kernel cannot hide behind a shared implementation.
+//!
+//! The §12 tiled kernels add edge geometry worth pinning down explicitly:
+//! batch sizes that don't divide `LANE_BLOCK`, batches that cross a full
+//! lane block, worker pools wider than the batch, and all-NaR output rows
+//! through `decoded_argmax`.
 
+use deep_positron::accel::positron::{LANE_BLOCK, ROW_TILE};
 use deep_positron::accel::{Datapath, DeepPositron, Mlp};
 use deep_positron::coordinator::experiments::train_model;
 use deep_positron::datasets::{self, Dataset, Scale};
 use deep_positron::formats::ops::ScalarAlu;
 use deep_positron::formats::{Emac, Exact, FormatSpec, Quantizer};
+use deep_positron::util::pool::WorkerPool;
 
 /// The pre-refactor per-sample datapath, reconstructed from the public
 /// format primitives: quantize the input, run one `Emac` (or per-step
@@ -128,4 +135,94 @@ fn empty_and_singleton_batches() {
     assert!(dp.forward_batch(&[], Datapath::Emac).is_empty());
     let row = ds.test_row(0);
     assert_eq!(dp.forward_batch(&[row], Datapath::Emac), vec![dp.forward_codes(row)]);
+    // The flat entry points must also survive B = 0: clear a stale buffer
+    // and return without touching a kernel.
+    let mut flat = vec![0xFFFFu16; 5];
+    dp.forward_batch_into(&[], Datapath::Emac, &mut flat);
+    assert!(flat.is_empty());
+    dp.forward_batch_into_with(&[], Datapath::Emac, &WorkerPool::new(4), &mut flat);
+    assert!(flat.is_empty());
+    assert!(dp.predict_batch(&[]).is_empty());
+}
+
+/// Batch sizes that don't divide the tile geometry — odd remainders below
+/// `ROW_TILE`/`LANE_BLOCK` and sizes that cross a full lane block — must be
+/// bit-identical to the per-sample wrapper under every datapath. The tile
+/// loops carry `min()`-clamped edge lanes; this is the test that keeps
+/// those clamps honest.
+#[test]
+fn odd_and_lane_crossing_batch_sizes_match_per_sample() {
+    assert_eq!(LANE_BLOCK, 32, "update the lane-crossing sizes below if the tile geometry changes");
+    let ds = datasets::load("iris", 9, Scale::Small);
+    let mlp = train_model(&ds, 9);
+    let dp = DeepPositron::compile(&mlp, FormatSpec::parse("posit8es1").unwrap());
+    let mut flat = Vec::new();
+    // ROW_TILE−1 and 7: partial first lane block; 33 and 37: one full block
+    // plus an odd tail (both exceed the iris test split, exercising repeats).
+    for b in [ROW_TILE - 1, 7, LANE_BLOCK + 1, LANE_BLOCK + 5] {
+        let rows: Vec<&[f64]> = (0..b).map(|i| ds.test_row(i % ds.test_len())).collect();
+        for mode in [Datapath::Emac, Datapath::NarrowQuire(32), Datapath::InexactMac] {
+            let nested = dp.forward_batch(&rows, mode);
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(nested[i], dp.forward_codes_with(row, mode), "B={b} {mode:?} sample {i}");
+            }
+            dp.forward_batch_into(&rows, mode, &mut flat);
+            assert_eq!(flat.len(), b * dp.out_dim());
+            for (i, chunk) in flat.chunks(dp.out_dim()).enumerate() {
+                assert_eq!(chunk, &nested[i][..], "B={b} {mode:?} sample {i} (flat layout)");
+            }
+        }
+    }
+}
+
+/// A worker pool wider than the batch: every thread gets at most one row
+/// (most get none), and the result must still be bit-identical to the
+/// sequential kernel — chunked fan-out must never change a sample's own
+/// accumulation order.
+#[test]
+fn pool_wider_than_the_batch_is_bit_identical() {
+    let ds = datasets::load("iris", 9, Scale::Small);
+    let mlp = train_model(&ds, 9);
+    let dp = DeepPositron::compile(&mlp, FormatSpec::parse("posit8es1").unwrap());
+    let pool = WorkerPool::new(8);
+    let mut flat = Vec::new();
+    for b in [1usize, 3, LANE_BLOCK + 5] {
+        let rows: Vec<&[f64]> = (0..b).map(|i| ds.test_row(i % ds.test_len())).collect();
+        for mode in [Datapath::Emac, Datapath::NarrowQuire(32), Datapath::InexactMac] {
+            let nested = dp.forward_batch(&rows, mode);
+            dp.forward_batch_into_with(&rows, mode, &pool, &mut flat);
+            assert_eq!(flat.len(), b * dp.out_dim());
+            for (i, chunk) in flat.chunks(dp.out_dim()).enumerate() {
+                assert_eq!(chunk, &nested[i][..], "B={b} {mode:?} sample {i} (pool of 8)");
+            }
+        }
+    }
+}
+
+/// `decoded_argmax` on all-NaR rows: an output row where no code decodes to
+/// a real value must come back `None`, never class 0 — and a single real
+/// value among NaRs must win regardless of position.
+#[test]
+fn all_nar_rows_through_decoded_argmax() {
+    let ds = datasets::load("iris", 9, Scale::Small);
+    let mlp = train_model(&ds, 9);
+    let dp = DeepPositron::compile(&mlp, FormatSpec::parse("posit8es1").unwrap());
+    let q = dp.quantizer();
+    // Hunt for a non-canonical code through the public decoder (posit NaR
+    // plus any gap codes) instead of hard-coding a format's bit pattern.
+    let nar = (0u16..1 << 8).find(|&c| q.decode(c).is_none()).expect("an 8-bit format has a non-canonical code");
+    let out_dim = dp.out_dim();
+    assert_eq!(dp.decoded_argmax(&vec![nar; out_dim]), None, "an all-NaR row must not decode to a class");
+    // One decodable code among NaRs wins at every position.
+    let real = q.quantize_f64(1.0).0;
+    for slot in 0..out_dim {
+        let mut row = vec![nar; out_dim];
+        row[slot] = real;
+        assert_eq!(dp.decoded_argmax(&row), Some(slot), "the lone real value must win at slot {slot}");
+    }
+    // The datapaths themselves never emit NaR: every produced code decodes.
+    let mut flat = Vec::new();
+    let rows: Vec<&[f64]> = (0..5).map(|i| ds.test_row(i)).collect();
+    dp.forward_batch_into(&rows, Datapath::Emac, &mut flat);
+    assert!(flat.iter().all(|&c| q.decode(c).is_some()), "EMAC output rows must be canonical codes");
 }

@@ -8,6 +8,10 @@
 //!   bit-identical to driving the public `Emac`/`ScalarAlu` primitives one
 //!   sample, one output element at a time, across formats × all three
 //!   datapaths (EMAC, narrow quire, inexact MAC).
+//! * **Exhaustive sweep parity** — the same oracle over EVERY
+//!   `FormatSpec::sweep(5..=8)` format × all three datapaths on a tiny 8×8
+//!   conv net at an odd batch size, so the §12 tiled conv kernels are pinned
+//!   across the whole format space, not just the 8-bit flagships.
 //! * **Uniform-mixed parity** — a uniform `MixedSpec` conv plan equals the
 //!   uniform compile path exactly (the §10 invariant, now on conv).
 //! * **Tune → serve pipeline** — `tune::tune` on the conv MNIST net
@@ -17,13 +21,14 @@
 //! * **IR validation at serve start** — a shape-inconsistent conv model is
 //!   rejected as a typed `BadShard`, not a worker panic.
 
-use deep_positron::accel::{Datapath, DeepPositron, LayerKind, Mlp};
+use deep_positron::accel::{Datapath, DeepPositron, Layer, LayerKind, Mlp, Shape};
 use deep_positron::coordinator::experiments::{conv_model, train_conv_model};
 use deep_positron::datasets::{self, Dataset, Scale};
 use deep_positron::formats::ops::ScalarAlu;
 use deep_positron::formats::{Emac, Exact, FormatSpec, MixedSpec, Quantizer};
 use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey};
 use deep_positron::tune::{self, Budget, TuneConfig, TunePlan};
+use deep_positron::util::Rng;
 
 fn mnist() -> Dataset {
     datasets::load("mnist", 9, Scale::Small)
@@ -300,6 +305,44 @@ fn conv_batch_is_bit_identical_to_the_scalar_primitive_oracle() {
                         expect,
                         "{spec_name} {mode:?} sample {i} (scalar wrapper)"
                     );
+                }
+            }
+        }
+    }
+}
+
+/// A tiny untrained 8×8 conv net (conv2k3x3s1 + pool2s2 + flatten + dense3)
+/// cheap enough to sweep exhaustively: its bit behaviour is what the parity
+/// argument is about, and random He-initialized weights exercise the full
+/// code space better than a trained net's clustered values.
+fn tiny_conv_net(seed: u64) -> Mlp {
+    let mut rng = Rng::new(seed);
+    let conv = Layer::conv2d(Shape::Chw { c: 1, h: 8, w: 8 }, 2, 3, 3, 1, &mut rng);
+    let pool = Layer::avg_pool(conv.out_shape, 2, 2);
+    let flat = Layer::flatten(pool.out_shape);
+    let dense = Layer::dense(flat.out_dim, 3, &mut rng);
+    Mlp::from_layers(vec![conv, pool, flat, dense])
+}
+
+#[test]
+fn exhaustive_sweep_conv_parity_against_the_scalar_oracle() {
+    // The §12 satellite: EVERY swept format (5..=8 bits, all three
+    // families) × all three datapaths, tiled conv kernels vs the
+    // scalar-primitive oracle, at an odd batch size (5) that doesn't divide
+    // the tile geometry.
+    let mlp = tiny_conv_net(0xC0DE);
+    let mut rng = Rng::new(11);
+    let inputs: Vec<Vec<f64>> = (0..5).map(|_| (0..64).map(|_| rng.normal(0.3, 0.4)).collect()).collect();
+    let rows: Vec<&[f64]> = inputs.iter().map(Vec::as_slice).collect();
+    for n in 5..=8u32 {
+        for spec in FormatSpec::sweep(n) {
+            let dp = DeepPositron::compile(&mlp, spec);
+            let (w_codes, b_exact) = quantized_params(&dp);
+            for mode in [Datapath::Emac, Datapath::NarrowQuire(32), Datapath::InexactMac] {
+                let batched = dp.forward_batch(&rows, mode);
+                for (i, row) in rows.iter().enumerate() {
+                    let expect = scalar_conv_oracle(&mlp, dp.quantizer(), &w_codes, &b_exact, row, mode);
+                    assert_eq!(batched[i], expect, "{spec} {mode:?} sample {i} (tiled conv)");
                 }
             }
         }
