@@ -1,69 +1,153 @@
-//! Tuner search throughput and frontier quality (DESIGN.md §10): runs the
-//! full greedy/beam descent on iris and wdbc under the acceptance budget
-//! (accuracy within 1 pt of the best uniform 8-bit posit, EDP minimized)
-//! and reports assignments-evaluated-per-second plus the frontier size.
+//! Tuner search throughput (DESIGN.md §10, §13): the sensitivity-pruned,
+//! pool-parallel descent against the serial unpruned baseline on the conv
+//! MNIST task, plus a pruned-parallel frontier-quality run on iris.
 //!
-//! Asserted claims: the frontier is non-empty and contains no dominated
-//! point, the descent converges to a feasible plan, and the tuned mixed
-//! assignment undercuts the uniform 8-bit posit's modeled network EDP
-//! strictly while staying within one accuracy point of it.
+//! Each measurement is ONE full search (assignments-evaluated-per-second),
+//! so `BENCH_BUDGET` does not scale this bench — a search's cost is set by
+//! its candidate pools, not a timer budget. The conv net trains for 2
+//! epochs here (accuracy is relative to its own uniform posit8 reference,
+//! so a lightly-trained net still exercises the full search).
+//!
+//! Asserted claims:
+//! * the pruned+parallel conv search evaluates strictly fewer assignments
+//!   than the serial unpruned search, and finishes at least 5× faster;
+//! * its plan still satisfies the acceptance budget (accuracy within 1 pt
+//!   of the best uniform 8-bit posit) at a network EDP no worse than the
+//!   serial plan's, and carries its pruning provenance;
+//! * the iris run keeps the PR-5 frontier-quality claims: feasible plan,
+//!   EDP strictly below uniform posit8, non-dominated frontier.
+//!
+//! Throughput results land in the schema-versioned `BENCH_tune_search.json`
+//! trajectory at the repo root and are gated against the committed baseline
+//! (`util::bench_log`).
 
+use deep_positron::accel::Mlp;
 use deep_positron::coordinator::experiments;
-use deep_positron::datasets::{self, Scale};
-use deep_positron::tune::{self, TuneConfig};
+use deep_positron::datasets::{self, Dataset, Scale};
+use deep_positron::tune::{self, TuneConfig, TuneReport};
+use deep_positron::util::bench_log::{self, BenchLog};
 use deep_positron::util::stats::{mean, BenchTimer};
 
-fn main() {
-    for dataset in ["iris", "wdbc"] {
-        let ds = datasets::load(dataset, 7, Scale::Small);
-        let mlp = experiments::train_model(&ds, 7);
-        let budget = tune::default_budget(&ds, &mlp, usize::MAX);
-        let mut timer = BenchTimer::new(&format!("tune/{dataset} beam=2"));
-        let report = timer.sample(|| tune::tune(&ds, &mlp, &TuneConfig::new(budget).with_beam(2)));
-        let secs = mean(timer.samples());
-        println!("{}", timer.report());
-        println!(
-            "  -> {dataset}: {} assignments in {:.2}s = {:.0} assignments/s, {} rounds, frontier size {}",
-            report.evaluated,
-            secs,
-            report.evaluated as f64 / secs,
-            report.rounds,
-            report.frontier.len()
-        );
-        println!(
-            "  -> tuned {} @ {:.2}% acc, EDP {:.3e} (uniform posit8 {}: {:.2}%, EDP {:.3e})",
-            report.plan.assignment.name(),
-            report.plan.accuracy * 100.0,
-            report.plan.cost.edp_pj_ns,
-            report.reference.mixed.name(),
-            report.reference.accuracy * 100.0,
-            report.reference.cost.edp_pj_ns,
-        );
+/// One full search, timed; returns the report and wall-clock seconds.
+fn timed_search(label: &str, ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> (TuneReport, f64) {
+    let mut timer = BenchTimer::new(label);
+    let report = timer.sample(|| tune::tune(ds, mlp, cfg));
+    let secs = mean(timer.samples());
+    println!("{}", timer.report());
+    println!(
+        "  -> {label}: {} assignments in {secs:.2}s = {:.0} assignments/s, {} rounds, frontier size {}",
+        report.evaluated,
+        report.evaluated as f64 / secs,
+        report.rounds,
+        report.frontier.len()
+    );
+    (report, secs)
+}
 
-        assert!(!report.frontier.is_empty(), "{dataset}: empty Pareto frontier");
-        for a in &report.frontier {
-            for b in &report.frontier {
-                assert!(
-                    !a.dominates(b),
-                    "{dataset}: frontier point {} dominates {}",
-                    a.mixed.name(),
-                    b.mixed.name()
-                );
-            }
+fn assert_frontier_clean(report: &TuneReport, task: &str) {
+    assert!(!report.frontier.is_empty(), "{task}: empty Pareto frontier");
+    for a in &report.frontier {
+        for b in &report.frontier {
+            assert!(!a.dominates(b), "{task}: frontier point {} dominates {}", a.mixed.name(), b.mixed.name());
         }
-        assert!(report.plan.feasible, "{dataset}: default budget must be attainable");
-        assert!(
-            report.plan.accuracy >= report.reference.accuracy - 0.01 - 1e-12,
-            "{dataset}: tuned accuracy {} fell more than 1pt below uniform posit8 {}",
-            report.plan.accuracy,
-            report.reference.accuracy
-        );
-        assert!(
-            report.plan.cost.edp_pj_ns < report.reference.cost.edp_pj_ns,
-            "{dataset}: tuned EDP {} not strictly below uniform posit8 {}",
-            report.plan.cost.edp_pj_ns,
-            report.reference.cost.edp_pj_ns
-        );
     }
-    println!("\ntuned mixed plans undercut uniform posit8 EDP within 1 accuracy pt on iris + wdbc — OK");
+}
+
+fn main() {
+    let mut log = BenchLog::new("tune_search");
+
+    // --- Conv MNIST: serial unpruned vs sensitivity-pruned + parallel. ---
+    let ds = datasets::load("mnist", 7, Scale::Small);
+    println!("training the conv net (conv4k5x5s2+pool2s2+flatten+dense10, 2 epochs)…");
+    let mlp = experiments::train_conv_model(&ds, 7, 2);
+    const EVAL_ROWS: usize = 48; // == sensitivity::SCREEN_ROWS: screening at search fidelity
+    let budget = tune::default_budget(&ds, &mlp, EVAL_ROWS);
+    let base = TuneConfig::new(budget).with_beam(1).with_eval_rows(EVAL_ROWS);
+
+    let serial_cfg = base.clone().with_threads(1).with_prune(None);
+    let (serial, serial_secs) = timed_search("tune/conv-mnist serial unpruned", &ds, &mlp, &serial_cfg);
+    log.push("conv-mnist/serial-unpruned", serial.evaluated as f64 / serial_secs);
+
+    let pruned_cfg = base.with_prune(Some(0.01));
+    let (pruned, pruned_secs) = timed_search("tune/conv-mnist pruned parallel", &ds, &mlp, &pruned_cfg);
+    log.push("conv-mnist/pruned-parallel", pruned.evaluated as f64 / pruned_secs);
+
+    let table = pruned.sensitivity.as_ref().expect("pruned run must carry its sensitivity table");
+    println!("\n{}", table.render());
+    assert!(serial.sensitivity.is_none(), "unpruned run must not run the pre-pass");
+
+    let speedup = serial_secs / pruned_secs;
+    println!(
+        "conv-mnist: pruned+parallel {} evals vs serial {} ({:.1}% pruned away), {speedup:.1}× faster",
+        pruned.evaluated,
+        serial.evaluated,
+        100.0 * (1.0 - pruned.evaluated as f64 / serial.evaluated as f64)
+    );
+    assert!(
+        pruned.evaluated < serial.evaluated,
+        "pruned search evaluated {} assignments, serial {} — pruning must cut the pool",
+        pruned.evaluated,
+        serial.evaluated
+    );
+    assert!(
+        speedup >= 5.0,
+        "pruned+parallel search must be >= 5x faster than serial unpruned on conv \
+         ({pruned_secs:.2}s vs {serial_secs:.2}s = {speedup:.1}x)"
+    );
+    assert!(pruned.plan.feasible, "pruned conv plan must satisfy the acceptance budget");
+    assert!(
+        pruned.plan.accuracy >= pruned.reference.accuracy - 0.01 - 1e-12,
+        "pruned tuned accuracy {} fell more than 1pt below uniform posit8 {}",
+        pruned.plan.accuracy,
+        pruned.reference.accuracy
+    );
+    assert!(
+        pruned.plan.cost.edp_pj_ns <= serial.plan.cost.edp_pj_ns,
+        "pruned plan EDP {} exceeds the serial unpruned plan's {}",
+        pruned.plan.cost.edp_pj_ns,
+        serial.plan.cost.edp_pj_ns
+    );
+    let provenance = pruned.plan.pruned.as_deref().expect("pruned plan must carry provenance");
+    assert!(provenance.starts_with("sensitivity drop<="), "odd provenance line: {provenance}");
+    assert_frontier_clean(&pruned, "conv-mnist");
+    println!(
+        "  -> tuned {} @ {:.2}% acc, EDP {:.3e} ({provenance})",
+        pruned.plan.assignment.name(),
+        pruned.plan.accuracy * 100.0,
+        pruned.plan.cost.edp_pj_ns
+    );
+
+    // --- Iris: the PR-5 frontier-quality run, now pruned + parallel. ---
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = experiments::train_model(&ds, 7);
+    let budget = tune::default_budget(&ds, &mlp, usize::MAX);
+    let cfg = TuneConfig::new(budget).with_beam(2);
+    let (report, secs) = timed_search("tune/iris pruned parallel beam=2", &ds, &mlp, &cfg);
+    log.push("iris/pruned-parallel", report.evaluated as f64 / secs);
+    println!(
+        "  -> tuned {} @ {:.2}% acc, EDP {:.3e} (uniform posit8 {}: {:.2}%, EDP {:.3e})",
+        report.plan.assignment.name(),
+        report.plan.accuracy * 100.0,
+        report.plan.cost.edp_pj_ns,
+        report.reference.mixed.name(),
+        report.reference.accuracy * 100.0,
+        report.reference.cost.edp_pj_ns,
+    );
+    assert_frontier_clean(&report, "iris");
+    assert!(report.plan.feasible, "iris: default budget must be attainable");
+    assert!(
+        report.plan.accuracy >= report.reference.accuracy - 0.01 - 1e-12,
+        "iris: tuned accuracy {} fell more than 1pt below uniform posit8 {}",
+        report.plan.accuracy,
+        report.reference.accuracy
+    );
+    assert!(
+        report.plan.cost.edp_pj_ns < report.reference.cost.edp_pj_ns,
+        "iris: tuned EDP {} not strictly below uniform posit8 {}",
+        report.plan.cost.edp_pj_ns,
+        report.reference.cost.edp_pj_ns
+    );
+
+    println!("\npruned+parallel search cuts the conv candidate pool and wall clock without losing the plan — OK");
+    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
 }

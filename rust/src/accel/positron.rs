@@ -65,7 +65,7 @@
 use std::sync::Arc;
 
 use super::ir::{LayerKind, Shape};
-use super::mlp::Mlp;
+use super::mlp::{Layer, Mlp};
 use crate::datasets::Dataset;
 use crate::formats::emac::{DecodeLut, DecodedOp};
 use crate::formats::ops::ScalarAlu;
@@ -107,6 +107,10 @@ pub enum Datapath {
 /// units, ready for the batched kernel. Each layer carries its own shared
 /// table set — the heterogeneous (mixed-precision) case of DESIGN.md §10;
 /// uniform networks simply hold `Arc` clones of one table set everywhere.
+/// `Clone` is cheap relative to compilation (table handles are `Arc`s; the
+/// operand/bias vectors are flat memcpys, no re-quantization) — what
+/// [`DeepPositron::recompile_mixed`] leans on to reuse unchanged layers.
+#[derive(Clone)]
 struct LayerPlan {
     /// The IR node this plan entry executes.
     kind: LayerKind,
@@ -198,6 +202,48 @@ impl DeepPositron {
         DeepPositron::build(mlp, mixed, &Quantizer::shared)
     }
 
+    /// Recompile `mlp` under a new per-layer assignment, reusing this
+    /// instance's compiled layers wherever the plan is unchanged. Layer `i`'s
+    /// plan depends on `mixed.layers()[i]` (its own tables, weight operands)
+    /// AND on layer `i + 1`'s format (the terminal round recodes into the
+    /// next layer's format), so entry `i` is reused exactly when both match
+    /// this instance's assignment; changed layers rebuild from scratch
+    /// through the shared table cache. Bit-identical to
+    /// [`DeepPositron::compile_mixed`] on the same `(mlp, mixed)` — reuse is
+    /// a memcpy of already-correct plan entries, never an approximation.
+    /// `mlp` must be the network this instance was compiled from (same
+    /// topology AND same trained parameters; debug-asserted on dims). This
+    /// is the plan-prefix reuse the tuner's descent rounds lean on: a
+    /// single-layer perturbation recompiles at most two layers.
+    pub fn recompile_mixed(&self, mlp: &Mlp, mixed: MixedSpec) -> DeepPositron {
+        assert_eq!(mixed.len(), mlp.layers.len(), "mixed assignment must carry exactly one format per layer");
+        debug_assert_eq!(self.dims, mlp.dims(), "recompile_mixed requires the network this instance was compiled from");
+        let dims = mlp.dims();
+        let specs = mixed.layers();
+        let old = self.mixed.layers();
+        let mut weights = Vec::with_capacity(mlp.layers.len());
+        let mut biases = Vec::with_capacity(mlp.layers.len());
+        let mut plan = Vec::with_capacity(mlp.layers.len());
+        for (li, layer) in mlp.layers.iter().enumerate() {
+            let spec = specs[li];
+            let out_spec = specs.get(li + 1).copied().unwrap_or(spec);
+            let old_out = old.get(li + 1).copied().unwrap_or(old[li]);
+            if spec == old[li] && out_spec == old_out {
+                plan.push(self.plan[li].clone());
+                weights.push(self.weights[li].clone());
+                biases.push(self.biases[li].clone());
+            } else {
+                let (codes, bias_exact, entry) =
+                    DeepPositron::build_layer(layer, li, &dims, mlp.layers.len() - 1, spec, out_spec, &Quantizer::shared);
+                plan.push(entry);
+                weights.push(codes);
+                biases.push(bias_exact);
+            }
+        }
+        let quantizer = Arc::clone(&plan[0].quantizer);
+        DeepPositron { mixed, quantizer, weights, biases, plan, dims }
+    }
+
     fn build(mlp: &Mlp, mixed: MixedSpec, tables: &dyn Fn(FormatSpec) -> Arc<Quantizer>) -> DeepPositron {
         assert_eq!(mixed.len(), mlp.layers.len(), "mixed assignment must carry exactly one format per layer");
         let dims = mlp.dims();
@@ -208,47 +254,65 @@ impl DeepPositron {
         let mut plan = Vec::with_capacity(mlp.layers.len());
         for (li, layer) in mlp.layers.iter().enumerate() {
             let spec = specs[li];
-            let quantizer = tables(spec);
-            let lut = DecodeLut::shared(spec);
-            // Eq. (2) width check, once at compile time per layer, at the
-            // layer's OWN accumulation length: receptive-field fan-in + 1
-            // bias term for weighted layers (dense: in_dim + 1, exactly the
-            // pre-IR bound; conv: kh·kw·in_ch + 1 — the conv EMAC no longer
-            // provisions an input-width quire).
-            lut.assert_quire_fits(layer.eq2_k());
-            let (codes, _) = quantizer.quantize_slice(&layer.w);
-            let bias_exact: Vec<Exact> = layer
-                .b
-                .iter()
-                .map(|&b| {
-                    let (code, _) = quantizer.quantize_f64(b);
-                    quantizer.decode(code).unwrap_or(Exact::ZERO)
-                })
-                .collect();
-            let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
-            debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
             let out_spec = specs.get(li + 1).copied().unwrap_or(spec);
-            let out_q = if out_spec == spec { Arc::clone(&quantizer) } else { tables(out_spec) };
-            plan.push(LayerPlan {
-                kind: layer.kind,
-                in_shape: layer.in_shape,
-                out_shape: layer.out_shape,
-                in_dim: dims[li],
-                out_dim: dims[li + 1],
-                zero: quantizer.zero_code(),
-                out_zero: out_q.zero_code(),
-                bias_q: bias_exact.iter().map(|b| lut.to_quire(b)).collect(),
-                relu: layer.kind.has_weights() && li < last,
-                w_ops,
-                lut,
-                out_q,
-                quantizer,
-            });
+            let (codes, bias_exact, entry) = DeepPositron::build_layer(layer, li, &dims, last, spec, out_spec, tables);
+            plan.push(entry);
             weights.push(codes);
             biases.push(bias_exact);
         }
         let quantizer = Arc::clone(&plan[0].quantizer);
         DeepPositron { mixed, quantizer, weights, biases, plan, dims }
+    }
+
+    /// Compile ONE layer onto the accelerator: quantize its parameters into
+    /// `spec`, pre-decode the EMAC operands, and point the terminal round at
+    /// `out_spec` (the §10 boundary recode). The per-layer unit both
+    /// [`DeepPositron::build`] and [`DeepPositron::recompile_mixed`] compose.
+    fn build_layer(
+        layer: &Layer,
+        li: usize,
+        dims: &[usize],
+        last: usize,
+        spec: FormatSpec,
+        out_spec: FormatSpec,
+        tables: &dyn Fn(FormatSpec) -> Arc<Quantizer>,
+    ) -> (Vec<u16>, Vec<Exact>, LayerPlan) {
+        let quantizer = tables(spec);
+        let lut = DecodeLut::shared(spec);
+        // Eq. (2) width check, once at compile time per layer, at the
+        // layer's OWN accumulation length: receptive-field fan-in + 1
+        // bias term for weighted layers (dense: in_dim + 1, exactly the
+        // pre-IR bound; conv: kh·kw·in_ch + 1 — the conv EMAC no longer
+        // provisions an input-width quire).
+        lut.assert_quire_fits(layer.eq2_k());
+        let (codes, _) = quantizer.quantize_slice(&layer.w);
+        let bias_exact: Vec<Exact> = layer
+            .b
+            .iter()
+            .map(|&b| {
+                let (code, _) = quantizer.quantize_f64(b);
+                quantizer.decode(code).unwrap_or(Exact::ZERO)
+            })
+            .collect();
+        let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
+        debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
+        let out_q = if out_spec == spec { Arc::clone(&quantizer) } else { tables(out_spec) };
+        let entry = LayerPlan {
+            kind: layer.kind,
+            in_shape: layer.in_shape,
+            out_shape: layer.out_shape,
+            in_dim: dims[li],
+            out_dim: dims[li + 1],
+            zero: quantizer.zero_code(),
+            out_zero: out_q.zero_code(),
+            bias_q: bias_exact.iter().map(|b| lut.to_quire(b)).collect(),
+            relu: layer.kind.has_weights() && li < last,
+            w_ops,
+            lut,
+            out_q,
+            quantizer,
+        };
+        (codes, bias_exact, entry)
     }
 
     /// The network's input-layer format. Uniform networks (compiled via
@@ -702,6 +766,23 @@ impl DeepPositron {
     /// [`EVAL_BATCH`] samples per plan walk; undecodable output rows count
     /// as wrong, never as class 0.
     pub fn accuracy_on(&self, ds: &Dataset, mode: Datapath, rows: usize) -> f64 {
+        self.accuracy_loop(ds, mode, rows, None)
+    }
+
+    /// [`DeepPositron::accuracy_on`] through an explicit worker pool —
+    /// the injection point for callers that manage their own parallelism
+    /// budget (the tuner's candidate-level fan-out runs each evaluation's
+    /// batches inline on a width-1 pool rather than nesting fan-outs).
+    /// Bit-identical to `accuracy_on` at any pool width: batched EMAC
+    /// results never depend on chunking (exact quire addition).
+    pub fn accuracy_on_with(&self, ds: &Dataset, mode: Datapath, rows: usize, pool: &WorkerPool) -> f64 {
+        self.accuracy_loop(ds, mode, rows, Some(pool))
+    }
+
+    /// Shared accuracy loop: `pool` `None` routes through the global-pool
+    /// heuristics of [`DeepPositron::forward_batch_into`]; `Some` pins every
+    /// batch to the given pool.
+    fn accuracy_loop(&self, ds: &Dataset, mode: Datapath, rows: usize, pool: Option<&WorkerPool>) -> f64 {
         let total = ds.test_len().min(rows.max(1));
         let mut correct = 0usize;
         let mut i = 0;
@@ -709,7 +790,10 @@ impl DeepPositron {
         while i < total {
             let take = EVAL_BATCH.min(total - i);
             let rows: Vec<&[f64]> = (i..i + take).map(|j| ds.test_row(j)).collect();
-            self.forward_batch_into(&rows, mode, &mut flat);
+            match pool {
+                Some(pool) => self.forward_batch_into_with(&rows, mode, pool, &mut flat),
+                None => self.forward_batch_into(&rows, mode, &mut flat),
+            }
             for (j, codes) in flat.chunks(self.out_dim()).enumerate() {
                 if self.decoded_argmax(codes) == Some(ds.y_test[i + j] as usize) {
                     correct += 1;
@@ -1013,6 +1097,41 @@ mod tests {
             let codes = dp.forward_codes(&x);
             let vals: Vec<f64> = codes.iter().map(|&c| dp.quantizer().decode(c).unwrap().to_f64()).collect();
             assert_eq!(vals, dp.forward_dequantized(&x), "{spec}");
+        }
+    }
+
+    #[test]
+    fn recompile_mixed_matches_fresh_compile() {
+        // Plan-prefix reuse must be invisible: recompiling from any base
+        // assignment is bit-identical to compiling the target from scratch —
+        // including the out_q subtlety (layer i's plan also depends on layer
+        // i+1's format, so a single-layer perturbation rebuilds two entries).
+        let (mlp, ds) = trained_iris();
+        let base = DeepPositron::compile_mixed(&mlp, MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3));
+        for name in [
+            "posit8es1+posit8es1+posit8es1", // no-op: every layer reused
+            "posit8es1+posit6es1+posit8es1", // middle move: layers 0 and 1 rebuild
+            "posit8es1+posit8es1+fixed7q3",  // tail move: layers 1 and 2 rebuild
+            "posit5es1+float8we4+fixed7q3",  // everything changes
+        ] {
+            let mixed = MixedSpec::parse(name).unwrap();
+            let re = base.recompile_mixed(&mlp, mixed.clone());
+            let fresh = DeepPositron::compile_mixed(&mlp, mixed);
+            assert_eq!(re.mixed(), fresh.mixed(), "{name}");
+            for i in 0..12 {
+                assert_eq!(re.forward_codes(ds.test_row(i)), fresh.forward_codes(ds.test_row(i)), "{name} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_on_with_matches_accuracy_on_at_any_width() {
+        let (mlp, ds) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 7, es: 1 });
+        let want = dp.accuracy_on(&ds, Datapath::Emac, 24);
+        for threads in [1, 2, 8] {
+            let pool = crate::util::pool::WorkerPool::new(threads);
+            assert_eq!(dp.accuracy_on_with(&ds, Datapath::Emac, 24, &pool), want, "width {threads}");
         }
     }
 

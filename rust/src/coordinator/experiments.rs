@@ -150,6 +150,18 @@ pub fn train_conv_model(ds: &Dataset, seed: u64, epochs: usize) -> Mlp {
     mlp
 }
 
+/// The one model-selection switch the CLI tools (`repro tune` / `repro
+/// serve`) share: the dataset's dense MLP ([`train_model`]) by default, or
+/// the conv topology ([`train_conv_model`] at [`CONV_EPOCHS`]) when the
+/// caller asked for `--model conv` on a 28×28 raster task.
+pub fn model_for(ds: &Dataset, seed: u64, conv: bool) -> Mlp {
+    if conv {
+        train_conv_model(ds, seed, CONV_EPOCHS)
+    } else {
+        train_model(ds, seed)
+    }
+}
+
 /// The conv analogue of Table 1 on the raster image tasks: train the conv
 /// net, then report best-of-sweep 8-bit accuracy per format family through
 /// the bit-exact conv EMAC datapath (Sim-native — no AOT artifact exists

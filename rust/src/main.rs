@@ -31,8 +31,10 @@ COMMANDS (one per paper artifact):
   table2         posit-hardware comparison table
   conv           conv-net Table 1 on the raster tasks   [--tasks mnist,fashion] [--scale small|full]
                  (conv(5x5,s2)->pool(2)->dense, §11)
-  tune           mixed-precision auto-tuner (§10)       [--dataset iris] [--budget min-acc=0.95|max-edp=X|max-luts=N]
+  tune           mixed-precision auto-tuner (§10, §13)  [--dataset iris] [--budget min-acc=0.95|max-edp=X|max-luts=N]
                                                         [--beam 2] [--eval-rows N] [--model mlp|conv]
+                                                        [--prune 0.05|off] [--threads N]
+                                                        (env TUNE_SMOKE_BUDGET_S=secs fails the run past a wall-clock budget)
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
@@ -227,11 +229,7 @@ fn run(args: &[String]) -> Result<()> {
             if conv && ds.num_features != 28 * 28 {
                 bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
             }
-            let mlp = if conv {
-                experiments::train_conv_model(&ds, c.seed, experiments::CONV_EPOCHS)
-            } else {
-                experiments::train_model(&ds, c.seed)
-            };
+            let mlp = experiments::model_for(&ds, c.seed, conv);
             let budget = match flags.get("budget") {
                 Some(s) => tune::Budget::parse(s)
                     .ok_or_else(|| anyhow!("unparseable budget {s} (min-acc=0.95 | max-edp=X | max-luts=N)"))?,
@@ -239,8 +237,34 @@ fn run(args: &[String]) -> Result<()> {
                 // within one point while minimizing network EDP.
                 None => tune::default_budget(&ds, &mlp, eval_rows),
             };
-            let cfg = tune::TuneConfig::new(budget).with_beam(beam).with_eval_rows(eval_rows);
+            let mut cfg = tune::TuneConfig::new(budget).with_beam(beam).with_eval_rows(eval_rows);
+            match flags.get("prune").map(String::as_str) {
+                None => {}
+                Some("off") => cfg = cfg.with_prune(None),
+                Some(frac) => {
+                    let drop: f64 = frac.parse().map_err(|_| anyhow!("unparseable --prune {frac} (fraction | off)"))?;
+                    if !(0.0..=1.0).contains(&drop) {
+                        bail!("--prune {frac} outside [0, 1]");
+                    }
+                    cfg = cfg.with_prune(Some(drop));
+                }
+            }
+            if let Some(threads) = flags.get("threads") {
+                cfg = cfg.with_threads(threads.parse()?);
+            }
+            // CI smoke budget: with TUNE_SMOKE_BUDGET_S set, the search
+            // itself (not dataset load / training) must beat the clock —
+            // the regression tripwire for the pruned+parallel pipeline.
+            let started = std::time::Instant::now();
             let report_ = tune::tune(&ds, &mlp, &cfg);
+            let tuned_in = started.elapsed();
+            eprintln!("[search completed in {:.2}s]", tuned_in.as_secs_f64());
+            if let Some(budget_s) = std::env::var("TUNE_SMOKE_BUDGET_S").ok().and_then(|v| v.parse::<f64>().ok()) {
+                let secs = tuned_in.as_secs_f64();
+                if secs > budget_s {
+                    bail!("tune search took {secs:.2}s, over the TUNE_SMOKE_BUDGET_S={budget_s}s budget");
+                }
+            }
             let name = if conv { format!("tune_conv_{dataset}.md") } else { format!("tune_{dataset}.md") };
             emit(&name, &report_.render())?;
         }
@@ -308,11 +332,7 @@ fn run(args: &[String]) -> Result<()> {
             if conv && ds.num_features != 28 * 28 {
                 bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
             }
-            let mlp = if conv {
-                experiments::train_conv_model(&ds, c.seed, experiments::CONV_EPOCHS)
-            } else {
-                experiments::train_model(&ds, c.seed)
-            };
+            let mlp = experiments::model_for(&ds, c.seed, conv);
             // One shard per requested format, all over the same trained
             // model — the deployment-time format choice as a routing key.
             // Conv models serve Sim-native (workers degrade Xla requests).

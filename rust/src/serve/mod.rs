@@ -27,7 +27,11 @@
 //!   `crate::tune::TunePlan`): its workers compile the heterogeneous
 //!   execution plan and its routing key is the assignment's `+`-joined
 //!   name (DESIGN.md §10). Mixed shards always run the bit-exact Sim
-//!   engine — the AOT artifact bakes in a uniform table shape.
+//!   engine — the AOT artifact bakes in a uniform table shape. Plans tuned
+//!   under sensitivity pruning carry their provenance (the `pruned=` line
+//!   of the plan codec, DESIGN.md §13) through deployment: the serialized
+//!   plan a shard was started from always says what the search pruned
+//!   away and at what drop budget.
 //! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy,
 //!   p50/p95/p99 latency, and overload accounting (shed / expired / live
 //!   queue depths), aggregated on shutdown.

@@ -32,9 +32,12 @@
 //! reduces the modeled EDP — the property the Pareto search leans on
 //! (guarded by `tests/prop_hw.rs`).
 
+use std::collections::HashMap;
+
 use crate::accel::{LayerKind, NetIr};
-use crate::formats::MixedSpec;
+use crate::formats::{FormatSpec, MixedSpec};
 use crate::hw;
+use crate::hw::SynthReport;
 
 /// Modeled whole-network deployment cost of one per-layer assignment.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -98,6 +101,90 @@ pub fn network_cost_ir(mixed: &MixedSpec, ir: &NetIr) -> NetworkCost {
 pub fn network_cost(mixed: &MixedSpec, dims: &[usize]) -> NetworkCost {
     assert_eq!(mixed.len() + 1, dims.len(), "dims must be [in, h1, ..., out] with one format per layer");
     network_cost_ir(mixed, &NetIr::dense(dims))
+}
+
+/// Pre-synthesized per-`(layer, format)` EMAC cost table.
+///
+/// [`network_cost_ir`] re-runs [`hw::synthesize`] for every layer of every
+/// assignment it costs; the tuner costs thousands of assignments over the
+/// same IR and a small candidate alphabet, so the distinct `(eq2_k, format)`
+/// synthesis calls number only `layers × formats`. `CostTable::new` runs
+/// them once up front; [`CostTable::network`] then walks the exact same
+/// per-layer summation loop as `network_cost_ir` over the cached reports —
+/// same floating-point operations in the same order, so the result is
+/// bit-identical (asserted by `cached_table_matches_direct_costing`).
+/// Formats outside the precomputed alphabet fall back to a direct
+/// synthesis call, never a panic.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    ir: NetIr,
+    per_layer: Vec<HashMap<FormatSpec, SynthReport>>,
+}
+
+impl CostTable {
+    /// Synthesize every `(layer, format)` pair of the alphabet up front
+    /// (flatten layers cost nothing and cache nothing). Duplicate specs in
+    /// the alphabet are synthesized once.
+    pub fn new(ir: &NetIr, specs: &[FormatSpec]) -> CostTable {
+        let per_layer = ir
+            .geoms()
+            .iter()
+            .map(|geom| {
+                let mut m = HashMap::new();
+                if !matches!(geom.kind, LayerKind::Flatten) {
+                    for &spec in specs {
+                        m.entry(spec).or_insert_with(|| hw::synthesize(spec, geom.eq2_k()));
+                    }
+                }
+                m
+            })
+            .collect();
+        CostTable { ir: ir.clone(), per_layer }
+    }
+
+    /// The IR this table was built over.
+    pub fn ir(&self) -> &NetIr {
+        &self.ir
+    }
+
+    /// [`network_cost_ir`] against this table's IR, bit-identical, with
+    /// every per-EMAC synthesis served from the cache.
+    pub fn network(&self, mixed: &MixedSpec) -> NetworkCost {
+        assert_eq!(mixed.len(), self.ir.len(), "IR and assignment must carry one format per layer");
+        let mut c = NetworkCost {
+            luts: 0.0,
+            ffs: 0.0,
+            dsps: 0.0,
+            energy_pj: 0.0,
+            delay_ns: 0.0,
+            edp_pj_ns: 0.0,
+            max_quire_bits: 0,
+        };
+        for ((geom, &spec), cache) in self.ir.geoms().iter().zip(mixed.layers()).zip(&self.per_layer) {
+            if matches!(geom.kind, LayerKind::Flatten) {
+                continue; // pure wiring: no EMACs, no cycles
+            }
+            let fan_in = geom.fan_in();
+            let banks = geom.banks();
+            let outputs = geom.out_shape.len();
+            let fresh;
+            let r = match cache.get(&spec) {
+                Some(r) => r,
+                None => {
+                    fresh = hw::synthesize(spec, geom.eq2_k());
+                    &fresh
+                }
+            };
+            c.luts += r.luts * banks as f64;
+            c.ffs += r.ffs * banks as f64;
+            c.dsps += r.dsps * banks as f64;
+            c.energy_pj += r.energy_pj * (fan_in * outputs) as f64;
+            c.delay_ns += r.critical_path_ns * (fan_in * geom.outputs_per_bank()) as f64 + r.latency_ns;
+            c.max_quire_bits = c.max_quire_bits.max(r.quire_bits);
+        }
+        c.edp_pj_ns = c.energy_pj * c.delay_ns;
+        c
+    }
 }
 
 #[cfg(test)]
@@ -211,5 +298,31 @@ mod tests {
     #[should_panic(expected = "one format per layer")]
     fn dims_and_assignment_must_agree() {
         let _ = network_cost(&uniform("posit8es1"), &[4, 3]);
+    }
+
+    #[test]
+    fn cached_table_matches_direct_costing() {
+        // The precomputed table must be bit-identical to network_cost_ir on
+        // every assignment — in-alphabet lookups and out-of-alphabet
+        // fallbacks alike, on dense and conv topologies.
+        let alphabet: Vec<FormatSpec> =
+            ["posit8es1", "posit6es1", "float8we4", "fixed7q3"].iter().map(|s| FormatSpec::parse(s).unwrap()).collect();
+        for ir in [NetIr::dense(&DIMS), conv_ir()] {
+            let table = CostTable::new(&ir, &alphabet);
+            let mut rng = crate::util::Rng::new(11);
+            for _ in 0..64 {
+                let layers: Vec<FormatSpec> = (0..ir.len())
+                    .map(|_| {
+                        if rng.chance(0.25) {
+                            FormatSpec::parse("fixed5q2").unwrap() // outside the alphabet
+                        } else {
+                            alphabet[rng.below(alphabet.len())]
+                        }
+                    })
+                    .collect();
+                let m = MixedSpec::new(layers);
+                assert_eq!(table.network(&m), network_cost_ir(&m, &ir), "{}", m.name());
+            }
+        }
     }
 }

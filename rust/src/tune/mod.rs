@@ -19,14 +19,20 @@
 //!   special case.
 //!
 //! [`tune`] enumerates uniform candidates from `FormatSpec::sweep(5..=8)`,
-//! runs a deterministic greedy/beam per-layer descent under a user budget
-//! ([`Budget`]), extracts the non-dominated frontier
+//! runs the per-layer sensitivity pre-pass ([`sensitivity::prepass`]) to
+//! build a 1%/5%-drop bitwidth table and prune each layer's candidate
+//! pool, runs a deterministic greedy/beam per-layer descent under a user
+//! budget ([`Budget`]) with each round's candidates fanned out across the
+//! shared worker pool, extracts the non-dominated frontier
 //! ([`pareto_frontier`]) from everything it evaluated, and emits a
-//! serializable [`TunePlan`] that serving shards can start from directly
-//! ([`TunePlan::shard_config`]).
+//! serializable [`TunePlan`] (carrying the pruning provenance) that
+//! serving shards can start from directly ([`TunePlan::shard_config`]).
+//! Output is bit-identical at any pool width and with pruning on or off
+//! whenever the pruned pools contain the unpruned optimum (DESIGN.md §13).
 //!
 //! Entry points: the `tune` CLI subcommand, `examples/autotune.rs`, and
-//! `benches/tune_search.rs` (search throughput + frontier size).
+//! `benches/tune_search.rs` (pruned/parallel vs serial/unpruned search
+//! throughput).
 //!
 //! [`DeepPositron::compile_mixed`]: crate::accel::DeepPositron::compile_mixed
 //! [`hw::synthesize`]: crate::hw::synthesize
@@ -34,7 +40,9 @@
 pub mod cost;
 pub mod pareto;
 pub mod search;
+pub mod sensitivity;
 
-pub use cost::{network_cost, network_cost_ir, NetworkCost};
+pub use cost::{network_cost, network_cost_ir, CostTable, NetworkCost};
 pub use pareto::{pareto_frontier, ParetoPoint};
 pub use search::{default_budget, tune, Budget, TuneConfig, TunePlan, TuneReport};
+pub use sensitivity::{prepass, LayerSensitivity, SensitivityTable};

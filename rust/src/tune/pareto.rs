@@ -125,6 +125,49 @@ mod tests {
         assert_eq!(f[0].mixed.name(), "float8we4", "name-order tie-break is deterministic");
     }
 
+    /// The retired O(n²) frontier: keep every point no input point
+    /// dominates, then apply the sweep's exact ordering and coincident
+    /// dedup rules. The reference the sort-based sweep is checked against.
+    fn quadratic_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+        let mut out: Vec<ParetoPoint> =
+            points.iter().filter(|p| points.iter().all(|q| !q.dominates(p))).cloned().collect();
+        out.sort_by(|a, b| {
+            a.cost
+                .edp_pj_ns
+                .partial_cmp(&b.cost.edp_pj_ns)
+                .expect("EDP is never NaN")
+                .then(b.accuracy.partial_cmp(&a.accuracy).expect("accuracy is never NaN"))
+                .then_with(|| a.mixed.name().cmp(&b.mixed.name()))
+        });
+        out.dedup_by(|a, b| a.accuracy == b.accuracy && a.cost.edp_pj_ns == b.cost.edp_pj_ns);
+        out
+    }
+
+    #[test]
+    fn sweep_matches_quadratic_scan_on_random_cost_clouds() {
+        // The O(n log n) sweep must agree with the O(n²) dominance scan on
+        // arbitrary clouds — including duplicated axis values and fully
+        // coincident points, which small discrete grids force constantly.
+        let specs = FormatSpec::sweep(8);
+        crate::util::prop::forall("pareto sweep == quadratic scan", |rng| {
+            let n = 1 + rng.below(40);
+            let pts: Vec<ParetoPoint> = (0..n)
+                .map(|_| {
+                    let spec = specs[rng.below(specs.len())];
+                    let mixed = MixedSpec::uniform(spec, 1 + rng.below(3));
+                    let mut cost = network_cost(&MixedSpec::uniform(spec, 2), &[4, 3, 2]);
+                    cost.edp_pj_ns = (1 + rng.below(8)) as f64;
+                    ParetoPoint { mixed, accuracy: rng.below(6) as f64 / 5.0, cost }
+                })
+                .collect();
+            let fast: Vec<(String, f64, f64)> =
+                pareto_frontier(&pts).iter().map(|p| (p.mixed.name(), p.accuracy, p.cost.edp_pj_ns)).collect();
+            let slow: Vec<(String, f64, f64)> =
+                quadratic_frontier(&pts).iter().map(|p| (p.mixed.name(), p.accuracy, p.cost.edp_pj_ns)).collect();
+            assert_eq!(fast, slow);
+        });
+    }
+
     #[test]
     fn real_sweep_frontier_contains_no_dominated_point() {
         // Cost real uniform assignments over a WDBC-shaped net; accuracy is

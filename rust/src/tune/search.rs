@@ -6,24 +6,35 @@
 //! but single-layer moves compose well because each layer's EMAC bank is
 //! independent in the cost model and quantization error is approximately
 //! layer-local. The descent therefore: (1) scores every *uniform*
-//! candidate, (2) seeds a beam with the best feasible start, (3) per
-//! round, expands every beam state by every single-layer reassignment,
-//! keeps the top `beam` feasible states, and stops when the round fails
-//! to improve the incumbent. Everything is evaluated through one memoized
-//! evaluator, every ranking tie-breaks on the assignment name, and no
-//! randomness enters anywhere — the same inputs always produce the same
-//! [`TunePlan`].
+//! candidate, (2) seeds a beam with the best feasible start, (2.5) runs
+//! the per-layer sensitivity pre-pass ([`crate::tune::sensitivity`]) from
+//! that start and prunes each layer's candidate pool to the formats above
+//! its drop floor, (3) per round, expands every beam state by every
+//! surviving single-layer reassignment, keeps the top `beam` feasible
+//! states, and stops when the round fails to improve the incumbent.
+//!
+//! The pipeline is fast AND deterministic (DESIGN.md §13): a descent
+//! round's candidates fan out across the shared [`WorkerPool`] through the
+//! thread-safe memoized [`Evaluator`] (each candidate recompiles only the
+//! ≤ 2 layers its move touched, via `DeepPositron::recompile_mixed`, and
+//! runs its batches inline so fan-outs never nest), results merge in
+//! generation order, every ranking tie-breaks on the assignment name, and
+//! no randomness enters anywhere — the same inputs produce the same
+//! [`TunePlan`] at ANY pool width, serial included.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::ops::RangeInclusive;
+use std::sync::Mutex;
 
 use crate::accel::{Datapath, DeepPositron, LayerKind, Mlp, NetIr};
 use crate::datasets::Dataset;
 use crate::formats::{FormatSpec, MixedSpec};
 use crate::quant;
 use crate::serve::ShardConfig;
-use crate::tune::cost::{network_cost_ir, NetworkCost};
+use crate::tune::cost::{network_cost_ir, CostTable, NetworkCost};
 use crate::tune::pareto::{pareto_frontier, ParetoPoint};
+use crate::tune::sensitivity::{self, SensitivityTable};
+use crate::util::pool::WorkerPool;
 
 /// The user-supplied constraint the descent optimizes under.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -96,12 +107,30 @@ pub struct TuneConfig {
     /// Cap on validation rows per evaluation (the full held-out split by
     /// default; tests shrink it).
     pub eval_rows: usize,
+    /// Sensitivity pre-pass drop budget: prune each layer's candidate pool
+    /// to widths whose best perturbation stays within this accuracy drop
+    /// (fraction). `None` disables pruning (the exhaustive search).
+    pub prune_drop: Option<f64>,
+    /// Worker-pool width for candidate fan-out: `None` shares the
+    /// process-wide [`WorkerPool::global`]; `Some(n)` pins a private
+    /// width-`n` pool (`Some(1)` forces the serial search — bit-identical
+    /// output either way).
+    pub threads: Option<usize>,
 }
 
 impl TuneConfig {
-    /// Defaults: bits 5..=8, beam 2, 16 rounds, full validation split.
+    /// Defaults: bits 5..=8, beam 2, 16 rounds, full validation split,
+    /// 5%-drop sensitivity pruning, shared global pool.
     pub fn new(budget: Budget) -> TuneConfig {
-        TuneConfig { budget, bits: 5..=8, beam: 2, max_rounds: 16, eval_rows: usize::MAX }
+        TuneConfig {
+            budget,
+            bits: 5..=8,
+            beam: 2,
+            max_rounds: 16,
+            eval_rows: usize::MAX,
+            prune_drop: Some(0.05),
+            threads: None,
+        }
     }
 
     /// Set the beam width (min 1; 1 = greedy).
@@ -119,6 +148,19 @@ impl TuneConfig {
     /// Cap the validation rows per evaluation.
     pub fn with_eval_rows(mut self, rows: usize) -> TuneConfig {
         self.eval_rows = rows.max(1);
+        self
+    }
+
+    /// Set (or, with `None`, disable) the sensitivity-pruning drop budget.
+    pub fn with_prune(mut self, drop: Option<f64>) -> TuneConfig {
+        self.prune_drop = drop;
+        self
+    }
+
+    /// Pin candidate fan-out to a private pool of the given width instead
+    /// of the shared global pool (min 1; 1 = fully serial).
+    pub fn with_threads(mut self, threads: usize) -> TuneConfig {
+        self.threads = Some(threads.max(1));
         self
     }
 }
@@ -145,6 +187,12 @@ pub struct TunePlan {
     /// Whether the plan satisfies the budget it was tuned under (false
     /// means the budget was unattainable and this is the closest point).
     pub feasible: bool,
+    /// Pruning provenance: the sensitivity pre-pass summary
+    /// ([`SensitivityTable::provenance`]) the search pruned under, `None`
+    /// for an unpruned (exhaustive) search. Rides through the text codec —
+    /// a deployed serving shard can always say what was pruned away from
+    /// the plan it runs.
+    pub pruned: Option<String>,
 }
 
 impl TunePlan {
@@ -152,10 +200,11 @@ impl TunePlan {
     /// is *not* stored — [`TunePlan::parse`] recomputes it from the
     /// assignment and the layer IR, so the cost model stays the single
     /// source of truth. The `ir=` line carries the typed topology
-    /// ([`NetIr::name`]); plans written before the IR existed omit it and
-    /// parse as dense.
+    /// ([`NetIr::name`]); the optional `pruned=` line carries the
+    /// sensitivity provenance; plans written before either existed omit
+    /// them and parse as dense / unpruned.
     pub fn to_text(&self) -> String {
-        format!(
+        let mut s = format!(
             "dataset={}\ndims={}\nir={}\nlayers={}\naccuracy={:.6}\nfeasible={}\n",
             self.dataset,
             self.dims.iter().map(usize::to_string).collect::<Vec<_>>().join(","),
@@ -163,7 +212,11 @@ impl TunePlan {
             self.assignment.name(),
             self.accuracy,
             self.feasible,
-        )
+        );
+        if let Some(p) = &self.pruned {
+            s.push_str(&format!("pruned={p}\n"));
+        }
+        s
     }
 
     /// Parse the [`TunePlan::to_text`] form; recomputes [`NetworkCost`]
@@ -202,8 +255,9 @@ impl TunePlan {
         }
         let accuracy: f64 = fields.get("accuracy")?.parse().ok()?;
         let feasible: bool = fields.get("feasible")?.parse().ok()?;
+        let pruned = fields.get("pruned").map(|p| (*p).to_string());
         let cost = network_cost_ir(&assignment, &ir);
-        Some(TunePlan { dataset, dims, ir, assignment, accuracy, cost, feasible })
+        Some(TunePlan { dataset, dims, ir, assignment, accuracy, cost, feasible, pruned })
     }
 
     /// A serving-shard config that deploys this plan: the shard's workers
@@ -233,6 +287,9 @@ pub struct TuneReport {
     /// Weight-tensor quantization MSE (paper Eq. 3) of each layer under
     /// its assigned format — the "why" column of the per-layer report.
     pub layer_mse: Vec<f64>,
+    /// The sensitivity pre-pass table the search pruned under (`None` when
+    /// pruning was disabled).
+    pub sensitivity: Option<SensitivityTable>,
 }
 
 impl TuneReport {
@@ -304,6 +361,10 @@ impl TuneReport {
                 quire,
             ));
         }
+        if let Some(table) = &self.sensitivity {
+            s.push('\n');
+            s.push_str(&table.render());
+        }
         s.push_str("\n## Plan\n\n```\n");
         s.push_str(&self.plan.to_text());
         s.push_str("```\n");
@@ -311,29 +372,106 @@ impl TuneReport {
     }
 }
 
-/// Memoizing scorer: compiles the mixed plan once per distinct assignment
-/// and evaluates accuracy on (a capped prefix of) the held-out split via
-/// the batched evaluator; logs every score for frontier extraction.
+/// Thread-safe memoizing scorer: compiles the mixed plan once per distinct
+/// assignment and evaluates accuracy on (a capped prefix of) the held-out
+/// split via the batched evaluator; logs every score for frontier
+/// extraction.
+///
+/// The cache keys on the canonical [`MixedSpec::name`], so every phase —
+/// uniform enumeration, greedy rounds, beam rounds, restarts — shares hits
+/// on identical assignments. Scoring is a pure function of the assignment
+/// (batched EMAC accuracy is bit-identical at any pool width; the cost
+/// table replays `network_cost_ir` exactly), so concurrent evaluation can
+/// never change a value, only the order values land — and
+/// [`Evaluator::score_all`] merges in submission order, keeping the log
+/// deterministic too.
 struct Evaluator<'a> {
     ds: &'a Dataset,
     mlp: &'a Mlp,
-    ir: NetIr,
     rows: usize,
-    cache: HashMap<MixedSpec, (f64, NetworkCost)>,
+    /// Pre-synthesized per-(layer, format) hardware costs.
+    costs: CostTable,
+    /// Candidate-level fan-out pool.
+    pool: &'a WorkerPool,
+    /// Width-1 pool pinning a fanned-out candidate's batches to its own
+    /// thread (fan-outs must not nest — DESIGN.md §12's sharing rule).
+    inline: WorkerPool,
+    state: Mutex<EvalState>,
+}
+
+/// The evaluator's shared mutable state (one lock, never held while
+/// compiling or evaluating).
+struct EvalState {
+    cache: HashMap<String, (f64, NetworkCost)>,
     log: Vec<ParetoPoint>,
 }
 
 impl Evaluator<'_> {
-    fn score(&mut self, mixed: &MixedSpec) -> (f64, NetworkCost) {
-        if let Some(&hit) = self.cache.get(mixed) {
+    /// Pure scoring: compile (or prefix-reuse from `base`) and evaluate.
+    /// No lock is held in here.
+    fn compute(&self, mixed: &MixedSpec, base: Option<&DeepPositron>, batch_pool: &WorkerPool) -> (f64, NetworkCost) {
+        let dp = match base {
+            Some(b) => b.recompile_mixed(self.mlp, mixed.clone()),
+            None => DeepPositron::compile_mixed(self.mlp, mixed.clone()),
+        };
+        let accuracy = dp.accuracy_on_with(self.ds, Datapath::Emac, self.rows, batch_pool);
+        (accuracy, self.costs.network(mixed))
+    }
+
+    /// Record a computed score (first write wins; scores are pure, so a
+    /// lost race inserts an identical value) and return the cached entry.
+    fn insert(&self, mixed: &MixedSpec, scored: (f64, NetworkCost)) -> (f64, NetworkCost) {
+        let mut st = self.state.lock().expect("evaluator lock");
+        let name = mixed.name();
+        if let Some(&hit) = st.cache.get(&name) {
             return hit;
         }
-        let dp = DeepPositron::compile_mixed(self.mlp, mixed.clone());
-        let accuracy = dp.accuracy_on(self.ds, Datapath::Emac, self.rows);
-        let cost = network_cost_ir(mixed, &self.ir);
-        self.cache.insert(mixed.clone(), (accuracy, cost));
-        self.log.push(ParetoPoint { mixed: mixed.clone(), accuracy, cost });
-        (accuracy, cost)
+        st.cache.insert(name, scored);
+        st.log.push(ParetoPoint { mixed: mixed.clone(), accuracy: scored.0, cost: scored.1 });
+        scored
+    }
+
+    /// Score one assignment (memoized; computes on this thread on a miss).
+    fn score(&self, mixed: &MixedSpec) -> (f64, NetworkCost) {
+        if let Some(&hit) = self.state.lock().expect("evaluator lock").cache.get(&mixed.name()) {
+            return hit;
+        }
+        let scored = self.compute(mixed, None, self.pool);
+        self.insert(mixed, scored)
+    }
+
+    /// Warm the cache for a whole batch of `(assignment, reuse base)`
+    /// pairs: distinct uncached assignments (first-occurrence order) fan
+    /// out across the pool, results merge in that same order. Callers then
+    /// read values back through [`Evaluator::score`] cache hits.
+    fn score_all(&self, batch: &[(MixedSpec, Option<&DeepPositron>)]) {
+        let todo: Vec<&(MixedSpec, Option<&DeepPositron>)> = {
+            let st = self.state.lock().expect("evaluator lock");
+            let mut seen = HashSet::new();
+            batch
+                .iter()
+                .filter(|(m, _)| {
+                    let name = m.name();
+                    !st.cache.contains_key(&name) && seen.insert(name)
+                })
+                .collect()
+        };
+        if todo.is_empty() {
+            return;
+        }
+        // Candidate-level fan-out pins each evaluation's batches inline;
+        // a serial pool (or a single candidate) keeps batch-level fan-out.
+        let batch_pool = if self.pool.threads() > 1 && todo.len() > 1 { &self.inline } else { self.pool };
+        let jobs: Vec<_> = todo.iter().map(|(m, base)| move || self.compute(m, *base, batch_pool)).collect();
+        let scored = self.pool.run_map(jobs);
+        for ((m, _), s) in todo.iter().zip(scored) {
+            self.insert(m, s);
+        }
+    }
+
+    /// Distinct assignments evaluated at full search fidelity.
+    fn evaluated(&self) -> usize {
+        self.state.lock().expect("evaluator lock").cache.len()
     }
 }
 
@@ -356,10 +494,36 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
     let nlayers = mlp.layers.len();
     let candidates: Vec<FormatSpec> = cfg.bits.clone().flat_map(FormatSpec::sweep).collect();
     assert!(!candidates.is_empty(), "empty candidate sweep");
-    let mut ev = Evaluator { ds, mlp, ir, rows: cfg.eval_rows, cache: HashMap::new(), log: Vec::new() };
+    let owned_pool;
+    let pool: &WorkerPool = match cfg.threads {
+        Some(n) => {
+            owned_pool = WorkerPool::new(n);
+            &owned_pool
+        }
+        None => WorkerPool::global(),
+    };
+    // Every format the search can touch: the sweep alphabet plus the 8-bit
+    // posit reference family (scored even when `bits` excludes 8).
+    let mut alphabet = candidates.clone();
+    for spec in FormatSpec::sweep_family(8, "posit") {
+        if !alphabet.contains(&spec) {
+            alphabet.push(spec);
+        }
+    }
+    let ev = Evaluator {
+        ds,
+        mlp,
+        rows: cfg.eval_rows,
+        costs: CostTable::new(&ir, &alphabet),
+        pool,
+        inline: WorkerPool::new(1),
+        state: Mutex::new(EvalState { cache: HashMap::new(), log: Vec::new() }),
+    };
 
     // Phase 1: score every uniform candidate (plus the 8-bit posit
-    // reference family, even when `bits` excludes 8).
+    // reference family, even when `bits` excludes 8), fanned out as one
+    // batch. Pruning never touches this phase, so a pruned and an
+    // unpruned run share the same start below.
     let mut uniforms: Vec<MixedSpec> = candidates.iter().map(|&c| MixedSpec::uniform(c, nlayers)).collect();
     for spec in FormatSpec::sweep_family(8, "posit") {
         let u = MixedSpec::uniform(spec, nlayers);
@@ -367,6 +531,8 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
             uniforms.push(u);
         }
     }
+    let uniform_batch: Vec<(MixedSpec, Option<&DeepPositron>)> = uniforms.iter().map(|u| (u.clone(), None)).collect();
+    ev.score_all(&uniform_batch);
     let reference = FormatSpec::sweep_family(8, "posit")
         .into_iter()
         .map(|spec| {
@@ -408,10 +574,28 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
             .expect("uniform candidates are non-empty")
     });
 
+    // Phase 2.5: sensitivity pre-pass from the chosen start — build the
+    // per-layer bitwidth table on a cheap screening prefix and prune each
+    // layer's candidate pool to the widths above its drop floor. The
+    // start's own formats always survive (their drop is 0 at their own
+    // width), so descent never loses its footing.
+    let sensitivity = cfg
+        .prune_drop
+        .map(|drop| sensitivity::prepass(ds, mlp, &start, cfg.bits.clone(), drop, cfg.eval_rows, pool));
+    let pools: Vec<Vec<FormatSpec>> = match &sensitivity {
+        Some(table) => table.pools(&candidates),
+        None => vec![candidates.clone(); nlayers],
+    };
+
     // Phase 3: beam descent over single-layer reassignments. Converges
     // because the incumbent only ever moves to a strictly better feasible
     // key (or from infeasible to feasible once), and the evaluator
-    // memoizes every visited assignment.
+    // memoizes every visited assignment. Per round: compile each beam
+    // state once, generate every surviving move in (state, layer,
+    // candidate) order, warm the cache for the whole round in one fan-out
+    // (each move recompiles only the ≤ 2 layers it touched), then rank —
+    // scoring is pure and ranking reads cache hits in generation order, so
+    // the round's outcome is independent of pool width.
     let mut incumbent = start.clone();
     let mut incumbent_feasible = feasible_start.is_some();
     let mut incumbent_key = {
@@ -421,19 +605,24 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
     let mut beam: Vec<MixedSpec> = vec![start];
     let mut rounds = 0usize;
     for _ in 0..cfg.max_rounds {
-        let mut next: Vec<((f64, f64), String, MixedSpec)> = Vec::new();
-        for state in &beam {
-            for li in 0..nlayers {
-                for &c in &candidates {
+        let bases: Vec<DeepPositron> = beam.iter().map(|m| DeepPositron::compile_mixed(mlp, m.clone())).collect();
+        let mut round: Vec<(MixedSpec, Option<&DeepPositron>)> = Vec::new();
+        for (state, base) in beam.iter().zip(&bases) {
+            for (li, pool_c) in pools.iter().enumerate() {
+                for &c in pool_c {
                     if state.layers()[li] == c {
                         continue;
                     }
-                    let cand = state.with_layer(li, c);
-                    let (accuracy, cost) = ev.score(&cand);
-                    if cfg.budget.feasible(accuracy, &cost) {
-                        next.push((cfg.budget.key(accuracy, &cost), cand.name(), cand));
-                    }
+                    round.push((state.with_layer(li, c), Some(base)));
                 }
+            }
+        }
+        ev.score_all(&round);
+        let mut next: Vec<((f64, f64), String, MixedSpec)> = Vec::new();
+        for (cand, _) in round {
+            let (accuracy, cost) = ev.score(&cand);
+            if cfg.budget.feasible(accuracy, &cost) {
+                next.push((cfg.budget.key(accuracy, &cost), cand.name(), cand));
             }
         }
         if next.is_empty() {
@@ -454,9 +643,9 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
 
     let (accuracy, cost) = ev.score(&incumbent);
     let feasible = cfg.budget.feasible(accuracy, &cost);
-    let ir = ev.ir.clone();
     let dims = ir.dims();
-    let plan = TunePlan { dataset: ds.name.clone(), dims, ir, assignment: incumbent, accuracy, cost, feasible };
+    let pruned = sensitivity.as_ref().map(SensitivityTable::provenance);
+    let plan = TunePlan { dataset: ds.name.clone(), dims, ir, assignment: incumbent, accuracy, cost, feasible, pruned };
     // Per-layer weight-quantization MSE under the chosen assignment (the
     // Fig. 5 metric, repurposed as the plan's explanation column; 0 for
     // weightless wiring layers, which quantize nothing).
@@ -467,8 +656,9 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
         .zip(&mlp.layers)
         .map(|(&s, l)| if l.w.is_empty() { 0.0 } else { quant::mse(s, &l.w) })
         .collect();
-    let frontier = pareto_frontier(&ev.log);
-    TuneReport { plan, frontier, reference, budget: cfg.budget, evaluated: ev.cache.len(), rounds, layer_mse }
+    let evaluated = ev.evaluated();
+    let frontier = pareto_frontier(&ev.state.lock().expect("evaluator lock").log);
+    TuneReport { plan, frontier, reference, budget: cfg.budget, evaluated, rounds, layer_mse, sensitivity }
 }
 
 /// Free-function form of [`Budget::key`] (so start selection can rank by
@@ -531,6 +721,7 @@ mod tests {
             accuracy: 0.9667,
             cost,
             feasible: true,
+            pruned: None,
         };
         let parsed = TunePlan::parse(&plan.to_text()).expect("round trip");
         assert_eq!(parsed.dataset, plan.dataset);
@@ -539,8 +730,16 @@ mod tests {
         assert_eq!(parsed.assignment, plan.assignment);
         assert!((parsed.accuracy - plan.accuracy).abs() < 1e-9);
         assert_eq!(parsed.feasible, plan.feasible);
+        assert_eq!(parsed.pruned, None);
         // Cost is recomputed, not stored: bit-equal to the cost model.
         assert_eq!(parsed.cost, plan.cost);
+        // Pruning provenance rides through the codec verbatim (the value
+        // itself may contain '='; only the FIRST '=' splits key/value).
+        let prov = "sensitivity drop<=5.0% floors=6,5,5 screen_rows=48";
+        let pruned_plan = TunePlan { pruned: Some(prov.to_string()), ..plan.clone() };
+        assert!(pruned_plan.to_text().contains(&format!("pruned={prov}\n")));
+        let parsed = TunePlan::parse(&pruned_plan.to_text()).expect("pruned round trip");
+        assert_eq!(parsed.pruned.as_deref(), Some(prov));
         // Malformed inputs are rejected, not mis-parsed.
         assert!(TunePlan::parse("dataset=iris\n").is_none());
         assert!(TunePlan::parse(&plan.to_text().replace("posit8es1", "bogus9")).is_none());
@@ -564,6 +763,7 @@ mod tests {
             accuracy: 0.91,
             cost,
             feasible: true,
+            pruned: None,
         };
         let text = plan.to_text();
         assert!(text.contains("ir=1x28x28:conv4k5x5s2+pool2s2+flatten+dense10"), "{text}");

@@ -1,0 +1,295 @@
+//! Per-layer sensitivity pre-pass: the cheap screening stage that prunes
+//! the tuner's candidate pools before descent (DESIGN.md §13).
+//!
+//! The mupod bitwidth-table methodology: perturb ONE layer at a time away
+//! from a trusted baseline assignment, measure the accuracy drop on a small
+//! screening prefix of the held-out split, and record — per layer — the
+//! minimum bit-width whose best candidate stays within a drop threshold.
+//! Layers that tolerate narrow formats (typically mid-network feature
+//! layers) get their whole narrow sweep; layers that collapse below some
+//! width (typically the input and classifier layers) have everything
+//! narrower pruned away before the expensive descent ever scores it. The
+//! screening evaluations are `layers × widths × family-configs` cheap
+//! passes, an order of magnitude fewer than what descent would spend
+//! discovering the same floors the hard way.
+//!
+//! Determinism: every screening evaluation is a pure function of
+//! `(mlp, assignment, screening rows)` — batched EMAC accuracy is
+//! bit-identical at any pool width — and the table is assembled in fixed
+//! (layer, width) order, so the pre-pass returns the same
+//! [`SensitivityTable`] whether the perturbations were evaluated serially
+//! or fanned out across the worker pool
+//! (`prepass_is_identical_at_any_pool_width`).
+
+use std::ops::RangeInclusive;
+
+use crate::accel::{Datapath, DeepPositron, Mlp};
+use crate::datasets::Dataset;
+use crate::formats::{FormatSpec, MixedSpec};
+use crate::util::pool::WorkerPool;
+
+/// Cap on screening rows: enough signal to rank single-layer perturbations
+/// (collapse-vs-tolerate is a coarse distinction), few enough that the
+/// whole pre-pass costs less than a handful of full descent evaluations.
+pub const SCREEN_ROWS: usize = 48;
+
+/// What one layer's perturbation screening measured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSensitivity {
+    /// Layer index (0-based, input first).
+    pub layer: usize,
+    /// Human label, e.g. `conv1` / `dense4`.
+    pub label: String,
+    /// Best (smallest) accuracy drop at each screened width, ascending
+    /// width order; widths past an early stop are not recorded.
+    pub best_drop: Vec<(u32, f64)>,
+    /// Minimum screened width whose best candidate drops ≤ 1 point.
+    pub bits_1pct: Option<u32>,
+    /// Minimum screened width whose best candidate drops ≤ 5 points.
+    pub bits_5pct: Option<u32>,
+    /// The pruning floor: minimum width whose best candidate stays within
+    /// the configured drop threshold (the widest screened width when none
+    /// does — pruning must never empty a pool).
+    pub floor: u32,
+}
+
+/// The per-layer bitwidth table the pre-pass emits: screening metadata plus
+/// one [`LayerSensitivity`] per layer, in layer order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensitivityTable {
+    /// The assignment the perturbations departed from (the descent start).
+    pub baseline: MixedSpec,
+    /// Baseline accuracy on the screening rows.
+    pub baseline_accuracy: f64,
+    /// Held-out rows each screening evaluation used.
+    pub screen_rows: usize,
+    /// Accuracy-drop budget (fraction, e.g. `0.05`) a width must meet to
+    /// become a layer's floor.
+    pub drop_threshold: f64,
+    /// Screening evaluations spent (baseline + every perturbation).
+    pub evals: usize,
+    /// One entry per layer, input first.
+    pub layers: Vec<LayerSensitivity>,
+}
+
+impl SensitivityTable {
+    /// Prune each layer's candidate pool to the formats at or above the
+    /// layer's floor. A pool that would come out empty (the floor sits
+    /// above every candidate's width) falls back to the full pool —
+    /// pruning narrows the search, it never strands it.
+    pub fn pools(&self, candidates: &[FormatSpec]) -> Vec<Vec<FormatSpec>> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let kept: Vec<FormatSpec> = candidates.iter().copied().filter(|c| c.n() >= l.floor).collect();
+                if kept.is_empty() {
+                    candidates.to_vec()
+                } else {
+                    kept
+                }
+            })
+            .collect()
+    }
+
+    /// One-line provenance for tuned plans (`pruned=` in the plan codec):
+    /// the drop budget, the per-layer floors, and the screening fidelity.
+    pub fn provenance(&self) -> String {
+        let floors: Vec<String> = self.layers.iter().map(|l| l.floor.to_string()).collect();
+        format!(
+            "sensitivity drop<={:.1}% floors={} screen_rows={}",
+            self.drop_threshold * 100.0,
+            floors.join(","),
+            self.screen_rows,
+        )
+    }
+
+    /// Markdown rendering of the bitwidth table (the report section the
+    /// `repro tune` CLI emits).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "## Per-layer sensitivity (baseline {}, {:.2}% on {} screening rows, {} evals)\n\n",
+            self.baseline.name(),
+            self.baseline_accuracy * 100.0,
+            self.screen_rows,
+            self.evals,
+        );
+        s.push_str("| layer | min bits (≤1% drop) | min bits (≤5% drop) | pruned floor | best drop per width |\n");
+        s.push_str("|---|---|---|---|---|\n");
+        let col = |b: Option<u32>| b.map_or_else(|| "-".to_string(), |n| n.to_string());
+        for l in &self.layers {
+            let drops: Vec<String> = l.best_drop.iter().map(|(n, d)| format!("{n}b:{:.1}%", d * 100.0)).collect();
+            s.push_str(&format!(
+                "| {}{} | {} | {} | {} | {} |\n",
+                l.label,
+                l.layer + 1,
+                col(l.bits_1pct),
+                col(l.bits_5pct),
+                l.floor,
+                drops.join(" "),
+            ));
+        }
+        s
+    }
+}
+
+/// Run the sensitivity pre-pass: screen every single-layer perturbation of
+/// `baseline` over the widths in `bits` (ascending), fanning the
+/// perturbations of each `(layer, width)` group across `pool`, and build
+/// the per-layer bitwidth table. `eval_rows` caps the screening rows
+/// (further capped at [`SCREEN_ROWS`]); `drop_threshold` is the accuracy
+/// budget a width must meet to become a layer's pruning floor.
+///
+/// A layer's screening stops early once a width's best drop reaches
+/// `min(1%, drop_threshold)` — wider formats strictly extend narrower
+/// ones' value sets here, so the thresholds above are already resolved.
+pub fn prepass(
+    ds: &Dataset,
+    mlp: &Mlp,
+    baseline: &MixedSpec,
+    bits: RangeInclusive<u32>,
+    drop_threshold: f64,
+    eval_rows: usize,
+    pool: &WorkerPool,
+) -> SensitivityTable {
+    let screen_rows = eval_rows.min(SCREEN_ROWS).min(ds.test_len()).max(1);
+    let inline = WorkerPool::new(1);
+    let base_dp = DeepPositron::compile_mixed(mlp, baseline.clone());
+    let baseline_accuracy = base_dp.accuracy_on_with(ds, Datapath::Emac, screen_rows, pool);
+    let ir = mlp.ir();
+    let mut evals = 1usize;
+    let mut layers = Vec::with_capacity(mlp.layers.len());
+    for li in 0..mlp.layers.len() {
+        let base_spec = baseline.layers()[li];
+        let mut best_drop = Vec::new();
+        let mut bits_1pct = None;
+        let mut bits_5pct = None;
+        let mut floor = None;
+        for n in bits.clone() {
+            let todo: Vec<MixedSpec> = FormatSpec::sweep(n)
+                .into_iter()
+                .filter(|&c| c != base_spec)
+                .map(|c| baseline.with_layer(li, c))
+                .collect();
+            // Candidate-level fan-out; each evaluation's batches run inline
+            // (width-1 pool) so fan-outs never nest. A serial caller's
+            // single-candidate groups keep batch-level parallelism instead.
+            let batch_pool = if pool.threads() > 1 && todo.len() > 1 { &inline } else { pool };
+            let jobs: Vec<_> = todo
+                .iter()
+                .map(|mixed| {
+                    let mixed = mixed.clone();
+                    move || {
+                        let dp = base_dp.recompile_mixed(mlp, mixed);
+                        dp.accuracy_on_with(ds, Datapath::Emac, screen_rows, batch_pool)
+                    }
+                })
+                .collect();
+            evals += jobs.len();
+            let mut best = pool.run_map(jobs).into_iter().fold(f64::NEG_INFINITY, f64::max);
+            if base_spec.n() == n {
+                // The baseline spec is itself a width-n candidate: drop 0
+                // by definition, no evaluation spent.
+                best = best.max(baseline_accuracy);
+            }
+            let drop = (baseline_accuracy - best).max(0.0);
+            best_drop.push((n, drop));
+            if bits_1pct.is_none() && drop <= 0.01 {
+                bits_1pct = Some(n);
+            }
+            if bits_5pct.is_none() && drop <= 0.05 {
+                bits_5pct = Some(n);
+            }
+            if floor.is_none() && drop <= drop_threshold {
+                floor = Some(n);
+            }
+            if drop <= drop_threshold.min(0.01) {
+                break; // every threshold resolved; wider widths only repeat it
+            }
+        }
+        layers.push(LayerSensitivity {
+            layer: li,
+            label: ir.geoms()[li].kind_label().to_string(),
+            best_drop,
+            bits_1pct,
+            bits_5pct,
+            // No screened width met the budget: floor at the widest width
+            // screened, so pruning keeps only the most capable candidates.
+            floor: floor.unwrap_or(*bits.end()),
+        });
+    }
+    SensitivityTable {
+        baseline: baseline.clone(),
+        baseline_accuracy,
+        screen_rows,
+        drop_threshold,
+        evals,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::mlp::{train, TrainConfig};
+    use crate::datasets::{self, Scale};
+    use crate::util::Rng;
+
+    fn trained_iris() -> (Mlp, Dataset) {
+        let ds = datasets::load("iris", 5, Scale::Small);
+        let (norm, means, stds) = ds.normalized();
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&[4, 10, 8, 3], &mut rng);
+        train(&mut mlp, &norm, &TrainConfig { epochs: 60, ..Default::default() });
+        crate::accel::mlp::fold_input_normalization(&mut mlp, &means, &stds);
+        (mlp, ds)
+    }
+
+    #[test]
+    fn prepass_is_identical_at_any_pool_width() {
+        let (mlp, ds) = trained_iris();
+        let baseline = MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3);
+        let serial = prepass(&ds, &mlp, &baseline, 5..=8, 0.05, usize::MAX, &WorkerPool::new(1));
+        let fanned = prepass(&ds, &mlp, &baseline, 5..=8, 0.05, usize::MAX, &WorkerPool::new(4));
+        assert_eq!(serial, fanned);
+    }
+
+    #[test]
+    fn floors_land_in_range_and_prune_monotonically() {
+        let (mlp, ds) = trained_iris();
+        let baseline = MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3);
+        let table = prepass(&ds, &mlp, &baseline, 5..=8, 0.05, usize::MAX, &WorkerPool::new(2));
+        assert_eq!(table.layers.len(), 3);
+        let candidates: Vec<FormatSpec> = (5..=8).flat_map(FormatSpec::sweep).collect();
+        let pools = table.pools(&candidates);
+        for (l, pool) in table.layers.iter().zip(&pools) {
+            assert!((5..=8).contains(&l.floor), "floor {} out of range", l.floor);
+            assert!(!pool.is_empty(), "pruning emptied layer {}", l.layer);
+            assert!(pool.iter().all(|c| candidates.contains(c)));
+            assert!(pool.iter().all(|c| c.n() >= l.floor));
+            // Thresholds nest: a width good to 1% is good to 5%.
+            if let (Some(a), Some(b)) = (l.bits_1pct, l.bits_5pct) {
+                assert!(b <= a, "5% floor {b} above 1% floor {a}");
+            }
+        }
+        // The baseline's own width always meets the drop budget (drop 0),
+        // so no floor exceeds it and the descent start stays reachable.
+        for (l, pool) in table.layers.iter().zip(&pools) {
+            assert!(l.floor <= 8);
+            assert!(pool.contains(&baseline.layers()[l.layer]));
+        }
+    }
+
+    #[test]
+    fn provenance_is_one_line_and_render_has_one_row_per_layer() {
+        let (mlp, ds) = trained_iris();
+        let baseline = MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 3);
+        let table = prepass(&ds, &mlp, &baseline, 6..=8, 0.05, 32, &WorkerPool::new(2));
+        let prov = table.provenance();
+        assert!(!prov.contains('\n'), "{prov}");
+        assert!(prov.starts_with("sensitivity drop<=5.0% floors="), "{prov}");
+        assert!(prov.ends_with(&format!("screen_rows={}", table.screen_rows)), "{prov}");
+        let rendered = table.render();
+        assert_eq!(rendered.matches("\n| dense").count(), 3, "{rendered}");
+        assert!(rendered.contains("Per-layer sensitivity"));
+    }
+}

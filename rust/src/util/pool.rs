@@ -70,6 +70,26 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Run every job and collect its return value, in submission order —
+    /// the fan-out/merge primitive the mixed-precision tuner scores a
+    /// descent round's candidates with. Scheduling never reorders results:
+    /// each job writes its own pre-allocated slot, so `run_map` at any pool
+    /// width returns exactly what a sequential `jobs.map(|j| j())` would.
+    pub fn run_map<T: Send, F: FnOnce() -> T + Send>(&self, jobs: Vec<F>) -> Vec<T> {
+        let mut out: Vec<Option<T>> = (0..jobs.len()).map(|_| None).collect();
+        let tasks: Vec<_> = jobs
+            .into_iter()
+            .zip(out.iter_mut())
+            .map(|(job, slot)| {
+                move || {
+                    *slot = Some(job());
+                }
+            })
+            .collect();
+        self.run(tasks);
+        out.into_iter().map(|slot| slot.expect("every job ran to completion")).collect()
+    }
+
     /// Run every job to completion. Jobs may borrow caller data (they only
     /// need to outlive this call); with a single job or a width-1 pool they
     /// run inline on the caller's thread. Jobs are partitioned round-free
@@ -167,5 +187,19 @@ mod tests {
     fn width_clamps_to_one() {
         assert_eq!(WorkerPool::new(0).threads(), 1);
         assert!(WorkerPool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn run_map_preserves_submission_order_at_every_width() {
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = WorkerPool::new(threads);
+            let jobs: Vec<_> = (0..23usize).map(|i| move || i * i).collect();
+            let got = pool.run_map(jobs);
+            let want: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(got, want, "width {threads}");
+            // Empty and single-job batches are fine too.
+            assert_eq!(pool.run_map(Vec::<fn() -> usize>::new()), Vec::<usize>::new());
+            assert_eq!(pool.run_map(vec![|| 7usize]), vec![7]);
+        }
     }
 }

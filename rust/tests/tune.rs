@@ -9,8 +9,14 @@
 //!   tuned assignment meets the uniform 8-bit posit accuracy within one
 //!   point at strictly lower modeled network EDP.
 //! * **Serve integration** — a shard started from a `TunePlan` compiles
-//!   the mixed plan, routes under the assignment's joined name, and
-//!   serves the same predictions the compiled plan computes.
+//!   the mixed plan, routes under the assignment's joined name, serves
+//!   the same predictions the compiled plan computes, and carries the
+//!   plan's pruning provenance through the text codec.
+//! * **Pruning/parallelism invariants (DESIGN.md §13)** — the
+//!   sensitivity-pruned plan stays inside the unpruned search's feasible
+//!   set under randomized accuracy budgets, every assigned format sits at
+//!   or above its layer's sensitivity floor, and the tuner's output is
+//!   bit-identical at fan-out widths 1, 2, and 8.
 
 use deep_positron::accel::{Datapath, DeepPositron};
 use deep_positron::coordinator::experiments::train_model;
@@ -143,6 +149,13 @@ fn serve_shard_starts_from_tune_plan() {
     let ds = datasets::load("iris", 7, Scale::Small);
     let (report, mlp) = tuned(&ds, usize::MAX);
     let plan = &report.plan;
+    // The default config prunes, so the deployed plan carries provenance —
+    // and it survives the text codec a shard would be started from.
+    let provenance = plan.pruned.as_deref().expect("default tune config prunes");
+    assert!(provenance.starts_with("sensitivity drop<="), "odd provenance line: {provenance}");
+    let parsed = tune::TunePlan::parse(&plan.to_text()).expect("plan text round-trips");
+    assert_eq!(parsed.pruned, plan.pruned, "pruning provenance lost in the plan codec");
+    assert_eq!(parsed.assignment, plan.assignment);
     let engine = ServeEngine::start(vec![plan.shard_config(&ds, mlp.clone()).with_workers(2)]).unwrap();
     // The routing key carries the assignment's joined name.
     let key = ShardKey::for_mixed("iris", &plan.assignment);
@@ -205,4 +218,84 @@ fn prop_mixedspec_names_round_trip() {
         // The name is the serve routing key: exactly one format per '+'.
         assert_eq!(name.split('+').count(), len);
     });
+}
+
+/// Satellite (PR 7): sensitivity pruning is conservative. Under randomized
+/// accuracy budgets that at least one uniform satisfies, the pruned plan
+/// stays inside the unpruned search's feasible set — it satisfies the same
+/// budget, with every layer's format drawn from the full sweep pool — and
+/// every assigned format sits at or above its layer's sensitivity floor.
+/// Each search is a full tuner run, so the case count stays small; the
+/// seeds are fixed and the tuner is deterministic.
+#[test]
+fn prop_pruned_plan_stays_inside_the_unpruned_feasible_set() {
+    use deep_positron::util::rng::Rng;
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = train_model(&ds, 7);
+    let candidates: Vec<FormatSpec> = (5..=8u32).flat_map(FormatSpec::sweep).collect();
+    // The default budget is MinAcc(best uniform posit8 − 1pt) at this
+    // fidelity; drawing floors at or below it keeps a feasible uniform in
+    // phase 1, so both searches must land on a feasible plan.
+    let Budget::MinAcc(default_floor) = tune::default_budget(&ds, &mlp, 96) else {
+        panic!("default budget is an accuracy floor")
+    };
+    let best8 = default_floor + 0.01;
+    let mut rng = Rng::new(0x7007);
+    for case in 0..3 {
+        let budget = Budget::MinAcc(best8 - rng.range(0.01, 0.25));
+        let base = TuneConfig::new(budget).with_beam(1).with_eval_rows(96);
+        let unpruned = tune::tune(&ds, &mlp, &base.clone().with_prune(None));
+        let pruned = tune::tune(&ds, &mlp, &base.with_prune(Some(0.05)));
+        assert!(unpruned.plan.feasible, "case {case}: unpruned search lost a satisfiable budget");
+        assert!(pruned.plan.feasible, "case {case}: pruning lost a budget the unpruned search satisfies");
+        // Inside the unpruned feasible set: the same budget holds (never
+        // worse than the budget on accuracy) over full-pool formats.
+        assert!(
+            budget.feasible(pruned.plan.accuracy, &pruned.plan.cost),
+            "case {case}: pruned plan does not satisfy its own budget"
+        );
+        for f in pruned.plan.assignment.layers() {
+            assert!(candidates.contains(f), "case {case}: pruned plan uses {} from outside the sweep pool", f.name());
+        }
+        // The plan respects the floors its own sensitivity table set.
+        let table = pruned.sensitivity.as_ref().expect("pruned run carries its sensitivity table");
+        assert!(unpruned.sensitivity.is_none(), "unpruned run must skip the pre-pass");
+        for (f, layer) in pruned.plan.assignment.layers().iter().zip(&table.layers) {
+            assert!(
+                f.n() >= layer.floor,
+                "case {case}: layer {} assigned {} below its {}b floor",
+                layer.layer,
+                f.name(),
+                layer.floor
+            );
+        }
+    }
+}
+
+/// Satellite (PR 7): fan-out width never changes the answer. Scoring is
+/// pure and the evaluator merges results in submission order with
+/// name-keyed dedup, so the whole report — plan text, rendered sensitivity
+/// table, frontier, eval counts — is bit-identical at widths 1, 2, and 8.
+/// (`DEEP_POSITRON_POOL` is read once per process through a `OnceLock`, so
+/// an in-process test cannot vary the env var; `TuneConfig::with_threads`
+/// pins the exact pool width the env var would.)
+#[test]
+fn tuner_output_is_bit_identical_at_any_pool_width() {
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = train_model(&ds, 7);
+    let budget = tune::default_budget(&ds, &mlp, 96);
+    let run = |threads: usize| {
+        let cfg = TuneConfig::new(budget).with_beam(2).with_eval_rows(96).with_threads(threads);
+        tune::tune(&ds, &mlp, &cfg)
+    };
+    let serial = run(1);
+    for threads in [2usize, 8] {
+        let wide = run(threads);
+        assert_eq!(wide.plan.to_text(), serial.plan.to_text(), "plan differs at width {threads}");
+        assert_eq!(wide.render(), serial.render(), "report differs at width {threads}");
+        assert_eq!(wide.evaluated, serial.evaluated, "eval count differs at width {threads}");
+        assert_eq!(wide.rounds, serial.rounds, "round count differs at width {threads}");
+        let names = |r: &TuneReport| r.frontier.iter().map(|p| p.mixed.name()).collect::<Vec<_>>();
+        assert_eq!(names(&wide), names(&serial), "frontier differs at width {threads}");
+    }
 }
