@@ -150,7 +150,7 @@ fn main() {
         let scalar_sps = nrows as f64 / mean(timer.samples());
         println!("{}", timer.report());
         println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
-        log.push(&format!("{dataset}/scalar"), scalar_sps);
+        log.push(&format!("{dataset}/scalar"), scalar_sps).expect("finite throughput measurement");
 
         let mut flat = Vec::new();
         let mut wins = Vec::new();
@@ -171,7 +171,7 @@ fn main() {
             println!("  -> {sps:.0} samples/s tiled (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
             println!("{}", timer_ew.report());
             println!("  -> {ew_sps:.0} samples/s element-wise (tiled is ×{:.2})", sps / ew_sps);
-            log.push(&format!("{dataset}/forward_batch/B={b}"), sps);
+            log.push(&format!("{dataset}/forward_batch/B={b}"), sps).expect("finite throughput measurement");
             wins.push((b, sps, ew_sps));
         }
         assert_eq!(

@@ -82,7 +82,7 @@ fn main() {
     let scalar_sps = nrows as f64 / mean(timer.samples());
     println!("{}", timer.report());
     println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
-    log.push("conv-mnist/scalar", scalar_sps);
+    log.push("conv-mnist/scalar", scalar_sps).expect("finite throughput measurement");
 
     let mut flat = Vec::new();
     let mut batched_at_32 = 0.0;
@@ -96,7 +96,7 @@ fn main() {
         let sps = batch.len() as f64 / mean(timer.samples());
         println!("{}", timer.report());
         println!("  -> {sps:.0} samples/s batched (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
-        log.push(&format!("conv-mnist/forward_batch/B={b}"), sps);
+        log.push(&format!("conv-mnist/forward_batch/B={b}"), sps).expect("finite throughput measurement");
         if b == 32 {
             batched_at_32 = sps;
         }

@@ -192,10 +192,11 @@ fn main() {
     // on a shared machine is far noisier than the pure kernel benches, and
     // this gate exists to catch collapses, not jitter.
     let mut log = BenchLog::new("serve_overload");
-    log.push("synth/closed_loop_capacity", capacity);
+    log.push("synth/closed_loop_capacity", capacity).expect("finite capacity measurement");
     log.push(
         "synth/bounded_served_per_s",
         bounded.metrics.served as f64 / (OFFERED_SECONDS + bounded.drain.as_secs_f64()),
-    );
+    )
+    .expect("finite throughput measurement");
     bench_log::record_and_gate(&log, 0.5);
 }

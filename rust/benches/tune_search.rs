@@ -66,11 +66,11 @@ fn main() {
 
     let serial_cfg = base.clone().with_threads(1).with_prune(None);
     let (serial, serial_secs) = timed_search("tune/conv-mnist serial unpruned", &ds, &mlp, &serial_cfg);
-    log.push("conv-mnist/serial-unpruned", serial.evaluated as f64 / serial_secs);
+    log.push("conv-mnist/serial-unpruned", serial.evaluated as f64 / serial_secs).expect("finite search rate");
 
     let pruned_cfg = base.with_prune(Some(0.01));
     let (pruned, pruned_secs) = timed_search("tune/conv-mnist pruned parallel", &ds, &mlp, &pruned_cfg);
-    log.push("conv-mnist/pruned-parallel", pruned.evaluated as f64 / pruned_secs);
+    log.push("conv-mnist/pruned-parallel", pruned.evaluated as f64 / pruned_secs).expect("finite search rate");
 
     let table = pruned.sensitivity.as_ref().expect("pruned run must carry its sensitivity table");
     println!("\n{}", table.render());
@@ -123,7 +123,7 @@ fn main() {
     let budget = tune::default_budget(&ds, &mlp, usize::MAX);
     let cfg = TuneConfig::new(budget).with_beam(2);
     let (report, secs) = timed_search("tune/iris pruned parallel beam=2", &ds, &mlp, &cfg);
-    log.push("iris/pruned-parallel", report.evaluated as f64 / secs);
+    log.push("iris/pruned-parallel", report.evaluated as f64 / secs).expect("finite search rate");
     println!(
         "  -> tuned {} @ {:.2}% acc, EDP {:.3e} (uniform posit8 {}: {:.2}%, EDP {:.3e})",
         report.plan.assignment.name(),

@@ -30,6 +30,13 @@
 
 use crate::util::Rng;
 
+/// Largest single dimension (and `CxHxW` element count) the text parsers
+/// accept. Far beyond any network this repo trains, but small enough that
+/// every derived quantity — `eq2_k`, `num_weights`, buffer sizes — stays
+/// comfortably inside `usize` arithmetic, so untrusted plan text can never
+/// drive geometry math into an overflow panic.
+pub const MAX_PARSED_DIM: usize = 1 << 24;
+
 /// Spatial interpretation of an activation vector.
 ///
 /// The accelerator stores every activation block as a flat, feature-major
@@ -93,12 +100,24 @@ impl Shape {
         }
     }
 
-    /// Parse the [`Shape::name`] form.
+    /// Parse the [`Shape::name`] form. Every dimension must be in
+    /// `1..=`[`MAX_PARSED_DIM`] and a `CxHxW` product must stay within the
+    /// same cap — parsed shapes feed geometry arithmetic (`eq2_k`,
+    /// `num_weights`), and an unbounded 19-digit dimension would turn a
+    /// garbage plan file into an integer-overflow panic instead of `None`.
     pub fn parse(s: &str) -> Option<Shape> {
+        fn dim(s: &str) -> Option<usize> {
+            let n: usize = s.parse().ok()?;
+            (1..=MAX_PARSED_DIM).contains(&n).then_some(n)
+        }
         let parts: Vec<&str> = s.split('x').collect();
         match parts.as_slice() {
-            [n] => Some(Shape::Flat(n.parse().ok()?)),
-            [c, h, w] => Some(Shape::Chw { c: c.parse().ok()?, h: h.parse().ok()?, w: w.parse().ok()? }),
+            [n] => Some(Shape::Flat(dim(n)?)),
+            [c, h, w] => {
+                let (c, h, w) = (dim(c)?, dim(h)?, dim(w)?);
+                let len = c.checked_mul(h)?.checked_mul(w)?;
+                (len <= MAX_PARSED_DIM).then_some(Shape::Chw { c, h, w })
+            }
             _ => None,
         }
     }
@@ -323,9 +342,25 @@ impl NetIr {
     }
 
     /// The classic dense-only chain for layer widths
-    /// `dims = [in, h1, ..., out]`.
+    /// `dims = [in, h1, ..., out]`. Panics on invalid widths (use
+    /// [`NetIr::try_dense`] for untrusted input).
     pub fn dense(dims: &[usize]) -> NetIr {
-        assert!(dims.len() >= 2, "dense IR needs [in, out] at least");
+        match NetIr::try_dense(dims) {
+            Ok(ir) => ir,
+            Err(e) => panic!("invalid dense IR: {e}"),
+        }
+    }
+
+    /// Fallible [`NetIr::dense`]: rejects chains with fewer than two widths
+    /// or any zero width instead of panicking, so parsers of untrusted text
+    /// (plan files) get a typed error path.
+    pub fn try_dense(dims: &[usize]) -> Result<NetIr, String> {
+        if dims.len() < 2 {
+            return Err(format!("dense IR needs [in, out] at least, got {} width(s)", dims.len()));
+        }
+        if let Some(pos) = dims.iter().position(|&d| d == 0) {
+            return Err(format!("dense IR width {pos} is zero"));
+        }
         let geoms = dims
             .windows(2)
             .map(|d| LayerGeom {
@@ -334,7 +369,7 @@ impl NetIr {
                 out_shape: Shape::Flat(d[1]),
             })
             .collect();
-        NetIr::new(geoms)
+        NetIr::try_new(geoms)
     }
 
     /// Validate the shape chain: non-empty, every node's inferred output
@@ -455,14 +490,20 @@ impl std::fmt::Display for NetIr {
 }
 
 /// Parse one `dense10` / `conv4k5x5s2` / `pool2s2` / `flatten` node against
-/// the current input shape.
+/// the current input shape. Output blocks above [`MAX_PARSED_DIM`] elements
+/// are rejected so a parsed chain can never grow a shape whose derived
+/// products (weight counts, buffer sizes) overflow.
 fn parse_node(node: &str, in_shape: Shape) -> Option<LayerGeom> {
+    let capped = |g: LayerGeom| (g.out_shape.len() <= MAX_PARSED_DIM).then_some(g);
     if node == "flatten" {
-        return LayerGeom::infer(LayerKind::Flatten, in_shape, 0);
+        return LayerGeom::infer(LayerKind::Flatten, in_shape, 0).and_then(capped);
     }
     if let Some(rest) = node.strip_prefix("dense") {
         let out: usize = rest.parse().ok()?;
-        return LayerGeom::infer(LayerKind::Dense, in_shape, out);
+        if out > MAX_PARSED_DIM {
+            return None;
+        }
+        return LayerGeom::infer(LayerKind::Dense, in_shape, out).and_then(capped);
     }
     if let Some(rest) = node.strip_prefix("conv") {
         // conv<out_ch>k<kh>x<kw>s<stride>
@@ -473,19 +514,23 @@ fn parse_node(node: &str, in_shape: Shape) -> Option<LayerGeom> {
             Shape::Chw { c, .. } => c,
             Shape::Flat(_) => return None,
         };
+        let out_ch: usize = out_ch.parse().ok()?;
+        if out_ch > MAX_PARSED_DIM {
+            return None;
+        }
         let kind = LayerKind::Conv2d {
             kh: kh.parse().ok()?,
             kw: kw.parse().ok()?,
             stride: stride.parse().ok()?,
             in_ch,
-            out_ch: out_ch.parse().ok()?,
+            out_ch,
         };
-        return LayerGeom::infer(kind, in_shape, 0);
+        return LayerGeom::infer(kind, in_shape, 0).and_then(capped);
     }
     if let Some(rest) = node.strip_prefix("pool") {
         let (k, stride) = rest.split_once('s')?;
         let kind = LayerKind::AvgPool { k: k.parse().ok()?, stride: stride.parse().ok()? };
-        return LayerGeom::infer(kind, in_shape, 0);
+        return LayerGeom::infer(kind, in_shape, 0).and_then(capped);
     }
     None
 }

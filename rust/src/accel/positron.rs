@@ -344,24 +344,25 @@ impl DeepPositron {
     /// The dequantized weight values per layer (what the XLA fast path
     /// consumes as its `weights` input; empty entries for weightless
     /// layers).
-    pub fn dequantized_weights(&self) -> Vec<Vec<f64>> {
+    pub fn dequantized_weights(&self) -> Vec<Vec<f64>> { // exact-lint: allow(float, XLA fast-path export, off the quire path)
         self.plan.iter().zip(&self.weights).map(|(lp, codes)| lp.quantizer.dequantize_slice(codes)).collect()
     }
 
     /// The dequantized bias values per layer (fast-path input).
+    // exact-lint: allow(float, XLA fast-path export, off the quire path)
     pub fn dequantized_biases(&self) -> Vec<Vec<f64>> {
         self.biases.iter().map(|bs| bs.iter().map(|b| b.to_f64()).collect()).collect()
     }
 
     /// Run one sample through the EMAC datapath; returns the output-layer
     /// codes (pre-argmax "logits" in format space).
-    pub fn forward_codes(&self, x: &[f64]) -> Vec<u16> {
+    pub fn forward_codes(&self, x: &[f64]) -> Vec<u16> { // exact-lint: allow(float, ingress boundary: raw sample quantized once here)
         self.forward_codes_with(x, Datapath::Emac)
     }
 
     /// Run one sample through a selected datapath — the batch-of-one case of
     /// [`DeepPositron::forward_batch`].
-    pub fn forward_codes_with(&self, x: &[f64], mode: Datapath) -> Vec<u16> {
+    pub fn forward_codes_with(&self, x: &[f64], mode: Datapath) -> Vec<u16> { // exact-lint: allow(float, ingress boundary: raw sample quantized once here)
         self.forward_batch(&[x], mode).pop().expect("one row in, one row out")
     }
 
@@ -380,7 +381,7 @@ impl DeepPositron {
     /// Convenience wrapper over [`DeepPositron::forward_batch_into`] that
     /// allocates one `Vec` per row; hot callers (serving, evaluation) use
     /// the flat-buffer entry point directly.
-    pub fn forward_batch(&self, rows: &[&[f64]], mode: Datapath) -> Vec<Vec<u16>> {
+    pub fn forward_batch(&self, rows: &[&[f64]], mode: Datapath) -> Vec<Vec<u16>> { // exact-lint: allow(float, ingress boundary: raw rows quantized once)
         let mut flat = Vec::new();
         self.forward_batch_into(rows, mode, &mut flat);
         flat.chunks(self.out_dim()).map(<[u16]>::to_vec).collect()
@@ -392,7 +393,7 @@ impl DeepPositron {
     /// allocations. Batches of at least `PAR_MIN_ROWS` fan out across the
     /// process-wide [`WorkerPool`] as independent contiguous sample chunks —
     /// results are bit-identical at any pool width.
-    pub fn forward_batch_into(&self, rows: &[&[f64]], mode: Datapath, out: &mut Vec<u16>) {
+    pub fn forward_batch_into(&self, rows: &[&[f64]], mode: Datapath, out: &mut Vec<u16>) { // exact-lint: allow(float, ingress boundary: raw rows quantized once)
         let pool = WorkerPool::global();
         if pool.threads() > 1 && rows.len() >= PAR_MIN_ROWS {
             self.forward_batch_into_with(rows, mode, pool, out);
@@ -408,7 +409,7 @@ impl DeepPositron {
     /// injection point for tests and for callers managing their own
     /// parallelism budget). Always chunks by the pool's width — a pool wider
     /// than the batch simply runs one-sample chunks.
-    pub fn forward_batch_into_with(&self, rows: &[&[f64]], mode: Datapath, pool: &WorkerPool, out: &mut Vec<u16>) {
+    pub fn forward_batch_into_with(&self, rows: &[&[f64]], mode: Datapath, pool: &WorkerPool, out: &mut Vec<u16>) { // exact-lint: allow(float, ingress boundary: raw rows quantized once)
         self.prepare_out(rows, out);
         if rows.is_empty() {
             return;
@@ -423,7 +424,7 @@ impl DeepPositron {
     }
 
     /// Validate the batch and size the flat output buffer (`b × out_dim`).
-    fn prepare_out(&self, rows: &[&[f64]], out: &mut Vec<u16>) {
+    fn prepare_out(&self, rows: &[&[f64]], out: &mut Vec<u16>) { // exact-lint: allow(float, sizing helper over the raw ingress rows)
         for row in rows {
             assert_eq!(row.len(), self.dims[0], "feature dim mismatch");
         }
@@ -433,7 +434,7 @@ impl DeepPositron {
 
     /// One contiguous sample chunk through the selected datapath (the unit
     /// of worker-pool fan-out). `out` is the chunk's sample-major region.
-    fn run_block(&self, rows: &[&[f64]], mode: Datapath, out: &mut [u16]) {
+    fn run_block(&self, rows: &[&[f64]], mode: Datapath, out: &mut [u16]) { // exact-lint: allow(float, dispatch over the raw ingress rows)
         match mode {
             Datapath::Emac => self.batch_emac(rows, None, out),
             Datapath::NarrowQuire(bits) => {
@@ -446,7 +447,7 @@ impl DeepPositron {
 
     /// Quantize input rows into a feature-major code block (`[feature][sample]`
     /// — the layout that keeps the batched kernels' sample loops contiguous).
-    fn quantize_block(&self, rows: &[&[f64]], act: &mut [u16]) {
+    fn quantize_block(&self, rows: &[&[f64]], act: &mut [u16]) { // exact-lint: allow(float, THE ingress quantization point: f64 in, codes out)
         let b = rows.len();
         for (s, row) in rows.iter().enumerate() {
             for (i, &x) in row.iter().enumerate() {
@@ -474,7 +475,7 @@ impl DeepPositron {
     /// and round once at the terminal stage, directly into the next layer's
     /// format (the §10 boundary recode; a no-op change of target for
     /// uniform networks).
-    fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>, out: &mut [u16]) {
+    fn batch_emac(&self, rows: &[&[f64]], width_limit: Option<u32>, out: &mut [u16]) { // exact-lint: allow(float, raw rows enter here; the body is integer-only)
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
         let mut act = vec![0u16; b * max_dim];
@@ -622,7 +623,7 @@ impl DeepPositron {
     /// identity for uniform networks (quantize of a representable value).
     /// Average pooling multiplies the window sum by the rounded code of
     /// `1/k²` (a conventional unit has no exact shift); flatten recodes.
-    fn batch_inexact(&self, rows: &[&[f64]], out: &mut [u16]) {
+    fn batch_inexact(&self, rows: &[&[f64]], out: &mut [u16]) { // exact-lint: allow(float, raw rows enter the width-limited ablation path)
         let b = rows.len();
         let max_dim = *self.dims.iter().max().unwrap();
         let mut act = vec![0u16; b * max_dim];
@@ -688,7 +689,7 @@ impl DeepPositron {
                     let (ih, iw) = lp.in_shape.hw();
                     let (oh, ow) = lp.out_shape.hw();
                     let c = lp.in_shape.channels();
-                    let (recip, _) = lp.quantizer.quantize_f64(1.0 / (k * k) as f64);
+                    let (recip, _) = lp.quantizer.quantize_f64(1.0 / (k * k) as f64); // exact-lint: allow(float, pool reciprocal staged as a quantized code)
                     for ch in 0..c {
                         for oy in 0..oh {
                             for ox in 0..ow {
@@ -726,6 +727,7 @@ impl DeepPositron {
     /// the last layer's output format). Returns `None` when no code decodes
     /// to a real value (an all-NaR row) — callers must not mistake an
     /// undecodable row for class 0.
+    // exact-lint: allow(float, terminal readout: codes decode to values once, after all accumulation)
     pub fn decoded_argmax(&self, codes: &[u16]) -> Option<usize> {
         let out_q = self.output_quantizer();
         let mut best: Option<(usize, f64)> = None;
@@ -745,14 +747,14 @@ impl DeepPositron {
     /// monotonicity property); decoding keeps this uniform across formats.
     /// Panics on an all-NaR output row (never produced by the datapaths,
     /// whose terminal rounds emit canonical codes only).
-    pub fn predict(&self, x: &[f64]) -> usize {
+    pub fn predict(&self, x: &[f64]) -> usize { // exact-lint: allow(float, ingress boundary: raw sample in)
         self.decoded_argmax(&self.forward_codes(x)).expect("output row decoded to no real value")
     }
 
     /// Batched predictions on the EMAC datapath — one compiled-plan walk for
     /// the whole batch through the flat-buffer fast path (the serving
     /// engine's Sim execution path).
-    pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<usize> {
+    pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<usize> { // exact-lint: allow(float, ingress boundary: raw rows in)
         let mut flat = Vec::new();
         self.forward_batch_into(rows, Datapath::Emac, &mut flat);
         flat.chunks(self.out_dim())
@@ -765,7 +767,7 @@ impl DeepPositron {
     /// ([`crate::tune`]) scores candidate assignments with. Chunks of
     /// [`EVAL_BATCH`] samples per plan walk; undecodable output rows count
     /// as wrong, never as class 0.
-    pub fn accuracy_on(&self, ds: &Dataset, mode: Datapath, rows: usize) -> f64 {
+    pub fn accuracy_on(&self, ds: &Dataset, mode: Datapath, rows: usize) -> f64 { // exact-lint: allow(float, accuracy readout, not accumulation)
         self.accuracy_loop(ds, mode, rows, None)
     }
 
@@ -775,13 +777,14 @@ impl DeepPositron {
     /// batches inline on a width-1 pool rather than nesting fan-outs).
     /// Bit-identical to `accuracy_on` at any pool width: batched EMAC
     /// results never depend on chunking (exact quire addition).
-    pub fn accuracy_on_with(&self, ds: &Dataset, mode: Datapath, rows: usize, pool: &WorkerPool) -> f64 {
+    pub fn accuracy_on_with(&self, ds: &Dataset, mode: Datapath, rows: usize, pool: &WorkerPool) -> f64 { // exact-lint: allow(float, accuracy readout, not accumulation)
         self.accuracy_loop(ds, mode, rows, Some(pool))
     }
 
     /// Shared accuracy loop: `pool` `None` routes through the global-pool
     /// heuristics of [`DeepPositron::forward_batch_into`]; `Some` pins every
     /// batch to the given pool.
+    // exact-lint: allow(float, accuracy readout over test rows — consumes datapath outputs, never feeds them)
     fn accuracy_loop(&self, ds: &Dataset, mode: Datapath, rows: usize, pool: Option<&WorkerPool>) -> f64 {
         let total = ds.test_len().min(rows.max(1));
         let mut correct = 0usize;
@@ -807,12 +810,12 @@ impl DeepPositron {
     /// Test accuracy under a selected datapath, evaluated through
     /// [`DeepPositron::forward_batch`] over the whole test split
     /// (the uncapped case of [`DeepPositron::accuracy_on`]).
-    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 {
+    pub fn accuracy_with(&self, ds: &Dataset, mode: Datapath) -> f64 { // exact-lint: allow(float, accuracy readout, not accumulation)
         self.accuracy_on(ds, mode, usize::MAX)
     }
 
     /// Test-set accuracy on the EMAC datapath (batched evaluation).
-    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+    pub fn accuracy(&self, ds: &Dataset) -> f64 { // exact-lint: allow(float, accuracy readout, not accumulation)
         self.accuracy_with(ds, Datapath::Emac)
     }
 
@@ -821,6 +824,7 @@ impl DeepPositron {
     /// conv layers, the independent oracle `tests/conv.rs` checks against).
     /// Where f64 accumulation is exact (every format here except the widest
     /// posit quires), this matches [`Self::forward_codes`] bit for bit.
+    // exact-lint: allow(float, deliberate f64 REFERENCE path — the oracle the exact datapath is checked against)
     pub fn forward_dequantized(&self, x: &[f64]) -> Vec<f64> {
         let (_, mut act) = self.quantizer.quantize_slice(x);
         for (lp, (w, b)) in self.plan.iter().zip(self.weights.iter().zip(&self.biases)) {

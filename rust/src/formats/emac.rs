@@ -44,6 +44,7 @@ static SHARED_LUT_BUILDS: AtomicUsize = AtomicUsize::new(0);
 
 /// Paper Eq. (2): accumulator width for `k` products of a format with the
 /// given max/min magnitude ratio.
+// exact-lint: allow(float, Eq. (2) sizes the quire from the format's value range — analysis of the datapath, not part of it)
 pub fn quire_width_bits(k: usize, max: f64, min: f64) -> u32 {
     let k = k.max(2);
     let range = (max / min).log2().ceil() as u32;
@@ -94,8 +95,8 @@ pub struct DecodeLut {
     lsb_exp: i32,
     /// Highest set-bit position of any canonical value (exp + mag bits).
     max_top: i32,
-    max_value: f64,
-    min_pos: f64,
+    max_value: f64, // exact-lint: allow(float, format range metadata for Eq. (2) sizing, never accumulated)
+    min_pos: f64, // exact-lint: allow(float, format range metadata for Eq. (2) sizing, never accumulated)
 }
 
 impl DecodeLut {
@@ -194,7 +195,7 @@ impl DecodeLut {
     /// Quire bits needed for dot products of length ≤ `max_k`, relative to
     /// the LSB weight (worst case `|quire| < k × (2^max_top)²` plus sign).
     pub fn quire_bits_needed(&self, max_k: usize) -> u32 {
-        (2 * self.max_top - self.lsb_exp) as u32 + (max_k.max(2) as f64).log2().ceil() as u32 + 1
+        (2 * self.max_top - self.lsb_exp) as u32 + (max_k.max(2) as f64).log2().ceil() as u32 + 1 // exact-lint: allow(float, ceil(log2 k) width analysis, not accumulation)
     }
 
     /// Panic unless dot products of length ≤ `max_k` fit the 127 usable

@@ -179,6 +179,22 @@ impl FormatSpec {
         None
     }
 
+    /// Whether [`FormatSpec::build`] (and the EMAC cost model) can actually
+    /// instantiate this spec. `parse` accepts any syntactically-valid name
+    /// (`posit64es9` parses fine), but the constructors assert their width
+    /// bounds — callers holding untrusted names (plan files, CLI args) must
+    /// check this before building, or they turn a bad input into a panic.
+    pub fn is_supported(&self) -> bool {
+        match *self {
+            // Posit::new allows n >= 2, but the EMAC model's exponent
+            // arithmetic needs the regime terminator + fraction split of
+            // n >= 3; es beyond 4 is outside the paper's sweep and the LUTs.
+            FormatSpec::Posit { n, es } => (3..=16).contains(&n) && es <= 4,
+            FormatSpec::Float { n, we } => (3..=16).contains(&n) && we >= 1 && we + 2 <= n,
+            FormatSpec::Fixed { n, q } => (2..=16).contains(&n) && q < n,
+        }
+    }
+
     /// The sweep grid the paper evaluates (§5): for a given bit-width,
     /// posit es ∈ {0,1,2}, float w_e ∈ {2..=5}, fixed Q ∈ {1..=n-2}.
     /// (es is capped at n−3 so the regime terminator + es bits fit; at

@@ -40,12 +40,18 @@
 //! CLI mode (`cargo run --release -- serve`).
 
 #![warn(missing_docs)]
+// The exactness story (integer-only quire paths, DESIGN.md §14) leaves no
+// room for `unsafe`: it is denied crate-wide and re-allowed only in the
+// audited `util::pool` module. `repro lint` enforces the same allowlist
+// token-level, so a new unsafe block trips two independent gates.
+#![deny(unsafe_code)]
 
 pub mod accel;
 pub mod coordinator;
 pub mod datasets;
 pub mod formats;
 pub mod hw;
+pub mod lint;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

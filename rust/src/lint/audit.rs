@@ -1,0 +1,425 @@
+//! Layer 2 of `repro lint`: the artifact auditor.
+//!
+//! Validates the repository's committed artifacts *at rest*, without
+//! compiling or executing a model:
+//!
+//! - **bench wiring** — every `rust/benches/*.rs` file has a `[[bench]]`
+//!   entry in Cargo.toml (with the matching `path =`), CI compiles benches
+//!   (`cargo bench --no-run`), and every bench that records a perf
+//!   trajectory (`record_and_gate`) is both run in CI (`--bench <name>`)
+//!   and has its committed `BENCH_<name>.json` baseline; a baseline with no
+//!   recording bench is an orphan;
+//! - **bench logs** — each `BENCH_*.json` parses under the strict
+//!   hand-rolled codec ([`crate::util::bench_log::BenchLog::from_json`]),
+//!   its `bench` field matches its filename, its entry names are unique,
+//!   and its gate tolerance (when recorded) is a sane fraction;
+//! - **tune plans** — `*.plan` text re-parses field by field: required
+//!   keys, dims/IR agreement via real shape inference
+//!   ([`crate::accel::NetIr::parse`]), every [`crate::formats::MixedSpec`]
+//!   layer name, accuracy in `[0, 1]`, pruning provenance well-formedness,
+//!   and the Eq. (2) quire width of every weighted layer recomputed from
+//!   the `ir=` line — a plan whose quire cannot fit the `i128` path would
+//!   only explode at serve-compile time without this check.
+
+use std::path::Path;
+
+use super::{Finding, LintRule};
+use crate::accel::NetIr;
+use crate::formats::emac::DecodeLut;
+use crate::formats::{FormatSpec, MixedSpec};
+use crate::tune::TunePlan;
+use crate::util::bench_log::BenchLog;
+
+/// Usable `i128` quire bits — the bound `assert_quire_fits` enforces when a
+/// plan is compiled; the auditor applies the same bound statically.
+const QUIRE_BITS_LIMIT: u32 = 126;
+
+/// Audit every bench source under `rust/benches/` against Cargo.toml, the
+/// CI workflow, and the committed baselines, then sweep `BENCH_*.json` for
+/// orphans.
+pub fn audit_bench_wiring(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let cargo = read_or_finding(root, "Cargo.toml", &mut findings).unwrap_or_default();
+    let ci_rel = ".github/workflows/ci.yml";
+    let ci = read_or_finding(root, ci_rel, &mut findings).unwrap_or_default();
+    if !ci.is_empty() && !ci.contains("cargo bench --no-run") {
+        let msg = "CI never compiles the benches (`cargo bench --no-run` missing) — perf gates can rot".to_string();
+        findings.push(Finding::new(ci_rel, 1, LintRule::BenchUnwired, msg));
+    }
+
+    let bench_dir = root.join("rust/benches");
+    let mut bench_names = Vec::new();
+    for entry in sorted_dir(&bench_dir) {
+        let Some(name) = entry.strip_suffix(".rs") else { continue };
+        bench_names.push(name.to_string());
+        let rel = format!("rust/benches/{entry}");
+        match std::fs::read_to_string(bench_dir.join(&entry)) {
+            Ok(src) => findings.extend(audit_bench_source(root, &rel, name, &src, &cargo, &ci)),
+            Err(e) => findings.push(Finding::new(&rel, 1, LintRule::BenchUnwired, format!("unreadable: {e}"))),
+        }
+    }
+
+    for entry in sorted_dir(root) {
+        let Some(name) = entry.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".json")) else { continue };
+        if !bench_records(root, name) {
+            let msg = format!("no bench under rust/benches/ records `{name}` — stale baseline, delete or re-wire it");
+            findings.push(Finding::new(&entry, 1, LintRule::OrphanBenchBaseline, msg));
+        }
+    }
+    findings
+}
+
+/// Audit one bench source file (named `bench_name`, displayed as `rel`)
+/// against the given Cargo.toml and CI workflow texts.
+pub fn audit_bench_source(
+    root: &Path,
+    rel: &str,
+    bench_name: &str,
+    src: &str,
+    cargo: &str,
+    ci: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if !cargo_bench_names(cargo).iter().any(|n| n == bench_name) {
+        let msg = format!("no `[[bench]]` entry named \"{bench_name}\" in Cargo.toml — the bench never builds");
+        findings.push(Finding::new(rel, 1, LintRule::BenchUnwired, msg));
+    }
+    if src.contains("record_and_gate") {
+        if !ci.contains(&format!("--bench {bench_name}")) {
+            let msg = format!("records a perf trajectory but CI never runs `cargo bench --bench {bench_name}`");
+            findings.push(Finding::new(rel, 1, LintRule::BenchUnwired, msg));
+        }
+        if !root.join(format!("BENCH_{bench_name}.json")).is_file() {
+            let msg =
+                format!("records a perf trajectory but BENCH_{bench_name}.json is not committed — gate is unarmed");
+            findings.push(Finding::new(rel, 1, LintRule::BenchUnwired, msg));
+        }
+    }
+    findings
+}
+
+/// Whether a bench source named `name` exists under `rust/benches/` and
+/// records a perf trajectory (calls `record_and_gate`).
+pub fn bench_records(root: &Path, name: &str) -> bool {
+    std::fs::read_to_string(root.join(format!("rust/benches/{name}.rs")))
+        .map(|src| src.contains("record_and_gate"))
+        .unwrap_or(false)
+}
+
+/// The `name = "..."` values of every `[[bench]]` section in a Cargo.toml
+/// text (a line-oriented scan — the manifest is ours and machine-written).
+fn cargo_bench_names(cargo: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    let mut in_bench = false;
+    for line in cargo.lines() {
+        let line = line.trim();
+        if line.starts_with('[') {
+            in_bench = line == "[[bench]]";
+            continue;
+        }
+        if in_bench {
+            if let Some(rest) = line.strip_prefix("name = \"") {
+                if let Some(name) = rest.strip_suffix('"') {
+                    names.push(name.to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Audit one `BENCH_*.json` text. `rel` is the display path; `filename` is
+/// the basename the `bench` field must agree with.
+pub fn audit_bench_json(rel: &str, filename: &str, text: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let log = match BenchLog::from_json(text) {
+        Ok(log) => log,
+        Err(e) => {
+            findings.push(Finding::new(rel, 1, LintRule::BenchLogInvalid, e.to_string()));
+            return findings;
+        }
+    };
+    if let Some(name) = filename.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".json")) {
+        if log.bench != name {
+            let msg = format!(
+                "\"bench\": {:?} disagrees with filename ({name}) — the gate would load a different file",
+                log.bench
+            );
+            findings.push(Finding::new(rel, 1, LintRule::BenchLogInvalid, msg));
+        }
+    }
+    for (i, e) in log.entries.iter().enumerate() {
+        if log.entries[..i].iter().any(|p| p.name == e.name) {
+            let msg = format!("duplicate entry name {:?} — the comparator gates only the first", e.name);
+            findings.push(Finding::new(rel, 1, LintRule::BenchLogInvalid, msg));
+        }
+    }
+    findings
+}
+
+/// Audit one tune-plan text, field by field, re-deriving every invariant
+/// the serve path will rely on. Granular on purpose: `TunePlan::parse`
+/// answers yes/no, the auditor says *which line* is wrong and why.
+pub fn audit_plan(rel: &str, text: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut fields: Vec<(usize, &str, &str)> = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match line.split_once('=') {
+            Some((k, v)) => {
+                if fields.iter().any(|(_, key, _)| *key == k) {
+                    findings.push(Finding::new(rel, idx + 1, LintRule::PlanInvalid, format!("duplicate key `{k}`")));
+                }
+                fields.push((idx + 1, k, v));
+            }
+            None => {
+                let msg = format!("not a `key=value` line: {line:?}");
+                findings.push(Finding::new(rel, idx + 1, LintRule::PlanInvalid, msg));
+            }
+        }
+    }
+    let field = |key: &str| fields.iter().find(|(_, k, _)| *k == key).map(|&(ln, _, v)| (ln, v));
+    for key in ["dataset", "dims", "layers", "accuracy", "feasible"] {
+        if field(key).is_none() {
+            findings.push(Finding::new(rel, 1, LintRule::PlanInvalid, format!("missing required key `{key}`")));
+        }
+    }
+
+    let dims: Option<Vec<usize>> = field("dims").and_then(|(ln, v)| {
+        let parsed: Option<Vec<usize>> = v.split(',').map(|d| d.parse().ok()).collect();
+        match parsed {
+            Some(d) if d.len() >= 2 && d.iter().all(|&w| w >= 1) => Some(d),
+            Some(_) => {
+                let msg = "dims needs at least [in, out], all >= 1".to_string();
+                findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+                None
+            }
+            None => {
+                findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, format!("unparseable dims {v:?}")));
+                None
+            }
+        }
+    });
+
+    // Re-run shape inference over the declared topology (Layer 2's core:
+    // the IR line is re-derived, not trusted).
+    let ir: Option<NetIr> = match field("ir") {
+        Some((ln, v)) => match NetIr::parse(v) {
+            Some(ir) => Some(ir),
+            None => {
+                let msg = format!("ir {v:?} fails shape inference (NetIr::parse)");
+                findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+                None
+            }
+        },
+        None => dims.as_ref().and_then(|d| NetIr::try_dense(d).ok()),
+    };
+    if let (Some((ln, _)), Some(ir), Some(dims)) = (field("ir"), ir.as_ref(), dims.as_ref()) {
+        if &ir.dims() != dims {
+            let msg = format!("ir flattens to dims {:?} but the dims line says {:?}", ir.dims(), dims);
+            findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+        }
+    }
+
+    let assignment: Option<MixedSpec> = field("layers").and_then(|(ln, v)| {
+        for name in v.split('+') {
+            if FormatSpec::parse(name).is_none_or(|s| !s.is_supported()) {
+                let msg = format!("unparseable or unsupported format name {name:?} in layers");
+                findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+                return None;
+            }
+        }
+        MixedSpec::parse(v)
+    });
+    if let (Some((ln, _)), Some(m), Some(ir)) = (field("layers"), assignment.as_ref(), ir.as_ref()) {
+        if m.len() != ir.len() {
+            let msg = format!("{} format assignments for {} IR layers", m.len(), ir.len());
+            findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+        }
+    }
+
+    if let Some((ln, v)) = field("accuracy") {
+        match v.parse::<f64>() {
+            Ok(a) if (0.0..=1.0).contains(&a) => {}
+            _ => {
+                let msg = format!("accuracy {v:?} is not a fraction in [0, 1]");
+                findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, msg));
+            }
+        }
+    }
+    if let Some((ln, v)) = field("feasible") {
+        if v.parse::<bool>().is_err() {
+            findings.push(Finding::new(rel, ln, LintRule::PlanInvalid, format!("feasible {v:?} is not a bool")));
+        }
+    }
+    if let Some((ln, v)) = field("pruned") {
+        if let Err(why) = check_provenance(v) {
+            findings.push(Finding::new(rel, ln, LintRule::PlanBadProvenance, why));
+        }
+    }
+
+    // Eq. (2) recomputation: per weighted layer, the assigned format's quire
+    // must absorb the layer's accumulation length within the i128 path.
+    if let (Some(ir), Some(m)) = (ir.as_ref(), assignment.as_ref()) {
+        if m.len() == ir.len() {
+            let ln = field("layers").map(|(ln, _)| ln).unwrap_or(1);
+            for (li, (geom, &spec)) in ir.geoms().iter().zip(m.layers()).enumerate() {
+                let k = geom.eq2_k();
+                if k < 2 {
+                    continue; // weightless wiring (flatten) accumulates nothing
+                }
+                let need = DecodeLut::shared(spec).quire_bits_needed(k);
+                if need > QUIRE_BITS_LIMIT {
+                    let msg = format!(
+                        "layer {li} ({}) under {}: Eq. (2) quire needs {need} bits for k={k} (> {QUIRE_BITS_LIMIT}) — compile would abort",
+                        geom.node_name(),
+                        spec.name(),
+                    );
+                    findings.push(Finding::new(rel, ln, LintRule::PlanQuireOverflow, msg));
+                }
+            }
+        }
+    }
+
+    // Cross-check: a plan the auditor passes must also pass the production
+    // parser (and vice versa — an unaudited rejection reason is a lint gap).
+    if findings.is_empty() && TunePlan::parse(text).is_none() {
+        let msg = "TunePlan::parse rejects this plan for a reason the auditor does not model".to_string();
+        findings.push(Finding::new(rel, 1, LintRule::PlanInvalid, msg));
+    }
+    findings
+}
+
+/// Validate a `pruned=` provenance line against the grammar
+/// [`crate::tune::SensitivityTable::provenance`] emits:
+/// `sensitivity drop<=<float>% floors=<u32,...> screen_rows=<int>`.
+fn check_provenance(v: &str) -> Result<(), String> {
+    let rest = v
+        .strip_prefix("sensitivity drop<=")
+        .ok_or_else(|| format!("provenance must start with `sensitivity drop<=`, got {v:?}"))?;
+    let (drop, rest) = rest
+        .split_once("% floors=")
+        .ok_or_else(|| "provenance is missing the `% floors=` section".to_string())?;
+    let d: f64 = drop.parse().map_err(|_| format!("drop budget {drop:?} is not a number"))?;
+    if !d.is_finite() || d < 0.0 {
+        return Err(format!("drop budget {d} must be a finite non-negative percentage"));
+    }
+    let (floors, rows) = rest
+        .split_once(" screen_rows=")
+        .ok_or_else(|| "provenance is missing the ` screen_rows=` section".to_string())?;
+    if floors.is_empty() || floors.split(',').any(|f| f.parse::<u32>().is_err()) {
+        return Err(format!("floors {floors:?} is not a comma-joined list of bit-widths"));
+    }
+    if rows.parse::<usize>().is_err() {
+        return Err(format!("screen_rows {rows:?} is not an integer"));
+    }
+    Ok(())
+}
+
+/// Read `rel` under `root`, pushing an [`LintRule::BenchUnwired`] finding
+/// when the file that anchors bench wiring is missing entirely.
+fn read_or_finding(root: &Path, rel: &str, findings: &mut Vec<Finding>) -> Option<String> {
+    match std::fs::read_to_string(root.join(rel)) {
+        Ok(text) => Some(text),
+        Err(e) => {
+            findings.push(Finding::new(rel, 1, LintRule::BenchUnwired, format!("unreadable: {e}")));
+            None
+        }
+    }
+}
+
+/// Sorted file names (not paths) of a directory; empty when unreadable.
+fn sorted_dir(dir: &Path) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .map(|rd| rd.filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned())).collect())
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD_PLAN: &str = "dataset=iris\ndims=4,10,3\nir=4:dense10+dense3\nlayers=posit8es1+posit7es1\naccuracy=0.95\nfeasible=true\npruned=sensitivity drop<=5.0% floors=6,5 screen_rows=32\n";
+
+    #[test]
+    fn a_good_plan_is_clean() {
+        let fs = audit_plan("p.plan", GOOD_PLAN);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn plan_findings_are_granular_and_line_anchored() {
+        let bad = GOOD_PLAN.replace("accuracy=0.95", "accuracy=1.7");
+        let fs = audit_plan("p.plan", &bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::PlanInvalid);
+        assert_eq!(fs[0].line, 5);
+
+        let bad = GOOD_PLAN.replace("ir=4:dense10+dense3", "ir=4:dense10+conv3k2x2s1");
+        let fs = audit_plan("p.plan", &bad);
+        assert!(fs.iter().any(|f| f.rule == LintRule::PlanInvalid && f.line == 3), "{fs:?}");
+
+        let bad = GOOD_PLAN.replace("floors=6,5", "floors=six");
+        let fs = audit_plan("p.plan", &bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::PlanBadProvenance);
+        assert_eq!(fs[0].line, 7);
+    }
+
+    #[test]
+    fn quire_overflow_is_recomputed_from_the_ir_line() {
+        let plan =
+            "dataset=synth\ndims=100000,10\nir=100000:dense10\nlayers=posit16es1\naccuracy=0.9\nfeasible=true\n";
+        let fs = audit_plan("p.plan", plan);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::PlanQuireOverflow);
+        assert!(fs[0].message.contains("posit16es1"), "{}", fs[0].message);
+        // The same topology under a narrow format fits comfortably.
+        let ok = plan.replace("posit16es1", "posit8es1");
+        assert!(audit_plan("p.plan", &ok).is_empty());
+    }
+
+    #[test]
+    fn bench_json_audit_catches_mismatch_and_duplicates() {
+        let mut log = BenchLog::new("ghost");
+        log.push("a", 1.0).unwrap();
+        let fs = audit_bench_json("BENCH_real.json", "BENCH_real.json", &log.to_json());
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("disagrees with filename"), "{}", fs[0].message);
+
+        let mut dup = BenchLog::new("real");
+        dup.push("a", 1.0).unwrap();
+        dup.push("a", 2.0).unwrap();
+        let fs = audit_bench_json("BENCH_real.json", "BENCH_real.json", &dup.to_json());
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].message.contains("duplicate entry"), "{}", fs[0].message);
+
+        let fs = audit_bench_json("BENCH_real.json", "BENCH_real.json", "{not json");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, LintRule::BenchLogInvalid);
+    }
+
+    #[test]
+    fn cargo_bench_names_reads_only_bench_sections() {
+        let cargo = "[package]\nname = \"x\"\n\n[[test]]\nname = \"serve\"\n\n[[bench]]\nname = \"batch\"\npath = \"rust/benches/batch.rs\"\n";
+        assert_eq!(cargo_bench_names(cargo), vec!["batch".to_string()]);
+    }
+
+    #[test]
+    fn provenance_grammar_round_trips_the_emitter() {
+        assert!(check_provenance("sensitivity drop<=2.5% floors=8,6,5 screen_rows=128").is_ok());
+        for bad in [
+            "sensitivity drop<=x% floors=6 screen_rows=1",
+            "drop<=1.0% floors=6 screen_rows=1",
+            "sensitivity drop<=1.0% floors= screen_rows=1",
+            "sensitivity drop<=1.0% floors=6",
+        ] {
+            assert!(check_provenance(bad).is_err(), "{bad}");
+        }
+    }
+}

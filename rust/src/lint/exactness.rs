@@ -1,0 +1,306 @@
+//! Layer 1 of `repro lint`: the token-level exactness scan.
+//!
+//! Files are classified into zones by [`super::classify`]: the quire
+//! accumulation paths (`formats::emac`, `accel::positron`) ban float
+//! arithmetic, float literals and `as f64`/`to_f64` casts; the serve
+//! request path bans `panic!`/`unwrap`/`expect`; `unsafe` is banned
+//! everywhere outside the allowlist (`util::pool`). Declared boundaries are
+//! annotated in source:
+//!
+//! ```text
+//! // exact-lint: allow(float, terminal readout rounds once by design)
+//! ```
+//!
+//! A *trailing* annotation (code on the same line) covers that line only. A
+//! *standalone* annotation line at brace depth `D` covers the following
+//! code lines until the first covered line whose end depth returns to `<=
+//! D` — i.e. the next item or block. The reason is mandatory; an
+//! annotation without one is itself a finding. `#[cfg(test)] mod` blocks
+//! are skipped: tests may use floats freely to state expectations.
+
+use super::lexer::{self, CodeLine};
+use super::{Finding, LintRule, Zone};
+
+/// Which ban an `exact-lint: allow(...)` annotation lifts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllowKind {
+    /// Float types, literals and conversions in an exact zone.
+    Float,
+    /// An `unsafe` block or fn outside the allowlist.
+    Unsafe,
+    /// `panic!`/`unwrap`/`expect` on the serve request path.
+    Panic,
+}
+
+/// A standalone annotation waiting for (or covering) a code block.
+struct BlockAllow {
+    kind: AllowKind,
+    depth: i32,
+    armed: bool,
+}
+
+/// Scan one file's source under its zone classification.
+pub fn scan_file(rel: &str, src: &str, zone: Zone) -> Vec<Finding> {
+    let lines = lexer::scan(src);
+    let mut findings = Vec::new();
+    let mut pending_test_attr = false;
+    let mut test_skip: Option<i32> = None;
+    let mut block_allows: Vec<BlockAllow> = Vec::new();
+
+    for cl in &lines {
+        let has_code = cl.has_code();
+        let mut line_allows: Vec<AllowKind> = Vec::new();
+
+        if let Some(comment) = &cl.comment {
+            match parse_allow(comment) {
+                None => {}
+                Some(Err(msg)) => {
+                    findings.push(Finding::new(rel, cl.line, LintRule::BadAnnotation, msg));
+                }
+                Some(Ok(kind)) => {
+                    if has_code {
+                        line_allows.push(kind);
+                    } else {
+                        block_allows.push(BlockAllow { kind, depth: cl.depth_start, armed: false });
+                    }
+                }
+            }
+        }
+
+        // `#[cfg(test)] mod …` blocks are exempt from every token rule.
+        if let Some(d) = test_skip {
+            if has_code && cl.depth_end <= d {
+                test_skip = None;
+            }
+            continue;
+        }
+        if has_code {
+            let trimmed = cl.code.trim();
+            if trimmed.contains("#[cfg(test)]") {
+                pending_test_attr = true;
+            }
+            if pending_test_attr && lexer::has_word(&cl.code, "mod") {
+                pending_test_attr = false;
+                if cl.depth_end > cl.depth_start {
+                    test_skip = Some(cl.depth_start);
+                }
+                continue;
+            }
+            if pending_test_attr && !trimmed.starts_with('#') && !trimmed.contains("#[cfg(test)]") {
+                pending_test_attr = false;
+            }
+        }
+
+        // Arm standalone annotations on the first code line they cover.
+        if has_code {
+            for allow in &mut block_allows {
+                allow.armed = true;
+            }
+        }
+        let allowed = |kind: AllowKind| {
+            line_allows.contains(&kind) || block_allows.iter().any(|a| a.armed && a.kind == kind)
+        };
+
+        if has_code {
+            if zone.exact && !allowed(AllowKind::Float) {
+                if let Some((col, what)) = float_token(&cl.code) {
+                    let msg = format!("{what} in exact zone (col {}) — quire paths are integer-only", col + 1);
+                    findings.push(Finding::new(rel, cl.line, LintRule::FloatInExactZone, msg));
+                }
+            }
+            if !zone.unsafe_ok && !allowed(AllowKind::Unsafe) && lexer::has_word(&cl.code, "unsafe") {
+                let msg = "`unsafe` outside the allowlist (util::pool is the only allowlisted module)".to_string();
+                findings.push(Finding::new(rel, cl.line, LintRule::UnsafeOutsideAllowlist, msg));
+            }
+            if zone.serve && !allowed(AllowKind::Panic) {
+                if let Some(what) = panic_token(&cl.code) {
+                    let msg = format!("{what} on the serve request path — shed load, never abort the worker");
+                    findings.push(Finding::new(rel, cl.line, LintRule::PanicOnServePath, msg));
+                }
+            }
+        }
+
+        // A covered code line that closes back to the annotation's depth
+        // ends that annotation's coverage (it covers itself first).
+        if has_code {
+            block_allows.retain(|a| !(a.armed && cl.depth_end <= a.depth));
+        }
+    }
+    findings
+}
+
+/// Parse an `exact-lint:` annotation out of a line comment. Returns `None`
+/// when the comment is not an annotation at all, `Some(Err)` when it is one
+/// but malformed (unknown rule, missing reason, bad syntax). Only comments
+/// that *begin* with `exact-lint:` count — prose that merely mentions the
+/// grammar (docs, examples) is not an annotation.
+pub fn parse_allow(comment: &str) -> Option<Result<AllowKind, String>> {
+    let rest = comment.strip_prefix("exact-lint:")?.trim();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(Err(format!("expected `allow(<rule>, <reason>)` after `exact-lint:`, got `{rest}`")));
+    };
+    let Some(body) = body.strip_suffix(')') else {
+        return Some(Err("annotation is missing its closing `)`".to_string()));
+    };
+    let (rule, reason) = match body.split_once(',') {
+        Some((r, reason)) => (r.trim(), reason.trim()),
+        None => (body.trim(), ""),
+    };
+    let kind = match rule {
+        "float" => AllowKind::Float,
+        "unsafe" => AllowKind::Unsafe,
+        "panic" => AllowKind::Panic,
+        other => {
+            return Some(Err(format!("unknown exact-lint rule `{other}` (expected float, unsafe or panic)")));
+        }
+    };
+    if reason.is_empty() {
+        return Some(Err(format!("exact-lint allow({rule}) has no reason — boundaries must say why")));
+    }
+    Some(Ok(kind))
+}
+
+/// First float token on a stripped code line: a float-typed word, a
+/// float-returning conversion, or a float literal.
+fn float_token(code: &str) -> Option<(usize, &'static str)> {
+    let words: [(&str, &'static str); 4] = [
+        ("f64", "`f64`"),
+        ("f32", "`f32`"),
+        ("to_f64", "`to_f64` conversion"),
+        ("from_f64", "`from_f64` conversion"),
+    ];
+    let mut best: Option<(usize, &'static str)> = None;
+    for (w, label) in words {
+        if let Some(col) = lexer::word_at(code, w) {
+            if best.is_none_or(|(b, _)| col < b) {
+                best = Some((col, label));
+            }
+        }
+    }
+    if let Some(col) = lexer::float_literal_at(code) {
+        if best.is_none_or(|(b, _)| col < b) {
+            best = Some((col, "float literal"));
+        }
+    }
+    best
+}
+
+/// First panicking token on a stripped code line.
+fn panic_token(code: &str) -> Option<&'static str> {
+    for (mac, label) in [
+        ("panic", "`panic!`"),
+        ("unreachable", "`unreachable!`"),
+        ("todo", "`todo!`"),
+        ("unimplemented", "`unimplemented!`"),
+    ] {
+        if let Some(col) = lexer::word_at(code, mac) {
+            if code[col + mac.len()..].starts_with('!') {
+                return Some(label);
+            }
+        }
+    }
+    for (m, label) in [("unwrap", "`.unwrap()`"), ("expect", "`.expect()`")] {
+        if let Some(col) = lexer::word_at(code, m) {
+            if col > 0 && code.as_bytes()[col - 1] == b'.' {
+                return Some(label);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXACT: Zone = Zone { exact: true, serve: false, unsafe_ok: false };
+    const SERVE: Zone = Zone { exact: false, serve: true, unsafe_ok: false };
+    const PLAIN: Zone = Zone { exact: false, serve: false, unsafe_ok: false };
+
+    fn rules(findings: &[Finding]) -> Vec<LintRule> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn float_cast_in_exact_zone_is_flagged() {
+        let src = "fn f(k: usize) -> i128 {\n    let w = k as f64;\n    w as i128\n}\n";
+        let fs = scan_file("z.rs", src, EXACT);
+        assert_eq!(rules(&fs), vec![LintRule::FloatInExactZone]);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn trailing_allow_covers_only_its_line() {
+        let src = "fn f(x: f64) -> u16 { // exact-lint: allow(float, boundary signature)\n    let y = 1.5;\n    0\n}\n";
+        let fs = scan_file("z.rs", src, EXACT);
+        assert_eq!(rules(&fs), vec![LintRule::FloatInExactZone]);
+        assert_eq!(fs[0].line, 2, "body line is not covered by the trailing allow");
+    }
+
+    #[test]
+    fn standalone_allow_covers_the_following_block() {
+        let src = "// exact-lint: allow(float, dequantized readout is float by contract)\nfn readout(q: i128) -> f64 {\n    q as f64 * 0.5\n}\nfn next() -> f64 { 0.0 }\n";
+        let fs = scan_file("z.rs", src, EXACT);
+        assert_eq!(rules(&fs), vec![LintRule::FloatInExactZone]);
+        assert_eq!(fs[0].line, 5, "coverage ends with the annotated block");
+    }
+
+    #[test]
+    fn blank_and_comment_lines_do_not_end_block_coverage() {
+        let src = "// exact-lint: allow(float, readout)\n\n// explains the fn\nfn readout(q: i128) -> f64 {\n    q as f64\n}\n";
+        let fs = scan_file("z.rs", src, EXACT);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn annotation_without_reason_is_a_finding() {
+        let src = "// exact-lint: allow(float)\nfn f() {}\n";
+        let fs = scan_file("z.rs", src, PLAIN);
+        assert_eq!(rules(&fs), vec![LintRule::BadAnnotation]);
+    }
+
+    #[test]
+    fn annotation_with_unknown_rule_is_a_finding() {
+        let src = "let x = 0; // exact-lint: allow(everything, because)\n";
+        let fs = scan_file("z.rs", src, PLAIN);
+        assert_eq!(rules(&fs), vec![LintRule::BadAnnotation]);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let src = "fn f() -> u32 { 1 }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let x = 1.5_f64;\n        assert!(x.is_finite());\n    }\n}\n";
+        assert!(scan_file("z.rs", src, EXACT).is_empty());
+    }
+
+    #[test]
+    fn code_after_a_test_module_is_scanned_again() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let x = 1.5; }\n}\nfn after() { let y = 2.5; }\n";
+        let fs = scan_file("z.rs", src, EXACT);
+        assert_eq!(rules(&fs), vec![LintRule::FloatInExactZone]);
+        assert_eq!(fs[0].line, 5);
+    }
+
+    #[test]
+    fn unsafe_is_flagged_outside_the_allowlist() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let fs = scan_file("z.rs", src, PLAIN);
+        assert_eq!(rules(&fs), vec![LintRule::UnsafeOutsideAllowlist]);
+        let ok = Zone { unsafe_ok: true, ..PLAIN };
+        assert!(scan_file("z.rs", src, ok).is_empty());
+    }
+
+    #[test]
+    fn serve_path_panics_are_flagged_and_allowable() {
+        let src = "fn f(m: &Mutex<u32>) {\n    *m.lock().unwrap() += 1;\n    let _ = m.lock().unwrap(); // exact-lint: allow(panic, poisoned lock means a worker already died)\n}\n";
+        let fs = scan_file("z.rs", src, SERVE);
+        assert_eq!(rules(&fs), vec![LintRule::PanicOnServePath]);
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn doc_comment_mentions_never_count() {
+        let src = "/// Never `panic!`s; 1.5x faster than `unsafe` f64 paths.\nfn f() -> u32 { 0 }\n";
+        let fs = scan_file("z.rs", src, Zone { exact: true, serve: true, unsafe_ok: false });
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

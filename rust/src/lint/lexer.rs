@@ -1,0 +1,343 @@
+//! The token scanner under the exactness lint: a line-oriented pass that
+//! blanks comments and string/char literals (so a banned token inside a doc
+//! comment or an error message never counts), tracks brace depth across
+//! lines, and surfaces line comments verbatim so the rule layer can read
+//! `exact-lint:` annotations.
+//!
+//! This is deliberately NOT a Rust parser. Like the hand-rolled JSON codec
+//! in [`crate::util::bench_log`], it understands exactly the subset it
+//! needs: line/block/doc comments (blocks nest), plain/byte/raw string
+//! literals, char literals vs. lifetimes, and `{`/`}` nesting. Everything
+//! else passes through untouched for the token rules to inspect.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct CodeLine {
+    /// 1-based line number.
+    pub line: usize,
+    /// The line with comments and string/char-literal contents blanked to
+    /// spaces — token rules run over this, never over raw source.
+    pub code: String,
+    /// Text of the line comment on this line (after `//`, `///` or `//!`),
+    /// if any — where `exact-lint:` annotations live.
+    pub comment: Option<String>,
+    /// Brace depth at the start of the line.
+    pub depth_start: i32,
+    /// Brace depth after the line.
+    pub depth_end: i32,
+}
+
+impl CodeLine {
+    /// Whether the line carries any code tokens at all (blank and
+    /// comment-only lines answer false).
+    pub fn has_code(&self) -> bool {
+        !self.code.trim().is_empty()
+    }
+}
+
+/// Cross-line scanner state.
+enum Mode {
+    /// Plain code.
+    Code,
+    /// Inside a (possibly nested) `/* */` block comment, at this nest depth.
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+/// Scan a whole source file into [`CodeLine`]s.
+pub fn scan(src: &str) -> Vec<CodeLine> {
+    let mut mode = Mode::Code;
+    let mut depth: i32 = 0;
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = None;
+        let depth_start = depth;
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Block(ref mut nest) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        *nest -= 1;
+                        if *nest == 0 {
+                            mode = Mode::Code;
+                        }
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        *nest += 1;
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        if c == '"' {
+                            mode = Mode::Code;
+                        }
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                        mode = Mode::Code;
+                        code.push(' ');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                        }
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // Line comment (covers /// and //! too): capture its
+                        // text for the annotation layer and stop the line.
+                        let text: String = chars[i + 2..].iter().collect();
+                        comment = Some(text.trim_start_matches(['/', '!']).trim().to_string());
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if let Some(hashes) = raw_string_start(&chars, i) {
+                        mode = Mode::RawStr(hashes);
+                        let span = raw_prefix_len(&chars, i);
+                        for _ in 0..span {
+                            code.push(' ');
+                        }
+                        i += span;
+                    } else if c == '"' || (c == 'b' && chars.get(i + 1) == Some(&'"') && !ident_before(&chars, i)) {
+                        let span = if c == 'b' { 2 } else { 1 };
+                        for _ in 0..span {
+                            code.push(' ');
+                        }
+                        i += span;
+                        mode = Mode::Str;
+                    } else if c == '\'' {
+                        // Char literal vs. lifetime: 'x' / '\n' are
+                        // literals; 'a in `&'a T` has no closing quote.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            let close = chars[i + 1..].iter().position(|&c| c == '\'').map(|p| i + 1 + p);
+                            let end = close.unwrap_or(chars.len() - 1) + 1;
+                            for _ in i..end {
+                                code.push(' ');
+                            }
+                            i = end;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            code.push_str("   ");
+                            i += 3;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        if c == '{' {
+                            depth += 1;
+                        } else if c == '}' {
+                            depth -= 1;
+                        }
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(CodeLine { line: idx + 1, code, comment, depth_start, depth_end: depth });
+    }
+    out
+}
+
+/// Whether the raw-string close quote at `quote_end` is followed by
+/// `hashes` `#` characters.
+fn closes_raw(chars: &[char], quote_end: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(quote_end + k) == Some(&'#'))
+}
+
+/// Detect `r"`, `r#"`, `br"`, … at `i` (not preceded by an identifier
+/// character); returns the `#` count.
+fn raw_string_start(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') || ident_before(chars, i) {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Length of the raw-string opening (`r##"` → 4, `br"` → 3).
+fn raw_prefix_len(chars: &[char], i: usize) -> usize {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    j += 1; // the r
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    j + 1 - i // the opening quote
+}
+
+/// Whether the character before index `i` continues an identifier (so `r`
+/// inside `for"` or `attr"` never opens a raw string).
+fn ident_before(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Whether `word` occurs in `code` as a standalone token (not embedded in a
+/// longer identifier like `quantize_f64` or `unsafe_code`).
+pub fn has_word(code: &str, word: &str) -> bool {
+    word_at(code, word).is_some()
+}
+
+/// Column (0-based) of the first standalone occurrence of `word`.
+pub fn word_at(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + word.len();
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether the stripped code contains a floating-point literal: `1.5`,
+/// `2e-3`, `1.0f64`, … Integer literals, ranges (`0..2`), tuple accesses
+/// (`x.0`) and hex/octal/binary literals do not match.
+pub fn has_float_literal(code: &str) -> bool {
+    float_literal_at(code).is_some()
+}
+
+/// Column of the first floating-point literal, if any.
+pub fn float_literal_at(code: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if !b[i].is_ascii_digit() || (i > 0 && is_ident_byte(b[i - 1])) || (i > 0 && b[i - 1] == b'.') {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        // Radix-prefixed literals never contain a float: skip whole token.
+        if b[i] == b'0' && matches!(b.get(i + 1), Some(b'x' | b'o' | b'b')) {
+            i += 2;
+            while i < b.len() && (is_ident_byte(b[i]) || b[i] == b'_') {
+                i += 1;
+            }
+            continue;
+        }
+        while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+            i += 1;
+        }
+        // `12.5` — a dot followed by a digit (two dots are a range, an
+        // identifier is a method call on an integer).
+        if i < b.len() && b[i] == b'.' && b.get(i + 1).is_some_and(u8::is_ascii_digit) {
+            return Some(start);
+        }
+        // `1e9` / `2E-3` exponent form without a dot.
+        if i < b.len()
+            && (b[i] == b'e' || b[i] == b'E')
+            && match b.get(i + 1) {
+                Some(b'+' | b'-') => b.get(i + 2).is_some_and(u8::is_ascii_digit),
+                Some(d) => d.is_ascii_digit(),
+                None => false,
+            }
+        {
+            return Some(start);
+        }
+        i += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = 1.5; // trailing 2.5\nlet s = \"3.5 f64\"; /* 4.5\n5.5 */ let y = 0;\n";
+        let lines = scan(src);
+        assert!(has_float_literal(&lines[0].code));
+        assert_eq!(lines[0].comment.as_deref(), Some("trailing 2.5"));
+        assert!(!has_float_literal(&lines[1].code), "{:?}", lines[1].code);
+        assert!(!has_float_literal(&lines[2].code), "{:?}", lines[2].code);
+        assert!(lines[2].code.contains("let y = 0;"));
+    }
+
+    #[test]
+    fn depth_tracks_braces_outside_literals() {
+        let lines = scan("fn f() {\n    let c = '{';\n    if true { g(); }\n}\n");
+        assert_eq!((lines[0].depth_start, lines[0].depth_end), (0, 1));
+        assert_eq!((lines[1].depth_start, lines[1].depth_end), (1, 1), "char literal brace must not count");
+        assert_eq!((lines[2].depth_start, lines[2].depth_end), (1, 1));
+        assert_eq!((lines[3].depth_start, lines[3].depth_end), (1, 0));
+    }
+
+    #[test]
+    fn lifetimes_do_not_open_char_literals() {
+        let lines = scan("impl<'q> Emac<'q> { fn f(&'q self) -> f64 { 0.0 } }\n");
+        assert!(has_word(&lines[0].code, "f64"));
+        assert!(has_float_literal(&lines[0].code));
+        assert_eq!(lines[0].depth_end, 0);
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let lines = scan("let p = r#\"has 1.5 and \"quotes\" and f64\"#; let q = 2.5;\n");
+        assert!(!has_word(&lines[0].code, "f64"));
+        let col = float_literal_at(&lines[0].code).expect("2.5 survives");
+        assert!(lines[0].code[col..].starts_with("2.5"), "{:?}", &lines[0].code);
+    }
+
+    #[test]
+    fn word_boundaries_reject_embedded_matches() {
+        assert!(!has_word("quantize_f64(x)", "f64"));
+        assert!(!has_word("#![deny(unsafe_code)]", "unsafe"));
+        assert!(has_word("x as f64", "f64"));
+        assert!(has_word("unsafe { }", "unsafe"));
+        assert!(has_word("v.to_f64()", "to_f64"));
+    }
+
+    #[test]
+    fn float_literal_shapes() {
+        for yes in ["let x = 1.5;", "a * 1e-300", "f(2.0f32)", "0.5 + y", "x >= 1.0E9"] {
+            assert!(has_float_literal(yes), "{yes}");
+        }
+        for no in ["for i in 0..2 {}", "let t = x.0;", "let m = 0xFF;", "let k = 12;", "b[i + 1]", "0x1E5", "i128"] {
+            assert!(!has_float_literal(no), "{no}");
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! `repro lint` — the repository's own static-analysis pass (DESIGN.md
+//! §14), hand-rolled in the same no-new-deps idiom as the
+//! [`crate::util::bench_log`] codec.
+//!
+//! The paper's headline claim rests on *exact* multiply-accumulate: Deep
+//! Positron wins at ≤8 bits only because the quire path never rounds until
+//! the terminal readout. This module enforces that invariant (and its
+//! neighbors) statically, in two layers:
+//!
+//! - **Layer 1, exactness scan** ([`exactness`]): token-level rules over
+//!   `rust/src` — float types/literals/conversions banned inside the
+//!   declared exact zones (`formats::emac`, `accel::positron`), `unsafe`
+//!   banned outside the allowlist (`util::pool`), `panic!`/`unwrap`/
+//!   `expect` banned on the serve request path (`serve::worker`,
+//!   `serve::router`), plus bench-wiring checks. Boundaries are declared
+//!   in source with `// exact-lint: allow(<rule>, <reason>)`.
+//! - **Layer 2, artifact audit** ([`audit`]): committed `BENCH_*.json`
+//!   baselines and `*.plan` texts re-validated at rest — schema, filename
+//!   agreement, shape inference over the `ir=` line, format names,
+//!   provenance grammar, and Eq. (2) quire widths recomputed per layer.
+//!
+//! The CLI (`repro lint`) exits non-zero on any finding; `repro lint
+//! --corpus rust/tests/lint_corpus` runs the seeded-violation corpus and
+//! exits non-zero unless *every* fixture is caught. CI gates on both.
+
+pub mod audit;
+pub mod exactness;
+pub mod lexer;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Every rule `repro lint` can report, with a stable kebab-case slug (the
+/// corpus encodes the expected rule of each fixture in its filename prefix,
+/// `<slug>__<desc>.<ext>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintRule {
+    /// A float type, literal or conversion inside an exact zone.
+    FloatInExactZone,
+    /// An `unsafe` token outside the allowlisted module(s).
+    UnsafeOutsideAllowlist,
+    /// A panicking construct on the serve request path.
+    PanicOnServePath,
+    /// A malformed `exact-lint:` annotation (unknown rule, missing reason).
+    BadAnnotation,
+    /// A bench source not wired into Cargo.toml / CI / its baseline.
+    BenchUnwired,
+    /// A committed `BENCH_*.json` with no bench recording it.
+    OrphanBenchBaseline,
+    /// A committed `BENCH_*.json` that fails the strict codec or its
+    /// filename/uniqueness invariants.
+    BenchLogInvalid,
+    /// A tune-plan text with a malformed or inconsistent field.
+    PlanInvalid,
+    /// A plan whose Eq. (2) quire width exceeds the `i128` path.
+    PlanQuireOverflow,
+    /// A plan `pruned=` line that does not match the provenance grammar.
+    PlanBadProvenance,
+}
+
+impl LintRule {
+    /// The stable kebab-case slug used in findings and corpus filenames.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            LintRule::FloatInExactZone => "float-in-exact-zone",
+            LintRule::UnsafeOutsideAllowlist => "unsafe-outside-allowlist",
+            LintRule::PanicOnServePath => "panic-on-serve-path",
+            LintRule::BadAnnotation => "bad-annotation",
+            LintRule::BenchUnwired => "bench-unwired",
+            LintRule::OrphanBenchBaseline => "orphan-bench-baseline",
+            LintRule::BenchLogInvalid => "bench-log-invalid",
+            LintRule::PlanInvalid => "plan-invalid",
+            LintRule::PlanQuireOverflow => "plan-quire-overflow",
+            LintRule::PlanBadProvenance => "plan-bad-provenance",
+        }
+    }
+
+    /// Inverse of [`LintRule::slug`].
+    pub fn from_slug(s: &str) -> Option<LintRule> {
+        const ALL: [LintRule; 10] = [
+            LintRule::FloatInExactZone,
+            LintRule::UnsafeOutsideAllowlist,
+            LintRule::PanicOnServePath,
+            LintRule::BadAnnotation,
+            LintRule::BenchUnwired,
+            LintRule::OrphanBenchBaseline,
+            LintRule::BenchLogInvalid,
+            LintRule::PlanInvalid,
+            LintRule::PlanQuireOverflow,
+            LintRule::PlanBadProvenance,
+        ];
+        ALL.into_iter().find(|r| r.slug() == s)
+    }
+}
+
+/// One typed violation: where, which rule, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-based line the finding anchors to.
+    pub line: usize,
+    /// The violated rule.
+    pub rule: LintRule,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Finding {
+    /// Build a finding.
+    pub fn new(file: &str, line: usize, rule: LintRule, message: String) -> Finding {
+        Finding { file: file.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.slug(), self.message)
+    }
+}
+
+/// Zone classification of one source file — which token rules apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Zone {
+    /// Float tokens are banned (quire accumulation path).
+    pub exact: bool,
+    /// Panicking constructs are banned (serve request path).
+    pub serve: bool,
+    /// `unsafe` is permitted (allowlisted module).
+    pub unsafe_ok: bool,
+}
+
+/// The exact-zone map: classify a repo-relative source path. The zones are
+/// whole files on purpose — a kernel that wants a float boundary declares
+/// it with an annotation instead of moving out of the zone.
+pub fn classify(rel: &str) -> Zone {
+    Zone {
+        exact: matches!(rel, "rust/src/formats/emac.rs" | "rust/src/accel/positron.rs"),
+        serve: matches!(rel, "rust/src/serve/worker.rs" | "rust/src/serve/router.rs"),
+        unsafe_ok: rel == "rust/src/util/pool.rs",
+    }
+}
+
+/// Run the full lint (both layers) over the repository at `root`. Returns
+/// findings sorted by file then line; `Err` only on an unreadable tree.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+
+    let src_root = root.join("rust/src");
+    for path in rust_sources(&src_root)? {
+        let rel = rel_path(root, &path);
+        let src = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        findings.extend(exactness::scan_file(&rel, &src, classify(&rel)));
+    }
+
+    findings.extend(audit::audit_bench_wiring(root));
+
+    for name in top_level_files(root) {
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let text = std::fs::read_to_string(root.join(&name)).map_err(|e| format!("{name}: {e}"))?;
+            findings.extend(audit::audit_bench_json(&name, &name, &text));
+        }
+    }
+    for path in plan_files(root) {
+        let rel = rel_path(root, &path);
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+        findings.extend(audit::audit_plan(&rel, &text));
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+/// Per-fixture outcome of a corpus run ([`check_corpus`]).
+#[derive(Debug, Clone)]
+pub struct CorpusReport {
+    /// One `CAUGHT`/`MISSED` line per fixture, in filename order.
+    pub lines: Vec<String>,
+    /// Fixtures whose expected rule was *not* reported (must be empty for
+    /// the corpus gate to pass).
+    pub missed: Vec<String>,
+}
+
+/// Run every seeded-violation fixture under `corpus` against the lint,
+/// asserting each is caught by the rule its filename prefix declares
+/// (`<rule-slug>__<desc>.<ext>`). `root` supplies the real Cargo.toml / CI
+/// / benches context for the wiring rules.
+pub fn check_corpus(root: &Path, corpus: &Path) -> Result<CorpusReport, String> {
+    let mut report = CorpusReport { lines: Vec::new(), missed: Vec::new() };
+    let mut names: Vec<String> = std::fs::read_dir(corpus)
+        .map_err(|e| format!("{}: {e}", corpus.display()))?
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .filter(|n| !n.starts_with('.') && !n.ends_with(".md"))
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(format!("{}: corpus is empty", corpus.display()));
+    }
+    for name in names {
+        let display = format!("{}/{name}", corpus.display());
+        let outcome = check_fixture(root, &corpus.join(&name), &name, &display)?;
+        match outcome {
+            Ok(line) => report.lines.push(line),
+            Err(line) => {
+                report.lines.push(line.clone());
+                report.missed.push(line);
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Run one fixture; `Ok(line)` when its expected rule fired, `Err(line)`
+/// when it was missed. The outer `Result` is for unreadable fixtures.
+#[allow(clippy::result_large_err)] // both arms carry the same report line
+fn check_fixture(root: &Path, path: &Path, name: &str, display: &str) -> Result<Result<String, String>, String> {
+    let Some((slug, rest)) = name.split_once("__") else {
+        return Ok(Err(format!("MISSED {display}: filename has no `<rule>__` prefix")));
+    };
+    let Some(expected) = LintRule::from_slug(slug) else {
+        return Ok(Err(format!("MISSED {display}: unknown rule slug `{slug}`")));
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{display}: {e}"))?;
+
+    let findings: Vec<Finding> = if name.ends_with(".rs") {
+        if expected == LintRule::BenchUnwired {
+            // The fixture poses as a bench source named after `rest`,
+            // audited against the repository's real Cargo.toml and CI.
+            let bench_name = rest.trim_end_matches(".rs");
+            let cargo = std::fs::read_to_string(root.join("Cargo.toml")).unwrap_or_default();
+            let ci = std::fs::read_to_string(root.join(".github/workflows/ci.yml")).unwrap_or_default();
+            audit::audit_bench_source(root, display, bench_name, &text, &cargo, &ci)
+        } else {
+            let zone = match fixture_zone(&text) {
+                Some(z) => z,
+                None => return Ok(Err(format!("MISSED {display}: no `lint-corpus: zone=` header"))),
+            };
+            exactness::scan_file(display, &text, zone)
+        }
+    } else if name.ends_with(".json") {
+        let mut fs = audit::audit_bench_json(display, rest, &text);
+        if expected == LintRule::OrphanBenchBaseline {
+            // The fixture poses as a committed baseline named after `rest`.
+            if let Some(bench) = rest.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".json")) {
+                if !audit::bench_records(root, bench) {
+                    let msg = format!("no bench under rust/benches/ records `{bench}`");
+                    fs.push(Finding::new(display, 1, LintRule::OrphanBenchBaseline, msg));
+                }
+            }
+        }
+        fs
+    } else if name.ends_with(".plan") {
+        audit::audit_plan(display, &text)
+    } else {
+        return Ok(Err(format!("MISSED {display}: unknown fixture extension")));
+    };
+
+    if findings.iter().any(|f| f.rule == expected) {
+        Ok(Ok(format!("CAUGHT {display}: [{}] {} finding(s)", slug, findings.len())))
+    } else {
+        let got: Vec<&str> = findings.iter().map(|f| f.rule.slug()).collect();
+        Ok(Err(format!("MISSED {display}: expected [{slug}], got {got:?}")))
+    }
+}
+
+/// Parse the `// lint-corpus: zone=<exact|serve|none>` header of an `.rs`
+/// fixture into the [`Zone`] it should be scanned under.
+fn fixture_zone(text: &str) -> Option<Zone> {
+    let zone = text.lines().find_map(|l| l.split_once("lint-corpus:").map(|(_, r)| r))?;
+    let zone = zone.split_once("zone=")?.1.split_whitespace().next()?;
+    match zone {
+        "exact" => Some(Zone { exact: true, serve: false, unsafe_ok: false }),
+        "serve" => Some(Zone { exact: false, serve: true, unsafe_ok: false }),
+        "none" => Some(Zone { exact: false, serve: false, unsafe_ok: false }),
+        _ => None,
+    }
+}
+
+/// All `.rs` files under `dir`, recursively, sorted for stable output.
+fn rust_sources(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d).map_err(|e| format!("{}: {e}", d.display()))?;
+        for entry in entries {
+            let path = entry.map_err(|e| format!("{}: {e}", d.display()))?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// File names (not paths) at the top level of `root`.
+fn top_level_files(root: &Path) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(root)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().is_file())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .collect()
+        })
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+/// Committed `*.plan` files: top-level plus anything under `results/`.
+fn plan_files(root: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> =
+        top_level_files(root).into_iter().filter(|n| n.ends_with(".plan")).map(|n| root.join(n)).collect();
+    let results = root.join("results");
+    if results.is_dir() {
+        let mut stack = vec![results];
+        while let Some(d) = stack.pop() {
+            if let Ok(entries) = std::fs::read_dir(&d) {
+                for path in entries.filter_map(|e| e.ok().map(|e| e.path())) {
+                    if path.is_dir() {
+                        stack.push(path);
+                    } else if path.extension().is_some_and(|x| x == "plan") {
+                        out.push(path);
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// `path` rendered relative to `root` with forward slashes.
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_map_matches_design() {
+        assert!(classify("rust/src/formats/emac.rs").exact);
+        assert!(classify("rust/src/accel/positron.rs").exact);
+        assert!(!classify("rust/src/formats/posit.rs").exact);
+        assert!(classify("rust/src/serve/worker.rs").serve);
+        assert!(classify("rust/src/serve/router.rs").serve);
+        assert!(!classify("rust/src/serve/metrics.rs").serve);
+        assert!(classify("rust/src/util/pool.rs").unsafe_ok);
+        assert!(!classify("rust/src/main.rs").unsafe_ok);
+    }
+
+    #[test]
+    fn slugs_round_trip() {
+        for slug in [
+            "float-in-exact-zone",
+            "unsafe-outside-allowlist",
+            "panic-on-serve-path",
+            "bad-annotation",
+            "bench-unwired",
+            "orphan-bench-baseline",
+            "bench-log-invalid",
+            "plan-invalid",
+            "plan-quire-overflow",
+            "plan-bad-provenance",
+        ] {
+            assert_eq!(LintRule::from_slug(slug).expect(slug).slug(), slug);
+        }
+        assert!(LintRule::from_slug("bogus").is_none());
+    }
+
+    #[test]
+    fn findings_render_file_line_rule() {
+        let f = Finding::new("rust/src/x.rs", 7, LintRule::FloatInExactZone, "no".to_string());
+        assert_eq!(f.to_string(), "rust/src/x.rs:7: [float-in-exact-zone] no");
+    }
+}

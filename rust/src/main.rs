@@ -13,7 +13,7 @@ use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
 use deep_positron::runtime::{artifacts_dir, Runtime};
 use deep_positron::serve::{ServeEngine, ServeError, ShardConfig};
-use deep_positron::{hw, quant, tune};
+use deep_positron::{hw, lint, quant, tune};
 
 const USAGE: &str = "\
 repro — Deep Positron (CoNGA'19) reproduction driver
@@ -39,6 +39,8 @@ COMMANDS (one per paper artifact):
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
                                                         [--max-queue 1024] [--deadline-ms N] [--model mlp|conv]
+  lint           exactness-zone + artifact checker (§14) [--root DIR] [--corpus DIR] [--report FILE]
+                 (non-zero exit on any finding; --corpus asserts every seeded fixture is caught)
   all            run every report at small scale
 
 Common flags: --seed N (default 7), --scale small|full (default small).
@@ -391,6 +393,57 @@ fn run(args: &[String]) -> Result<()> {
                 s.push_str(&format!("served accuracy: {:.1}%\n", correct as f64 / answered as f64 * 100.0));
             }
             emit(&format!("serve_{dataset}.md"), &s)?;
+        }
+        "lint" => {
+            // Static analysis (DESIGN.md §14): the exactness-zone scan plus
+            // the artifact auditor. Findings go to stdout (and --report),
+            // and any finding fails the process — this is the CI gate.
+            let root = match flags.get("root") {
+                Some(dir) => std::path::PathBuf::from(dir),
+                None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+            };
+            let mut out = String::new();
+            let failure = match flags.get("corpus") {
+                Some(dir) => {
+                    let rep = lint::check_corpus(&root, std::path::Path::new(dir))
+                        .map_err(|e| anyhow!("lint corpus: {e}"))?;
+                    for line in &rep.lines {
+                        out.push_str(line);
+                        out.push('\n');
+                    }
+                    let summary = if rep.missed.is_empty() {
+                        format!("lint corpus: all {} fixture(s) caught", rep.lines.len())
+                    } else {
+                        format!("lint corpus: {} of {} fixture(s) NOT caught", rep.missed.len(), rep.lines.len())
+                    };
+                    out.push_str(&summary);
+                    out.push('\n');
+                    (!rep.missed.is_empty()).then_some(summary)
+                }
+                None => {
+                    let findings = lint::lint_tree(&root).map_err(|e| anyhow!("lint: {e}"))?;
+                    for f in &findings {
+                        out.push_str(&f.to_string());
+                        out.push('\n');
+                    }
+                    let summary = if findings.is_empty() {
+                        "lint: clean (0 findings)".to_string()
+                    } else {
+                        format!("lint: {} finding(s)", findings.len())
+                    };
+                    out.push_str(&summary);
+                    out.push('\n');
+                    (!findings.is_empty()).then_some(summary)
+                }
+            };
+            print!("{out}");
+            if let Some(path) = flags.get("report") {
+                std::fs::write(path, &out)?;
+                eprintln!("[findings written to {path}]");
+            }
+            if let Some(summary) = failure {
+                bail!("{summary}");
+            }
         }
         "all" => {
             for sub in ["synth-report", "fig1", "table2", "es-study", "table1", "fig6", "fig7", "tune", "conv"] {

@@ -227,7 +227,7 @@ impl Shard {
             }
         });
         if let Err(depth) = admit {
-            self.metrics.lock().unwrap().shed += 1;
+            self.metrics.lock().unwrap().shed += 1; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
             return Err(ServeError::Overloaded { shard: self.key.label(), depth });
         }
         let (tx, rx) = mpsc::channel();
@@ -330,7 +330,7 @@ impl ServeEngine {
                 match ready.recv() {
                     Ok(xla_active) => {
                         if xla_active {
-                            metrics.lock().unwrap().xla_workers += 1;
+                            metrics.lock().unwrap().xla_workers += 1; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
                         }
                     }
                     Err(_) => return Err(ServeError::Closed),
@@ -405,7 +405,7 @@ impl ServeEngine {
     /// depths stamped as of now.
     pub fn shard_metrics(&self, key: &ShardKey) -> Option<ShardMetrics> {
         self.shards.get(key).map(|s| {
-            let mut m = s.metrics.lock().unwrap().clone();
+            let mut m = s.metrics.lock().unwrap().clone(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
             m.wall_seconds = self.started.elapsed().as_secs_f64();
             m.queue_depths = s.queue_depths();
             m
@@ -431,7 +431,7 @@ impl ServeEngine {
                     let _ = join.join();
                 }
             }
-            let mut m = shard.metrics.lock().unwrap().clone();
+            let mut m = shard.metrics.lock().unwrap().clone(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
             m.wall_seconds = wall;
             m.queue_depths = shard.queue_depths();
             out.push(m);

@@ -296,7 +296,7 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth:
         Some(x) => x.batches.clone(),
         None => vec![ws.cfg.sim_batch.max(1)],
     };
-    let max_batch = *batch_sizes.last().expect("batch size list is never empty");
+    let max_batch = *batch_sizes.last().expect("batch size list is never empty"); // exact-lint: allow(panic, construction invariant: ShardConfig always yields >= 1 size)
     // Pre-warm: compile every batch-size executable and push one padded batch
     // through each BEFORE accepting traffic.
     if let Some(x) = &xla {
@@ -343,7 +343,7 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth:
         let mut shutdown: Option<mpsc::Sender<()>> = None;
         let mut disconnected = false;
         while pending.len() < max_batch {
-            let wake = pending.peek().expect("pending is non-empty").flush_by;
+            let wake = pending.peek().expect("pending is non-empty").flush_by; // exact-lint: allow(panic, guarded by the is_empty check on the branch above)
             let now = Instant::now();
             if now >= wake {
                 break;
@@ -431,7 +431,7 @@ fn flush(pending: &mut BinaryHeap<Pending>, ctx: &BatchCtx<'_>, force: bool) {
         expired += pop_into(pending, &mut batch, ctx, now);
     }
     if expired > 0 {
-        ctx.ws.metrics.lock().unwrap().expired += expired;
+        ctx.ws.metrics.lock().unwrap().expired += expired; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
     }
     if !batch.is_empty() {
         execute(batch, ctx);
@@ -481,7 +481,7 @@ fn execute(batch: Vec<Request>, ctx: &BatchCtx<'_>) {
         latencies.push(latency_s);
         let _ = req.resp.send(InferReply { class, latency_s, worker: ws.index });
     }
-    let mut m = ws.metrics.lock().unwrap();
+    let mut m = ws.metrics.lock().unwrap(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
     m.batches += 1;
     m.batch_sizes.push(rows);
     m.served += rows;

@@ -222,6 +222,12 @@ impl TunePlan {
     /// Parse the [`TunePlan::to_text`] form; recomputes [`NetworkCost`]
     /// from the assignment and IR. Returns `None` on any malformed field,
     /// or when the `ir=` topology disagrees with `dims=`.
+    ///
+    /// Plan text is *untrusted* (hand-edited deployment files): every field
+    /// is range-checked before it reaches code that asserts — widths are
+    /// capped ([`crate::accel::ir::MAX_PARSED_DIM`]) and non-zero, formats
+    /// must be buildable ([`FormatSpec::is_supported`]), accuracy must be a
+    /// fraction — so garbage always comes back as `None`, never a panic.
     pub fn parse(s: &str) -> Option<TunePlan> {
         let mut fields: HashMap<&str, &str> = HashMap::new();
         for line in s.lines() {
@@ -238,13 +244,13 @@ impl TunePlan {
             .split(',')
             .map(|d| d.parse().ok())
             .collect::<Option<Vec<usize>>>()?;
-        if dims.len() < 2 {
+        if dims.len() < 2 || dims.iter().any(|&d| d == 0 || d > crate::accel::ir::MAX_PARSED_DIM) {
             return None;
         }
         let ir = match fields.get("ir") {
             Some(text) => NetIr::parse(text)?,
             // Pre-IR plans carried only the flat widths: dense topology.
-            None => NetIr::dense(&dims),
+            None => NetIr::try_dense(&dims).ok()?,
         };
         if ir.dims() != dims {
             return None;
@@ -253,7 +259,15 @@ impl TunePlan {
         if assignment.len() != ir.len() {
             return None;
         }
+        // A parseable name is not a buildable format: the cost model below
+        // instantiates each spec, whose constructors assert width bounds.
+        if !assignment.layers().iter().all(|spec| spec.is_supported()) {
+            return None;
+        }
         let accuracy: f64 = fields.get("accuracy")?.parse().ok()?;
+        if !(0.0..=1.0).contains(&accuracy) {
+            return None;
+        }
         let feasible: bool = fields.get("feasible")?.parse().ok()?;
         let pruned = fields.get("pruned").map(|p| (*p).to_string());
         let cost = network_cost_ir(&assignment, &ir);

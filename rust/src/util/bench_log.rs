@@ -62,12 +62,17 @@ pub struct BenchLog {
     pub schema: u32,
     /// Bench name; the on-disk file is `BENCH_<bench>.json`.
     pub bench: String,
+    /// The gate tolerance this baseline was recorded under, as a fraction in
+    /// `[0, 1)`; `None` on logs that predate the field or were never gated.
+    /// [`record_and_gate`] stamps it so the committed file documents how
+    /// tight its own gate is (and `repro lint` can audit the claim).
+    pub tolerance: Option<f64>,
     /// Measurements, in bench emission order.
     pub entries: Vec<BenchEntry>,
 }
 
-/// Errors loading or parsing a bench log.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// Errors loading, parsing, or building a bench log.
+#[derive(Debug, Clone, PartialEq)]
 pub enum BenchLogError {
     /// The file's schema version is not [`SCHEMA_VERSION`].
     SchemaMismatch {
@@ -80,6 +85,14 @@ pub enum BenchLogError {
     Malformed(String),
     /// Filesystem error reading the file.
     Io(String),
+    /// A measurement handed to [`BenchLog::push`] was NaN, infinite, or
+    /// negative — always a harness bug, never a slow machine.
+    BadSample {
+        /// Label of the rejected measurement.
+        name: String,
+        /// The offending samples/s value.
+        value: f64,
+    },
 }
 
 impl fmt::Display for BenchLogError {
@@ -90,6 +103,9 @@ impl fmt::Display for BenchLogError {
             }
             BenchLogError::Malformed(why) => write!(f, "malformed bench log: {why}"),
             BenchLogError::Io(why) => write!(f, "bench log io error: {why}"),
+            BenchLogError::BadSample { name, value } => {
+                write!(f, "bench entry {name}: samples/s must be finite and >= 0, got {value}")
+            }
         }
     }
 }
@@ -99,17 +115,19 @@ impl std::error::Error for BenchLogError {}
 impl BenchLog {
     /// An empty log for `bench` at the current [`SCHEMA_VERSION`].
     pub fn new(bench: &str) -> BenchLog {
-        BenchLog { schema: SCHEMA_VERSION, bench: bench.to_string(), entries: Vec::new() }
+        BenchLog { schema: SCHEMA_VERSION, bench: bench.to_string(), tolerance: None, entries: Vec::new() }
     }
 
-    /// Append one measurement (finite and non-negative; benches must not
-    /// record NaN/∞ — that is always a harness bug, not a slow machine).
-    pub fn push(&mut self, name: &str, samples_per_s: f64) {
-        assert!(
-            samples_per_s.is_finite() && samples_per_s >= 0.0,
-            "bench entry {name}: samples/s must be finite and >= 0, got {samples_per_s}"
-        );
+    /// Append one measurement. NaN, infinite, and negative samples/s are
+    /// rejected with [`BenchLogError::BadSample`] — benches must not record
+    /// them (that is always a harness bug, not a slow machine), and a typed
+    /// error keeps the rejection testable instead of aborting the process.
+    pub fn push(&mut self, name: &str, samples_per_s: f64) -> Result<(), BenchLogError> {
+        if !samples_per_s.is_finite() || samples_per_s < 0.0 {
+            return Err(BenchLogError::BadSample { name: name.to_string(), value: samples_per_s });
+        }
         self.entries.push(BenchEntry { name: name.to_string(), samples_per_s });
+        Ok(())
     }
 
     /// The entry named `name`, if recorded.
@@ -160,6 +178,9 @@ impl BenchLog {
         out.push_str("{\n");
         out.push_str(&format!("  \"schema\": {},\n", self.schema));
         out.push_str(&format!("  \"bench\": {},\n", json_string(&self.bench)));
+        if let Some(t) = self.tolerance {
+            out.push_str(&format!("  \"tolerance\": {},\n", json_number(t)));
+        }
         out.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
             let sep = if i + 1 == self.entries.len() { "" } else { "," };
@@ -182,6 +203,7 @@ impl BenchLog {
         let Json::Obj(fields) = top else { return Err(bad("top level must be an object")) };
         let mut schema = None;
         let mut bench = None;
+        let mut tolerance = None;
         let mut entries = None;
         for (key, value) in fields {
             match (key.as_str(), value) {
@@ -189,6 +211,8 @@ impl BenchLog {
                 ("schema", _) => return Err(bad("\"schema\" must be a non-negative integer")),
                 ("bench", Json::Str(s)) => bench = Some(s),
                 ("bench", _) => return Err(bad("\"bench\" must be a string")),
+                ("tolerance", Json::Num(v)) if (0.0..1.0).contains(&v) => tolerance = Some(v),
+                ("tolerance", _) => return Err(bad("\"tolerance\" must be a fraction in [0, 1)")),
                 ("entries", Json::Arr(items)) => {
                     let mut list = Vec::with_capacity(items.len());
                     for item in items {
@@ -207,6 +231,7 @@ impl BenchLog {
         Ok(BenchLog {
             schema,
             bench: bench.ok_or_else(|| bad("missing \"bench\""))?,
+            tolerance,
             entries: entries.ok_or_else(|| bad("missing \"entries\""))?,
         })
     }
@@ -305,7 +330,11 @@ pub fn record_and_gate(current: &BenchLog, tolerance: f64) {
         Ok(None) => println!("bench_log[{}]: no committed baseline — writing one (soft pass)", current.bench),
         Err(e) => panic!("bench_log[{}]: cannot gate against baseline: {e}", current.bench),
     }
-    let path = current.save().expect("bench log write");
+    // Stamp the gate's tolerance into the written baseline so the committed
+    // file documents its own contract (audited by `repro lint`).
+    let mut stamped = current.clone();
+    stamped.tolerance = Some(tolerance);
+    let path = stamped.save().expect("bench log write");
     println!("bench_log[{}]: wrote {}", current.bench, path.display());
 }
 
@@ -526,9 +555,9 @@ mod tests {
 
     fn sample_log() -> BenchLog {
         let mut log = BenchLog::new("batch_forward");
-        log.push("mnist/scalar", 812.5);
-        log.push("mnist/forward_batch/B=32", 9640.0);
-        log.push("iris/forward_batch/B=8", 125000.0);
+        log.push("mnist/scalar", 812.5).unwrap();
+        log.push("mnist/forward_batch/B=32", 9640.0).unwrap();
+        log.push("iris/forward_batch/B=8", 125000.0).unwrap();
         log
     }
 
@@ -542,8 +571,51 @@ mod tests {
         assert_eq!(back.to_json(), text);
         // Escapes survive too.
         let mut tricky = BenchLog::new("weird");
-        tricky.push("a \"quoted\"\\name\nwith tabs\t", 1.0);
+        tricky.push("a \"quoted\"\\name\nwith tabs\t", 1.0).unwrap();
         assert_eq!(BenchLog::from_json(&tricky.to_json()).unwrap(), tricky);
+    }
+
+    #[test]
+    fn push_rejects_bad_samples_with_a_typed_error() {
+        let mut log = BenchLog::new("batch_forward");
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -0.001] {
+            match log.push("mnist/scalar", bad) {
+                Err(BenchLogError::BadSample { name, value }) => {
+                    assert_eq!(name, "mnist/scalar");
+                    assert!(value.is_nan() == bad.is_nan() && (value.is_nan() || value == bad));
+                }
+                other => panic!("push({bad}) should be BadSample, got {other:?}"),
+            }
+        }
+        // Nothing leaked into the log, and the error renders the value.
+        assert!(log.entries.is_empty());
+        let msg = BenchLogError::BadSample { name: "x".into(), value: -1.0 }.to_string();
+        assert!(msg.contains("x") && msg.contains("-1"), "{msg}");
+        // Zero (a seed) and ordinary positives still pass.
+        log.push("seed", 0.0).unwrap();
+        log.push("real", 42.5).unwrap();
+        assert_eq!(log.entries.len(), 2);
+    }
+
+    #[test]
+    fn tolerance_field_round_trips_and_is_validated() {
+        let mut log = sample_log();
+        log.tolerance = Some(0.1);
+        let text = log.to_json();
+        assert!(text.contains("\"tolerance\": 0.1"), "{text}");
+        let back = BenchLog::from_json(&text).expect("round trip");
+        assert_eq!(back, log);
+        assert_eq!(back.to_json(), text);
+        // Files without the field (pre-stamp logs) still parse as None.
+        assert_eq!(BenchLog::from_json(&sample_log().to_json()).unwrap().tolerance, None);
+        // Out-of-range or non-numeric tolerances are rejected.
+        for bad in ["\"tolerance\": 1.0, ", "\"tolerance\": -0.1, ", "\"tolerance\": \"x\", "] {
+            let t = text.replace("\"tolerance\": 0.1,\n  ", "").replace("\"entries\"", &format!("{bad}\"entries\""));
+            assert!(
+                matches!(BenchLog::from_json(&t), Err(BenchLogError::Malformed(_))),
+                "should reject {bad:?}: {t}"
+            );
+        }
     }
 
     #[test]
@@ -578,10 +650,10 @@ mod tests {
     fn comparator_passes_improvements_and_noise() {
         let baseline = sample_log();
         let mut current = BenchLog::new("batch_forward");
-        current.push("mnist/scalar", 812.5 * 1.4); // improvement
-        current.push("mnist/forward_batch/B=32", 9640.0 * 0.95); // within 10%
-        current.push("iris/forward_batch/B=8", 125000.0);
-        current.push("mnist/forward_batch/B=64", 15000.0); // new, untracked
+        current.push("mnist/scalar", 812.5 * 1.4).unwrap(); // improvement
+        current.push("mnist/forward_batch/B=32", 9640.0 * 0.95).unwrap(); // within 10%
+        current.push("iris/forward_batch/B=8", 125000.0).unwrap();
+        current.push("mnist/forward_batch/B=64", 15000.0).unwrap(); // new, untracked
         let report = compare(&current, &baseline, DEFAULT_TOLERANCE).expect("no regression");
         assert_eq!(report.len(), 4);
         assert!(report.iter().any(|l| l.contains("untracked")), "{report:?}");
@@ -591,9 +663,9 @@ mod tests {
     fn comparator_fails_a_regression_beyond_tolerance() {
         let baseline = sample_log();
         let mut current = BenchLog::new("batch_forward");
-        current.push("mnist/scalar", 812.5);
-        current.push("mnist/forward_batch/B=32", 9640.0 * 0.85); // >10% drop
-        current.push("iris/forward_batch/B=8", 125000.0);
+        current.push("mnist/scalar", 812.5).unwrap();
+        current.push("mnist/forward_batch/B=32", 9640.0 * 0.85).unwrap(); // >10% drop
+        current.push("iris/forward_batch/B=8", 125000.0).unwrap();
         let failures = compare(&current, &baseline, DEFAULT_TOLERANCE).expect_err("must fail");
         assert_eq!(failures.len(), 1);
         assert!(failures[0].contains("mnist/forward_batch/B=32"), "{failures:?}");
@@ -605,7 +677,7 @@ mod tests {
     fn comparator_fails_when_a_tracked_entry_disappears() {
         let baseline = sample_log();
         let mut current = BenchLog::new("batch_forward");
-        current.push("mnist/scalar", 900.0);
+        current.push("mnist/scalar", 900.0).unwrap();
         let failures = compare(&current, &baseline, DEFAULT_TOLERANCE).expect_err("must fail");
         assert_eq!(failures.len(), 2, "{failures:?}");
         assert!(failures.iter().all(|l| l.contains("disappeared")));
@@ -614,9 +686,9 @@ mod tests {
     #[test]
     fn seed_baselines_always_pass_and_report_arming() {
         let mut baseline = BenchLog::new("batch_forward");
-        baseline.push("mnist/scalar", 0.0);
+        baseline.push("mnist/scalar", 0.0).unwrap();
         let mut current = BenchLog::new("batch_forward");
-        current.push("mnist/scalar", 3.0); // any real number beats a seed
+        current.push("mnist/scalar", 3.0).unwrap(); // any real number beats a seed
         let report = compare(&current, &baseline, DEFAULT_TOLERANCE).expect("seeds never fail");
         assert!(report[0].contains("seed baseline armed"), "{report:?}");
     }

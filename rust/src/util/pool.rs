@@ -27,6 +27,16 @@
 //!   memory-bound); `DEEP_POSITRON_POOL=n` overrides, and `n = 1` disables
 //!   fan-out entirely (every job runs inline on the caller's thread).
 
+// Unsafe allowlist (DESIGN.md §14): this module is the crate's ONE place
+// `unsafe` may ever appear — `repro lint` and the crate-root
+// `#![deny(unsafe_code)]` both point here. Audit (PR 8): the pool is
+// currently **unsafe-free** — scoped threads ([`std::thread::scope`]) carry
+// the non-`'static` borrows that a hand-rolled pool would need raw pointers
+// for. If a future optimization does introduce `unsafe` (e.g. uninitialized
+// output buffers), it must land in this module with its safety contract
+// documented at the site, and nowhere else.
+#![allow(unsafe_code)]
+
 use std::sync::OnceLock;
 
 /// Hard cap on the default pool width: the tiled kernels are cache/memory

@@ -1,0 +1,81 @@
+//! `repro lint` integration gates (DESIGN.md §14):
+//!
+//! * **Clean tree** — the full two-layer lint over this very repository
+//!   reports zero findings. Every declared float/panic boundary in the
+//!   exact zones and on the serve path is annotated with its reason, every
+//!   bench is wired into Cargo.toml + CI + its committed baseline, and
+//!   every committed `BENCH_*.json` passes the strict codec.
+//! * **Corpus coverage** — every seeded-violation fixture under
+//!   `rust/tests/lint_corpus/` is caught by exactly the rule its filename
+//!   prefix declares. A lint that stops firing is itself a regression; the
+//!   corpus is the lint's own test set.
+
+use std::path::Path;
+
+use deep_positron::lint;
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn the_tree_is_lint_clean() {
+    let findings = lint::lint_tree(repo_root()).expect("tree walk");
+    assert!(
+        findings.is_empty(),
+        "repro lint found {} violation(s) in the committed tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn every_corpus_fixture_is_caught() {
+    let corpus = repo_root().join("rust/tests/lint_corpus");
+    let report = lint::check_corpus(repo_root(), &corpus).expect("corpus run");
+    assert!(
+        report.missed.is_empty(),
+        "{} fixture(s) not caught by their declared rule:\n{}",
+        report.missed.len(),
+        report.missed.join("\n")
+    );
+    // One line per fixture, and the corpus actually exercises every layer:
+    // token rules, wiring rules, bench-log codec, and the plan auditor.
+    assert!(report.lines.len() >= 11, "corpus shrank to {} fixture(s)", report.lines.len());
+    for slug in [
+        "float-in-exact-zone",
+        "unsafe-outside-allowlist",
+        "panic-on-serve-path",
+        "bad-annotation",
+        "bench-unwired",
+        "orphan-bench-baseline",
+        "bench-log-invalid",
+        "plan-invalid",
+        "plan-quire-overflow",
+        "plan-bad-provenance",
+    ] {
+        assert!(
+            report.lines.iter().any(|l| l.contains(&format!("{slug}__"))),
+            "no fixture exercises [{slug}]: {:?}",
+            report.lines
+        );
+    }
+}
+
+#[test]
+fn corpus_fixtures_fail_an_injected_clean_file() {
+    // A fixture with a rule prefix whose violation is NOT present must be
+    // reported as missed, not silently passed — the corpus gate is only
+    // meaningful if a rotted fixture trips it.
+    let dir = std::env::temp_dir().join(format!("lint_corpus_negative_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("float-in-exact-zone__actually_clean.rs"),
+        "// lint-corpus: zone=exact\nfn f() -> u32 { 1 }\n",
+    )
+    .unwrap();
+    let report = lint::check_corpus(repo_root(), &dir).expect("corpus run");
+    assert_eq!(report.missed.len(), 1, "{:?}", report.lines);
+    assert!(report.missed[0].starts_with("MISSED"), "{:?}", report.missed);
+    std::fs::remove_dir_all(&dir).ok();
+}

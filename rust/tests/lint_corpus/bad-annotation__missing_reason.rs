@@ -1,0 +1,8 @@
+// lint-corpus: zone=exact
+// Seeded violation: an exact-lint annotation with no reason. Boundaries
+// must say WHY they are exempt; this must be flagged as [bad-annotation].
+
+// exact-lint: allow(float)
+fn readout(q: i128) -> f64 {
+    q as f64
+}

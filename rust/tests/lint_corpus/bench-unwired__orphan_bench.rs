@@ -1,0 +1,12 @@
+// Seeded violation: a bench source with no `[[bench]]` entry in Cargo.toml,
+// never run in CI, and recording a perf trajectory with no committed
+// baseline. All three must be flagged as [bench-unwired] when this file is
+// audited (as `orphan_bench`) against the repository's real wiring.
+
+use deep_positron::util::bench_log::{self, BenchLog};
+
+fn main() {
+    let mut log = BenchLog::new("orphan_bench");
+    log.push("synthetic/throughput", 123.0).expect("finite measurement");
+    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
+}

@@ -1,0 +1,12 @@
+// lint-corpus: zone=exact
+// Seeded violation: a float cast on the accumulation path. The quire zones
+// (formats::emac, accel::positron) are integer-only; `as f64` here must be
+// flagged as [float-in-exact-zone].
+
+fn accumulate(codes: &[u16]) -> i128 {
+    let mut quire: i128 = 0;
+    for &c in codes {
+        quire += (c as f64 * 2.0) as i128;
+    }
+    quire
+}

@@ -1,0 +1,8 @@
+// lint-corpus: zone=serve
+// Seeded violation: an unannotated `.unwrap()` on the serve request path.
+// Workers shed load on bad input, they never abort; this must be flagged
+// as [panic-on-serve-path].
+
+fn route(shards: &[usize], key: usize) -> usize {
+    *shards.get(key % shards.len()).unwrap()
+}

@@ -1,0 +1,8 @@
+// lint-corpus: zone=none
+// Seeded violation: an `unsafe` block in an ordinary module. Only
+// util::pool is allowlisted; everywhere else this must be flagged as
+// [unsafe-outside-allowlist].
+
+fn read_raw(p: *const u8) -> u8 {
+    unsafe { *p }
+}

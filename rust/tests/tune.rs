@@ -299,3 +299,99 @@ fn tuner_output_is_bit_identical_at_any_pool_width() {
         assert_eq!(names(&wide), names(&serial), "frontier differs at width {threads}");
     }
 }
+
+/// Satellite (PR 8): `TunePlan::parse` is total over garbage. Plan files
+/// are untrusted deployment artifacts — hand-edited, truncated by broken
+/// copies, or outright wrong — and the parser's contract is a typed
+/// `Option`, never a panic. The property mutates a valid plan text through
+/// a stack of adversarial edits (field corruption, truncation, line
+/// shuffles, unsupported format names, absurd widths, raw byte noise) and
+/// asserts the parser always returns; when it does accept, the plan it
+/// returns must satisfy its own invariants.
+#[test]
+fn plan_parser_never_panics_on_mutated_text() {
+    use deep_positron::tune::TunePlan;
+    use deep_positron::util::prop::forall;
+
+    let base = "dataset=iris\ndims=4,8,3\nir=4:dense8+dense3\nlayers=posit8es1+posit6es1+posit8es1\n\
+                accuracy=0.933333\nfeasible=true\npruned=sensitivity drop<=1.0% floors=6,5,6 screen_rows=96\n";
+    assert!(TunePlan::parse(base).is_some(), "the seed text must itself be valid");
+    let glyphs: &[&str] = &["=", ",", "x", "+", ":", "0", "9", "-", "e", "NaN", "inf", "\u{221e}", "\0", "dense"];
+    forall("TunePlan::parse is panic-free", |rng| {
+        let mut text = base.to_string();
+        for _ in 0..=rng.below(4) {
+            match rng.below(8) {
+                // Truncate anywhere (mid-line, mid-number, mid-name).
+                0 => {
+                    let mut at = rng.below(text.len() + 1);
+                    while !text.is_char_boundary(at) {
+                        at -= 1;
+                    }
+                    text.truncate(at);
+                }
+                // Drop one whole line (loses a required key, or the ir= line
+                // — the legacy dense path must also hold).
+                1 => {
+                    let keep = rng.below(7);
+                    text = text
+                        .lines()
+                        .enumerate()
+                        .filter(|(i, _)| *i != keep)
+                        .map(|(_, l)| format!("{l}\n"))
+                        .collect();
+                }
+                // Replace one line's value with an adversarial scalar.
+                2 => {
+                    let victim = rng.below(7);
+                    let junk =
+                        ["", "0", "-1", "NaN", "1e308", "99999999999999999999", "true", "posit64es9", "0,0", "2.5"];
+                    let junk = junk[rng.below(junk.len())];
+                    text = text
+                        .lines()
+                        .enumerate()
+                        .map(|(i, l)| {
+                            if i == victim {
+                                let key = l.split('=').next().unwrap_or(l);
+                                format!("{key}={junk}\n")
+                            } else {
+                                format!("{l}\n")
+                            }
+                        })
+                        .collect();
+                }
+                // Splice a random glyph at a random byte-safe position.
+                3 => {
+                    let mut at = rng.below(text.len() + 1);
+                    while !text.is_char_boundary(at) {
+                        at -= 1;
+                    }
+                    text.insert_str(at, glyphs[rng.below(glyphs.len())]);
+                }
+                // Duplicate a line (duplicate keys must not confuse it).
+                4 => {
+                    let dup = text.lines().nth(rng.below(7)).unwrap_or("").to_string();
+                    text.push_str(&dup);
+                    text.push('\n');
+                }
+                // Blow up a dimension to the overflow-probing range.
+                5 => text = text.replace("dims=4,8,3", "dims=4,18446744073709551615,3"),
+                // An unsupported-but-parseable format name: must be None,
+                // not a constructor assert.
+                6 => text = text.replace("posit6es1", "posit64es1"),
+                // Pure binary noise.
+                _ => {
+                    text = (0..rng.below(64)).map(|_| (rng.below(256) as u8) as char).collect();
+                }
+            }
+        }
+        // The parser must return (no panic — forall catches and reports),
+        // and an accepted plan must be internally consistent.
+        if let Some(plan) = TunePlan::parse(&text) {
+            assert!(plan.dims.len() >= 2);
+            assert_eq!(plan.ir.dims(), plan.dims);
+            assert_eq!(plan.assignment.len(), plan.ir.len());
+            assert!((0.0..=1.0).contains(&plan.accuracy));
+            assert!(plan.assignment.layers().iter().all(|s| s.is_supported()));
+        }
+    });
+}
