@@ -89,7 +89,7 @@ fn main() -> anyhow::Result<()> {
             baseline * 100.0
         );
     }
-    println!("batch sizes     : {:?}…", &metrics.batch_sizes[..metrics.batch_sizes.len().min(12)]);
+    println!("batch occupancy : {:.2} rows/batch (max {})", metrics.occupancy(), metrics.max_batch);
     assert_eq!(
         metrics.served + metrics.shed + metrics.expired,
         requests,

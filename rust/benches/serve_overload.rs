@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 use deep_positron::accel::Mlp;
 use deep_positron::coordinator::experiments::Engine;
 use deep_positron::formats::FormatSpec;
+use deep_positron::obs::ObsSnapshot;
 use deep_positron::serve::{ServeEngine, ServeError, ShardConfig, ShardKey, ShardMetrics, WorkerConfig};
 use deep_positron::util::bench_log::{self, BenchLog};
 use deep_positron::util::Rng;
@@ -70,6 +71,7 @@ fn measure_capacity(mlp: &Mlp, pool: &[Vec<f64>]) -> f64 {
 
 struct OverloadRun {
     metrics: ShardMetrics,
+    snapshot: ObsSnapshot,
     submitted: usize,
     client_shed: usize,
     client_expired: usize,
@@ -120,8 +122,11 @@ fn run_overload(mlp: &Mlp, pool: &[Vec<f64>], max_queue: usize, offered_rps: f64
         }
     }
     let drain = t_drain.elapsed();
+    // Live snapshot through the exporter before shutdown tears the engine
+    // down — the same path `repro serve --obs-out` uses.
+    let snapshot = engine.observe();
     let metrics = engine.shutdown().shards.into_iter().next().expect("one shard");
-    OverloadRun { metrics, submitted, client_shed, client_expired, max_depth_seen, drain }
+    OverloadRun { metrics, snapshot, submitted, client_shed, client_expired, max_depth_seen, drain }
 }
 
 fn report(label: &str, run: &OverloadRun) {
@@ -186,6 +191,16 @@ fn main() {
         p99_b * 1e3,
         p99_u * 1e3
     );
+
+    // 5. The observability exporter agrees with the engine: one shard,
+    //    counts bounded by the final shutdown metrics (the snapshot is taken
+    //    live, just before shutdown), and a strict JSON round-trip — the
+    //    same codec `repro lint` runs over committed *.obs.json artifacts.
+    let obs = &bounded.snapshot;
+    assert_eq!(obs.shards.len(), 1, "one shard must export one entry");
+    assert!(obs.shards[0].served as usize <= bounded.metrics.served, "exporter cannot overcount served");
+    assert_eq!(ObsSnapshot::from_json(&obs.to_json()).expect("snapshot codec"), *obs);
+    assert!(obs.to_prometheus().contains("deep_positron_served_total"));
 
     // Perf trajectory: record into BENCH_serve_overload.json and gate. The
     // tolerance is deliberately loose (50%) — end-to-end serving throughput

@@ -485,7 +485,15 @@ impl DeepPositron {
         // (2 KiB total) — reused across every tile of every layer.
         let mut quires = [0i128; ROW_TILE * LANE_BLOCK];
         self.quantize_block(rows, &mut act);
+        // Per-layer wall-clock attribution (DESIGN.md §15). Feature-gated so
+        // the default build's exact zone carries zero timing overhead; the
+        // hook only reads clocks and bumps process-wide atomics — it never
+        // touches the numeric datapath.
+        #[cfg(feature = "obs-layer-timing")]
+        let mut layer_idx = 0usize;
         for lp in &self.plan {
+            #[cfg(feature = "obs-layer-timing")]
+            let layer_t0 = std::time::Instant::now();
             let lsb = lp.lut.lsb_exp();
             if !matches!(lp.kind, LayerKind::Flatten) {
                 // One decode per input element per layer — the tiles below
@@ -610,6 +618,12 @@ impl DeepPositron {
                 LayerKind::Flatten => {
                     recode_columns(lp, &act[..lp.in_dim * b], &mut next[..lp.in_dim * b]);
                 }
+            }
+            #[cfg(feature = "obs-layer-timing")]
+            {
+                let layer_ns = layer_t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                crate::obs::timing::record_layer(layer_idx, layer_ns);
+                layer_idx += 1;
             }
             std::mem::swap(&mut act, &mut next);
         }

@@ -15,7 +15,9 @@
 //!   FPGA cost model ([`hw`]), dataset generators ([`datasets`]),
 //!   quantization-error analysis ([`quant`]), a PJRT runtime that executes
 //!   the AOT artifacts ([`runtime`]), the sharded multi-worker serving
-//!   engine ([`serve`]), the mixed-precision auto-tuner ([`tune`]), and the
+//!   engine ([`serve`]), the mixed-precision auto-tuner ([`tune`]), the
+//!   observability layer — lock-free latency histograms, flight-recorder
+//!   request tracing, and a metrics snapshot exporter ([`obs`]) — and the
 //!   experiment coordinator ([`coordinator`]).
 //!
 //! Quick taste (pure-Rust path, no artifacts needed):
@@ -52,6 +54,7 @@ pub mod datasets;
 pub mod formats;
 pub mod hw;
 pub mod lint;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

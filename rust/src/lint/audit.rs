@@ -19,7 +19,12 @@
 //!   layer name, accuracy in `[0, 1]`, pruning provenance well-formedness,
 //!   and the Eq. (2) quire width of every weighted layer recomputed from
 //!   the `ir=` line — a plan whose quire cannot fit the `i128` path would
-//!   only explode at serve-compile time without this check.
+//!   only explode at serve-compile time without this check;
+//! - **obs artifacts** — dumped `*.obs.json` snapshots and `*.trace.jsonl`
+//!   flight-recorder traces re-validated against the strict exporter /
+//!   recorder codecs ([`crate::obs::ObsSnapshot::from_json`],
+//!   [`crate::obs::recorder::parse_dump`]): schema pins, exact key sets,
+//!   quantile monotonicity, and the per-event phase-sum invariant.
 
 use std::path::Path;
 
@@ -27,6 +32,8 @@ use super::{Finding, LintRule};
 use crate::accel::NetIr;
 use crate::formats::emac::DecodeLut;
 use crate::formats::{FormatSpec, MixedSpec};
+use crate::obs::recorder::parse_dump;
+use crate::obs::ObsSnapshot;
 use crate::tune::TunePlan;
 use crate::util::bench_log::BenchLog;
 
@@ -319,6 +326,27 @@ fn check_provenance(v: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Audit one dumped obs snapshot (`*.obs.json`) against the strict
+/// exporter codec: pinned schema version, exact key sets at every level,
+/// and p50 ≤ p95 ≤ p99 quantile monotonicity per shard.
+pub fn audit_obs_snapshot(rel: &str, text: &str) -> Vec<Finding> {
+    match ObsSnapshot::from_json(text) {
+        Ok(_) => Vec::new(),
+        Err(e) => vec![Finding::new(rel, 1, LintRule::ObsSnapshotInvalid, e)],
+    }
+}
+
+/// Audit one dumped flight-recorder trace (`*.trace.jsonl`) against the
+/// strict recorder codec: header schema/kind pin, exact per-event key set,
+/// and the `queue + compute + reply == total` phase-sum invariant (the
+/// codec's error message carries the offending line number).
+pub fn audit_trace_dump(rel: &str, text: &str) -> Vec<Finding> {
+    match parse_dump(text) {
+        Ok(_) => Vec::new(),
+        Err(e) => vec![Finding::new(rel, 1, LintRule::ObsTraceInvalid, e)],
+    }
+}
+
 /// Read `rel` under `root`, pushing an [`LintRule::BenchUnwired`] finding
 /// when the file that anchors bench wiring is missing entirely.
 fn read_or_finding(root: &Path, rel: &str, findings: &mut Vec<Finding>) -> Option<String> {
@@ -408,6 +436,26 @@ mod tests {
     fn cargo_bench_names_reads_only_bench_sections() {
         let cargo = "[package]\nname = \"x\"\n\n[[test]]\nname = \"serve\"\n\n[[bench]]\nname = \"batch\"\npath = \"rust/benches/batch.rs\"\n";
         assert_eq!(cargo_bench_names(cargo), vec!["batch".to_string()]);
+    }
+
+    #[test]
+    fn obs_artifact_audits_delegate_to_the_strict_codecs() {
+        let good_snap = ObsSnapshot::default().to_json();
+        assert!(audit_obs_snapshot("s.obs.json", &good_snap).is_empty());
+        let bad_schema = good_snap.replace("\"schema\": 1", "\"schema\": 99");
+        let fs = audit_obs_snapshot("s.obs.json", &bad_schema);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::ObsSnapshotInvalid);
+
+        let good_trace = "{\"schema\":1,\"kind\":\"deep-positron-trace\"}\n{\"trace\":1,\"shard\":\"a/b\",\
+                          \"worker\":0,\"rows\":2,\"queue_ns\":10,\"compute_ns\":20,\"reply_ns\":30,\
+                          \"total_ns\":60}\n";
+        assert!(audit_trace_dump("t.trace.jsonl", good_trace).is_empty());
+        let broken = good_trace.replace("\"total_ns\":60", "\"total_ns\":61");
+        let fs = audit_trace_dump("t.trace.jsonl", &broken);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::ObsTraceInvalid);
+        assert!(fs[0].message.contains("phase sum"), "{}", fs[0].message);
     }
 
     #[test]

@@ -56,6 +56,12 @@ pub enum LintRule {
     PlanQuireOverflow,
     /// A plan `pruned=` line that does not match the provenance grammar.
     PlanBadProvenance,
+    /// A dumped `*.obs.json` snapshot that fails the strict exporter codec
+    /// (schema pin, exact key sets, quantile monotonicity).
+    ObsSnapshotInvalid,
+    /// A dumped `*.trace.jsonl` flight-recorder trace that fails the strict
+    /// codec (header, key sets, or the phase-sum invariant).
+    ObsTraceInvalid,
 }
 
 impl LintRule {
@@ -72,12 +78,14 @@ impl LintRule {
             LintRule::PlanInvalid => "plan-invalid",
             LintRule::PlanQuireOverflow => "plan-quire-overflow",
             LintRule::PlanBadProvenance => "plan-bad-provenance",
+            LintRule::ObsSnapshotInvalid => "obs-snapshot-invalid",
+            LintRule::ObsTraceInvalid => "obs-trace-invalid",
         }
     }
 
     /// Inverse of [`LintRule::slug`].
     pub fn from_slug(s: &str) -> Option<LintRule> {
-        const ALL: [LintRule; 10] = [
+        const ALL: [LintRule; 12] = [
             LintRule::FloatInExactZone,
             LintRule::UnsafeOutsideAllowlist,
             LintRule::PanicOnServePath,
@@ -88,6 +96,8 @@ impl LintRule {
             LintRule::PlanInvalid,
             LintRule::PlanQuireOverflow,
             LintRule::PlanBadProvenance,
+            LintRule::ObsSnapshotInvalid,
+            LintRule::ObsTraceInvalid,
         ];
         ALL.into_iter().find(|r| r.slug() == s)
     }
@@ -166,6 +176,15 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
         let text = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
         findings.extend(audit::audit_plan(&rel, &text));
     }
+    for path in obs_files(root) {
+        let rel = rel_path(root, &path);
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+        if rel.ends_with(".obs.json") {
+            findings.extend(audit::audit_obs_snapshot(&rel, &text));
+        } else {
+            findings.extend(audit::audit_trace_dump(&rel, &text));
+        }
+    }
 
     findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
     Ok(findings)
@@ -237,6 +256,12 @@ fn check_fixture(root: &Path, path: &Path, name: &str, display: &str) -> Result<
             };
             exactness::scan_file(display, &text, zone)
         }
+    } else if name.ends_with(".obs.json") {
+        // Before the generic `.json` arm on purpose: an obs snapshot is
+        // audited by the exporter codec, not the bench-log codec.
+        audit::audit_obs_snapshot(display, &text)
+    } else if name.ends_with(".trace.jsonl") {
+        audit::audit_trace_dump(display, &text)
     } else if name.ends_with(".json") {
         let mut fs = audit::audit_bench_json(display, rest, &text);
         if expected == LintRule::OrphanBenchBaseline {
@@ -311,8 +336,21 @@ fn top_level_files(root: &Path) -> Vec<String> {
 
 /// Committed `*.plan` files: top-level plus anything under `results/`.
 fn plan_files(root: &Path) -> Vec<PathBuf> {
+    files_by_suffix(root, &[".plan"])
+}
+
+/// Dumped obs artifacts (`*.obs.json` snapshots, `*.trace.jsonl` traces):
+/// top-level plus anything under `results/`, the same sweep as plans.
+fn obs_files(root: &Path) -> Vec<PathBuf> {
+    files_by_suffix(root, &[".obs.json", ".trace.jsonl"])
+}
+
+/// Top-level files plus everything under `results/` whose name ends with
+/// one of `suffixes`, sorted for stable output.
+fn files_by_suffix(root: &Path, suffixes: &[&str]) -> Vec<PathBuf> {
+    let matches = |n: &str| suffixes.iter().any(|s| n.ends_with(s));
     let mut out: Vec<PathBuf> =
-        top_level_files(root).into_iter().filter(|n| n.ends_with(".plan")).map(|n| root.join(n)).collect();
+        top_level_files(root).into_iter().filter(|n| matches(n)).map(|n| root.join(n)).collect();
     let results = root.join("results");
     if results.is_dir() {
         let mut stack = vec![results];
@@ -321,7 +359,7 @@ fn plan_files(root: &Path) -> Vec<PathBuf> {
                 for path in entries.filter_map(|e| e.ok().map(|e| e.path())) {
                     if path.is_dir() {
                         stack.push(path);
-                    } else if path.extension().is_some_and(|x| x == "plan") {
+                    } else if path.file_name().is_some_and(|n| matches(&n.to_string_lossy())) {
                         out.push(path);
                     }
                 }
@@ -366,6 +404,8 @@ mod tests {
             "plan-invalid",
             "plan-quire-overflow",
             "plan-bad-provenance",
+            "obs-snapshot-invalid",
+            "obs-trace-invalid",
         ] {
             assert_eq!(LintRule::from_slug(slug).expect(slug).slug(), slug);
         }

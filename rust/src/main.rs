@@ -39,6 +39,9 @@ COMMANDS (one per paper artifact):
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
                                                         [--max-queue 1024] [--deadline-ms N] [--model mlp|conv]
+                                                        [--obs-out FILE] [--json]
+                 (--obs-out writes BASE.obs.json + BASE.obs.prom + BASE.trace.jsonl, §15;
+                  --json prints the machine-readable obs snapshot to stdout instead of the human report)
   lint           exactness-zone + artifact checker (§14) [--root DIR] [--corpus DIR] [--report FILE]
                  (non-zero exit on any finding; --corpus asserts every seeded fixture is caught)
   all            run every report at small scale
@@ -57,13 +60,20 @@ fn main() -> ExitCode {
     }
 }
 
-/// Parse `--key value` pairs after the subcommand.
+/// Flags that take no value (presence = true).
+const BOOL_FLAGS: [&str; 1] = ["json"];
+
+/// Parse `--key value` pairs (and bare boolean flags) after the subcommand.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let k = args[i].strip_prefix("--").map(str::to_string);
         match (k, args.get(i + 1)) {
+            (Some(k), _) if BOOL_FLAGS.contains(&k.as_str()) => {
+                flags.insert(k, "true".to_string());
+                i += 1;
+            }
             (Some(k), Some(v)) => {
                 flags.insert(k, v.clone());
                 i += 2;
@@ -261,6 +271,8 @@ fn run(args: &[String]) -> Result<()> {
             let report_ = tune::tune(&ds, &mlp, &cfg);
             let tuned_in = started.elapsed();
             eprintln!("[search completed in {:.2}s]", tuned_in.as_secs_f64());
+            let (memo_hits, memo_misses, evals_pruned) = tune::search::memo_counters();
+            eprintln!("[tuner memo: {memo_hits} hit(s), {memo_misses} miss(es), {evals_pruned} pruned move(s)]");
             if let Some(budget_s) = std::env::var("TUNE_SMOKE_BUDGET_S").ok().and_then(|v| v.parse::<f64>().ok()) {
                 let secs = tuned_in.as_secs_f64();
                 if secs > budget_s {
@@ -349,6 +361,18 @@ fn run(args: &[String]) -> Result<()> {
                 .collect();
             let engine = ServeEngine::start(shards).map_err(|e| anyhow!("serve: {e}"))?;
             let keys = engine.shard_keys();
+            // Observability outputs (DESIGN.md §15): BASE.obs.json (strict
+            // snapshot), BASE.obs.prom (Prometheus text), BASE.trace.jsonl
+            // (flight-recorder dump — also armed to fire automatically on
+            // the first shed/expiry so an overload spike self-documents).
+            let obs_base = flags.get("obs-out").map(|f| {
+                let base = f.strip_suffix(".obs.json").or_else(|| f.strip_suffix(".json")).unwrap_or(f);
+                base.to_string()
+            });
+            let trace_path = obs_base.as_ref().map(|b| std::path::PathBuf::from(format!("{b}.trace.jsonl")));
+            if let Some(path) = &trace_path {
+                engine.arm_trace_dump(path, 1);
+            }
             // Open-loop submission: the engine self-protects, so overload
             // comes back as a typed shed instead of an ever-growing queue.
             let mut rxs = Vec::with_capacity(requests);
@@ -377,6 +401,18 @@ fn run(args: &[String]) -> Result<()> {
                     }
                 }
             }
+            // Snapshot BEFORE shutdown (observe() reads the live shards),
+            // after every reply has been collected so the histograms and
+            // trace ring hold the whole run.
+            let snapshot = engine.observe();
+            if let Some(base) = &obs_base {
+                std::fs::write(format!("{base}.obs.json"), snapshot.to_json())?;
+                std::fs::write(format!("{base}.obs.prom"), snapshot.to_prometheus())?;
+                if let Some(path) = &trace_path {
+                    engine.recorder().dump_to(path)?;
+                }
+                eprintln!("[obs written to {base}.obs.json / {base}.obs.prom / {base}.trace.jsonl]");
+            }
             let metrics = engine.shutdown();
             let mut s = format!(
                 "sharded inference engine — {dataset}, {} shard(s) × {workers} worker(s), engine {:?}, \
@@ -392,7 +428,17 @@ fn run(args: &[String]) -> Result<()> {
             if answered > 0 {
                 s.push_str(&format!("served accuracy: {:.1}%\n", correct as f64 / answered as f64 * 100.0));
             }
-            emit(&format!("serve_{dataset}.md"), &s)?;
+            if flags.contains_key("json") {
+                // Machine-readable mode: stdout carries EXACTLY the strict
+                // obs snapshot JSON (the open-loop report used to interleave
+                // human text on stdout); the human report still lands in
+                // results/ for the archive.
+                let path = report::write_report(&format!("serve_{dataset}.md"), &s)?;
+                eprintln!("[written to {}]", path.display());
+                println!("{}", snapshot.to_json());
+            } else {
+                emit(&format!("serve_{dataset}.md"), &s)?;
+            }
         }
         "lint" => {
             // Static analysis (DESIGN.md §14): the exactness-zone scan plus

@@ -1,0 +1,499 @@
+//! The metrics snapshot exporter (DESIGN.md §15).
+//!
+//! [`ObsSnapshot::collect`] gathers one point-in-time view of the whole
+//! stack: per-shard serving counters + latency quantiles (from
+//! `serve::ShardMetrics`), worker-pool fan-out counters (`util::pool`),
+//! tuner memoization counters (`tune::search`), the shared decode-LUT build
+//! counter (`formats::emac::DecodeLut::shared_builds`), and any per-layer
+//! kernel timings aggregated by [`crate::obs::timing`]. It renders two
+//! ways: versioned strict JSON ([`ObsSnapshot::to_json`] /
+//! [`ObsSnapshot::from_json`], the artifact the §14 lint audit re-validates)
+//! and Prometheus-style text ([`ObsSnapshot::to_prometheus`]). `repro serve
+//! --obs-out FILE` and `ServeEngine::observe()` are the entry points;
+//! benches and the tune smoke consume the same schema so perf numbers and
+//! their phase breakdown land in one artifact.
+
+use crate::obs::recorder::{num_u64, parse_object};
+use crate::obs::timing;
+use crate::serve::ShardMetrics;
+use crate::util::bench_log::{json_string, Json};
+
+/// Snapshot schema version (bumped on any field change).
+pub const OBS_SCHEMA_VERSION: u32 = 1;
+
+/// One shard's exported counters and latency quantiles (nanoseconds).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardObs {
+    /// Shard label, `dataset/format`.
+    pub name: String,
+    /// Requests served.
+    pub served: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Deadline-expired drops.
+    pub expired: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Largest executed batch.
+    pub max_batch: u64,
+    /// Workers on the PJRT/XLA fast path.
+    pub xla_workers: u64,
+    /// Latency samples recorded (== served on a clean shutdown).
+    pub samples: u64,
+    /// Mean end-to-end latency, ns.
+    pub mean_ns: u64,
+    /// p50 end-to-end latency, ns (histogram bucket lower bound).
+    pub p50_ns: u64,
+    /// p95 end-to-end latency, ns.
+    pub p95_ns: u64,
+    /// p99 end-to-end latency, ns.
+    pub p99_ns: u64,
+}
+
+/// One layer's aggregated kernel timing row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerObs {
+    /// Layer index (see [`crate::obs::timing::MAX_LAYERS`]).
+    pub layer: u64,
+    /// Timed passes.
+    pub calls: u64,
+    /// Total nanoseconds across those passes.
+    pub total_ns: u64,
+}
+
+/// A full observability snapshot (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ObsSnapshot {
+    /// Per-shard serving counters, in engine shard order.
+    pub shards: Vec<ShardObs>,
+    /// Jobs submitted through `util::pool::WorkerPool::run`/`run_map`.
+    pub pool_jobs: u64,
+    /// Thread chunks those jobs were partitioned into.
+    pub pool_chunks: u64,
+    /// Fan-outs that ran inline on the caller (pool width 1 or single job).
+    pub pool_inline: u64,
+    /// Tuner evaluator memo hits.
+    pub tuner_memo_hits: u64,
+    /// Tuner evaluator memo misses (actual evaluations).
+    pub tuner_memo_misses: u64,
+    /// Candidate evaluations skipped by the §13 sensitivity pruner.
+    pub tuner_evals_pruned: u64,
+    /// Process-wide shared decode-LUT builds (cache fills).
+    pub lut_shared_builds: u64,
+    /// Per-layer kernel timings (empty unless the `obs-layer-timing`
+    /// feature compiled the hooks in).
+    pub layers: Vec<LayerObs>,
+}
+
+impl ObsSnapshot {
+    /// Collect a snapshot from shard metric snapshots plus the process-wide
+    /// pool / tuner / LUT / layer-timing counters.
+    pub fn collect(shards: &[ShardMetrics]) -> ObsSnapshot {
+        let (pool_jobs, pool_chunks, pool_inline) = crate::util::pool::fanout_counters();
+        let (tuner_memo_hits, tuner_memo_misses, tuner_evals_pruned) = crate::tune::search::memo_counters();
+        ObsSnapshot {
+            shards: shards.iter().map(shard_obs).collect(),
+            pool_jobs,
+            pool_chunks,
+            pool_inline,
+            tuner_memo_hits,
+            tuner_memo_misses,
+            tuner_evals_pruned,
+            lut_shared_builds: crate::formats::emac::DecodeLut::shared_builds() as u64,
+            layers: timing::layer_totals()
+                .into_iter()
+                .map(|(layer, calls, total_ns)| LayerObs { layer: layer as u64, calls, total_ns })
+                .collect(),
+        }
+    }
+
+    /// Render as canonical, versioned JSON (strict inverse:
+    /// [`ObsSnapshot::from_json`]).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {OBS_SCHEMA_VERSION},\n"));
+        out.push_str("  \"shards\": [");
+        for (i, s) in self.shards.iter().enumerate() {
+            let sep = if i + 1 < self.shards.len() { "," } else { "" };
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"served\": {}, \"shed\": {}, \"expired\": {}, \"batches\": {}, \
+                 \"max_batch\": {}, \"xla_workers\": {}, \"samples\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+                 \"p95_ns\": {}, \"p99_ns\": {}}}{sep}",
+                json_string(&s.name),
+                s.served,
+                s.shed,
+                s.expired,
+                s.batches,
+                s.max_batch,
+                s.xla_workers,
+                s.samples,
+                s.mean_ns,
+                s.p50_ns,
+                s.p95_ns,
+                s.p99_ns
+            ));
+        }
+        out.push_str(if self.shards.is_empty() { "],\n" } else { "\n  ],\n" });
+        out.push_str(&format!(
+            "  \"pool\": {{\"jobs\": {}, \"chunks\": {}, \"inline_runs\": {}}},\n",
+            self.pool_jobs, self.pool_chunks, self.pool_inline
+        ));
+        out.push_str(&format!(
+            "  \"tuner\": {{\"memo_hits\": {}, \"memo_misses\": {}, \"evals_pruned\": {}}},\n",
+            self.tuner_memo_hits, self.tuner_memo_misses, self.tuner_evals_pruned
+        ));
+        out.push_str(&format!("  \"lut_shared_builds\": {},\n", self.lut_shared_builds));
+        out.push_str("  \"layers\": [");
+        for (i, l) in self.layers.iter().enumerate() {
+            let sep = if i + 1 < self.layers.len() { "," } else { "" };
+            out.push_str(&format!(
+                "\n    {{\"layer\": {}, \"calls\": {}, \"total_ns\": {}}}{sep}",
+                l.layer, l.calls, l.total_ns
+            ));
+        }
+        out.push_str(if self.layers.is_empty() { "]\n" } else { "\n  ]\n" });
+        out.push_str("}\n");
+        out
+    }
+
+    /// Strict parse: exact key set at every level, integers only, schema
+    /// version pinned, and quantiles monotone (`p50 ≤ p95 ≤ p99`). Used by
+    /// the lint artifact audit on dumped/committed `*.obs.json`.
+    pub fn from_json(text: &str) -> Result<ObsSnapshot, String> {
+        let fields = parse_object(text)?;
+        let mut snap = ObsSnapshot::default();
+        let mut seen_schema = false;
+        let mut seen = [false; 5];
+        for (key, value) in fields {
+            match key.as_str() {
+                "schema" => {
+                    let v = num_u64(&value, "schema")?;
+                    if v != OBS_SCHEMA_VERSION as u64 {
+                        return Err(format!("unsupported obs schema {v} (expected {OBS_SCHEMA_VERSION})"));
+                    }
+                    seen_schema = true;
+                }
+                "shards" => {
+                    let Json::Arr(items) = value else {
+                        return Err("'shards' must be an array".into());
+                    };
+                    for item in items {
+                        snap.shards.push(parse_shard(item)?);
+                    }
+                    seen[0] = true;
+                }
+                "pool" => {
+                    let [jobs, chunks, inline_runs] =
+                        nested_counters(value, "pool", ["jobs", "chunks", "inline_runs"])?;
+                    snap.pool_jobs = jobs;
+                    snap.pool_chunks = chunks;
+                    snap.pool_inline = inline_runs;
+                    seen[1] = true;
+                }
+                "tuner" => {
+                    let [hits, misses, pruned] =
+                        nested_counters(value, "tuner", ["memo_hits", "memo_misses", "evals_pruned"])?;
+                    snap.tuner_memo_hits = hits;
+                    snap.tuner_memo_misses = misses;
+                    snap.tuner_evals_pruned = pruned;
+                    seen[2] = true;
+                }
+                "lut_shared_builds" => {
+                    snap.lut_shared_builds = num_u64(&value, "lut_shared_builds")?;
+                    seen[3] = true;
+                }
+                "layers" => {
+                    let Json::Arr(items) = value else {
+                        return Err("'layers' must be an array".into());
+                    };
+                    for item in items {
+                        snap.layers.push(parse_layer(item)?);
+                    }
+                    seen[4] = true;
+                }
+                other => return Err(format!("unknown obs field '{other}'")),
+            }
+        }
+        if !seen_schema {
+            return Err("missing 'schema'".into());
+        }
+        const NAMES: [&str; 5] = ["shards", "pool", "tuner", "lut_shared_builds", "layers"];
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!("missing obs field '{}'", NAMES[missing]));
+        }
+        Ok(snap)
+    }
+
+    /// Render as Prometheus-style exposition text (counters and gauges with
+    /// `shard`/`quantile`/`layer` labels).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (metric, help, pick) in SHARD_COUNTERS {
+            out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} counter\n"));
+            for s in &self.shards {
+                out.push_str(&format!("{metric}{{shard={}}} {}\n", json_string(&s.name), pick(s)));
+            }
+        }
+        out.push_str(
+            "# HELP deep_positron_latency_ns End-to-end latency quantiles (histogram bucket lower bounds).\n\
+             # TYPE deep_positron_latency_ns gauge\n",
+        );
+        for s in &self.shards {
+            for (q, v) in [("0.5", s.p50_ns), ("0.95", s.p95_ns), ("0.99", s.p99_ns)] {
+                out.push_str(&format!(
+                    "deep_positron_latency_ns{{shard={},quantile=\"{q}\"}} {v}\n",
+                    json_string(&s.name)
+                ));
+            }
+        }
+        for (metric, help, v) in [
+            ("deep_positron_pool_jobs", "Jobs submitted to the worker pool.", self.pool_jobs),
+            ("deep_positron_pool_chunks", "Thread chunks the pool fanned jobs into.", self.pool_chunks),
+            ("deep_positron_pool_inline_runs", "Pool fan-outs that ran inline.", self.pool_inline),
+            ("deep_positron_tuner_memo_hits", "Tuner evaluator memo hits.", self.tuner_memo_hits),
+            ("deep_positron_tuner_memo_misses", "Tuner evaluator memo misses.", self.tuner_memo_misses),
+            ("deep_positron_tuner_evals_pruned", "Tuner evaluations skipped by pruning.", self.tuner_evals_pruned),
+            ("deep_positron_lut_shared_builds", "Shared decode-LUT cache fills.", self.lut_shared_builds),
+        ] {
+            out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} counter\n{metric} {v}\n"));
+        }
+        if !self.layers.is_empty() {
+            out.push_str(
+                "# HELP deep_positron_layer_ns Batched-kernel time per layer (obs-layer-timing feature).\n\
+                 # TYPE deep_positron_layer_ns counter\n",
+            );
+            for l in &self.layers {
+                out.push_str(&format!("deep_positron_layer_ns{{layer=\"{}\"}} {}\n", l.layer, l.total_ns));
+            }
+        }
+        out
+    }
+}
+
+type ShardPick = fn(&ShardObs) -> u64;
+const SHARD_COUNTERS: [(&str, &str, ShardPick); 6] = [
+    ("deep_positron_served_total", "Requests served.", |s| s.served),
+    ("deep_positron_shed_total", "Requests shed at admission.", |s| s.shed),
+    ("deep_positron_expired_total", "Deadline-expired drops.", |s| s.expired),
+    ("deep_positron_batches_total", "Batches executed.", |s| s.batches),
+    ("deep_positron_xla_workers", "Workers on the XLA fast path.", |s| s.xla_workers),
+    ("deep_positron_latency_samples", "Latency samples recorded.", |s| s.samples),
+];
+
+fn shard_obs(m: &ShardMetrics) -> ShardObs {
+    ShardObs {
+        name: m.shard.clone(),
+        served: m.served as u64,
+        shed: m.shed as u64,
+        expired: m.expired as u64,
+        batches: m.batches as u64,
+        max_batch: m.max_batch as u64,
+        xla_workers: m.xla_workers as u64,
+        samples: m.latency.count(),
+        mean_ns: m.latency.mean_ns(),
+        p50_ns: m.latency.quantile_ns(50.0),
+        p95_ns: m.latency.quantile_ns(95.0),
+        p99_ns: m.latency.quantile_ns(99.0),
+    }
+}
+
+fn parse_shard(item: Json) -> Result<ShardObs, String> {
+    let Json::Obj(fields) = item else {
+        return Err("shard entry must be an object".into());
+    };
+    let mut s = ShardObs::default();
+    let mut seen = [false; 12];
+    const NAMES: [&str; 12] = [
+        "name",
+        "served",
+        "shed",
+        "expired",
+        "batches",
+        "max_batch",
+        "xla_workers",
+        "samples",
+        "mean_ns",
+        "p50_ns",
+        "p95_ns",
+        "p99_ns",
+    ];
+    for (key, value) in fields {
+        let slot = NAMES
+            .iter()
+            .position(|n| *n == key.as_str())
+            .ok_or_else(|| format!("unknown shard field '{key}'"))?;
+        if seen[slot] {
+            return Err(format!("duplicate shard field '{key}'"));
+        }
+        seen[slot] = true;
+        if slot == 0 {
+            let Json::Str(name) = value else {
+                return Err("shard 'name' must be a string".into());
+            };
+            s.name = name;
+        } else {
+            let v = num_u64(&value, &key)?;
+            match slot {
+                1 => s.served = v,
+                2 => s.shed = v,
+                3 => s.expired = v,
+                4 => s.batches = v,
+                5 => s.max_batch = v,
+                6 => s.xla_workers = v,
+                7 => s.samples = v,
+                8 => s.mean_ns = v,
+                9 => s.p50_ns = v,
+                10 => s.p95_ns = v,
+                _ => s.p99_ns = v,
+            }
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&b| !b) {
+        return Err(format!("shard entry missing '{}'", NAMES[missing]));
+    }
+    if !(s.p50_ns <= s.p95_ns && s.p95_ns <= s.p99_ns) {
+        return Err(format!(
+            "shard '{}' quantiles not monotone: p50 {} p95 {} p99 {}",
+            s.name, s.p50_ns, s.p95_ns, s.p99_ns
+        ));
+    }
+    Ok(s)
+}
+
+/// Strict parse of a nested `{a: u64, b: u64, c: u64}` counter object with
+/// exactly `keys` (the `pool` / `tuner` sections).
+fn nested_counters(value: Json, ctx: &str, keys: [&str; 3]) -> Result<[u64; 3], String> {
+    let Json::Obj(fields) = value else {
+        return Err(format!("'{ctx}' must be an object"));
+    };
+    let mut out = [0u64; 3];
+    let mut seen = [false; 3];
+    for (key, v) in fields {
+        let slot = keys
+            .iter()
+            .position(|k| *k == key.as_str())
+            .ok_or_else(|| format!("unknown {ctx} field '{key}'"))?;
+        if seen[slot] {
+            return Err(format!("duplicate {ctx} field '{key}'"));
+        }
+        seen[slot] = true;
+        out[slot] = num_u64(&v, &key)?;
+    }
+    if let Some(missing) = seen.iter().position(|&b| !b) {
+        return Err(format!("{ctx} missing '{}'", keys[missing]));
+    }
+    Ok(out)
+}
+
+fn parse_layer(item: Json) -> Result<LayerObs, String> {
+    let Json::Obj(fields) = item else {
+        return Err("layer entry must be an object".into());
+    };
+    let mut l = LayerObs { layer: 0, calls: 0, total_ns: 0 };
+    let mut seen = [false; 3];
+    for (key, value) in fields {
+        let slot = match key.as_str() {
+            "layer" => 0,
+            "calls" => 1,
+            "total_ns" => 2,
+            other => return Err(format!("unknown layer field '{other}'")),
+        };
+        if seen[slot] {
+            return Err(format!("duplicate layer field '{key}'"));
+        }
+        seen[slot] = true;
+        let v = num_u64(&value, &key)?;
+        match slot {
+            0 => l.layer = v,
+            1 => l.calls = v,
+            _ => l.total_ns = v,
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&b| !b) {
+        const NAMES: [&str; 3] = ["layer", "calls", "total_ns"];
+        return Err(format!("layer entry missing '{}'", NAMES[missing]));
+    }
+    if l.calls == 0 {
+        return Err("layer entry with zero calls must be omitted".into());
+    }
+    Ok(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ObsSnapshot {
+        ObsSnapshot {
+            shards: vec![ShardObs {
+                name: "iris/posit8es0".into(),
+                served: 10,
+                shed: 2,
+                expired: 1,
+                batches: 3,
+                max_batch: 4,
+                xla_workers: 0,
+                samples: 10,
+                mean_ns: 1500,
+                p50_ns: 1000,
+                p95_ns: 3000,
+                p99_ns: 3000,
+            }],
+            pool_jobs: 7,
+            pool_chunks: 3,
+            pool_inline: 2,
+            tuner_memo_hits: 5,
+            tuner_memo_misses: 9,
+            tuner_evals_pruned: 4,
+            lut_shared_builds: 2,
+            layers: vec![LayerObs { layer: 0, calls: 3, total_ns: 900 }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let s = sample();
+        assert_eq!(ObsSnapshot::from_json(&s.to_json()).unwrap(), s);
+        let empty = ObsSnapshot::default();
+        assert_eq!(ObsSnapshot::from_json(&empty.to_json()).unwrap(), empty);
+    }
+
+    #[test]
+    fn parser_is_strict() {
+        let s = sample();
+        let good = s.to_json();
+        assert!(ObsSnapshot::from_json(&good.replace("\"schema\": 1", "\"schema\": 9")).is_err());
+        assert!(ObsSnapshot::from_json(&good.replace("\"pool\"", "\"poool\"")).is_err());
+        let non_monotone = good.replace("\"p99_ns\": 3000", "\"p99_ns\": 10");
+        assert!(ObsSnapshot::from_json(&non_monotone).is_err(), "non-monotone quantiles must be rejected");
+        assert!(ObsSnapshot::from_json("{}").is_err());
+        assert!(ObsSnapshot::from_json(&good.replace("\"served\": 10, ", "")).is_err());
+    }
+
+    #[test]
+    fn prometheus_text_has_all_families() {
+        let text = sample().to_prometheus();
+        for needle in [
+            "deep_positron_served_total{shard=\"iris/posit8es0\"} 10",
+            "deep_positron_latency_ns{shard=\"iris/posit8es0\",quantile=\"0.99\"} 3000",
+            "deep_positron_pool_jobs 7",
+            "deep_positron_tuner_memo_hits 5",
+            "deep_positron_lut_shared_builds 2",
+            "deep_positron_layer_ns{layer=\"0\"} 900",
+        ] {
+            assert!(text.contains(needle), "missing {needle}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn collect_reads_process_counters() {
+        let m = crate::serve::ShardMetrics { shard: "t/x".into(), served: 3, ..Default::default() };
+        let snap = ObsSnapshot::collect(&[m]);
+        assert_eq!(snap.shards.len(), 1);
+        assert_eq!(snap.shards[0].served, 3);
+        // Process-wide counters are monotone; collect again and compare.
+        let again = ObsSnapshot::collect(&[]);
+        assert!(again.pool_jobs >= snap.pool_jobs);
+    }
+}

@@ -1,0 +1,284 @@
+//! Lock-free log-linear latency histograms (DESIGN.md §15).
+//!
+//! A [`LogHistogram`] is a fixed array of atomic `u64` bucket counters over
+//! nanosecond values: the first [`SUB_BUCKETS`] buckets are exact (width 1),
+//! and every octave above that is split into [`SUB_BUCKETS`] linear
+//! sub-buckets, so the recorded value is always within one part in
+//! `SUB_BUCKETS` of its bucket's lower bound. Recording is a single relaxed
+//! `fetch_add` — no locks, no allocation, O(1) memory no matter how many
+//! samples land — and two histograms built from the same sample multiset are
+//! bit-identical regardless of thread interleaving, because relaxed integer
+//! adds commute.
+//!
+//! Quantile extraction mirrors `util::stats::percentile`'s ceil-based
+//! nearest-rank semantics exactly (`rank = ⌈p/100 · n⌉`, clamped to
+//! `[1, n]`): walk the cumulative bucket counts to the bucket holding that
+//! rank and report its lower bound. For samples below [`SUB_BUCKETS`]·2 the
+//! answer is exact; above that it understates the true sample by at most one
+//! bucket's width (relative error ≤ 1/[`SUB_BUCKETS`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// log2 of the linear sub-bucket count per octave.
+pub const SUB_BUCKET_BITS: u32 = 4;
+
+/// Linear sub-buckets per octave: bucketing relative error is `1/SUB_BUCKETS`.
+pub const SUB_BUCKETS: usize = 1 << SUB_BUCKET_BITS;
+
+/// Total bucket count — covers the full `u64` nanosecond range.
+/// `u64::MAX` lands in bucket `(63 - SUB_BUCKET_BITS + 1) · SUB_BUCKETS + (SUB_BUCKETS - 1) = 975`.
+pub const NUM_BUCKETS: usize = (64 - SUB_BUCKET_BITS as usize + 1) * SUB_BUCKETS;
+
+/// Bucket index for a nanosecond value (log-linear; monotone in `v`).
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        v as usize
+    } else {
+        let h = 63 - v.leading_zeros(); // floor(log2 v) >= SUB_BUCKET_BITS
+        let sub = ((v >> (h - SUB_BUCKET_BITS)) as usize) & (SUB_BUCKETS - 1);
+        (h - SUB_BUCKET_BITS + 1) as usize * SUB_BUCKETS + sub
+    }
+}
+
+/// Smallest nanosecond value that lands in bucket `idx` (the value a
+/// quantile query reports for that bucket).
+pub fn bucket_low(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        idx as u64
+    } else {
+        let h = (idx / SUB_BUCKETS - 1) as u32 + SUB_BUCKET_BITS;
+        let sub = (idx % SUB_BUCKETS) as u64;
+        (SUB_BUCKETS as u64 + sub) << (h - SUB_BUCKET_BITS)
+    }
+}
+
+/// Width of bucket `idx` in nanoseconds: every sample in the bucket is within
+/// `bucket_width(idx) - 1` of [`bucket_low`]`(idx)`.
+pub fn bucket_width(idx: usize) -> u64 {
+    if idx < SUB_BUCKETS {
+        1
+    } else {
+        let h = (idx / SUB_BUCKETS - 1) as u32 + SUB_BUCKET_BITS;
+        1u64 << (h - SUB_BUCKET_BITS)
+    }
+}
+
+/// A bounded, mergeable, lock-free latency histogram (see module docs).
+///
+/// Memory is a fixed ~7.6 KiB of atomic counters regardless of sample count
+/// — this is what replaces the serving engine's unbounded `Vec<f64>` latency
+/// logs (the ISSUE-9 leak fix).
+pub struct LogHistogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // const used only as an array initializer
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self { buckets: [ZERO; NUM_BUCKETS], count: AtomicU64::new(0), sum_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one nanosecond sample (relaxed; safe from any thread).
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record a [`Duration`] sample, saturating at `u64::MAX` nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram into this one (bucket-wise add — associative
+    /// and commutative, so shard-level merges are order-independent).
+    pub fn merge(&self, other: &LogHistogram) {
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = o.load(Ordering::Relaxed);
+            if n != 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// An owned point-in-time copy of the counters (the type embedded in
+    /// `serve::ShardMetrics` snapshots).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        HistSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Nearest-rank quantile in nanoseconds (see module docs); 0 when empty.
+    pub fn quantile_ns(&self, p: f64) -> u64 {
+        self.snapshot().quantile_ns(p)
+    }
+}
+
+/// A plain (non-atomic) copy of a [`LogHistogram`]'s counters: `Clone` +
+/// `Default` + `PartialEq`, so metric snapshots stay value types.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+}
+
+impl HistSnapshot {
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded nanoseconds (wrapping only past ~584 years of it).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Mean sample in nanoseconds; 0 when empty.
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+
+    /// Number of bucket slots held (fixed at [`NUM_BUCKETS`] once any sample
+    /// has been recorded — the O(1)-memory regression tests key on this).
+    pub fn len_buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Nearest-rank quantile in nanoseconds, matching
+    /// `util::stats::percentile`'s `⌈p/100 · n⌉` rank semantics on the
+    /// multiset of bucket lower bounds; 0 when empty.
+    pub fn quantile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &n) in self.counts.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_low(idx);
+            }
+        }
+        // Unreachable when counts sum to `count`; fall back to the top bucket.
+        bucket_low(NUM_BUCKETS - 1)
+    }
+
+    /// Nearest-rank quantile in (approximate) seconds; 0.0 when empty.
+    pub fn quantile_secs(&self, p: f64) -> f64 {
+        self.quantile_ns(p) as f64 * 1e-9
+    }
+
+    /// Fold another snapshot into this one (bucket-wise add).
+    pub fn merge_from(&mut self, other: &HistSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (b, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.wrapping_add(other.sum_ns);
+    }
+
+    /// Non-empty `(bucket_low, count)` pairs, ascending — the trace/export
+    /// codecs serialize this sparse view.
+    pub fn nonzero(&self) -> Vec<(u64, u64)> {
+        self.counts.iter().enumerate().filter(|(_, &n)| n != 0).map(|(i, &n)| (bucket_low(i), n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_inverts() {
+        let mut prev = 0usize;
+        for v in 0..4096u64 {
+            let idx = bucket_of(v);
+            assert!(idx >= prev, "index not monotone at {v}");
+            prev = idx;
+            let low = bucket_low(idx);
+            let w = bucket_width(idx);
+            assert!(low <= v && v < low + w, "v={v} idx={idx} low={low} w={w}");
+        }
+        assert_eq!(bucket_of(u64::MAX), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = LogHistogram::new();
+        for v in [0u64, 1, 7, 15, 16, 31] {
+            h.record(v);
+        }
+        // Values below 2·SUB_BUCKETS sit in width-1 buckets: quantiles are exact.
+        assert_eq!(h.snapshot().quantile_ns(100.0), 31);
+        assert_eq!(h.snapshot().quantile_ns(1.0), 0);
+    }
+
+    #[test]
+    fn quantile_matches_nearest_rank_on_bucket_lows() {
+        let h = LogHistogram::new();
+        let samples: Vec<u64> = (0..100).map(|i| (i * 37 + 11) % 5000).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        let snap = h.snapshot();
+        let mut lows: Vec<f64> = samples.iter().map(|&s| bucket_low(bucket_of(s)) as f64).collect();
+        lows.sort_by(f64::total_cmp);
+        for p in [1.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            let rank = ((p / 100.0) * lows.len() as f64).ceil() as usize;
+            let expect = lows[rank.saturating_sub(1).min(lows.len() - 1)] as u64;
+            assert_eq!(snap.quantile_ns(p), expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = LogHistogram::new();
+        let b = LogHistogram::new();
+        a.record(100);
+        b.record(200);
+        b.record(300);
+        a.merge(&b);
+        let snap = a.snapshot();
+        assert_eq!(snap.count(), 3);
+        assert_eq!(snap.sum_ns(), 600);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let snap = LogHistogram::new().snapshot();
+        assert_eq!(snap.quantile_ns(50.0), 0);
+        assert_eq!(snap.mean_ns(), 0);
+        assert_eq!(HistSnapshot::default().quantile_ns(99.0), 0);
+    }
+}

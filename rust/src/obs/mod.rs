@@ -1,0 +1,31 @@
+//! Observability for the serving + tuning stack (DESIGN.md §15).
+//!
+//! Three pillars, all zero-dependency and bounded-memory:
+//!
+//! * [`hist`] — lock-free log-linear latency histograms: fixed atomic
+//!   buckets, mergeable, with nearest-rank quantile extraction consistent
+//!   with `util::stats::percentile`. These replace the serving engine's
+//!   unbounded latency sample vectors and its `Mutex<ShardMetrics>` hot-path
+//!   locks (see `serve::ShardStats`).
+//! * [`recorder`] — per-request trace ids and the fixed-capacity
+//!   flight-recorder ring buffer: each served request leaves a per-phase
+//!   nanosecond breakdown (queue → compute → reply, telescoping exactly to
+//!   the end-to-end total), and the ring dumps itself as a strict-schema
+//!   JSONL snapshot when shed/expired counters spike. [`timing`] adds
+//!   optional (`obs-layer-timing` feature) per-layer kernel attribution.
+//! * [`export`] — the snapshot exporter: engine + pool + tuner + LUT-cache
+//!   counters rendered as versioned strict JSON and Prometheus-style text,
+//!   via `ServeEngine::observe()` and `repro serve --obs-out FILE`.
+//!
+//! This module is deliberately outside the serve-path lint zone: everything
+//! it is handed is already counted, and every lock it takes (the recorder
+//! ring) is poison-tolerant — an observer never becomes a failure source.
+
+pub mod export;
+pub mod hist;
+pub mod recorder;
+pub mod timing;
+
+pub use export::{ObsSnapshot, OBS_SCHEMA_VERSION};
+pub use hist::{HistSnapshot, LogHistogram};
+pub use recorder::{FlightRecorder, TraceEvent, TraceId, TRACE_SCHEMA_VERSION};

@@ -1,0 +1,440 @@
+//! Request tracing and the flight-recorder ring buffer (DESIGN.md §15).
+//!
+//! Every accepted request carries a process-unique [`TraceId`] from
+//! `ServeEngine::submit*` through admission, the batcher's deadline heap,
+//! flush, batched EMAC execution, and the reply send. The worker records one
+//! [`TraceEvent`] per served request — a per-phase nanosecond breakdown whose
+//! phases telescope exactly (`queue + compute + reply == total` by
+//! construction, because all four are differences of the same monotonic
+//! anchor instants) — into a fixed-capacity [`FlightRecorder`] ring.
+//!
+//! The ring holds the most recent `capacity` events and never allocates past
+//! it. When the engine's shed/expired drop counter crosses an armed
+//! threshold (an overload spike — exactly the moment the recent history is
+//! worth keeping), the recorder dumps itself once as a JSONL trace snapshot:
+//! one strict-schema header line, then one event object per line, written by
+//! the same hand-rolled codec family as `util::bench_log` and re-validated
+//! by `repro lint`'s artifact audit.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::bench_log::{json_string, Json};
+
+/// Trace dump schema version (bumped on any line-format change).
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// The `kind` tag every trace dump header carries.
+pub const TRACE_KIND: &str = "deep-positron-trace";
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// A process-unique request identifier, allocated at submit time and
+/// threaded through every serving phase to the reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// Allocate the next id (a relaxed counter — cheap enough for the
+    /// admission hot path).
+    pub fn next() -> TraceId {
+        TraceId(NEXT_TRACE.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// One served request's per-phase timing breakdown.
+///
+/// Invariant (enforced by the codec and the lint audit):
+/// `queue_ns + compute_ns + reply_ns == total_ns`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// The request's [`TraceId`].
+    pub trace: u64,
+    /// Owning shard's key name (e.g. `iris/posit8es0`).
+    pub shard: String,
+    /// Worker index within the shard.
+    pub worker: u64,
+    /// Rows in the batch this request was flushed with.
+    pub rows: u64,
+    /// Submit → batch flush (admission + channel + deadline-heap wait).
+    pub queue_ns: u64,
+    /// Batch flush → batched EMAC inference complete (shared by the batch).
+    pub compute_ns: u64,
+    /// Inference complete → this request's reply sent.
+    pub reply_ns: u64,
+    /// Submit → reply sent (always the exact phase sum).
+    pub total_ns: u64,
+}
+
+impl TraceEvent {
+    /// Render as one JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        format!(
+            "{{\"trace\":{},\"shard\":{},\"worker\":{},\"rows\":{},\"queue_ns\":{},\"compute_ns\":{},\
+             \"reply_ns\":{},\"total_ns\":{}}}",
+            self.trace,
+            json_string(&self.shard),
+            self.worker,
+            self.rows,
+            self.queue_ns,
+            self.compute_ns,
+            self.reply_ns,
+            self.total_ns
+        )
+    }
+
+    /// Strict inverse of [`TraceEvent::to_line`]: every key required, no
+    /// unknown keys, integers only, and the phase-sum invariant must hold.
+    pub fn parse_line(line: &str) -> Result<TraceEvent, String> {
+        let fields = parse_object(line)?;
+        let mut ev = TraceEvent {
+            trace: 0,
+            shard: String::new(),
+            worker: 0,
+            rows: 0,
+            queue_ns: 0,
+            compute_ns: 0,
+            reply_ns: 0,
+            total_ns: 0,
+        };
+        let mut seen = [false; 8];
+        for (key, value) in fields {
+            let slot = match key.as_str() {
+                "trace" => {
+                    ev.trace = num_u64(&value, "trace")?;
+                    0
+                }
+                "shard" => {
+                    ev.shard = match value {
+                        Json::Str(s) => s,
+                        _ => return Err("field 'shard' must be a string".into()),
+                    };
+                    1
+                }
+                "worker" => {
+                    ev.worker = num_u64(&value, "worker")?;
+                    2
+                }
+                "rows" => {
+                    ev.rows = num_u64(&value, "rows")?;
+                    3
+                }
+                "queue_ns" => {
+                    ev.queue_ns = num_u64(&value, "queue_ns")?;
+                    4
+                }
+                "compute_ns" => {
+                    ev.compute_ns = num_u64(&value, "compute_ns")?;
+                    5
+                }
+                "reply_ns" => {
+                    ev.reply_ns = num_u64(&value, "reply_ns")?;
+                    6
+                }
+                "total_ns" => {
+                    ev.total_ns = num_u64(&value, "total_ns")?;
+                    7
+                }
+                other => return Err(format!("unknown trace field '{other}'")),
+            };
+            if seen[slot] {
+                return Err(format!("duplicate trace field '{key}'"));
+            }
+            seen[slot] = true;
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            const NAMES: [&str; 8] =
+                ["trace", "shard", "worker", "rows", "queue_ns", "compute_ns", "reply_ns", "total_ns"];
+            return Err(format!("missing trace field '{}'", NAMES[missing]));
+        }
+        let sum = ev
+            .queue_ns
+            .checked_add(ev.compute_ns)
+            .and_then(|s| s.checked_add(ev.reply_ns))
+            .ok_or("phase nanoseconds overflow u64")?;
+        if sum != ev.total_ns {
+            return Err(format!(
+                "phase sum {} (queue {} + compute {} + reply {}) != total_ns {}",
+                sum, ev.queue_ns, ev.compute_ns, ev.reply_ns, ev.total_ns
+            ));
+        }
+        if ev.rows == 0 {
+            return Err("rows must be >= 1 (an event records a served request)".into());
+        }
+        Ok(ev)
+    }
+}
+
+/// Render a full dump: header line, then one line per event.
+pub fn dump_to_string(events: &[TraceEvent]) -> String {
+    let mut out = format!("{{\"schema\":{TRACE_SCHEMA_VERSION},\"kind\":{}}}\n", json_string(TRACE_KIND));
+    for ev in events {
+        out.push_str(&ev.to_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// Strict inverse of [`dump_to_string`]: validates the header (schema +
+/// kind), every event line, and each line's phase-sum invariant. This is
+/// what the §14 lint artifact audit calls on committed/dumped traces.
+pub fn parse_dump(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty trace dump (missing header line)")?;
+    let fields = parse_object(header)?;
+    let mut schema = None;
+    let mut kind = None;
+    for (key, value) in fields {
+        match key.as_str() {
+            "schema" => schema = Some(num_u64(&value, "schema")?),
+            "kind" => {
+                kind = Some(match value {
+                    Json::Str(s) => s,
+                    _ => return Err("header 'kind' must be a string".into()),
+                })
+            }
+            other => return Err(format!("unknown header field '{other}'")),
+        }
+    }
+    match schema {
+        Some(v) if v == TRACE_SCHEMA_VERSION as u64 => {}
+        Some(v) => return Err(format!("unsupported trace schema {v} (expected {TRACE_SCHEMA_VERSION})")),
+        None => return Err("header missing 'schema'".into()),
+    }
+    match kind.as_deref() {
+        Some(TRACE_KIND) => {}
+        Some(k) => return Err(format!("unexpected trace kind '{k}'")),
+        None => return Err("header missing 'kind'".into()),
+    }
+    let mut events = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            return Err(format!("blank line {} inside trace dump", i + 2));
+        }
+        events.push(TraceEvent::parse_line(line).map_err(|e| format!("line {}: {e}", i + 2))?);
+    }
+    Ok(events)
+}
+
+/// Parse one line as a strict JSON object and return its fields (shared
+/// with the `obs::export` snapshot codec).
+pub(crate) fn parse_object(line: &str) -> Result<Vec<(String, Json)>, String> {
+    match Json::parse(line).map_err(|e| e.to_string())? {
+        Json::Obj(fields) => Ok(fields),
+        _ => Err("expected a JSON object".into()),
+    }
+}
+
+/// Require an integral, non-negative, exactly-representable number.
+pub(crate) fn num_u64(v: &Json, key: &str) -> Result<u64, String> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => Ok(*n as u64),
+        Json::Num(_) => Err(format!("field '{key}' must be a non-negative integer within 2^53")),
+        _ => Err(format!("field '{key}' must be a number")),
+    }
+}
+
+/// Ring state behind the recorder's single short lock (taken once per
+/// flushed batch, off the admission path — see module docs).
+struct Ring {
+    buf: Vec<Option<TraceEvent>>,
+    next: usize,
+    total: u64,
+}
+
+/// The fixed-capacity flight recorder: keeps the most recent trace events
+/// and dumps them as JSONL when the drop counter spikes.
+pub struct FlightRecorder {
+    inner: Mutex<Ring>,
+    capacity: usize,
+    drops: AtomicU64,
+    dump_threshold: AtomicU64,
+    dumped: AtomicBool,
+    dump_path: Mutex<Option<PathBuf>>,
+}
+
+impl FlightRecorder {
+    /// Recorder holding the most recent `capacity` events (min 1).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            inner: Mutex::new(Ring { buf: vec![None; capacity], next: 0, total: 0 }),
+            capacity,
+            drops: AtomicU64::new(0),
+            dump_threshold: AtomicU64::new(0),
+            dumped: AtomicBool::new(false),
+            dump_path: Mutex::new(None),
+        }
+    }
+
+    /// Maximum events retained.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record a batch of events (one short lock per flushed batch). A
+    /// poisoned lock silently drops the batch — the recorder is an
+    /// observer, never a failure source.
+    pub fn push_batch(&self, events: &[TraceEvent]) {
+        if events.is_empty() {
+            return;
+        }
+        if let Ok(mut ring) = self.inner.lock() {
+            for ev in events {
+                let slot = ring.next;
+                ring.buf[slot] = Some(ev.clone());
+                ring.next = (ring.next + 1) % self.capacity;
+                ring.total += 1;
+            }
+        }
+    }
+
+    /// Total events ever recorded (recent `capacity` of them retained).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().map(|r| r.total).unwrap_or(0)
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let Ok(ring) = self.inner.lock() else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(self.capacity);
+        for i in 0..self.capacity {
+            if let Some(ev) = &ring.buf[(ring.next + i) % self.capacity] {
+                out.push(ev.clone());
+            }
+        }
+        out
+    }
+
+    /// Arm the spike dump: once `threshold` total sheds/expiries have been
+    /// noted via [`FlightRecorder::note_drop`], the retained events are
+    /// written to `path` exactly once. `threshold` 0 disarms.
+    pub fn arm_dump(&self, path: &Path, threshold: u64) {
+        if let Ok(mut p) = self.dump_path.lock() {
+            *p = Some(path.to_path_buf());
+        }
+        self.dump_threshold.store(threshold, Ordering::Relaxed);
+        self.dumped.store(false, Ordering::Relaxed);
+    }
+
+    /// Note one shed or expired request. Called from the serve hot path:
+    /// one relaxed `fetch_add`, plus the one-shot dump on the arming
+    /// threshold's exact crossing.
+    pub fn note_drop(&self) {
+        let n = self.drops.fetch_add(1, Ordering::Relaxed) + 1;
+        let threshold = self.dump_threshold.load(Ordering::Relaxed);
+        if threshold != 0 && n >= threshold && !self.dumped.swap(true, Ordering::Relaxed) {
+            let path = self.dump_path.lock().ok().and_then(|p| p.clone());
+            if let Some(path) = path {
+                let _ = self.dump_to(&path);
+            }
+        }
+    }
+
+    /// Sheds/expiries noted so far.
+    pub fn drops(&self) -> u64 {
+        self.drops.load(Ordering::Relaxed)
+    }
+
+    /// True once the armed spike dump has fired.
+    pub fn spike_dumped(&self) -> bool {
+        self.dumped.load(Ordering::Relaxed)
+    }
+
+    /// Render the retained events as a JSONL dump string.
+    pub fn dump_string(&self) -> String {
+        dump_to_string(&self.events())
+    }
+
+    /// Write the retained events to `path` (manual dump; the CLI calls this
+    /// at end of run so every `--obs-out` session leaves a trace).
+    pub fn dump_to(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.dump_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace: u64, q: u64, c: u64, r: u64) -> TraceEvent {
+        TraceEvent {
+            trace,
+            shard: "iris/posit8es0".into(),
+            worker: 0,
+            rows: 4,
+            queue_ns: q,
+            compute_ns: c,
+            reply_ns: r,
+            total_ns: q + c + r,
+        }
+    }
+
+    #[test]
+    fn line_round_trips() {
+        let e = ev(7, 1200, 3400, 56);
+        assert_eq!(TraceEvent::parse_line(&e.to_line()).unwrap(), e);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        let good = ev(1, 10, 20, 30);
+        let mut broken = good.clone();
+        broken.total_ns += 1;
+        assert!(TraceEvent::parse_line(&broken.to_line()).unwrap_err().contains("phase sum"));
+        assert!(TraceEvent::parse_line("{\"trace\":1}").unwrap_err().contains("missing"));
+        let with_extra = good.to_line().replace("\"total_ns\"", "\"junk\":0,\"total_ns\"");
+        assert!(TraceEvent::parse_line(&with_extra).unwrap_err().contains("unknown"));
+        assert!(TraceEvent::parse_line("{\"trace\":1.5}").is_err());
+    }
+
+    #[test]
+    fn dump_round_trips_and_checks_header() {
+        let events = vec![ev(1, 1, 2, 3), ev(2, 4, 5, 6)];
+        let text = dump_to_string(&events);
+        assert_eq!(parse_dump(&text).unwrap(), events);
+        assert!(parse_dump("").is_err());
+        assert!(parse_dump("{\"schema\":99,\"kind\":\"deep-positron-trace\"}\n").is_err());
+        assert!(parse_dump("{\"schema\":1,\"kind\":\"other\"}\n").is_err());
+    }
+
+    #[test]
+    fn ring_keeps_latest_in_order() {
+        let rec = FlightRecorder::new(4);
+        for i in 0..10 {
+            rec.push_batch(&[ev(i, 1, 2, 3)]);
+        }
+        let kept = rec.events();
+        assert_eq!(kept.len(), 4);
+        assert_eq!(kept.iter().map(|e| e.trace).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(rec.total_recorded(), 10);
+    }
+
+    #[test]
+    fn spike_dump_fires_once_at_threshold() {
+        let dir = std::env::temp_dir().join(format!("obs_rec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spike.trace.jsonl");
+        let rec = FlightRecorder::new(8);
+        rec.push_batch(&[ev(1, 1, 2, 3)]);
+        rec.arm_dump(&path, 3);
+        rec.note_drop();
+        rec.note_drop();
+        assert!(!path.exists());
+        rec.note_drop();
+        assert!(rec.spike_dumped());
+        let dumped = parse_dump(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(dumped.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_ids_are_unique() {
+        let a = TraceId::next();
+        let b = TraceId::next();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,62 @@
+//! Process-wide per-layer kernel timing aggregation (DESIGN.md §15).
+//!
+//! The batched EMAC kernel in `accel::positron` carries `cfg`-gated hooks
+//! (cargo feature `obs-layer-timing`) that time each `LayerPlan`'s pass over
+//! a batch and feed the elapsed nanoseconds here. The aggregation arrays are
+//! always compiled — fixed atomic counters, no allocation — so the exporter
+//! can render them unconditionally; without the feature they simply stay
+//! zero and the snapshot's `layers` section is empty. The hooks themselves
+//! are integer-only (`Instant` differences), so enabling them never
+//! perturbs the exact zone's arithmetic.
+//!
+//! Counters aggregate across every compiled network in the process, keyed by
+//! layer index; deeper layers than [`MAX_LAYERS`] fold into the last slot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Tracked layer slots (slot `MAX_LAYERS - 1` absorbs any deeper layers).
+pub const MAX_LAYERS: usize = 32;
+
+#[allow(clippy::declare_interior_mutable_const)] // const used only as an array initializer
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static LAYER_NS: [AtomicU64; MAX_LAYERS] = [ZERO; MAX_LAYERS];
+static LAYER_CALLS: [AtomicU64; MAX_LAYERS] = [ZERO; MAX_LAYERS];
+
+/// Record one timed pass of layer `layer` taking `ns` nanoseconds.
+pub fn record_layer(layer: usize, ns: u64) {
+    let slot = layer.min(MAX_LAYERS - 1);
+    LAYER_NS[slot].fetch_add(ns, Ordering::Relaxed);
+    LAYER_CALLS[slot].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Non-zero `(layer, calls, total_ns)` rows, ascending by layer index.
+pub fn layer_totals() -> Vec<(usize, u64, u64)> {
+    (0..MAX_LAYERS)
+        .filter_map(|i| {
+            let calls = LAYER_CALLS[i].load(Ordering::Relaxed);
+            if calls == 0 {
+                None
+            } else {
+                Some((i, calls, LAYER_NS[i].load(Ordering::Relaxed)))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_fold_into_slots() {
+        // Use high slots other tests won't touch (process-wide statics).
+        record_layer(MAX_LAYERS - 2, 100);
+        record_layer(MAX_LAYERS - 2, 50);
+        record_layer(MAX_LAYERS + 7, 10); // folds into the last slot
+        let totals = layer_totals();
+        let row = totals.iter().find(|&&(l, _, _)| l == MAX_LAYERS - 2).copied().unwrap();
+        assert_eq!(row.1, 2);
+        assert_eq!(row.2, 150);
+        assert!(totals.iter().any(|&(l, _, _)| l == MAX_LAYERS - 1));
+    }
+}

@@ -3,19 +3,111 @@
 //! admission, deadline-expired drops, live queue depths), aggregated
 //! engine-wide on shutdown.
 //!
-//! Workers append into one shared [`ShardMetrics`] per shard (a brief mutex
-//! hold per executed batch — negligible next to EMAC compute); the router
-//! counts sheds on the same struct.
-//! [`crate::serve::ServeEngine::shard_metrics`] returns a live snapshot with
-//! queue depths stamped; [`crate::serve::ServeEngine::shutdown`] stamps the
-//! wall-clock and returns the full [`EngineMetrics`] snapshot. On a clean
-//! shutdown every submission is accounted for exactly once:
-//! `served + shed + expired` equals the number of accepted-or-shed
-//! submissions (dimension-rejected requests are never counted).
+//! Since ISSUE 9 the hot path is lock-free: workers and the router update
+//! one shared [`ShardStats`] per shard — plain atomic counters plus a
+//! bounded [`LogHistogram`] for latency — so there is no metrics mutex to
+//! poison and no per-sample allocation to leak (the pre-obs design appended
+//! every latency into an unbounded `Vec<f64>`; a sustained open-loop serve
+//! session grew without limit).
+//! [`crate::serve::ServeEngine::shard_metrics`] snapshots the counters into
+//! a plain-value [`ShardMetrics`] with queue depths stamped;
+//! [`crate::serve::ServeEngine::shutdown`] stamps the wall-clock and returns
+//! the full [`EngineMetrics`] snapshot. On a clean shutdown every submission
+//! is accounted for exactly once: `served + shed + expired` equals the
+//! number of accepted-or-shed submissions (dimension-rejected requests are
+//! never counted).
 
-use crate::util::stats::{mean, percentile};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
 
-/// Aggregated serving metrics for one shard (summed over its workers).
+use crate::obs::hist::{HistSnapshot, LogHistogram};
+
+/// Live, lock-free counters for one shard, shared by its router entry and
+/// every worker. All updates are relaxed atomic adds (commutative, so
+/// snapshots are deterministic for a given multiset of events); latency goes
+/// into a bounded log-linear histogram instead of a sample vector.
+#[derive(Default)]
+pub struct ShardStats {
+    served: AtomicUsize,
+    shed: AtomicUsize,
+    expired: AtomicUsize,
+    batches: AtomicUsize,
+    xla_workers: AtomicUsize,
+    max_batch: AtomicUsize,
+    per_worker: Vec<AtomicUsize>,
+    latency: LogHistogram,
+}
+
+impl ShardStats {
+    /// Fresh stats for a shard with `workers` workers (the per-worker slots
+    /// are fixed at spawn, so worker-side updates never resize anything).
+    pub fn new(workers: usize) -> ShardStats {
+        ShardStats { per_worker: (0..workers).map(|_| AtomicUsize::new(0)).collect(), ..Default::default() }
+    }
+
+    /// Count one request shed at admission.
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one accepted request dropped at flush because its deadline had
+    /// already passed.
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one worker that came up on the PJRT/XLA fast path.
+    pub fn note_xla_worker(&self) {
+        self.xla_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one executed batch of `rows` rows on worker `worker`.
+    pub fn note_batch(&self, worker: usize, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.served.fetch_add(rows, Ordering::Relaxed);
+        self.max_batch.fetch_max(rows, Ordering::Relaxed);
+        if let Some(slot) = self.per_worker.get(worker) {
+            slot.fetch_add(rows, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one served request's end-to-end latency.
+    pub fn record_latency(&self, latency: Duration) {
+        self.latency.record_duration(latency);
+    }
+
+    /// Requests served so far (relaxed read).
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed plus deadline-expired so far (the overload-spike signal
+    /// the flight recorder's dump trigger watches).
+    pub fn dropped(&self) -> usize {
+        self.shed.load(Ordering::Relaxed) + self.expired.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time plain-value snapshot with the shard label, live queue
+    /// depths, and wall clock stamped on.
+    pub fn snapshot(&self, shard: &str, queue_depths: Vec<usize>, wall_seconds: f64) -> ShardMetrics {
+        ShardMetrics {
+            shard: shard.to_string(),
+            served: self.served.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+            per_worker: self.per_worker.iter().map(|w| w.load(Ordering::Relaxed)).collect(),
+            queue_depths,
+            xla_workers: self.xla_workers.load(Ordering::Relaxed),
+            wall_seconds,
+        }
+    }
+}
+
+/// Aggregated serving metrics for one shard (summed over its workers) — a
+/// plain value snapshot of a [`ShardStats`].
 #[derive(Debug, Clone, Default)]
 pub struct ShardMetrics {
     /// Shard label, `dataset/format` (e.g. `iris/posit8es1`).
@@ -31,10 +123,11 @@ pub struct ShardMetrics {
     pub expired: usize,
     /// Batches executed.
     pub batches: usize,
-    /// Per-request end-to-end latency (queue + batch wait + compute), seconds.
-    pub latencies_s: Vec<f64>,
-    /// Rows in each executed batch.
-    pub batch_sizes: Vec<usize>,
+    /// Largest batch executed (evidence the batcher actually coalesced).
+    pub max_batch: usize,
+    /// Bounded end-to-end latency histogram (queue + batch wait + compute),
+    /// nanosecond buckets — O(1) memory at any request volume.
+    pub latency: HistSnapshot,
     /// Requests served by each worker (index = worker id within the shard).
     pub per_worker: Vec<usize>,
     /// Per-worker queue depth at snapshot time (a live gauge — nonzero only
@@ -58,19 +151,28 @@ impl ShardMetrics {
         }
     }
 
-    /// Mean rows per executed batch (the batcher's fill level).
+    /// Mean rows per executed batch (the batcher's fill level): every served
+    /// row belongs to exactly one batch, so this is `served / batches`.
     pub fn occupancy(&self) -> f64 {
-        mean(&self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>())
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
     }
 
     /// Latency percentile in seconds, `p` in [0, 100] (0 when nothing was
-    /// served). Nearest-rank (ceil-based), so p100 is the max observed.
+    /// served). Nearest-rank (ceil-based) over the histogram buckets —
+    /// within one bucket (relative error ≤ 1/16) of the exact
+    /// `util::stats::percentile` on the underlying samples, exact on the
+    /// sub-32 ns buckets, and p100 never exceeds the max observed bucket.
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        if self.latencies_s.is_empty() {
-            0.0
-        } else {
-            percentile(&self.latencies_s, p)
-        }
+        self.latency.quantile_secs(p)
+    }
+
+    /// Mean end-to-end latency in seconds (0 when nothing was served).
+    pub fn latency_mean(&self) -> f64 {
+        self.latency.mean_ns() as f64 * 1e-9
     }
 
     /// Every submission that reached this shard's admission gate: served +
@@ -81,13 +183,13 @@ impl ShardMetrics {
 
     /// Human-readable per-shard report (latency in ms, throughput in req/s).
     pub fn render(&self) -> String {
-        if self.latencies_s.is_empty() && self.submissions() == 0 {
+        if self.latency.count() == 0 && self.submissions() == 0 {
             return format!("[{}] no requests served", self.shard);
         }
         format!(
             "[{}] served {} requests in {} batches ({:.1} req/s)\n\
              \x20 latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms (mean {:.2} ms)\n\
-             \x20 batch occupancy {:.2} | workers {} ({} xla) | per-worker {:?}\n\
+             \x20 batch occupancy {:.2} (max {}) | workers {} ({} xla) | per-worker {:?}\n\
              \x20 admission: shed {} | expired {} | queue depths {:?}",
             self.shard,
             self.served,
@@ -96,8 +198,9 @@ impl ShardMetrics {
             self.latency_percentile(50.0) * 1e3,
             self.latency_percentile(95.0) * 1e3,
             self.latency_percentile(99.0) * 1e3,
-            mean(&self.latencies_s) * 1e3,
+            self.latency_mean() * 1e3,
             self.occupancy(),
+            self.max_batch,
             self.per_worker.len(),
             self.xla_workers,
             self.per_worker,
@@ -165,19 +268,16 @@ mod tests {
     use super::*;
 
     fn sample() -> ShardMetrics {
-        ShardMetrics {
-            shard: "iris/posit8es1".into(),
-            served: 4,
-            shed: 2,
-            expired: 1,
-            batches: 2,
-            latencies_s: vec![0.001, 0.002, 0.003, 0.004],
-            batch_sizes: vec![3, 1],
-            per_worker: vec![3, 1],
-            queue_depths: vec![0, 0],
-            xla_workers: 0,
-            wall_seconds: 2.0,
+        let s = ShardStats::new(2);
+        s.note_batch(0, 3);
+        s.note_batch(1, 1);
+        for ms in [1u64, 2, 3, 4] {
+            s.record_latency(Duration::from_millis(ms));
         }
+        s.note_shed();
+        s.note_shed();
+        s.note_expired();
+        s.snapshot("iris/posit8es1", vec![0, 0], 2.0)
     }
 
     #[test]
@@ -185,16 +285,42 @@ mod tests {
         let m = sample();
         assert_eq!(m.throughput(), 2.0);
         assert_eq!(m.occupancy(), 2.0);
+        assert_eq!(m.max_batch, 3);
+        assert_eq!(m.per_worker, vec![3, 1]);
         // Ceil-based nearest-rank over 4 samples: p50 is the 2nd-ranked
-        // value, p95 and p99 the 4th (the max) — high percentiles are never
-        // understated.
-        assert_eq!(m.latency_percentile(50.0), 0.002);
-        assert_eq!(m.latency_percentile(95.0), 0.004);
-        assert_eq!(m.latency_percentile(99.0), 0.004);
+        // value (2 ms), p95 and p99 the 4th (the 4 ms max). The histogram
+        // reports bucket lower bounds, so each quantile may understate the
+        // exact sample by at most one part in 16 and never overstates it.
+        for (p, exact) in [(50.0, 0.002), (95.0, 0.004), (99.0, 0.004)] {
+            let q = m.latency_percentile(p);
+            assert!(q <= exact && q >= exact * (1.0 - 1.0 / 16.0), "p{p}: {q} vs exact {exact}");
+        }
         assert_eq!(m.submissions(), 7);
         let r = m.render();
         assert!(r.contains("req/s") && r.contains("p99"));
         assert!(r.contains("shed 2") && r.contains("expired 1"), "{r}");
+    }
+
+    #[test]
+    fn stats_are_lock_free_and_bounded() {
+        // Concurrent recording from several threads must produce exactly the
+        // serial counts (atomic adds commute) without growing any memory.
+        let s = std::sync::Arc::new(ShardStats::new(1));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let s = std::sync::Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        s.record_latency(Duration::from_nanos(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = s.snapshot("x", vec![], 0.0);
+        assert_eq!(snap.latency.count(), 4000);
     }
 
     #[test]

@@ -34,7 +34,19 @@
 //!   away and at what drop budget.
 //! * **Metrics** ([`metrics`]) — per-shard throughput, batch occupancy,
 //!   p50/p95/p99 latency, and overload accounting (shed / expired / live
-//!   queue depths), aggregated on shutdown.
+//!   queue depths). All hot-path accounting is lock-free: workers record
+//!   into [`ShardStats`] (relaxed atomics + a bounded
+//!   [`crate::obs::LogHistogram`]), and [`ShardMetrics`] is an immutable
+//!   snapshot taken on demand ([`ServeEngine::shard_metrics`]) or at
+//!   shutdown (DESIGN.md §15).
+//! * **Tracing** — every admitted request carries a process-unique trace id
+//!   (returned in [`InferReply::trace`]); workers append a per-phase
+//!   nanosecond breakdown (queue → compute → reply) to the engine-wide
+//!   flight recorder ([`crate::obs::FlightRecorder`]), which dumps a
+//!   strict-schema JSONL snapshot automatically when shed/expired counts
+//!   spike past an armed threshold ([`ServeEngine::arm_trace_dump`]).
+//!   [`ServeEngine::observe`] exports the whole engine (plus pool / tuner /
+//!   LUT-cache counters) as an [`crate::obs::ObsSnapshot`].
 //!
 //! The single-shard server the repository started with lives on as a thin
 //! facade over this engine in [`crate::coordinator::server`]. The scaling
@@ -47,6 +59,6 @@ pub mod metrics;
 pub mod router;
 pub mod worker;
 
-pub use metrics::{EngineMetrics, ShardMetrics};
-pub use router::{ServeEngine, ShardConfig, ShardKey};
+pub use metrics::{EngineMetrics, ShardMetrics, ShardStats};
+pub use router::{ServeEngine, ShardConfig, ShardKey, RECORDER_CAPACITY};
 pub use worker::{InferReply, ServeError, WorkerConfig};

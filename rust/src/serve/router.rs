@@ -7,19 +7,34 @@
 //! worker's queue depth reaches [`WorkerConfig::max_queue`] the submission
 //! is shed with [`ServeError::Overloaded`] instead of queueing without
 //! limit (DESIGN.md §9).
+//!
+//! Accounting is lock-free (DESIGN.md §15): the router and workers update a
+//! shared atomic [`ShardStats`] per shard, every accepted request carries a
+//! [`TraceId`] into the engine-wide [`FlightRecorder`], and
+//! [`ServeEngine::observe`] exports the whole stack's counters as an
+//! [`ObsSnapshot`]. There is no mutex on the submit path and therefore no
+//! poisoned-lock panic path — the serve lint zone holds with zero
+//! exemptions.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::accel::Mlp;
 use crate::coordinator::experiments::Engine;
 use crate::datasets::Dataset;
 use crate::formats::{FormatSpec, MixedSpec};
-use crate::serve::metrics::{EngineMetrics, ShardMetrics};
+use crate::obs::export::ObsSnapshot;
+use crate::obs::recorder::{FlightRecorder, TraceId};
+use crate::serve::metrics::{EngineMetrics, ShardMetrics, ShardStats};
 use crate::serve::worker::{self, Control, InferReply, Request, ServeError, WorkerConfig, WorkerHandle, WorkerSpec};
+
+/// Flight-recorder capacity: the most recent trace events retained
+/// engine-wide (a few MiB at most, fixed at start).
+pub const RECORDER_CAPACITY: usize = 4096;
 
 /// Routing key: one shard serves one (dataset, format) pair.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -178,7 +193,8 @@ struct Shard {
     max_queue: usize,
     workers: Vec<WorkerHandle>,
     next: AtomicUsize,
-    metrics: Arc<Mutex<ShardMetrics>>,
+    stats: Arc<ShardStats>,
+    recorder: Arc<FlightRecorder>,
 }
 
 impl Shard {
@@ -227,11 +243,12 @@ impl Shard {
             }
         });
         if let Err(depth) = admit {
-            self.metrics.lock().unwrap().shed += 1; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
+            self.stats.note_shed();
+            self.recorder.note_drop();
             return Err(ServeError::Overloaded { shard: self.key.label(), depth });
         }
         let (tx, rx) = mpsc::channel();
-        let req = Request { x, submitted: Instant::now(), deadline, resp: tx };
+        let req = Request { trace: TraceId::next(), x, submitted: Instant::now(), deadline, resp: tx };
         if worker.tx.send(Control::Req(req)).is_err() {
             worker.depth.fetch_sub(1, Ordering::Release);
             return Err(ServeError::Closed);
@@ -274,6 +291,7 @@ impl Shard {
 /// ```
 pub struct ServeEngine {
     shards: HashMap<ShardKey, Shard>,
+    recorder: Arc<FlightRecorder>,
     started: Instant,
 }
 
@@ -293,16 +311,15 @@ impl ServeEngine {
             let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.format_name() };
             cfg.validate(&key.label())?;
         }
-        // Phase 1: spawn everything, no waiting.
+        // Phase 1: spawn everything, no waiting. One flight recorder serves
+        // the whole engine — traces from every shard interleave in arrival
+        // order, which is exactly what an overload post-mortem wants.
+        let recorder = Arc::new(FlightRecorder::new(RECORDER_CAPACITY));
         let mut staged = Vec::with_capacity(shards.len());
         for cfg in shards {
             let key = ShardKey { dataset: cfg.dataset.clone(), format: cfg.format_name() };
             let nworkers = cfg.workers.max(1);
-            let metrics = Arc::new(Mutex::new(ShardMetrics {
-                shard: key.label(),
-                per_worker: vec![0; nworkers],
-                ..Default::default()
-            }));
+            let stats = Arc::new(ShardStats::new(nworkers));
             let mut workers = Vec::with_capacity(nworkers);
             let mut readies = Vec::with_capacity(nworkers);
             for index in 0..nworkers {
@@ -316,31 +333,39 @@ impl ServeEngine {
                     engine: cfg.engine,
                     classes: cfg.num_classes,
                     cfg: cfg.worker.clone(),
-                    metrics: Arc::clone(&metrics),
+                    stats: Arc::clone(&stats),
+                    recorder: Arc::clone(&recorder),
                 });
                 workers.push(handle);
                 readies.push(ready);
             }
-            staged.push((key, cfg.num_features, cfg.worker.max_queue, workers, readies, metrics));
+            staged.push((key, cfg.num_features, cfg.worker.max_queue, workers, readies, stats));
         }
         // Phase 2: collect readiness (a dead worker thread drops its sender).
         let mut map = HashMap::new();
-        for (key, num_features, max_queue, workers, readies, metrics) in staged {
+        for (key, num_features, max_queue, workers, readies, stats) in staged {
             for ready in readies {
                 match ready.recv() {
                     Ok(xla_active) => {
                         if xla_active {
-                            metrics.lock().unwrap().xla_workers += 1; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
+                            stats.note_xla_worker();
                         }
                     }
                     Err(_) => return Err(ServeError::Closed),
                 }
             }
-            let shard =
-                Shard { key: key.clone(), num_features, max_queue, workers, next: AtomicUsize::new(0), metrics };
+            let shard = Shard {
+                key: key.clone(),
+                num_features,
+                max_queue,
+                workers,
+                next: AtomicUsize::new(0),
+                stats,
+                recorder: Arc::clone(&recorder),
+            };
             map.insert(key, shard);
         }
-        Ok(ServeEngine { shards: map, started: Instant::now() })
+        Ok(ServeEngine { shards: map, recorder, started: Instant::now() })
     }
 
     /// All registered shard keys, sorted by label for stable iteration.
@@ -402,14 +427,34 @@ impl ServeEngine {
     }
 
     /// Live metrics snapshot for one shard: wall clock and per-worker queue
-    /// depths stamped as of now.
+    /// depths stamped as of now. Reads the lock-free counters — safe to call
+    /// at any rate from any thread.
     pub fn shard_metrics(&self, key: &ShardKey) -> Option<ShardMetrics> {
-        self.shards.get(key).map(|s| {
-            let mut m = s.metrics.lock().unwrap().clone(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
-            m.wall_seconds = self.started.elapsed().as_secs_f64();
-            m.queue_depths = s.queue_depths();
-            m
-        })
+        self.shards
+            .get(key)
+            .map(|s| s.stats.snapshot(&s.key.label(), s.queue_depths(), self.started.elapsed().as_secs_f64()))
+    }
+
+    /// One observability snapshot across the whole engine (every shard, in
+    /// label order) plus the process-wide pool / tuner / LUT / layer-timing
+    /// counters — the `repro serve --obs-out` payload (DESIGN.md §15).
+    pub fn observe(&self) -> ObsSnapshot {
+        let metrics: Vec<ShardMetrics> =
+            self.shard_keys().into_iter().filter_map(|k| self.shard_metrics(&k)).collect();
+        ObsSnapshot::collect(&metrics)
+    }
+
+    /// The engine-wide flight recorder: arm its spike dump, inspect retained
+    /// trace events, or dump manually at end of run.
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// Arm the flight recorder's automatic JSONL dump: once `threshold`
+    /// requests have been shed or expired engine-wide, the retained traces
+    /// are written to `path` exactly once (the overload post-mortem).
+    pub fn arm_trace_dump(&self, path: &Path, threshold: u64) {
+        self.recorder.arm_dump(path, threshold);
     }
 
     /// Stop every worker — each serves whatever is already queued first —
@@ -431,10 +476,7 @@ impl ServeEngine {
                     let _ = join.join();
                 }
             }
-            let mut m = shard.metrics.lock().unwrap().clone(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
-            m.wall_seconds = wall;
-            m.queue_depths = shard.queue_depths();
-            out.push(m);
+            out.push(shard.stats.snapshot(&shard.key.label(), shard.queue_depths(), wall));
         }
         EngineMetrics { shards: out }
     }

@@ -46,15 +46,16 @@
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::accel::{argmax, DeepPositron, Mlp};
 use crate::coordinator::experiments::Engine;
 use crate::formats::{FormatSpec, MixedSpec};
+use crate::obs::recorder::{FlightRecorder, TraceEvent, TraceId};
 use crate::runtime::{artifacts_dir, FormatTables, Kind, Runtime};
-use crate::serve::metrics::ShardMetrics;
+use crate::serve::metrics::ShardStats;
 
 /// One served prediction.
 #[derive(Debug, Clone)]
@@ -65,6 +66,9 @@ pub struct InferReply {
     pub latency_s: f64,
     /// Worker (within the shard) that served the request.
     pub worker: usize,
+    /// The request's trace id (matches the flight recorder's
+    /// [`TraceEvent::trace`] for per-request phase attribution).
+    pub trace: u64,
 }
 
 /// Errors surfaced by the serving engine's client API.
@@ -144,6 +148,9 @@ impl Default for WorkerConfig {
 }
 
 pub(crate) struct Request {
+    /// Process-unique trace id, allocated at admission and threaded through
+    /// to the reply + flight recorder.
+    pub trace: TraceId,
     pub x: Vec<f64>,
     pub submitted: Instant,
     /// Serve-by instant; at flush time an expired request is dropped
@@ -177,7 +184,10 @@ pub(crate) struct WorkerSpec {
     pub engine: Engine,
     pub classes: usize,
     pub cfg: WorkerConfig,
-    pub metrics: Arc<Mutex<ShardMetrics>>,
+    /// Lock-free shared shard counters (no mutex on any worker path).
+    pub stats: Arc<ShardStats>,
+    /// Engine-wide flight recorder for per-request phase traces.
+    pub recorder: Arc<FlightRecorder>,
 }
 
 /// Spawn one worker WITHOUT waiting for warm-up; the returned receiver
@@ -296,7 +306,9 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth:
         Some(x) => x.batches.clone(),
         None => vec![ws.cfg.sim_batch.max(1)],
     };
-    let max_batch = *batch_sizes.last().expect("batch size list is never empty"); // exact-lint: allow(panic, construction invariant: ShardConfig always yields >= 1 size)
+    // Both arms above yield at least one entry; the 1 fallback keeps this
+    // total without a panic path (the serve lint zone bans them outright).
+    let max_batch = batch_sizes.last().copied().unwrap_or(1);
     // Pre-warm: compile every batch-size executable and push one padded batch
     // through each BEFORE accepting traffic.
     if let Some(x) = &xla {
@@ -343,7 +355,10 @@ fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth:
         let mut shutdown: Option<mpsc::Sender<()>> = None;
         let mut disconnected = false;
         while pending.len() < max_batch {
-            let wake = pending.peek().expect("pending is non-empty").flush_by; // exact-lint: allow(panic, guarded by the is_empty check on the branch above)
+            // Non-empty by the branch above, but stay panic-free by
+            // construction: an (impossible) empty heap just flushes early.
+            let Some(top) = pending.peek() else { break };
+            let wake = top.flush_by;
             let now = Instant::now();
             if now >= wake {
                 break;
@@ -430,17 +445,29 @@ fn flush(pending: &mut BinaryHeap<Pending>, ctx: &BatchCtx<'_>, force: bool) {
     {
         expired += pop_into(pending, &mut batch, ctx, now);
     }
-    if expired > 0 {
-        ctx.ws.metrics.lock().unwrap().expired += expired; // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
+    for _ in 0..expired {
+        ctx.ws.stats.note_expired();
+        ctx.ws.recorder.note_drop();
     }
     if !batch.is_empty() {
-        execute(batch, ctx);
+        // `now` is the batch's flush anchor: every popped request's queue
+        // phase ends here and the shared compute phase starts here.
+        execute(batch, ctx, now);
     }
 }
 
+/// Exact nanoseconds from `a` to `b` (0 if `b` is not after `a`): the trace
+/// phases are differences of the same monotonic anchors, so they telescope
+/// to the total without drift.
+fn ns_between(a: Instant, b: Instant) -> u64 {
+    b.saturating_duration_since(a).as_nanos().min(u64::MAX as u128) as u64
+}
+
 /// Execute one already-popped batch on the fast path (or Sim), reply per
-/// request, and record shard metrics.
-fn execute(batch: Vec<Request>, ctx: &BatchCtx<'_>) {
+/// request, and record shard stats + one flight-recorder trace event per
+/// served request. `flushed_at` is the batch's flush anchor: the boundary
+/// between every member's queue phase and the shared compute phase.
+fn execute(batch: Vec<Request>, ctx: &BatchCtx<'_>, flushed_at: Instant) {
     let ws = ctx.ws;
     let rows = batch.len();
     let preds: Vec<usize> = match ctx.xla {
@@ -472,26 +499,38 @@ fn execute(batch: Vec<Request>, ctx: &BatchCtx<'_>) {
         }
         None => sim_predict_batch(ctx.dp, &batch),
     };
-    // Reply (and compute latencies) OUTSIDE the shard-metrics lock, so
-    // workers finishing batches concurrently never serialize on reply
-    // delivery; then record the whole batch under one short lock.
-    let mut latencies = Vec::with_capacity(rows);
+    // Inference is done for the whole batch: the shared compute phase ends
+    // here; each member's reply phase runs from this anchor to its own send.
+    let inferred_at = Instant::now();
+    let compute_ns = ns_between(flushed_at, inferred_at);
+    // Reply first, then record: stats are relaxed atomics and the recorder
+    // takes one short poison-tolerant lock per batch, so workers finishing
+    // batches concurrently never serialize on reply delivery.
+    let mut events = Vec::with_capacity(rows);
     for (req, class) in batch.into_iter().zip(preds) {
-        let latency_s = req.submitted.elapsed().as_secs_f64();
-        latencies.push(latency_s);
-        let _ = req.resp.send(InferReply { class, latency_s, worker: ws.index });
+        let latency = req.submitted.elapsed();
+        let _ = req.resp.send(InferReply {
+            class,
+            latency_s: latency.as_secs_f64(),
+            worker: ws.index,
+            trace: req.trace.0,
+        });
+        let queue_ns = ns_between(req.submitted, flushed_at);
+        let reply_ns = ns_between(inferred_at, Instant::now());
+        ws.stats.record_latency(latency);
+        events.push(TraceEvent {
+            trace: req.trace.0,
+            shard: ws.shard.clone(),
+            worker: ws.index as u64,
+            rows: rows as u64,
+            queue_ns,
+            compute_ns,
+            reply_ns,
+            total_ns: queue_ns + compute_ns + reply_ns,
+        });
     }
-    let mut m = ws.metrics.lock().unwrap(); // exact-lint: allow(panic, poisoned metrics lock means a worker already aborted)
-    m.batches += 1;
-    m.batch_sizes.push(rows);
-    m.served += rows;
-    // Infallible per-worker accounting: grow the vector rather than
-    // silently dropping counts if it was ever mis-sized.
-    if m.per_worker.len() <= ws.index {
-        m.per_worker.resize(ws.index + 1, 0);
-    }
-    m.per_worker[ws.index] += rows;
-    m.latencies_s.extend_from_slice(&latencies);
+    ws.stats.note_batch(ws.index, rows);
+    ws.recorder.push_batch(&events);
 }
 
 /// Execute one flushed batch on the Sim engine: a single compiled-plan walk
@@ -547,7 +586,7 @@ mod tests {
             Pending {
                 flush_by: t0 + Duration::from_millis(offset_ms),
                 seq,
-                req: Request { x: vec![], submitted: t0, deadline: None, resp: tx },
+                req: Request { trace: TraceId(0), x: vec![], submitted: t0, deadline: None, resp: tx },
             }
         };
         let mut heap = BinaryHeap::new();
@@ -569,11 +608,17 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let mut heap = BinaryHeap::new();
         let mut seq = 0;
-        let req = Request { x: vec![], submitted: t0, deadline: Some(t0 + Duration::from_millis(5)), resp: tx };
+        let req = Request {
+            trace: TraceId(0),
+            x: vec![],
+            submitted: t0,
+            deadline: Some(t0 + Duration::from_millis(5)),
+            resp: tx,
+        };
         push_pending(&mut heap, &mut seq, wait, req);
         assert_eq!(heap.peek().unwrap().flush_by, t0 + Duration::from_millis(5));
         let (tx, _rx) = mpsc::channel();
-        let req = Request { x: vec![], submitted: t0, deadline: None, resp: tx };
+        let req = Request { trace: TraceId(0), x: vec![], submitted: t0, deadline: None, resp: tx };
         push_pending(&mut heap, &mut seq, wait, req);
         assert_eq!(heap.len(), 2);
         // The deadline-tightened entry stays on top of the no-deadline one.

@@ -24,6 +24,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::ops::RangeInclusive;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::accel::{Datapath, DeepPositron, LayerKind, Mlp, NetIr};
@@ -35,6 +36,26 @@ use crate::tune::cost::{network_cost_ir, CostTable, NetworkCost};
 use crate::tune::pareto::{pareto_frontier, ParetoPoint};
 use crate::tune::sensitivity::{self, SensitivityTable};
 use crate::util::pool::WorkerPool;
+
+// Process-wide tuner observability counters (DESIGN.md §15): relaxed,
+// monotone, read only by `ObsSnapshot::collect` — never by the search, so
+// they cannot perturb its determinism.
+static MEMO_HITS: AtomicU64 = AtomicU64::new(0);
+static MEMO_MISSES: AtomicU64 = AtomicU64::new(0);
+static EVALS_PRUNED: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative tuner memoization traffic since process start, for the obs
+/// snapshot: `(memo_hits, memo_misses, evals_pruned)` — evaluator cache
+/// hits, distinct assignments actually compiled + scored, and per-layer
+/// `(layer, format)` moves the sensitivity pre-pass removed from the
+/// descent's candidate pools.
+pub fn memo_counters() -> (u64, u64, u64) {
+    (
+        MEMO_HITS.load(Ordering::Relaxed),
+        MEMO_MISSES.load(Ordering::Relaxed),
+        EVALS_PRUNED.load(Ordering::Relaxed),
+    )
+}
 
 /// The user-supplied constraint the descent optimizes under.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -448,8 +469,10 @@ impl Evaluator<'_> {
     /// Score one assignment (memoized; computes on this thread on a miss).
     fn score(&self, mixed: &MixedSpec) -> (f64, NetworkCost) {
         if let Some(&hit) = self.state.lock().expect("evaluator lock").cache.get(&mixed.name()) {
+            MEMO_HITS.fetch_add(1, Ordering::Relaxed);
             return hit;
         }
+        MEMO_MISSES.fetch_add(1, Ordering::Relaxed);
         let scored = self.compute(mixed, None, self.pool);
         self.insert(mixed, scored)
     }
@@ -470,6 +493,8 @@ impl Evaluator<'_> {
                 })
                 .collect()
         };
+        MEMO_HITS.fetch_add((batch.len() - todo.len()) as u64, Ordering::Relaxed);
+        MEMO_MISSES.fetch_add(todo.len() as u64, Ordering::Relaxed);
         if todo.is_empty() {
             return;
         }
@@ -600,6 +625,10 @@ pub fn tune(ds: &Dataset, mlp: &Mlp, cfg: &TuneConfig) -> TuneReport {
         Some(table) => table.pools(&candidates),
         None => vec![candidates.clone(); nlayers],
     };
+    // Observability: how many per-layer candidate formats pruning removed
+    // from the descent's move generator (0 for an unpruned run).
+    let removed: usize = pools.iter().map(|p| candidates.len() - p.len()).sum();
+    EVALS_PRUNED.fetch_add(removed as u64, Ordering::Relaxed);
 
     // Phase 3: beam descent over single-layer reassignments. Converges
     // because the incumbent only ever moves to a strictly better feasible

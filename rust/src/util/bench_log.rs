@@ -347,8 +347,9 @@ pub fn bench_budget(default_secs: f64) -> f64 {
     default_secs * scale
 }
 
-/// JSON-escape a string (the writer side of the hand-rolled codec).
-fn json_string(s: &str) -> String {
+/// JSON-escape a string (the writer side of the hand-rolled codec; shared
+/// with the `obs` snapshot/trace codecs).
+pub(crate) fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -369,7 +370,7 @@ fn json_string(s: &str) -> String {
 /// Format a finite f64 as a JSON number (Rust's shortest round-trip form,
 /// with a `.0` forced onto integral values so the type stays visibly
 /// floating-point in diffs).
-fn json_number(v: f64) -> String {
+pub(crate) fn json_number(v: f64) -> String {
     debug_assert!(v.is_finite());
     let s = format!("{v}");
     if s.contains('.') || s.contains('e') || s.contains('E') {
@@ -380,8 +381,9 @@ fn json_number(v: f64) -> String {
 }
 
 /// The JSON subset the reader understands (exactly what the writer emits,
-/// plus whitespace freedom for hand edits).
-enum Json {
+/// plus whitespace freedom for hand edits). Crate-visible so the `obs`
+/// snapshot/trace codecs parse through the same strict grammar.
+pub(crate) enum Json {
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
@@ -389,7 +391,7 @@ enum Json {
 }
 
 impl Json {
-    fn parse(text: &str) -> Result<Json, BenchLogError> {
+    pub(crate) fn parse(text: &str) -> Result<Json, BenchLogError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         let v = p.value()?;
         p.skip_ws();

@@ -37,6 +37,7 @@
 // documented at the site, and nowhere else.
 #![allow(unsafe_code)]
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 /// Hard cap on the default pool width: the tiled kernels are cache/memory
@@ -46,6 +47,27 @@ const DEFAULT_MAX_THREADS: usize = 8;
 
 /// Process-wide pool behind [`WorkerPool::global`].
 static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+// Process-wide fan-out occupancy counters (DESIGN.md §15): observability
+// only — relaxed, monotone, never read back by the pool itself. Counted
+// across EVERY pool instance so the obs snapshot reflects total within-batch
+// parallelism pressure, not just the global pool.
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static POOL_INLINE_RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative pool occupancy since process start, for the obs snapshot
+/// (`ObsSnapshot::collect`): `(jobs, chunks, inline_runs)` — jobs submitted
+/// through [`WorkerPool::run`]/[`WorkerPool::run_map`], contiguous job
+/// groups handed to scoped threads (the caller's own group included), and
+/// whole batches that ran inline (width-1 pool or ≤ 1 job).
+pub fn fanout_counters() -> (u64, u64, u64) {
+    (
+        POOL_JOBS.load(Ordering::Relaxed),
+        POOL_CHUNKS.load(Ordering::Relaxed),
+        POOL_INLINE_RUNS.load(Ordering::Relaxed),
+    )
+}
 
 /// A bounded fan-out helper: runs a batch of independent jobs across at most
 /// `threads` scoped threads (inline when `threads == 1` or there is a single
@@ -107,13 +129,19 @@ impl WorkerPool {
     /// callers pass uniform chunks, so static partitioning balances. A
     /// panicking job propagates the panic to the caller (scope join).
     pub fn run<F: FnOnce() + Send>(&self, mut jobs: Vec<F>) {
+        if jobs.is_empty() {
+            return;
+        }
+        POOL_JOBS.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         if self.threads == 1 || jobs.len() <= 1 {
+            POOL_INLINE_RUNS.fetch_add(1, Ordering::Relaxed);
             for job in jobs {
                 job();
             }
             return;
         }
         let groups = self.threads.min(jobs.len());
+        POOL_CHUNKS.fetch_add(groups as u64, Ordering::Relaxed);
         let per = jobs.len().div_ceil(groups);
         std::thread::scope(|s| {
             while jobs.len() > per {
@@ -197,6 +225,17 @@ mod tests {
     fn width_clamps_to_one() {
         assert_eq!(WorkerPool::new(0).threads(), 1);
         assert!(WorkerPool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn fanout_counters_count_jobs_monotonically() {
+        // Counters are process-wide (other tests bump them concurrently), so
+        // assert monotone growth by at least this test's own contribution.
+        let (j0, _, _) = fanout_counters();
+        let pool = WorkerPool::new(2);
+        pool.run((0..4).map(|_| || {}).collect::<Vec<_>>());
+        let (j1, _, _) = fanout_counters();
+        assert!(j1 >= j0 + 4, "jobs counter moved {j0} -> {j1}");
     }
 
     #[test]

@@ -40,8 +40,9 @@ fn every_corpus_fixture_is_caught() {
         report.missed.join("\n")
     );
     // One line per fixture, and the corpus actually exercises every layer:
-    // token rules, wiring rules, bench-log codec, and the plan auditor.
-    assert!(report.lines.len() >= 11, "corpus shrank to {} fixture(s)", report.lines.len());
+    // token rules, wiring rules, bench-log codec, the plan auditor, and the
+    // obs snapshot/trace codecs.
+    assert!(report.lines.len() >= 13, "corpus shrank to {} fixture(s)", report.lines.len());
     for slug in [
         "float-in-exact-zone",
         "unsafe-outside-allowlist",
@@ -53,6 +54,8 @@ fn every_corpus_fixture_is_caught() {
         "plan-invalid",
         "plan-quire-overflow",
         "plan-bad-provenance",
+        "obs-snapshot-invalid",
+        "obs-trace-invalid",
     ] {
         assert!(
             report.lines.iter().any(|l| l.contains(&format!("{slug}__"))),

@@ -1,0 +1,191 @@
+//! Observability-layer integration gates (DESIGN.md §15):
+//!
+//! * **Quantile fidelity** — on random sample clouds, `LogHistogram`
+//!   quantiles match `util::stats::percentile`'s exact nearest-rank answer
+//!   to within one bucket (relative error ≤ 1/SUB_BUCKETS), never above it.
+//! * **Merge algebra** — bucket-wise merge is associative, so shard-level
+//!   roll-ups are order-independent.
+//! * **Concurrency determinism** — the same sample multiset recorded under
+//!   different thread interleavings yields bit-identical snapshots.
+//! * **Bounded memory** — 1M recorded samples grow the histogram by zero
+//!   bytes (the fix for the unbounded `Vec<f64>` latency logs the serving
+//!   engine used to keep).
+//! * **Codecs** — the trace-dump and snapshot JSON codecs round-trip and
+//!   reject corrupted artifacts.
+
+use std::sync::Arc;
+
+use deep_positron::obs::hist::{bucket_low, bucket_of, bucket_width, SUB_BUCKETS};
+use deep_positron::obs::recorder::{dump_to_string, parse_dump, TraceEvent};
+use deep_positron::obs::{HistSnapshot, LogHistogram, ObsSnapshot};
+use deep_positron::util::{stats, Rng};
+
+/// One random sample cloud: mixed scales so buckets from the exact zone
+/// (< 2·SUB_BUCKETS) up through multi-millisecond octaves all get hit.
+fn cloud(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            let octave = rng.below(30) as u32;
+            let base = 1u64 << octave;
+            base + (rng.next_u64() % base.max(1))
+        })
+        .collect()
+}
+
+#[test]
+fn quantiles_track_exact_percentiles_within_one_bucket() {
+    let mut rng = Rng::new(0xB0B5);
+    for case in 0..20 {
+        let samples = cloud(&mut rng, 257 + case * 31);
+        let h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let exact: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let q = h.quantile_ns(p);
+            let e = stats::percentile(&exact, p) as u64;
+            assert!(q <= e, "case {case} p{p}: histogram {q} above exact {e}");
+            let width = bucket_width(bucket_of(e));
+            assert!(e - q < width, "case {case} p{p}: {q} vs exact {e}, off by more than a bucket ({width})");
+            assert!(
+                (e - q) as f64 <= e as f64 / SUB_BUCKETS as f64,
+                "case {case} p{p}: relative error {q} vs {e} above 1/{SUB_BUCKETS}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bucket_low_inverts_bucket_of_across_octaves() {
+    let mut rng = Rng::new(7);
+    for _ in 0..10_000 {
+        let v = rng.next_u64() >> (rng.below(64) as u32);
+        let idx = bucket_of(v);
+        let low = bucket_low(idx);
+        assert!(low <= v && v - low < bucket_width(idx), "v={v} idx={idx} low={low}");
+    }
+}
+
+#[test]
+fn merge_is_associative() {
+    let mut rng = Rng::new(42);
+    let parts: Vec<Vec<u64>> = (0..3).map(|_| cloud(&mut rng, 100)).collect();
+    let hists: Vec<LogHistogram> = parts
+        .iter()
+        .map(|p| {
+            let h = LogHistogram::new();
+            for &s in p {
+                h.record(s);
+            }
+            h
+        })
+        .collect();
+    // (a ⊕ b) ⊕ c
+    let left = LogHistogram::new();
+    left.merge(&hists[0]);
+    left.merge(&hists[1]);
+    left.merge(&hists[2]);
+    // a ⊕ (b ⊕ c)
+    let bc = LogHistogram::new();
+    bc.merge(&hists[1]);
+    bc.merge(&hists[2]);
+    let right = LogHistogram::new();
+    right.merge(&hists[0]);
+    right.merge(&bc);
+    assert_eq!(left.snapshot(), right.snapshot());
+    // And the merged snapshot equals recording everything into one histogram.
+    let flat = LogHistogram::new();
+    for p in &parts {
+        for &s in p {
+            flat.record(s);
+        }
+    }
+    assert_eq!(left.snapshot(), flat.snapshot());
+}
+
+#[test]
+fn concurrent_recording_is_bit_deterministic() {
+    let mut rng = Rng::new(0xC0FFEE);
+    let samples = Arc::new(cloud(&mut rng, 4000));
+    let build = |order: Vec<usize>| {
+        let h = Arc::new(LogHistogram::new());
+        let mut joins = Vec::new();
+        for chunk in order.chunks(order.len() / 4) {
+            let h = Arc::clone(&h);
+            let samples = Arc::clone(&samples);
+            let chunk = chunk.to_vec();
+            joins.push(std::thread::spawn(move || {
+                for i in chunk {
+                    h.record(samples[i]);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        h.snapshot()
+    };
+    let forward: Vec<usize> = (0..samples.len()).collect();
+    let backward: Vec<usize> = (0..samples.len()).rev().collect();
+    let mut shuffled: Vec<usize> = forward.clone();
+    Rng::new(9).shuffle(&mut shuffled);
+    let a = build(forward);
+    let b = build(backward);
+    let c = build(shuffled);
+    assert_eq!(a, b, "same multiset, different interleaving, different snapshot");
+    assert_eq!(a, c);
+    assert_eq!(a.count(), samples.len() as u64);
+}
+
+#[test]
+fn memory_is_o1_across_a_million_samples() {
+    let h = LogHistogram::new();
+    let mut rng = Rng::new(31337);
+    for _ in 0..1_000 {
+        h.record(rng.next_u64() >> 20);
+    }
+    let early = h.snapshot().len_buckets();
+    for _ in 1_000..1_000_000u64 {
+        h.record(rng.next_u64() >> 20);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count(), 1_000_000, "every sample counted");
+    assert_eq!(snap.len_buckets(), early, "bucket storage grew with sample count");
+}
+
+#[test]
+fn empty_and_merged_snapshots_behave() {
+    let mut a = HistSnapshot::default();
+    let h = LogHistogram::new();
+    h.record(500);
+    h.record(700);
+    a.merge_from(&h.snapshot());
+    assert_eq!(a.count(), 2);
+    assert_eq!(a.nonzero().iter().map(|&(_, n)| n).sum::<u64>(), 2);
+}
+
+#[test]
+fn trace_and_snapshot_codecs_round_trip_and_reject() {
+    let events: Vec<TraceEvent> = (1..=5u64)
+        .map(|i| TraceEvent {
+            trace: i,
+            shard: "iris/posit8es0".into(),
+            worker: i % 2,
+            rows: 4,
+            queue_ns: 10 * i,
+            compute_ns: 100 * i,
+            reply_ns: i,
+            total_ns: 111 * i,
+        })
+        .collect();
+    let text = dump_to_string(&events);
+    assert_eq!(parse_dump(&text).unwrap(), events);
+    // Any phase perturbation breaks the telescoping invariant.
+    let broken = text.replace("\"total_ns\":111}", "\"total_ns\":112}");
+    assert!(parse_dump(&broken).is_err());
+
+    let snap = ObsSnapshot::default();
+    assert_eq!(ObsSnapshot::from_json(&snap.to_json()).unwrap(), snap);
+    assert!(ObsSnapshot::from_json("{\"schema\": 1}").is_err());
+}

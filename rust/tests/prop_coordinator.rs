@@ -31,8 +31,8 @@ fn prop_server_serves_every_request_exactly_once() {
         let metrics = handle.shutdown();
         assert_eq!(replies, n);
         assert_eq!(metrics.served, n);
-        assert_eq!(metrics.latencies_s.len(), n);
-        assert_eq!(metrics.batch_sizes.iter().sum::<usize>(), n);
+        assert_eq!(metrics.latency.count(), n as u64);
+        assert!(metrics.max_batch <= n, "largest batch cannot exceed the requests submitted");
         assert!(metrics.batches <= n);
     });
 }

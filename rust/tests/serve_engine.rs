@@ -42,7 +42,7 @@ fn routes_across_format_shards() {
     assert_eq!(metrics.shards.len(), 2);
     for shard in &metrics.shards {
         assert_eq!(shard.served, 10, "{}", shard.shard);
-        assert_eq!(shard.latencies_s.len(), 10);
+        assert_eq!(shard.latency.count(), 10);
     }
     assert_eq!(metrics.total_served(), 20);
 }
@@ -86,7 +86,7 @@ fn partial_batch_flushes_on_deadline() {
     let shard = &metrics.shards[0];
     assert_eq!(shard.served, 3);
     assert!(shard.batches >= 1);
-    assert!(shard.batch_sizes.iter().all(|&b| b <= 3), "batches: {:?}", shard.batch_sizes);
+    assert!(shard.max_batch <= 3, "largest batch {} exceeds the 3 requests submitted", shard.max_batch);
 }
 
 #[test]
@@ -193,9 +193,9 @@ fn flushed_batch_matches_per_sample_submission() {
     let shard = &metrics.shards[0];
     assert_eq!(shard.served, n);
     assert!(
-        shard.batch_sizes.iter().any(|&b| b > 1),
-        "burst of {n} never coalesced into a multi-request batch: {:?}",
-        shard.batch_sizes
+        shard.max_batch > 1,
+        "burst of {n} never coalesced into a multi-request batch (max batch {})",
+        shard.max_batch
     );
 }
 

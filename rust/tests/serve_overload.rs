@@ -135,10 +135,89 @@ fn expired_deadline_requests_get_no_compute() {
     assert_eq!(m.expired, 5);
     assert_eq!(m.shed, 0);
     assert_eq!(m.submissions(), 10);
-    // "No compute" is visible in the batch log: only served rows were ever
-    // executed.
-    assert_eq!(m.batch_sizes.iter().sum::<usize>(), 5, "expired rows must never reach an executed batch");
-    assert_eq!(m.latencies_s.len(), 5);
+    // "No compute" is visible in the latency histogram: only served rows
+    // were ever executed and timed.
+    assert_eq!(m.latency.count(), 5, "expired rows must never reach an executed batch");
+    assert!(m.batches >= 1 && m.max_batch <= 5, "served rows arrive in at most 5-row batches");
+}
+
+#[test]
+fn flood_run_dumps_traces_whose_phases_telescope_to_the_end_to_end_latency() {
+    let (ds, mlp) = iris();
+    let shard = slow_shard(&ds, mlp, 1, 1024, Duration::from_millis(50));
+    let engine = ServeEngine::start(vec![shard]).unwrap();
+    let key = ShardKey::new("iris", FormatSpec::parse("posit8es1").unwrap());
+    let dump = std::env::temp_dir().join(format!("overload_{}.trace.jsonl", std::process::id()));
+    // Threshold 1: the first shed-or-expired request triggers the spike dump.
+    engine.arm_trace_dump(&dump, 1);
+
+    let total = 64;
+    let rxs: Vec<_> =
+        (0..total).map(|i| engine.submit(&key, ds.test_row(i % ds.test_len()).to_vec()).unwrap()).collect();
+    let mut latency_ns = std::collections::HashMap::new();
+    for rx in rxs {
+        let reply = rx.recv().expect("flood request answered");
+        let prev = latency_ns.insert(reply.trace, reply.latency_s * 1e9);
+        assert!(prev.is_none(), "trace ids must be unique per request");
+    }
+    // One hopeless request expires at the next flush — the drop spike that
+    // fires the armed flight-recorder dump.
+    let doomed = engine.submit_with_deadline(&key, ds.test_row(0).to_vec(), Duration::ZERO).unwrap();
+    doomed.recv().expect_err("zero-budget request must expire");
+
+    let snapshot = engine.observe();
+    let metrics = engine.shutdown();
+
+    // The dump is strict JSONL; parse_dump enforces the schema and the
+    // telescoping invariant (queue + compute + reply == total) per event.
+    let text = std::fs::read_to_string(&dump).expect("expired spike must have dumped the flight recorder");
+    let events = deep_positron::obs::recorder::parse_dump(&text).expect("dump must satisfy the strict codec");
+    std::fs::remove_file(&dump).ok();
+    assert_eq!(events.len(), total, "every served request leaves one trace event");
+    for ev in &events {
+        assert_eq!(ev.queue_ns + ev.compute_ns + ev.reply_ns, ev.total_ns);
+        let client = latency_ns[&ev.trace];
+        // The client clock stops just before the reply is sent; the trace's
+        // reply phase extends past the send, so the trace total bounds the
+        // client-observed latency from above, within a loose scheduling slack.
+        assert!(
+            ev.total_ns as f64 >= client,
+            "trace {} total {} below client latency {client}",
+            ev.trace,
+            ev.total_ns
+        );
+        assert!(
+            (ev.total_ns as f64 - client) < 250e6,
+            "trace {} total {} drifts > 250ms past client latency {client}",
+            ev.trace,
+            ev.total_ns
+        );
+    }
+
+    // Histogram fidelity on real serving traffic: p50/p99 within one
+    // bucket's relative error (1/16) of the exact percentile over the very
+    // latencies the clients observed (same Duration feeds both paths).
+    let m = &metrics.shards[0];
+    assert_eq!(m.served, total);
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.latency.count() as usize, total);
+    let exact_samples: Vec<f64> = latency_ns.values().copied().collect();
+    for p in [50.0, 99.0] {
+        let q = m.latency.quantile_ns(p) as f64;
+        let exact = deep_positron::util::stats::percentile(&exact_samples, p);
+        assert!(q <= exact * (1.0 + 1e-9), "p{p}: histogram {q} above exact {exact}");
+        assert!(q >= exact * (1.0 - 1.0 / 16.0) - 1.0, "p{p}: histogram {q} under exact {exact} by over a bucket");
+    }
+
+    // The exported snapshot agrees with the shutdown metrics and passes its
+    // own strict codec round-trip (the same check `repro lint` runs on
+    // committed artifacts).
+    let shard_obs = &snapshot.shards[0];
+    assert_eq!(shard_obs.served as usize, total);
+    assert_eq!(shard_obs.samples as usize, total);
+    let reparsed = deep_positron::obs::ObsSnapshot::from_json(&snapshot.to_json()).expect("snapshot codec");
+    assert_eq!(reparsed, snapshot);
+    assert!(snapshot.to_prometheus().contains("deep_positron_served_total"));
 }
 
 #[test]
