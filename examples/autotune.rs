@@ -1,9 +1,10 @@
-//! Mixed-precision auto-tuning walkthrough (DESIGN.md §10): train iris and
-//! wdbc, search the per-layer format space under an accuracy budget, print
-//! the Pareto frontier, and stand up a serving shard straight from the
-//! tuned plan.
+//! Mixed-precision auto-tuning walkthrough (DESIGN.md §10, §16): train iris
+//! and wdbc, search the per-layer format space under an accuracy budget,
+//! print the Pareto frontier, stand up a serving shard straight from the
+//! tuned plan, then freeze the tuned network into a packed `.dpz` artifact
+//! and cold-start a second shard from it.
 //!
-//! The story in three acts per task:
+//! The story in five acts per task:
 //!   1. TUNE  — hold accuracy within one point of the best uniform 8-bit
 //!      posit while minimizing the modeled network energy-delay product.
 //!   2. PLAN  — serialize the winning `TunePlan` and parse it back (this
@@ -11,12 +12,21 @@
 //!   3. SERVE — start a `ServeEngine` shard from the plan: its workers
 //!      compile the heterogeneous execution plan, and the routing key is
 //!      the assignment's `+`-joined name.
+//!   4. PACK  — freeze the tuned mixed-precision network into a `.dpz`
+//!      deployable artifact, provenance riding along.
+//!   5. COLD-START — boot a fresh shard from the artifact alone (no
+//!      dataset, no trainer, no f64 pass) and verify it answers exactly
+//!      like the plan-booted shard.
 //!
 //! Run: cargo run --release --example autotune
 
+use std::sync::Arc;
+
+use deep_positron::accel::DeepPositron;
+use deep_positron::artifact::Artifact;
 use deep_positron::coordinator::experiments;
 use deep_positron::datasets::{self, Scale};
-use deep_positron::serve::ServeEngine;
+use deep_positron::serve::{ServeEngine, ShardConfig};
 use deep_positron::tune::{self, TuneConfig, TunePlan};
 
 fn main() -> anyhow::Result<()> {
@@ -56,6 +66,47 @@ fn main() -> anyhow::Result<()> {
             report.plan.accuracy * 100.0
         );
         println!("{}", engine.shutdown().render());
+
+        // Act 4: pack — freeze the tuned network into a `.dpz` deployable.
+        let dp = DeepPositron::compile_mixed(&mlp, report.plan.assignment.clone());
+        let artifact = Artifact::from_network(dataset, &dp)
+            .with_provenance(report.plan.accuracy, report.plan.pruned.clone());
+        let path = std::env::temp_dir().join(format!("autotune_{dataset}.dpz"));
+        artifact.save(&path)?;
+        let loaded = Artifact::load(&path).map_err(|e| anyhow::anyhow!("artifact: {e}"))?;
+        assert_eq!(loaded.weight_codes(), artifact.weight_codes(), "packed code streams round-trip");
+        assert_eq!(
+            loaded.compile().forward_codes(ds.test_row(0)),
+            dp.forward_codes(ds.test_row(0)),
+            "the artifact-booted plan is bit-identical to the freshly compiled one"
+        );
+        println!(
+            "packed {} into {} ({} bytes, provenance acc {:.1}%)",
+            loaded.mixed().name(),
+            path.display(),
+            std::fs::metadata(&path)?.len(),
+            loaded.accuracy().expect("provenance rode along") * 100.0
+        );
+
+        // Act 5: cold-start serve — the shard boots from packed codes alone.
+        let t0 = std::time::Instant::now();
+        let cold = ServeEngine::start(vec![ShardConfig::from_artifact(Arc::new(loaded)).with_workers(2)])
+            .map_err(|e| anyhow::anyhow!("serve: {e}"))?;
+        println!("cold-started the artifact shard in {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+        let key = cold.shard_keys().into_iter().next().expect("one shard");
+        let rxs: Vec<_> = (0..n).map(|i| cold.submit(&key, ds.test_row(i).to_vec()).expect("admitted")).collect();
+        let mut cold_correct = 0usize;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            if rx.recv()?.class == ds.y_test[i] as usize {
+                cold_correct += 1;
+            }
+        }
+        assert_eq!(cold_correct, correct, "the artifact-booted shard must answer exactly like the plan-booted one");
+        println!(
+            "served {n} requests from the artifact at the same {:.1}% accuracy\n",
+            cold_correct as f64 / n as f64 * 100.0
+        );
+        let _ = cold.shutdown();
     }
     Ok(())
 }

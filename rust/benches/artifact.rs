@@ -1,0 +1,102 @@
+//! Artifact cold-start bench (DESIGN.md §16, ISSUE 10 acceptance): boots
+//! per second of an inference plan from the packed `.dpz` artifact versus
+//! the status-quo path (dataset load + f64 training + quantizing compile),
+//! on the iris task at posit8es1.
+//!
+//! Asserted claims:
+//! * the artifact-booted plan is BIT-IDENTICAL to the freshly compiled one
+//!   (`forward_codes` parity over the whole test split) — a faster boot
+//!   that computes different codes proves nothing;
+//! * booting from the artifact is at least 10× faster than the f64 path
+//!   (in practice it is orders of magnitude: no dataset, no trainer, no
+//!   f64 pass — just parse the packed code streams and build LUT plans);
+//! * packing itself (`Artifact::from_network` + serialization) is cheap
+//!   enough to run inline at deploy time.
+//!
+//! Throughput results land in the schema-versioned `BENCH_artifact.json`
+//! trajectory at the repo root and are gated against the committed baseline
+//! (`util::bench_log`).
+
+use std::path::Path;
+
+use deep_positron::accel::DeepPositron;
+use deep_positron::artifact::Artifact;
+use deep_positron::coordinator::experiments;
+use deep_positron::datasets::{self, Scale};
+use deep_positron::formats::FormatSpec;
+use deep_positron::util::bench_log::{self, BenchLog};
+use deep_positron::util::stats::{mean, BenchTimer};
+
+/// The timed section, separated from artifact prep so
+/// [`bench_log::record_and_gate`] can draw fresh best-of samples without
+/// rebuilding the on-disk artifact.
+fn measure(dp: &DeepPositron, path: &Path, budget: f64) -> BenchLog {
+    let mut log = BenchLog::new("artifact");
+    let probe = [0.1f64, 0.2, 0.3, 0.4];
+    let mut sink = 0u32;
+
+    // Status quo: everything `repro serve` used to do before it could take
+    // --artifact — load the dataset, train the f64 net, quantize-compile.
+    let mut timer = BenchTimer::new("iris/boot from f64 (load + train + compile)");
+    timer.run(budget, || {
+        let ds = datasets::load("iris", 7, Scale::Small);
+        let mlp = experiments::train_model(&ds, 7);
+        let booted = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        sink = sink.wrapping_add(booted.forward_codes(&probe)[0] as u32);
+    });
+    let f64_boots = 1.0 / mean(timer.samples());
+    println!("{}", timer.report());
+    println!("  -> {f64_boots:.2} boots/s from f64  [sink {sink}]");
+    log.push("iris/boots_per_s/from_f64", f64_boots).expect("finite boot rate");
+
+    // The §16 path: read the .dpz text, parse + CRC-check it, compile the
+    // packed code streams straight into an execution plan.
+    let mut timer = BenchTimer::new("iris/boot from .dpz (load + parse + compile)");
+    timer.run(budget, || {
+        let booted = Artifact::load(path).expect("bench artifact loads").compile();
+        sink = sink.wrapping_add(booted.forward_codes(&probe)[0] as u32);
+    });
+    let art_boots = 1.0 / mean(timer.samples());
+    println!("{}", timer.report());
+    println!("  -> {art_boots:.0} boots/s from the artifact (×{:.0} vs f64)  [sink {sink}]", art_boots / f64_boots);
+    log.push("iris/boots_per_s/from_artifact", art_boots).expect("finite boot rate");
+
+    // Deploy-time cost of producing the artifact from a compiled network.
+    let mut timer = BenchTimer::new("iris/pack (from_network + serialize)");
+    timer.run(budget, || {
+        sink = sink.wrapping_add(Artifact::from_network("iris", dp).to_text().len() as u32);
+    });
+    let packs = 1.0 / mean(timer.samples());
+    println!("{}", timer.report());
+    println!("  -> {packs:.0} packs/s  [sink {sink}]");
+    log.push("iris/packs_per_s", packs).expect("finite pack rate");
+
+    assert!(
+        art_boots >= 10.0 * f64_boots,
+        "artifact cold start ({art_boots:.1} boots/s) must be >= 10x the f64 path ({f64_boots:.2} boots/s)"
+    );
+    log
+}
+
+fn main() {
+    let budget = bench_log::bench_budget(0.4);
+    let ds = datasets::load("iris", 7, Scale::Small);
+    let mlp = experiments::train_model(&ds, 7);
+    let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+    let path = std::env::temp_dir().join("deep_positron_bench_iris.dpz");
+    Artifact::from_network("iris", &dp).save(&path).expect("write bench artifact");
+    let bytes = std::fs::metadata(&path).expect("artifact metadata").len();
+
+    // Bit-identity before any timing: the artifact-booted plan must agree
+    // with the fresh compile on every test row.
+    let cold = Artifact::load(&path).expect("load bench artifact").compile();
+    for i in 0..ds.test_len() {
+        let row = ds.test_row(i);
+        assert_eq!(cold.forward_codes(row), dp.forward_codes(row), "artifact-booted plan diverged at row {i}");
+    }
+    println!("artifact: {bytes} B on disk, bit-identical to the fresh compile across {} test rows\n", ds.test_len());
+
+    let log = measure(&dp, &path, budget);
+    println!("\nartifact boot is >= 10x faster than the f64 path and bit-identical — OK");
+    bench_log::record_and_gate(log, || measure(&dp, &path, budget), bench_log::DEFAULT_TOLERANCE);
+}

@@ -63,53 +63,59 @@ fn main() {
     let fired = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| lut.assert_quire_fits(usize::MAX))).is_err();
     assert!(fired, "the Eq.(2) quire guard must fire on an absurd k");
 
-    // --- Throughput: scalar vs batched conv plan walks. ---
+    // --- Throughput: scalar vs batched conv plan walks. The timed section
+    // lives in a closure so the best-of gate can draw fresh samples without
+    // retraining or recompiling. ---
     let budget = bench_log::bench_budget(0.4);
-    let mut log = BenchLog::new("conv_forward");
     let dp = DeepPositron::compile(&mlp, spec);
-    let nrows = ds.test_len().min(64);
-    let rows: Vec<&[f64]> = (0..nrows).map(|i| ds.test_row(i)).collect();
-    let _ = dp.forward_batch(&rows[..1], Datapath::Emac); // warm every cache
-    let lut_builds_before = DecodeLut::shared_builds();
+    let measure = || {
+        let mut log = BenchLog::new("conv_forward");
+        let nrows = ds.test_len().min(64);
+        let rows: Vec<&[f64]> = (0..nrows).map(|i| ds.test_row(i)).collect();
+        let _ = dp.forward_batch(&rows[..1], Datapath::Emac); // warm every cache
+        let lut_builds_before = DecodeLut::shared_builds();
 
-    let mut sink = 0u32;
-    let mut timer = BenchTimer::new(&format!("conv-mnist/scalar forward_codes ×{nrows}"));
-    timer.run(budget, || {
-        for r in &rows {
-            sink = sink.wrapping_add(dp.forward_codes(r)[0] as u32);
-        }
-    });
-    let scalar_sps = nrows as f64 / mean(timer.samples());
-    println!("{}", timer.report());
-    println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
-    log.push("conv-mnist/scalar", scalar_sps).expect("finite throughput measurement");
-
-    let mut flat = Vec::new();
-    let mut batched_at_32 = 0.0;
-    for b in [8usize, 32] {
-        let batch = &rows[..b.min(nrows)];
-        let mut timer = BenchTimer::new(&format!("conv-mnist/forward_batch B={b}"));
+        let mut sink = 0u32;
+        let mut timer = BenchTimer::new(&format!("conv-mnist/scalar forward_codes ×{nrows}"));
         timer.run(budget, || {
-            dp.forward_batch_into(batch, Datapath::Emac, &mut flat);
-            sink = sink.wrapping_add(flat[0] as u32);
+            for r in &rows {
+                sink = sink.wrapping_add(dp.forward_codes(r)[0] as u32);
+            }
         });
-        let sps = batch.len() as f64 / mean(timer.samples());
+        let scalar_sps = nrows as f64 / mean(timer.samples());
         println!("{}", timer.report());
-        println!("  -> {sps:.0} samples/s batched (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
-        log.push(&format!("conv-mnist/forward_batch/B={b}"), sps).expect("finite throughput measurement");
-        if b == 32 {
-            batched_at_32 = sps;
+        println!("  -> {scalar_sps:.0} samples/s scalar  [sink {sink}]");
+        log.push("conv-mnist/scalar", scalar_sps).expect("finite throughput measurement");
+
+        let mut flat = Vec::new();
+        let mut batched_at_32 = 0.0;
+        for b in [8usize, 32] {
+            let batch = &rows[..b.min(nrows)];
+            let mut timer = BenchTimer::new(&format!("conv-mnist/forward_batch B={b}"));
+            timer.run(budget, || {
+                dp.forward_batch_into(batch, Datapath::Emac, &mut flat);
+                sink = sink.wrapping_add(flat[0] as u32);
+            });
+            let sps = batch.len() as f64 / mean(timer.samples());
+            println!("{}", timer.report());
+            println!("  -> {sps:.0} samples/s batched (×{:.2} vs scalar)  [sink {sink}]", sps / scalar_sps);
+            log.push(&format!("conv-mnist/forward_batch/B={b}"), sps).expect("finite throughput measurement");
+            if b == 32 {
+                batched_at_32 = sps;
+            }
         }
-    }
-    assert_eq!(
-        DecodeLut::shared_builds(),
-        lut_builds_before,
-        "conv inference rebuilt a decode LUT — the compile-once contract is broken"
-    );
-    assert!(
-        batched_at_32 > scalar_sps,
-        "batched conv path at B=32 ({batched_at_32:.0}/s) must beat per-sample execution ({scalar_sps:.0}/s)"
-    );
+        assert_eq!(
+            DecodeLut::shared_builds(),
+            lut_builds_before,
+            "conv inference rebuilt a decode LUT — the compile-once contract is broken"
+        );
+        assert!(
+            batched_at_32 > scalar_sps,
+            "batched conv path at B=32 ({batched_at_32:.0}/s) must beat per-sample execution ({scalar_sps:.0}/s)"
+        );
+        log
+    };
+    let log = measure();
 
     // --- Accuracy: the conv EMAC tracks the f64 conv baseline. ---
     let acc = dp.accuracy(&ds);
@@ -118,5 +124,5 @@ fn main() {
     assert!(acc >= baseline - 0.08, "posit8 conv EMAC lost too much: {acc} vs {baseline}");
 
     println!("\nconv EMAC provisions the 26-term receptive-field quire and batching wins at B=32 — OK");
-    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
+    bench_log::record_and_gate(log, measure, bench_log::DEFAULT_TOLERANCE);
 }

@@ -33,6 +33,7 @@ fn run(workers: usize, mlp: &Mlp) -> ShardMetrics {
         mlp: mlp.clone(),
         spec,
         mixed: None,
+        artifact: None,
         engine: Engine::Sim,
         workers,
         worker: WorkerConfig { max_batch_wait: Duration::from_micros(200), sim_batch: 16, ..WorkerConfig::default() },

@@ -57,19 +57,19 @@ fn main() {
     let mut log = BenchLog::new("tune_search");
 
     // --- Conv MNIST: serial unpruned vs sensitivity-pruned + parallel. ---
-    let ds = datasets::load("mnist", 7, Scale::Small);
+    let conv_ds = datasets::load("mnist", 7, Scale::Small);
     println!("training the conv net (conv4k5x5s2+pool2s2+flatten+dense10, 2 epochs)…");
-    let mlp = experiments::train_conv_model(&ds, 7, 2);
+    let conv_mlp = experiments::train_conv_model(&conv_ds, 7, 2);
     const EVAL_ROWS: usize = 48; // == sensitivity::SCREEN_ROWS: screening at search fidelity
-    let budget = tune::default_budget(&ds, &mlp, EVAL_ROWS);
+    let budget = tune::default_budget(&conv_ds, &conv_mlp, EVAL_ROWS);
     let base = TuneConfig::new(budget).with_beam(1).with_eval_rows(EVAL_ROWS);
 
     let serial_cfg = base.clone().with_threads(1).with_prune(None);
-    let (serial, serial_secs) = timed_search("tune/conv-mnist serial unpruned", &ds, &mlp, &serial_cfg);
+    let (serial, serial_secs) = timed_search("tune/conv-mnist serial unpruned", &conv_ds, &conv_mlp, &serial_cfg);
     log.push("conv-mnist/serial-unpruned", serial.evaluated as f64 / serial_secs).expect("finite search rate");
 
     let pruned_cfg = base.with_prune(Some(0.01));
-    let (pruned, pruned_secs) = timed_search("tune/conv-mnist pruned parallel", &ds, &mlp, &pruned_cfg);
+    let (pruned, pruned_secs) = timed_search("tune/conv-mnist pruned parallel", &conv_ds, &conv_mlp, &pruned_cfg);
     log.push("conv-mnist/pruned-parallel", pruned.evaluated as f64 / pruned_secs).expect("finite search rate");
 
     let table = pruned.sensitivity.as_ref().expect("pruned run must carry its sensitivity table");
@@ -118,11 +118,11 @@ fn main() {
     );
 
     // --- Iris: the PR-5 frontier-quality run, now pruned + parallel. ---
-    let ds = datasets::load("iris", 7, Scale::Small);
-    let mlp = experiments::train_model(&ds, 7);
-    let budget = tune::default_budget(&ds, &mlp, usize::MAX);
-    let cfg = TuneConfig::new(budget).with_beam(2);
-    let (report, secs) = timed_search("tune/iris pruned parallel beam=2", &ds, &mlp, &cfg);
+    let iris_ds = datasets::load("iris", 7, Scale::Small);
+    let iris_mlp = experiments::train_model(&iris_ds, 7);
+    let budget = tune::default_budget(&iris_ds, &iris_mlp, usize::MAX);
+    let iris_cfg = TuneConfig::new(budget).with_beam(2);
+    let (report, secs) = timed_search("tune/iris pruned parallel beam=2", &iris_ds, &iris_mlp, &iris_cfg);
     log.push("iris/pruned-parallel", report.evaluated as f64 / secs).expect("finite search rate");
     println!(
         "  -> tuned {} @ {:.2}% acc, EDP {:.3e} (uniform posit8 {}: {:.2}%, EDP {:.3e})",
@@ -149,5 +149,21 @@ fn main() {
     );
 
     println!("\npruned+parallel search cuts the conv candidate pool and wall clock without losing the plan — OK");
-    bench_log::record_and_gate(&log, bench_log::DEFAULT_TOLERANCE);
+    bench_log::record_and_gate(
+        log,
+        || {
+            // Best-of re-measurement: re-run the three timed searches on the
+            // already-trained models (a search's rate is what is gated; its
+            // quality claims were already asserted above).
+            let mut log = BenchLog::new("tune_search");
+            let (serial, secs) = timed_search("tune/conv-mnist serial unpruned", &conv_ds, &conv_mlp, &serial_cfg);
+            log.push("conv-mnist/serial-unpruned", serial.evaluated as f64 / secs).expect("finite search rate");
+            let (pruned, secs) = timed_search("tune/conv-mnist pruned parallel", &conv_ds, &conv_mlp, &pruned_cfg);
+            log.push("conv-mnist/pruned-parallel", pruned.evaluated as f64 / secs).expect("finite search rate");
+            let (report, secs) = timed_search("tune/iris pruned parallel beam=2", &iris_ds, &iris_mlp, &iris_cfg);
+            log.push("iris/pruned-parallel", report.evaluated as f64 / secs).expect("finite search rate");
+            log
+        },
+        bench_log::DEFAULT_TOLERANCE,
+    );
 }

@@ -247,6 +247,29 @@ impl Mlp {
         NetIr::new(self.layers.iter().map(Layer::geom).collect())
     }
 
+    /// A zero-parameter network with the given IR's geometry — the
+    /// serve-from-artifact shell (DESIGN.md §16). Workers compiling from a
+    /// `.dpz` artifact never read `w`/`b` (the codes come from the artifact),
+    /// but the shard plumbing still carries a shape-checked network for
+    /// validation and routing, and this builds one without a dataset or a
+    /// trainer in sight.
+    pub fn skeleton(ir: &NetIr) -> Mlp {
+        let layers = ir
+            .geoms()
+            .iter()
+            .map(|g| Layer {
+                in_dim: g.in_shape.len(),
+                out_dim: g.out_shape.len(),
+                w: vec![0.0; g.num_weights()],
+                b: vec![0.0; g.num_biases()],
+                kind: g.kind,
+                in_shape: g.in_shape,
+                out_shape: g.out_shape,
+            })
+            .collect();
+        Mlp::from_layers(layers)
+    }
+
     /// Whether every layer is dense (the XLA fast path covers exactly this).
     pub fn is_dense(&self) -> bool {
         self.layers.iter().all(|l| l.kind == LayerKind::Dense)

@@ -10,8 +10,11 @@
 //! (dense topologies only — conv networks are Sim-native).
 //!
 //! Execution follows a compile-once / run-many plan (DESIGN.md §8): at
-//! [`DeepPositron::compile`] time every layer's weight codes are pre-decoded
-//! into flat EMAC operands and biases are pre-shifted into quire units, so
+//! [`DeepPositron::compile`] time every layer's weight codes are staged as
+//! **packed dense `u8` codes** (decoded on the fly through the format's
+//! monomorphized 256-entry table — an 8× smaller working set than
+//! pre-decoded operands; formats wider than 8 bits keep pre-decoded
+//! operands) and biases are pre-shifted into quire units, so
 //! [`DeepPositron::forward_batch`] walks each layer once per batch — the
 //! weight row streams across all samples, one quire/activation buffer set is
 //! reused, and nothing is decoded or allocated per sample. The scalar
@@ -64,7 +67,7 @@
 
 use std::sync::Arc;
 
-use super::ir::{LayerKind, Shape};
+use super::ir::{LayerGeom, LayerKind, NetIr, Shape};
 use super::mlp::{Layer, Mlp};
 use crate::datasets::Dataset;
 use crate::formats::emac::{DecodeLut, DecodedOp};
@@ -100,6 +103,58 @@ pub enum Datapath {
     /// EMAC with an artificially narrowed quire (wraps at `bits`) —
     /// quantifies why Eq. (2)'s sizing matters.
     NarrowQuire(u32),
+}
+
+/// Compiled weight storage for one plan layer (DESIGN.md §16).
+///
+/// Every ≤8-bit paper format stores its weights **packed**: one dense `u8`
+/// code per weight, decoded on the fly through the layer's monomorphized
+/// 256-entry [`DecodeLut::ops8`] table. That is an 8× smaller working set
+/// than pre-decoded 24-byte [`DecodedOp`]s — the whole weight store of a
+/// tabular network fits in a few cache lines next to the live quire tile —
+/// and the `u8` index makes every lookup bounds-check free by construction.
+/// Formats wider than 8 bits (no `ops8` table) keep the classic pre-decoded
+/// operand vector. Both arms are bit-identical: the packed arm reads the
+/// same table `decode_block` decodes activations through.
+#[derive(Clone)]
+enum PlanWeights {
+    /// Dense `u8` weight codes for a format with a monomorphized table.
+    Packed(Vec<u8>),
+    /// Pre-decoded operands for formats wider than the table.
+    Wide(Vec<DecodedOp>),
+}
+
+/// Uniform weight-operand access the tiled kernels monomorphize over: one
+/// instantiation of each kernel reads packed codes through the 256-entry
+/// table, the other reads pre-decoded operands — no per-element branch in
+/// either copy.
+trait WeightFetch {
+    /// Decoded operand of weight `idx` (plan layout order).
+    fn op(&self, idx: usize) -> DecodedOp;
+}
+
+/// Packed-code fetch: `table[codes[idx]]` — a `u8` index into a 256-entry
+/// table can never be out of bounds, so the optimizer drops the check.
+struct PackedW<'a> {
+    table: &'a [DecodedOp; 256],
+    codes: &'a [u8],
+}
+
+impl WeightFetch for PackedW<'_> {
+    #[inline(always)]
+    fn op(&self, idx: usize) -> DecodedOp {
+        self.table[self.codes[idx] as usize]
+    }
+}
+
+/// Pre-decoded fetch for formats wider than the monomorphized table.
+struct WideW<'a>(&'a [DecodedOp]);
+
+impl WeightFetch for WideW<'_> {
+    #[inline(always)]
+    fn op(&self, idx: usize) -> DecodedOp {
+        self.0[idx]
+    }
 }
 
 /// One layer of the compiled execution plan (DESIGN.md §8): weight codes
@@ -139,9 +194,10 @@ struct LayerPlan {
     zero: u16,
     /// Zero code of the OUTPUT format (ReLU clamp target).
     out_zero: u16,
-    /// Pre-decoded weight operands (dense: row-major `[out][in]`; conv:
-    /// `[out_ch][in_ch][kh][kw]`; empty for weightless kinds).
-    w_ops: Vec<DecodedOp>,
+    /// Weight operands (dense: row-major `[out][in]`; conv:
+    /// `[out_ch][in_ch][kh][kw]`; empty for weightless kinds), packed as
+    /// dense `u8` codes whenever the format has a monomorphized table.
+    w: PlanWeights,
     /// Per-output-neuron (dense) / per-output-channel (conv) bias,
     /// pre-shifted into quire units (`2^lsb_exp`).
     bias_q: Vec<i128>,
@@ -278,13 +334,6 @@ impl DeepPositron {
         tables: &dyn Fn(FormatSpec) -> Arc<Quantizer>,
     ) -> (Vec<u16>, Vec<Exact>, LayerPlan) {
         let quantizer = tables(spec);
-        let lut = DecodeLut::shared(spec);
-        // Eq. (2) width check, once at compile time per layer, at the
-        // layer's OWN accumulation length: receptive-field fan-in + 1
-        // bias term for weighted layers (dense: in_dim + 1, exactly the
-        // pre-IR bound; conv: kh·kw·in_ch + 1 — the conv EMAC no longer
-        // provisions an input-width quire).
-        lut.assert_quire_fits(layer.eq2_k());
         let (codes, _) = quantizer.quantize_slice(&layer.w);
         let bias_exact: Vec<Exact> = layer
             .b
@@ -294,25 +343,141 @@ impl DeepPositron {
                 quantizer.decode(code).unwrap_or(Exact::ZERO)
             })
             .collect();
-        let w_ops: Vec<DecodedOp> = codes.iter().map(|&c| lut.op(c)).collect();
-        debug_assert!(w_ops.iter().all(|op| !op.is_invalid()), "non-canonical weight code");
+        let relu = layer.kind.has_weights() && li < last;
+        let entry =
+            DeepPositron::plan_entry(&layer.geom(), dims[li], dims[li + 1], relu, spec, out_spec, &codes, &bias_exact, tables);
+        (codes, bias_exact, entry)
+    }
+
+    /// Assemble one [`LayerPlan`] from already-quantized parameters: the
+    /// shared tail of [`DeepPositron::build_layer`] (which quantizes from
+    /// f64 first) and [`DeepPositron::compile_from_codes`] (which starts
+    /// from artifact codes and never sees an f64 weight).
+    #[allow(clippy::too_many_arguments)]
+    fn plan_entry(
+        geom: &LayerGeom,
+        in_dim: usize,
+        out_dim: usize,
+        relu: bool,
+        spec: FormatSpec,
+        out_spec: FormatSpec,
+        codes: &[u16],
+        bias_exact: &[Exact],
+        tables: &dyn Fn(FormatSpec) -> Arc<Quantizer>,
+    ) -> LayerPlan {
+        let quantizer = tables(spec);
+        let lut = DecodeLut::shared(spec);
+        // Eq. (2) width check, once at compile time per layer, at the
+        // layer's OWN accumulation length: receptive-field fan-in + 1
+        // bias term for weighted layers (dense: in_dim + 1, exactly the
+        // pre-IR bound; conv: kh·kw·in_ch + 1 — the conv EMAC no longer
+        // provisions an input-width quire).
+        lut.assert_quire_fits(geom.eq2_k());
+        debug_assert!(codes.iter().all(|&c| !lut.op(c).is_invalid()), "non-canonical weight code");
+        // Packed storage whenever the format has a monomorphized table
+        // (every ≤8-bit paper format): one dense byte per weight, decoded
+        // on the fly. Wider formats pre-decode as before.
+        let w = if lut.ops8().is_some() {
+            PlanWeights::Packed(codes.iter().map(|&c| c as u8).collect())
+        } else {
+            PlanWeights::Wide(codes.iter().map(|&c| lut.op(c)).collect())
+        };
         let out_q = if out_spec == spec { Arc::clone(&quantizer) } else { tables(out_spec) };
-        let entry = LayerPlan {
-            kind: layer.kind,
-            in_shape: layer.in_shape,
-            out_shape: layer.out_shape,
-            in_dim: dims[li],
-            out_dim: dims[li + 1],
+        LayerPlan {
+            kind: geom.kind,
+            in_shape: geom.in_shape,
+            out_shape: geom.out_shape,
+            in_dim,
+            out_dim,
             zero: quantizer.zero_code(),
             out_zero: out_q.zero_code(),
             bias_q: bias_exact.iter().map(|b| lut.to_quire(b)).collect(),
-            relu: layer.kind.has_weights() && li < last,
-            w_ops,
+            relu,
+            w,
             lut,
             out_q,
             quantizer,
-        };
-        (codes, bias_exact, entry)
+        }
+    }
+
+    /// Compile an accelerator instance **directly from quantized codes** —
+    /// the `.dpz` artifact fast path (DESIGN.md §16): no dataset, no
+    /// trainer, no f64 weight pass. `weight_codes`/`bias_codes` carry one
+    /// entry per IR layer (empty vectors for weightless kinds), in the
+    /// layer format of `mixed`; every code must be canonical in its layer's
+    /// format ([`crate::artifact::Artifact::parse`] validates this before
+    /// calling, so the serve-from-artifact path never panics here).
+    ///
+    /// Bit-identical to [`DeepPositron::compile`] /
+    /// [`DeepPositron::compile_mixed`] on the network the codes came from:
+    /// both paths feed the same codes through the same plan assembly.
+    pub fn compile_from_codes(
+        ir: &NetIr,
+        mixed: MixedSpec,
+        weight_codes: Vec<Vec<u16>>,
+        bias_codes: &[Vec<u16>],
+    ) -> DeepPositron {
+        assert_eq!(mixed.len(), ir.len(), "mixed assignment must carry exactly one format per layer");
+        assert_eq!(weight_codes.len(), ir.len(), "one weight-code tensor per layer");
+        assert_eq!(bias_codes.len(), ir.len(), "one bias-code tensor per layer");
+        let dims = ir.dims();
+        let specs = mixed.layers();
+        let last = ir.len() - 1;
+        let mut biases = Vec::with_capacity(ir.len());
+        let mut plan = Vec::with_capacity(ir.len());
+        for (li, geom) in ir.geoms().iter().enumerate() {
+            let spec = specs[li];
+            let out_spec = specs.get(li + 1).copied().unwrap_or(spec);
+            let quantizer = Quantizer::shared(spec);
+            assert_eq!(weight_codes[li].len(), geom.num_weights(), "layer {li} weight count");
+            assert_eq!(bias_codes[li].len(), geom.num_biases(), "layer {li} bias count");
+            let bias_exact: Vec<Exact> =
+                bias_codes[li].iter().map(|&c| quantizer.decode(c).unwrap_or(Exact::ZERO)).collect();
+            let relu = geom.kind.has_weights() && li < last;
+            let entry = DeepPositron::plan_entry(
+                geom,
+                dims[li],
+                dims[li + 1],
+                relu,
+                spec,
+                out_spec,
+                &weight_codes[li],
+                &bias_exact,
+                &Quantizer::shared,
+            );
+            plan.push(entry);
+            biases.push(bias_exact);
+        }
+        let quantizer = Arc::clone(&plan[0].quantizer);
+        DeepPositron { mixed, quantizer, weights: weight_codes, biases, plan, dims }
+    }
+
+    /// Per-layer quantized weight codes (plan layout order; empty entries
+    /// for weightless layers) — what the `.dpz` artifact writer packs.
+    pub fn weight_codes(&self) -> &[Vec<u16>] {
+        &self.weights
+    }
+
+    /// Per-layer bias codes, re-quantized from the stored exact biases
+    /// (identity: each stored bias is the decoded value of a canonical
+    /// code, so quantizing it back returns that code).
+    pub fn bias_codes(&self) -> Vec<Vec<u16>> {
+        self.plan
+            .iter()
+            .zip(&self.biases)
+            .map(|(lp, bs)| bs.iter().map(|b| lp.quantizer.quantize_exact(b).0).collect())
+            .collect()
+    }
+
+    /// The network's typed IR, rebuilt from the compiled plan — lets an
+    /// artifact be written from a compiled instance alone.
+    pub fn ir(&self) -> NetIr {
+        NetIr::new(
+            self.plan
+                .iter()
+                .map(|lp| LayerGeom { kind: lp.kind, in_shape: lp.in_shape, out_shape: lp.out_shape })
+                .collect(),
+        )
     }
 
     /// The network's input-layer format. Uniform networks (compiled via
@@ -501,87 +666,28 @@ impl DeepPositron {
                 decode_block(&lp.lut, &act[..lp.in_dim * b], &mut dec[..lp.in_dim * b]);
             }
             match lp.kind {
-                LayerKind::Dense => {
-                    for o0 in (0..lp.out_dim).step_by(ROW_TILE) {
-                        let o1 = (o0 + ROW_TILE).min(lp.out_dim);
-                        for s0 in (0..b).step_by(LANE_BLOCK) {
-                            let lanes = LANE_BLOCK.min(b - s0);
-                            for (r, o) in (o0..o1).enumerate() {
-                                quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[o]);
-                            }
-                            for i in 0..lp.in_dim {
-                                let acol = &dec[i * b + s0..i * b + s0 + lanes];
-                                for (r, o) in (o0..o1).enumerate() {
-                                    let w = lp.w_ops[o * lp.in_dim + i];
-                                    if w.mag == 0 {
-                                        continue; // zero weight annihilates the lane
-                                    }
-                                    mac_lane(&mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes], w, acol, lsb);
-                                }
-                            }
-                            for (r, o) in (o0..o1).enumerate() {
-                                round_lane(
-                                    lp,
-                                    lsb,
-                                    0,
-                                    width_limit,
-                                    &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
-                                    &mut next[o * b + s0..o * b + s0 + lanes],
-                                );
-                            }
-                        }
+                // Each weighted kernel is monomorphized twice over the
+                // weight-fetch strategy: the packed arm streams dense u8
+                // codes through the 256-entry table, the wide arm reads
+                // pre-decoded operands. Same loops, same bits, either way.
+                LayerKind::Dense => match &lp.w {
+                    PlanWeights::Packed(codes) => {
+                        let table = lp.lut.ops8().expect("packed weights imply a monomorphized table");
+                        dense_emac(lp, &PackedW { table, codes }, b, lsb, width_limit, &dec, &mut next, &mut quires);
                     }
-                }
-                LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } => {
-                    let (ih, iw) = lp.in_shape.hw();
-                    let (oh, ow) = lp.out_shape.hw();
-                    let ksz = in_ch * kh * kw;
-                    for oc0 in (0..out_ch).step_by(ROW_TILE) {
-                        let oc1 = (oc0 + ROW_TILE).min(out_ch);
-                        for oy in 0..oh {
-                            for ox in 0..ow {
-                                for s0 in (0..b).step_by(LANE_BLOCK) {
-                                    let lanes = LANE_BLOCK.min(b - s0);
-                                    for (r, oc) in (oc0..oc1).enumerate() {
-                                        quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[oc]);
-                                    }
-                                    for ic in 0..in_ch {
-                                        for ky in 0..kh {
-                                            for kx in 0..kw {
-                                                let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
-                                                let acol = &dec[i * b + s0..i * b + s0 + lanes];
-                                                let koff = ic * kh * kw + ky * kw + kx;
-                                                for (r, oc) in (oc0..oc1).enumerate() {
-                                                    let w = lp.w_ops[oc * ksz + koff];
-                                                    if w.mag == 0 {
-                                                        continue;
-                                                    }
-                                                    mac_lane(
-                                                        &mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
-                                                        w,
-                                                        acol,
-                                                        lsb,
-                                                    );
-                                                }
-                                            }
-                                        }
-                                    }
-                                    for (r, oc) in (oc0..oc1).enumerate() {
-                                        let o = oc * oh * ow + oy * ow + ox;
-                                        round_lane(
-                                            lp,
-                                            lsb,
-                                            0,
-                                            width_limit,
-                                            &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
-                                            &mut next[o * b + s0..o * b + s0 + lanes],
-                                        );
-                                    }
-                                }
-                            }
-                        }
+                    PlanWeights::Wide(ops) => {
+                        dense_emac(lp, &WideW(ops), b, lsb, width_limit, &dec, &mut next, &mut quires);
                     }
-                }
+                },
+                LayerKind::Conv2d { .. } => match &lp.w {
+                    PlanWeights::Packed(codes) => {
+                        let table = lp.lut.ops8().expect("packed weights imply a monomorphized table");
+                        conv_emac(lp, &PackedW { table, codes }, b, lsb, width_limit, &dec, &mut next, &mut quires);
+                    }
+                    PlanWeights::Wide(ops) => {
+                        conv_emac(lp, &WideW(ops), b, lsb, width_limit, &dec, &mut next, &mut quires);
+                    }
+                },
                 LayerKind::AvgPool { k, stride } => {
                     let (ih, iw) = lp.in_shape.hw();
                     let (oh, ow) = lp.out_shape.hw();
@@ -943,6 +1049,117 @@ fn decode_block(lut: &DecodeLut, act: &[u16], dec: &mut [DecodedOp]) {
     }
 }
 
+/// The tiled dense EMAC kernel, generic over the weight-fetch strategy
+/// (packed u8 codes vs pre-decoded operands — see [`PlanWeights`]). The
+/// loop structure is identical for both monomorphizations: [`ROW_TILE`]
+/// weight rows × [`LANE_BLOCK`] batch lanes, bias-seeded quires, one
+/// terminal round per output lane.
+#[allow(clippy::too_many_arguments)]
+fn dense_emac<W: WeightFetch>(
+    lp: &LayerPlan,
+    w: &W,
+    b: usize,
+    lsb: i32,
+    width_limit: Option<u32>,
+    dec: &[DecodedOp],
+    next: &mut [u16],
+    quires: &mut [i128; ROW_TILE * LANE_BLOCK],
+) {
+    for o0 in (0..lp.out_dim).step_by(ROW_TILE) {
+        let o1 = (o0 + ROW_TILE).min(lp.out_dim);
+        for s0 in (0..b).step_by(LANE_BLOCK) {
+            let lanes = LANE_BLOCK.min(b - s0);
+            for (r, o) in (o0..o1).enumerate() {
+                quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[o]);
+            }
+            for i in 0..lp.in_dim {
+                let acol = &dec[i * b + s0..i * b + s0 + lanes];
+                for (r, o) in (o0..o1).enumerate() {
+                    let wop = w.op(o * lp.in_dim + i);
+                    if wop.mag == 0 {
+                        continue; // zero weight annihilates the lane
+                    }
+                    mac_lane(&mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes], wop, acol, lsb);
+                }
+            }
+            for (r, o) in (o0..o1).enumerate() {
+                round_lane(
+                    lp,
+                    lsb,
+                    0,
+                    width_limit,
+                    &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
+                    &mut next[o * b + s0..o * b + s0 + lanes],
+                );
+            }
+        }
+    }
+}
+
+/// The tiled conv2d EMAC kernel, generic over the weight-fetch strategy
+/// (the conv twin of [`dense_emac`]): one quire per output pixel, seeded
+/// with the channel bias, accumulating the `kh·kw·in_ch` receptive field
+/// across [`ROW_TILE`] output channels × [`LANE_BLOCK`] batch lanes.
+/// Panics if `lp.kind` is not conv (callers dispatch on the kind).
+#[allow(clippy::too_many_arguments)]
+fn conv_emac<W: WeightFetch>(
+    lp: &LayerPlan,
+    w: &W,
+    b: usize,
+    lsb: i32,
+    width_limit: Option<u32>,
+    dec: &[DecodedOp],
+    next: &mut [u16],
+    quires: &mut [i128; ROW_TILE * LANE_BLOCK],
+) {
+    let LayerKind::Conv2d { kh, kw, stride, in_ch, out_ch } = lp.kind else {
+        panic!("conv_emac on a non-conv layer");
+    };
+    let (ih, iw) = lp.in_shape.hw();
+    let (oh, ow) = lp.out_shape.hw();
+    let ksz = in_ch * kh * kw;
+    for oc0 in (0..out_ch).step_by(ROW_TILE) {
+        let oc1 = (oc0 + ROW_TILE).min(out_ch);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for s0 in (0..b).step_by(LANE_BLOCK) {
+                    let lanes = LANE_BLOCK.min(b - s0);
+                    for (r, oc) in (oc0..oc1).enumerate() {
+                        quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes].fill(lp.bias_q[oc]);
+                    }
+                    for ic in 0..in_ch {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let i = ic * ih * iw + (oy * stride + ky) * iw + (ox * stride + kx);
+                                let acol = &dec[i * b + s0..i * b + s0 + lanes];
+                                let koff = ic * kh * kw + ky * kw + kx;
+                                for (r, oc) in (oc0..oc1).enumerate() {
+                                    let wop = w.op(oc * ksz + koff);
+                                    if wop.mag == 0 {
+                                        continue;
+                                    }
+                                    mac_lane(&mut quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes], wop, acol, lsb);
+                                }
+                            }
+                        }
+                    }
+                    for (r, oc) in (oc0..oc1).enumerate() {
+                        let o = oc * oh * ow + oy * ow + ox;
+                        round_lane(
+                            lp,
+                            lsb,
+                            0,
+                            width_limit,
+                            &quires[r * LANE_BLOCK..r * LANE_BLOCK + lanes],
+                            &mut next[o * b + s0..o * b + s0 + lanes],
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Accumulate one pre-decoded weight against one pre-decoded activation
 /// lane — the exact product term of `Emac::mac` (canonical magnitudes are
 /// ≤16-bit, so the product fits u64). The zip over equal-length lanes keeps
@@ -1272,6 +1489,56 @@ mod tests {
     fn mixed_assignment_must_match_layer_count() {
         let (mlp, _) = trained_iris();
         let _ = DeepPositron::compile_mixed(&mlp, MixedSpec::uniform(FormatSpec::Posit { n: 8, es: 1 }, 2));
+    }
+
+    #[test]
+    fn compile_from_codes_matches_compile() {
+        // The artifact fast path (codes in, no f64 weight pass) must be
+        // bit-identical to the classic compile on the network the codes
+        // came from — for uniform, genuinely mixed, and (Wide-arm) 16-bit
+        // assignments alike.
+        let (mlp, ds) = trained_iris();
+        for name in ["posit8es1+posit8es1+posit8es1", "posit8es1+posit6es1+fixed7q3", "posit16es1+posit16es1+posit16es1"]
+        {
+            let mixed = MixedSpec::parse(name).unwrap();
+            let dp = DeepPositron::compile_mixed(&mlp, mixed.clone());
+            let re =
+                DeepPositron::compile_from_codes(&dp.ir(), mixed, dp.weight_codes().to_vec(), &dp.bias_codes());
+            assert_eq!(re.mixed(), dp.mixed(), "{name}");
+            for i in 0..12 {
+                assert_eq!(re.forward_codes(ds.test_row(i)), dp.forward_codes(ds.test_row(i)), "{name} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn compile_from_codes_round_trips_a_conv_plan() {
+        // Conv + pool + flatten geometries survive the codes round-trip too
+        // (the ir() rebuild carries the full typed geometry, not just dims).
+        let mlp = tiny_conv_net();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        let ir = dp.ir();
+        assert_eq!(ir, mlp.ir());
+        let re = DeepPositron::compile_from_codes(&ir, dp.mixed().clone(), dp.weight_codes().to_vec(), &dp.bias_codes());
+        let mut rng = Rng::new(23);
+        for _ in 0..4 {
+            let x: Vec<f64> = (0..64).map(|_| rng.range(0.0, 1.0)).collect();
+            assert_eq!(re.forward_codes(&x), dp.forward_codes(&x));
+        }
+    }
+
+    #[test]
+    fn bias_codes_round_trip_through_quantization() {
+        let (mlp, _) = trained_iris();
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Float { n: 8, we: 4 });
+        // Every stored bias is the decoded value of a canonical code, so
+        // re-quantizing is the identity the artifact writer relies on.
+        for (codes, layer) in dp.bias_codes().iter().zip(&dp.plan) {
+            for &c in codes {
+                let v = layer.quantizer.decode(c).expect("canonical bias code");
+                assert_eq!(layer.quantizer.quantize_exact(&v).0, c);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! The `.dpz` deployable model artifact (DESIGN.md §16): one line-oriented,
+//! checksummed file carrying everything a serving shard needs to cold-start
+//! — the [`NetIr`] topology, the per-layer [`FormatSpec`] assignment,
+//! bit-packed weight and bias codes, and (optionally) the tuning provenance
+//! of the plan that produced it. No dataset, no trainer, no f64 weight pass:
+//! [`Artifact::compile`] feeds the codes straight into
+//! [`DeepPositron::compile_from_codes`].
+//!
+//! ## Layout (strict; text-framed UTF-8)
+//!
+//! ```text
+//! deep-positron dpz v1                      magic + version, exact
+//! dataset=iris                              task label (shard routing key)
+//! ir=4:dense10+dense8+dense3                NetIr::name topology
+//! layers=posit8es1+posit8es1+posit8es1      MixedSpec::name assignment
+//! accuracy=0.953333                         optional TunePlan provenance
+//! pruned=sensitivity drop<=1.0% ...         optional TunePlan provenance
+//! w0=5:40:<hex of packed bytes>:<crc32>     per weighted layer, ascending
+//! b0=5:10:<hex>:<crc32>
+//! ...
+//! crc=<crc32 over every preceding byte>     final line
+//! ```
+//!
+//! Each `w<i>`/`b<i>` field is `width:count:hex:crc32` — a
+//! [`PackedCodes`] stream (MSB-first, 1-bit final padding, per-field
+//! CRC-32) holding `count` codes of exactly the layer format's bit-width.
+//! Weightless layers (pool/flatten) carry no fields. All checksums are the
+//! standard `zlib.crc32`, so external tooling can verify a `.dpz` without
+//! this crate.
+//!
+//! The reader is strict: unknown or duplicated keys, a wrong magic line, a
+//! non-final or mismatching `crc=`, width/count disagreements with the
+//! declared geometry, non-canonical codes, and Eq. (2) quire overflows all
+//! come back as typed errors, never panics — artifacts are deployment
+//! inputs and deployment inputs are untrusted. The `repro lint` artifact
+//! audit (DESIGN.md §14) re-derives the same invariants over committed
+//! `.dpz` files.
+
+use crate::accel::{DeepPositron, NetIr};
+use crate::formats::emac::DecodeLut;
+use crate::formats::pack::{crc32, from_hex, to_hex, PackedCodes};
+use crate::formats::MixedSpec;
+
+/// Magic + version line every `.dpz` file must start with.
+pub const DPZ_MAGIC: &str = "deep-positron dpz v1";
+
+/// Eq. (2) quire budget (DESIGN.md §6): the largest quire the EMAC model
+/// provisions. A parsed artifact whose (format, fan-in) pair needs more is
+/// rejected here — mirroring the `assert_quire_fits` the compiler would
+/// otherwise hit — so a bad artifact errors instead of panicking a worker.
+const QUIRE_BITS_LIMIT: u32 = 126;
+
+/// A parsed (or about-to-be-written) `.dpz` model artifact: validated
+/// topology + format assignment + packed parameter codes. Every constructor
+/// path establishes the same invariants, so [`Artifact::compile`] is
+/// infallible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    dataset: String,
+    ir: NetIr,
+    mixed: MixedSpec,
+    accuracy: Option<f64>,
+    pruned: Option<String>,
+    /// Per-IR-layer weight codes (empty for weightless kinds).
+    weight_codes: Vec<Vec<u16>>,
+    /// Per-IR-layer bias codes (empty for weightless kinds).
+    bias_codes: Vec<Vec<u16>>,
+}
+
+impl Artifact {
+    /// Snapshot a compiled accelerator instance into an artifact. `dataset`
+    /// becomes the serving routing key; it must be a non-empty single line
+    /// without `=` (the writer's framing characters).
+    pub fn from_network(dataset: &str, dp: &DeepPositron) -> Artifact {
+        assert!(
+            !dataset.is_empty() && !dataset.contains(['\n', '=']),
+            "dataset label must be a non-empty single line without '='"
+        );
+        Artifact {
+            dataset: dataset.to_string(),
+            ir: dp.ir(),
+            mixed: dp.mixed().clone(),
+            accuracy: None,
+            pruned: None,
+            weight_codes: dp.weight_codes().to_vec(),
+            bias_codes: dp.bias_codes(),
+        }
+    }
+
+    /// Attach tuning provenance (a [`crate::tune::TunePlan`]'s validation
+    /// accuracy and optional sensitivity-pruning summary) — rides through
+    /// the text codec so a deployed shard can always say where its plan
+    /// came from. `accuracy` must be a fraction in `[0, 1]`.
+    pub fn with_provenance(mut self, accuracy: f64, pruned: Option<String>) -> Artifact {
+        assert!((0.0..=1.0).contains(&accuracy), "accuracy must be a fraction");
+        if let Some(p) = &pruned {
+            assert!(!p.is_empty() && !p.contains('\n'), "pruned provenance must be a non-empty single line");
+        }
+        self.accuracy = Some(accuracy);
+        self.pruned = pruned;
+        self
+    }
+
+    /// Task label the artifact was built for (the shard routing key).
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    /// The network topology.
+    pub fn ir(&self) -> &NetIr {
+        &self.ir
+    }
+
+    /// The per-layer format assignment.
+    pub fn mixed(&self) -> &MixedSpec {
+        &self.mixed
+    }
+
+    /// Tuning-provenance validation accuracy, if recorded.
+    pub fn accuracy(&self) -> Option<f64> {
+        self.accuracy
+    }
+
+    /// Tuning-provenance pruning summary, if recorded.
+    pub fn pruned(&self) -> Option<&str> {
+        self.pruned.as_deref()
+    }
+
+    /// Per-IR-layer weight codes (empty entries for weightless kinds).
+    pub fn weight_codes(&self) -> &[Vec<u16>] {
+        &self.weight_codes
+    }
+
+    /// Per-IR-layer bias codes (empty entries for weightless kinds).
+    pub fn bias_codes(&self) -> &[Vec<u16>] {
+        &self.bias_codes
+    }
+
+    /// Serialize to the `.dpz` text form (see the module layout spec).
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "{DPZ_MAGIC}\ndataset={}\nir={}\nlayers={}\n",
+            self.dataset,
+            self.ir.name(),
+            self.mixed.name()
+        );
+        if let Some(acc) = self.accuracy {
+            s.push_str(&format!("accuracy={acc:.6}\n"));
+        }
+        if let Some(p) = &self.pruned {
+            s.push_str(&format!("pruned={p}\n"));
+        }
+        for (li, (geom, spec)) in self.ir.geoms().iter().zip(self.mixed.layers()).enumerate() {
+            if geom.num_weights() == 0 {
+                continue;
+            }
+            let field = |codes: &[u16]| {
+                let p = PackedCodes::pack(codes, spec.n());
+                format!("{}:{}:{}:{:08x}", p.width(), p.len(), to_hex(p.bytes()), p.crc())
+            };
+            s.push_str(&format!("w{li}={}\n", field(&self.weight_codes[li])));
+            s.push_str(&format!("b{li}={}\n", field(&self.bias_codes[li])));
+        }
+        s.push_str(&format!("crc={:08x}\n", crc32(s.as_bytes())));
+        s
+    }
+
+    /// Parse and fully validate the `.dpz` text form. Artifacts are
+    /// untrusted deployment inputs: every invariant the compiler would
+    /// assert is checked here first, so success means
+    /// [`Artifact::compile`] cannot panic.
+    pub fn parse(text: &str) -> Result<Artifact, String> {
+        // 1. The trailing whole-file checksum: the final line must be
+        //    `crc=XXXXXXXX` over every byte before it.
+        let crc_at = text.rfind("\ncrc=").ok_or("missing trailing crc= line")? + 1;
+        let (body, crc_line) = text.split_at(crc_at);
+        let declared = crc_line
+            .trim_end_matches('\n')
+            .strip_prefix("crc=")
+            .and_then(parse_hex32)
+            .ok_or_else(|| format!("malformed crc line {:?}", crc_line.trim_end()))?;
+        if crc_line.trim_end_matches('\n').contains('\n') {
+            return Err("crc= must be the final line".into());
+        }
+        let got = crc32(body.as_bytes());
+        if got != declared {
+            return Err(format!("file crc {got:08x} != declared {declared:08x}"));
+        }
+        // 2. Magic + version, exact.
+        let mut lines = body.lines();
+        if lines.next() != Some(DPZ_MAGIC) {
+            return Err(format!("not a {DPZ_MAGIC:?} file"));
+        }
+        // 3. key=value scan with duplicate detection.
+        let mut fields: Vec<(&str, &str)> = Vec::new();
+        for line in lines {
+            let (k, v) = line.split_once('=').ok_or_else(|| format!("malformed line {line:?}"))?;
+            if fields.iter().any(|&(fk, _)| fk == k) {
+                return Err(format!("duplicate key {k:?}"));
+            }
+            fields.push((k, v));
+        }
+        let field = |key: &str| fields.iter().find(|&&(k, _)| k == key).map(|&(_, v)| v);
+        let dataset = field("dataset").ok_or("missing dataset=")?.to_string();
+        if dataset.is_empty() {
+            return Err("empty dataset label".into());
+        }
+        let ir_text = field("ir").ok_or("missing ir=")?;
+        let ir = NetIr::parse(ir_text).ok_or_else(|| format!("unparseable ir {ir_text:?}"))?;
+        let layers_text = field("layers").ok_or("missing layers=")?;
+        let mixed = MixedSpec::parse(layers_text).ok_or_else(|| format!("unparseable layers {layers_text:?}"))?;
+        if mixed.len() != ir.len() {
+            return Err(format!("{} format(s) for {} layer(s)", mixed.len(), ir.len()));
+        }
+        if let Some(spec) = mixed.layers().iter().find(|s| !s.is_supported()) {
+            return Err(format!("unsupported format {}", spec.name()));
+        }
+        let accuracy = match field("accuracy") {
+            None => None,
+            Some(a) => {
+                let acc: f64 = a.parse().map_err(|_| format!("unparseable accuracy {a:?}"))?;
+                if !(0.0..=1.0).contains(&acc) {
+                    return Err(format!("accuracy {acc} outside [0, 1]"));
+                }
+                Some(acc)
+            }
+        };
+        let pruned = field("pruned").map(str::to_string);
+        // 4. Eq. (2) quire budget, re-derived per layer BEFORE touching any
+        //    payload — the same order the compiler checks in, so an
+        //    overflowing artifact is rejected by its header alone.
+        for (li, (geom, &spec)) in ir.geoms().iter().zip(mixed.layers()).enumerate() {
+            let k = geom.eq2_k();
+            if k < 2 {
+                continue;
+            }
+            let need = DecodeLut::shared(spec).quire_bits_needed(k);
+            if need > QUIRE_BITS_LIMIT {
+                return Err(format!(
+                    "layer {li} ({}, k={k}) needs a {need}-bit quire, over the {QUIRE_BITS_LIMIT}-bit budget",
+                    spec.name()
+                ));
+            }
+        }
+        // 5. Per-layer packed parameter fields: present exactly for
+        //    weighted layers, at the layer format's width, with the
+        //    declared counts, valid framing, and canonical codes only.
+        let mut weight_codes = Vec::with_capacity(ir.len());
+        let mut bias_codes = Vec::with_capacity(ir.len());
+        let mut seen_fields = 3 + usize::from(accuracy.is_some()) + usize::from(pruned.is_some());
+        for (li, (geom, &spec)) in ir.geoms().iter().zip(mixed.layers()).enumerate() {
+            if geom.num_weights() == 0 {
+                for key in [format!("w{li}"), format!("b{li}")] {
+                    if field(&key).is_some() {
+                        return Err(format!("{key}= on weightless layer {li}"));
+                    }
+                }
+                weight_codes.push(Vec::new());
+                bias_codes.push(Vec::new());
+                continue;
+            }
+            let lut = DecodeLut::shared(spec);
+            let mut tensor = |key: String, want: usize| -> Result<Vec<u16>, String> {
+                let raw = field(&key).ok_or_else(|| format!("missing {key}="))?;
+                let codes = parse_packed_field(raw, spec.n(), want).map_err(|e| format!("{key}: {e}"))?;
+                if let Some(&bad) = codes.iter().find(|&&c| lut.op(c).is_invalid()) {
+                    return Err(format!("{key}: non-canonical {} code {bad:#x}", spec.name()));
+                }
+                Ok(codes)
+            };
+            weight_codes.push(tensor(format!("w{li}"), geom.num_weights())?);
+            bias_codes.push(tensor(format!("b{li}"), geom.num_biases())?);
+            seen_fields += 2;
+        }
+        // 6. No unrecognized keys may ride along (strict reader).
+        if fields.len() != seen_fields {
+            let known = |k: &str| {
+                matches!(k, "dataset" | "ir" | "layers" | "accuracy" | "pruned")
+                    || (0..ir.len()).any(|li| k == format!("w{li}") || k == format!("b{li}"))
+            };
+            let extra: Vec<&str> = fields.iter().map(|&(k, _)| k).filter(|k| !known(k)).collect();
+            return Err(format!("unknown key(s) {extra:?}"));
+        }
+        Ok(Artifact { dataset, ir, mixed, accuracy, pruned, weight_codes, bias_codes })
+    }
+
+    /// Compile the artifact into a runnable accelerator instance — the
+    /// millisecond cold-start path. Infallible after [`Artifact::parse`]
+    /// (every compile-time assertion was already validated as a parse
+    /// error).
+    pub fn compile(&self) -> DeepPositron {
+        DeepPositron::compile_from_codes(&self.ir, self.mixed.clone(), self.weight_codes.clone(), &self.bias_codes)
+    }
+
+    /// Write the artifact to disk (the `repro pack` output path).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_text())
+    }
+
+    /// Read and parse an artifact file (the `repro serve --artifact` input
+    /// path); IO and validation failures both come back as strings.
+    pub fn load(path: &std::path::Path) -> Result<Artifact, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Artifact::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Parse one `width:count:hex:crc32` packed-tensor field into codes,
+/// enforcing the declared format width and geometry-derived count.
+fn parse_packed_field(raw: &str, want_width: u32, want_count: usize) -> Result<Vec<u16>, String> {
+    let parts: Vec<&str> = raw.split(':').collect();
+    let [width, count, hex, crc] = parts.as_slice() else {
+        return Err(format!("expected width:count:hex:crc32, got {raw:?}"));
+    };
+    let width: u32 = width.parse().map_err(|_| format!("unparseable width {width:?}"))?;
+    if width != want_width {
+        return Err(format!("width {width} != format width {want_width}"));
+    }
+    let count: usize = count.parse().map_err(|_| format!("unparseable count {count:?}"))?;
+    if count != want_count {
+        return Err(format!("{count} code(s) declared, geometry needs {want_count}"));
+    }
+    let bytes = from_hex(hex).ok_or("payload is not valid hex")?;
+    let crc = parse_hex32(crc).ok_or_else(|| format!("malformed field crc {crc:?}"))?;
+    Ok(PackedCodes::from_parts(width, count, bytes, crc)?.unpack())
+}
+
+/// Exactly eight lowercase/uppercase hex digits → u32.
+fn parse_hex32(s: &str) -> Option<u32> {
+    (s.len() == 8).then(|| u32::from_str_radix(s, 16).ok()).flatten()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Mlp;
+    use crate::formats::FormatSpec;
+    use crate::util::Rng;
+
+    fn artifact() -> (Artifact, DeepPositron) {
+        // An untrained random net quantizes just like a trained one; the
+        // codec has no opinion about accuracy.
+        let mut rng = Rng::new(11);
+        let mlp = Mlp::new(&[4, 10, 8, 3], &mut rng);
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        (Artifact::from_network("iris", &dp), dp)
+    }
+
+    #[test]
+    fn text_round_trips_and_compiles_bit_identically() {
+        let (art, dp) = artifact();
+        let text = art.to_text();
+        let parsed = Artifact::parse(&text).expect("round trip");
+        assert_eq!(parsed, art);
+        let compiled = parsed.compile();
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            let x: Vec<f64> = (0..4).map(|_| rng.range(-2.0, 2.0)).collect();
+            assert_eq!(compiled.forward_codes(&x), dp.forward_codes(&x));
+        }
+    }
+
+    #[test]
+    fn provenance_rides_through_the_codec() {
+        let (art, _) = artifact();
+        let art = art.with_provenance(0.95, Some("sensitivity drop<=1.0% floors=5,5,5 screen_rows=64".into()));
+        let parsed = Artifact::parse(&art.to_text()).expect("round trip");
+        assert_eq!(parsed.accuracy(), Some(0.95));
+        assert_eq!(parsed.pruned(), Some("sensitivity drop<=1.0% floors=5,5,5 screen_rows=64"));
+    }
+
+    #[test]
+    fn mixed_and_conv_artifacts_round_trip() {
+        use crate::accel::{Layer, Shape};
+        let mut rng = Rng::new(7);
+        let conv = Layer::conv2d(Shape::Chw { c: 1, h: 8, w: 8 }, 3, 3, 3, 1, &mut rng);
+        let pool = Layer::avg_pool(conv.out_shape, 2, 2);
+        let flat = Layer::flatten(pool.out_shape);
+        let dense = Layer::dense(flat.out_dim, 4, &mut rng);
+        let mlp = Mlp::from_layers(vec![conv, pool, flat, dense]);
+        let mixed = MixedSpec::parse("posit8es1+float7we3+posit7es1+fixed6q3").unwrap();
+        let dp = DeepPositron::compile_mixed(&mlp, mixed.clone());
+        let art = Artifact::from_network("toy", &dp);
+        let parsed = Artifact::parse(&art.to_text()).expect("round trip");
+        assert_eq!(parsed.mixed(), &mixed);
+        assert_eq!(parsed.ir(), &mlp.ir());
+        // Weightless layers carry no fields but keep their (empty) slots.
+        assert!(parsed.weight_codes()[1].is_empty() && parsed.weight_codes()[2].is_empty());
+        let compiled = parsed.compile();
+        let x: Vec<f64> = (0..64).map(|_| rng.range(0.0, 1.0)).collect();
+        assert_eq!(compiled.forward_codes(&x), dp.forward_codes(&x));
+    }
+
+    #[test]
+    fn parse_rejects_framing_violations() {
+        let (art, _) = artifact();
+        let text = art.to_text();
+        // Corrupted trailing CRC.
+        let bad = text.replace("crc=", "crc=0");
+        let bad = format!("{}\n", &bad[..bad.len() - 2]);
+        assert!(Artifact::parse(&bad).is_err());
+        // A flipped payload nibble breaks BOTH the field and file CRCs.
+        let flipped = if text.contains(":a") { text.replacen(":a", ":b", 1) } else { text.replacen(":0", ":1", 1) };
+        assert!(Artifact::parse(&flipped).is_err());
+        // Wrong magic.
+        assert!(Artifact::parse(&text.replacen("v1", "v9", 1)).is_err());
+        // Missing crc line entirely.
+        let stripped = &text[..text.rfind("crc=").unwrap()];
+        assert!(Artifact::parse(stripped).is_err());
+        // Empty input.
+        assert!(Artifact::parse("").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_semantic_violations() {
+        // Hand-build headers with a correct trailing CRC so the validation
+        // under test (not the checksum) is what rejects them.
+        let sealed = |body: &str| format!("{body}crc={:08x}\n", crc32(body.as_bytes()));
+        // Eq. (2) quire overflow, rejected from the header alone — no
+        // parameter payload required (the same case the plan auditor's
+        // fixture covers: posit16es1 at k=100001 needs a >126-bit quire).
+        let overflow = sealed(&format!(
+            "{DPZ_MAGIC}\ndataset=synth\nir=100000:dense10\nlayers=posit16es1\n"
+        ));
+        let err = Artifact::parse(&overflow).unwrap_err();
+        assert!(err.contains("quire"), "{err}");
+        // Same topology at 8 bits fits the quire but now (correctly)
+        // demands the missing parameter fields.
+        let fits = sealed(&format!("{DPZ_MAGIC}\ndataset=synth\nir=100000:dense10\nlayers=posit8es1\n"));
+        let err = Artifact::parse(&fits).unwrap_err();
+        assert!(err.contains("missing w0"), "{err}");
+        // Assignment length must match the IR.
+        let mismatch = sealed(&format!("{DPZ_MAGIC}\ndataset=synth\nir=4:dense3\nlayers=posit8es1+posit8es1\n"));
+        assert!(Artifact::parse(&mismatch).is_err());
+        // Unknown keys are rejected (strict reader).
+        let (art, _) = artifact();
+        let extra = sealed(&format!("{}extra=1\n", &art.to_text()[..art.to_text().rfind("crc=").unwrap()]));
+        let err = Artifact::parse(&extra).unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+        // Duplicate keys are rejected.
+        let dup = sealed(&format!("{DPZ_MAGIC}\ndataset=synth\ndataset=synth2\nir=4:dense3\nlayers=posit8es1\n"));
+        assert!(Artifact::parse(&dup).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn parse_rejects_payload_violations() {
+        let (art, _) = artifact();
+        let text = art.to_text();
+        let sealed = |body: &str| format!("{body}crc={:08x}\n", crc32(body.as_bytes()));
+        let body = &text[..text.rfind("crc=").unwrap()];
+        // Wrong declared width for the layer format.
+        let bad_width = sealed(&body.replacen("w0=8:", "w0=7:", 1));
+        assert!(Artifact::parse(&bad_width).unwrap_err().contains("width"));
+        // Wrong declared count for the geometry.
+        let bad_count = sealed(&body.replacen("w0=8:40:", "w0=8:39:", 1));
+        assert!(Artifact::parse(&bad_count).unwrap_err().contains("code(s) declared"));
+    }
+}

@@ -14,10 +14,12 @@ pub mod exact;
 pub mod fixed;
 pub mod float;
 pub mod ops;
+pub mod pack;
 pub mod posit;
 pub mod tables;
 
 pub use emac::{quire_width_bits, DecodeLut, DecodedOp, Emac};
+pub use pack::{BitReader, BitWriter, PackedCodes};
 pub use exact::Exact;
 pub use fixed::Fixed;
 pub use float::Float;

@@ -1,0 +1,422 @@
+//! Bit-packed code streams: the storage layer behind packed execution
+//! plans and the `.dpz` model artifact (DESIGN.md §16).
+//!
+//! Every format the paper sweeps is ≤8 bits wide, yet quantized weights
+//! historically travelled as `u16` codes inside `f64`-shaped containers — an
+//! 8× memory tax on a datapath the paper argues is cache- and energy-bound.
+//! This module provides the dense alternative: an MSB-first [`BitWriter`] /
+//! [`BitReader`] pair over arbitrary ≤8-bit fields, and [`PackedCodes`], a
+//! checksummed buffer holding `len` fixed-width code words in
+//! `ceil(len·width/8)` bytes.
+//!
+//! Framing rules (shared with the artifact reader, which must reject any
+//! stream this module would not produce):
+//!
+//! * fields are written most-significant-bit first, packed back to back
+//!   with no alignment between fields;
+//! * code widths above 8 (the 9..=16-bit formats) are split into two
+//!   fields per code: the high `width − 8` bits, then the low 8 bits;
+//! * the final byte is padded to a byte boundary with **1-bits** (a value
+//!   no all-zero padding bug can fake), and a strict reader verifies the
+//!   padding as well as the CRC;
+//! * the checksum is CRC-32 (IEEE, reflected, polynomial `0xEDB88320`) over
+//!   the packed bytes — the same function that seals whole `.dpz` files.
+
+/// CRC-32 (IEEE 802.3) lookup table for the reflected polynomial
+/// `0xEDB88320`, built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 checksum (IEEE, reflected, init/xorout `0xFFFFFFFF`) — the
+/// standard `zlib.crc32` function, so fixtures and external tooling can
+/// reproduce every checksum in a `.dpz` file with stock libraries.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Lowercase-hex encoding of a byte string (two characters per byte) —
+/// the `.dpz` payload encoding, chosen so artifacts stay line-oriented
+/// UTF-8 text that diffs, greps, and survives `read_to_string`.
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).expect("nibble < 16"));
+        s.push(char::from_digit((b & 0xF) as u32, 16).expect("nibble < 16"));
+    }
+    s
+}
+
+/// Strict inverse of [`to_hex`]: `None` on odd length or any non-hex-digit
+/// character (uppercase is accepted; whitespace is not).
+pub fn from_hex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let digits: Option<Vec<u8>> = s.chars().map(|c| c.to_digit(16).map(|d| d as u8)).collect();
+    let digits = digits?;
+    Some(digits.chunks_exact(2).map(|p| (p[0] << 4) | p[1]).collect())
+}
+
+/// MSB-first bit-stream writer over arbitrary 1..=8-bit fields.
+///
+/// Fields are packed back to back with no alignment; [`BitWriter::finish`]
+/// pads the final partial byte with 1-bits so every stream is a whole
+/// number of bytes. The matching [`BitReader`] is told the data length in
+/// bits and will refuse to hand padding back as data.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    cur: u8,
+    used: u32,
+}
+
+impl BitWriter {
+    /// An empty stream.
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    /// Append the low `width` bits of `value` (1..=8 bits, value must fit).
+    pub fn write(&mut self, value: u8, width: u32) {
+        assert!((1..=8).contains(&width), "field width {width} outside 1..=8");
+        assert!(width == 8 || (value as u32) < (1u32 << width), "value {value} does not fit in {width} bits");
+        let v = value as u32;
+        let mut left = width;
+        while left > 0 {
+            let take = left.min(8 - self.used);
+            let chunk = (v >> (left - take)) & ((1u32 << take) - 1);
+            self.cur = (self.cur << take) | chunk as u8;
+            self.used += take;
+            left -= take;
+            if self.used == 8 {
+                self.bytes.push(self.cur);
+                self.cur = 0;
+                self.used = 0;
+            }
+        }
+    }
+
+    /// Total data bits written so far (excluding any future padding).
+    pub fn bits_written(&self) -> usize {
+        self.bytes.len() * 8 + self.used as usize
+    }
+
+    /// Flush to a byte boundary, padding the final partial byte with
+    /// 1-bits, and return the packed bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.used > 0 {
+            let pad = 8 - self.used;
+            self.bytes.push((self.cur << pad) | ((1u8 << pad) - 1));
+        }
+        self.bytes
+    }
+}
+
+/// MSB-first bit-stream reader: the strict inverse of [`BitWriter`].
+///
+/// Constructed with the *data* length in bits, so reads past the data —
+/// into the 1-bit padding or beyond the buffer — fail with `None` instead
+/// of fabricating codes.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    bit: usize,
+    limit: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `bytes` holding exactly `data_bits` bits of data
+    /// (the rest of the final byte being padding). `None` if the buffer
+    /// cannot hold that many bits.
+    pub fn new(bytes: &'a [u8], data_bits: usize) -> Option<BitReader<'a>> {
+        if data_bits > bytes.len() * 8 {
+            return None;
+        }
+        Some(BitReader { bytes, bit: 0, limit: data_bits })
+    }
+
+    /// Data bits left to read.
+    pub fn remaining(&self) -> usize {
+        self.limit - self.bit
+    }
+
+    /// Read the next `width`-bit field (1..=8); `None` once the field
+    /// would cross into padding.
+    pub fn read(&mut self, width: u32) -> Option<u8> {
+        assert!((1..=8).contains(&width), "field width {width} outside 1..=8");
+        if self.bit + width as usize > self.limit {
+            return None;
+        }
+        let mut v = 0u32;
+        for _ in 0..width {
+            let bit = (self.bytes[self.bit / 8] >> (7 - (self.bit % 8))) & 1;
+            v = (v << 1) | bit as u32;
+            self.bit += 1;
+        }
+        Some(v as u8)
+    }
+}
+
+/// A checksummed buffer of `len` fixed-width code words, bit-packed into
+/// `ceil(len·width/8)` bytes — the unit the `.dpz` artifact stores per
+/// weight/bias tensor.
+///
+/// Widths 1..=16 are supported; codes wider than 8 bits are split into a
+/// high `width − 8`-bit field followed by a low 8-bit field (MSB-first, so
+/// the byte stream reads in numeric order).
+///
+/// ```
+/// use deep_positron::formats::pack::PackedCodes;
+///
+/// let codes = [0b10110u16, 0, 0b11111, 7];
+/// let p = PackedCodes::pack(&codes, 5);
+/// assert_eq!(p.bytes().len(), 3); // 20 bits of data, 4 bits of padding
+/// assert_eq!(p.unpack(), codes);
+/// let reparsed = PackedCodes::from_parts(5, 4, p.bytes().to_vec(), p.crc()).unwrap();
+/// assert_eq!(reparsed.unpack(), codes);
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedCodes {
+    width: u32,
+    len: usize,
+    bytes: Vec<u8>,
+    crc: u32,
+}
+
+impl PackedCodes {
+    /// Pack `codes` at `width` bits per code (1..=16; every code must fit).
+    pub fn pack(codes: &[u16], width: u32) -> PackedCodes {
+        assert!((1..=16).contains(&width), "code width {width} outside 1..=16");
+        let mut w = BitWriter::new();
+        for &c in codes {
+            assert!(width == 16 || (c as u32) < (1u32 << width), "code {c} does not fit in {width} bits");
+            if width > 8 {
+                w.write((c >> 8) as u8, width - 8);
+                w.write((c & 0xFF) as u8, 8);
+            } else {
+                w.write(c as u8, width);
+            }
+        }
+        let bytes = w.finish();
+        let crc = crc32(&bytes);
+        PackedCodes { width, len: codes.len(), bytes, crc }
+    }
+
+    /// Rebuild from stored parts (the artifact-reader path), verifying
+    /// every framing invariant: width in range, byte count exactly
+    /// `ceil(len·width/8)`, all padding bits 1, and the CRC matching.
+    pub fn from_parts(width: u32, len: usize, bytes: Vec<u8>, crc: u32) -> Result<PackedCodes, String> {
+        if !(1..=16).contains(&width) {
+            return Err(format!("code width {width} outside 1..=16"));
+        }
+        let data_bits = len * width as usize;
+        let want_bytes = data_bits.div_ceil(8);
+        if bytes.len() != want_bytes {
+            return Err(format!("{} byte(s) for {len} codes of {width} bits (want {want_bytes})", bytes.len()));
+        }
+        let pad = want_bytes * 8 - data_bits;
+        if pad > 0 {
+            let mask = (1u8 << pad) - 1;
+            let last = *bytes.last().expect("padding implies a final byte");
+            if last & mask != mask {
+                return Err(format!("final-byte padding {:#04x} is not all-ones in the low {pad} bit(s)", last));
+            }
+        }
+        let got = crc32(&bytes);
+        if got != crc {
+            return Err(format!("payload crc {got:08x} != declared {crc:08x}"));
+        }
+        Ok(PackedCodes { width, len, bytes, crc })
+    }
+
+    /// Unpack back into code words (always `len` of them; lossless).
+    pub fn unpack(&self) -> Vec<u16> {
+        let mut r = BitReader::new(&self.bytes, self.len * self.width as usize)
+            .expect("constructors guarantee the buffer holds len*width bits");
+        let mut out = Vec::with_capacity(self.len);
+        for _ in 0..self.len {
+            let code = if self.width > 8 {
+                let hi = r.read(self.width - 8).expect("in-bounds by construction") as u16;
+                let lo = r.read(8).expect("in-bounds by construction") as u16;
+                (hi << 8) | lo
+            } else {
+                r.read(self.width).expect("in-bounds by construction") as u16
+            };
+            out.push(code);
+        }
+        out
+    }
+
+    /// Bits per code word.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Number of code words.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the stream holds zero codes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed bytes (padding included).
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// CRC-32 of the packed bytes.
+    pub fn crc(&self) -> u32 {
+        self.crc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_standard_check_value() {
+        // The canonical CRC-32 test vector ("123456789" -> 0xCBF43926),
+        // i.e. zlib.crc32 — fixtures are generated against that library.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let bytes = [0x00, 0xFF, 0x5A, 0x0B];
+        assert_eq!(to_hex(&bytes), "00ff5a0b");
+        assert_eq!(from_hex("00ff5a0b").as_deref(), Some(&bytes[..]));
+        assert_eq!(from_hex("00FF5A0B").as_deref(), Some(&bytes[..]));
+        assert_eq!(from_hex(""), Some(vec![]));
+        assert!(from_hex("0").is_none(), "odd length");
+        assert!(from_hex("0g").is_none(), "non-hex digit");
+        assert!(from_hex("00 ff").is_none(), "whitespace");
+    }
+
+    #[test]
+    fn bit_writer_is_msb_first() {
+        // 0b101 · 0b01 · 0b1 · 0b00 -> 0b1010_1100 exactly one byte.
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0b01, 2);
+        w.write(0b1, 1);
+        w.write(0b00, 2);
+        assert_eq!(w.bits_written(), 8);
+        assert_eq!(w.finish(), vec![0b1010_1100]);
+    }
+
+    #[test]
+    fn bit_writer_pads_with_ones_and_reader_stops_at_data() {
+        let mut w = BitWriter::new();
+        w.write(0b00000, 5); // an all-zero field, so padding is visible
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b0000_0111]);
+        let mut r = BitReader::new(&bytes, 5).unwrap();
+        assert_eq!(r.read(5), Some(0));
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.read(1), None, "padding must not read back as data");
+    }
+
+    #[test]
+    fn fields_cross_byte_boundaries() {
+        // Three 7-bit fields span 21 bits = 3 bytes with 3 padding bits.
+        let mut w = BitWriter::new();
+        for v in [0x55u8, 0x2A, 0x7F] {
+            w.write(v, 7);
+        }
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 3);
+        let mut r = BitReader::new(&bytes, 21).unwrap();
+        assert_eq!(r.read(7), Some(0x55));
+        assert_eq!(r.read(7), Some(0x2A));
+        assert_eq!(r.read(7), Some(0x7F));
+        assert_eq!(r.read(7), None);
+    }
+
+    #[test]
+    fn reader_rejects_oversized_data_lengths() {
+        assert!(BitReader::new(&[0xFF], 9).is_none());
+        assert!(BitReader::new(&[], 1).is_none());
+        assert!(BitReader::new(&[], 0).is_some());
+    }
+
+    #[test]
+    fn packed_codes_round_trip_across_widths() {
+        for width in 1..=16u32 {
+            let max = if width == 16 { u16::MAX as u32 } else { (1u32 << width) - 1 };
+            let codes: Vec<u16> =
+                (0..97u32).map(|i| ((i * 2_654_435_761u32.wrapping_mul(i + 1)) % (max + 1)) as u16).collect();
+            let p = PackedCodes::pack(&codes, width);
+            assert_eq!(p.width(), width);
+            assert_eq!(p.len(), codes.len());
+            assert_eq!(p.bytes().len(), (codes.len() * width as usize).div_ceil(8));
+            assert_eq!(p.unpack(), codes, "width {width}");
+            let q = PackedCodes::from_parts(width, p.len(), p.bytes().to_vec(), p.crc()).unwrap();
+            assert_eq!(q, p);
+        }
+    }
+
+    #[test]
+    fn packed_codes_zero_length() {
+        let p = PackedCodes::pack(&[], 5);
+        assert!(p.is_empty());
+        assert!(p.bytes().is_empty());
+        assert_eq!(p.crc(), 0);
+        assert_eq!(p.unpack(), Vec::<u16>::new());
+        assert!(PackedCodes::from_parts(5, 0, vec![], 0).is_ok());
+    }
+
+    #[test]
+    fn from_parts_rejects_every_framing_violation() {
+        let p = PackedCodes::pack(&[0b10110, 0b00001, 0b11111], 5);
+        // Flipped payload bit -> CRC mismatch.
+        let mut bad = p.bytes().to_vec();
+        bad[0] ^= 0x01;
+        assert!(PackedCodes::from_parts(5, 3, bad, p.crc()).is_err());
+        // Declared CRC wrong.
+        assert!(PackedCodes::from_parts(5, 3, p.bytes().to_vec(), p.crc() ^ 1).is_err());
+        // Wrong byte count for the declared (len, width).
+        assert!(PackedCodes::from_parts(5, 4, p.bytes().to_vec(), p.crc()).is_err());
+        // Zeroed padding bit (writer pads with ones).
+        let mut unpadded = p.bytes().to_vec();
+        *unpadded.last_mut().unwrap() &= !1;
+        let crc = crc32(&unpadded);
+        assert!(PackedCodes::from_parts(5, 3, unpadded, crc).is_err());
+        // Width out of range.
+        assert!(PackedCodes::from_parts(0, 3, vec![], 0).is_err());
+        assert!(PackedCodes::from_parts(17, 3, vec![], 0).is_err());
+    }
+
+    #[test]
+    fn wide_codes_split_hi_then_lo() {
+        // A 16-bit code is stored as its big-endian byte pair.
+        let p = PackedCodes::pack(&[0xBEEF], 16);
+        assert_eq!(p.bytes(), &[0xBE, 0xEF]);
+        assert_eq!(p.unpack(), vec![0xBEEF]);
+        // At 12 bits the high nibble leads, MSB-first.
+        let p = PackedCodes::pack(&[0xABC], 12);
+        assert_eq!(p.bytes(), &[0xAB, 0xCF], "4 padding 1-bits close the stream");
+        assert_eq!(p.unpack(), vec![0xABC]);
+    }
+}

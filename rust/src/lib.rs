@@ -15,7 +15,8 @@
 //!   FPGA cost model ([`hw`]), dataset generators ([`datasets`]),
 //!   quantization-error analysis ([`quant`]), a PJRT runtime that executes
 //!   the AOT artifacts ([`runtime`]), the sharded multi-worker serving
-//!   engine ([`serve`]), the mixed-precision auto-tuner ([`tune`]), the
+//!   engine ([`serve`]), the bit-packed `.dpz` deployable model artifact
+//!   ([`artifact`]), the mixed-precision auto-tuner ([`tune`]), the
 //!   observability layer — lock-free latency histograms, flight-recorder
 //!   request tracing, and a metrics snapshot exporter ([`obs`]) — and the
 //!   experiment coordinator ([`coordinator`]).
@@ -49,6 +50,7 @@
 #![deny(unsafe_code)]
 
 pub mod accel;
+pub mod artifact;
 pub mod coordinator;
 pub mod datasets;
 pub mod formats;

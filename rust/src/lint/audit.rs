@@ -20,6 +20,12 @@
 //!   and the Eq. (2) quire width of every weighted layer recomputed from
 //!   the `ir=` line — a plan whose quire cannot fit the `i128` path would
 //!   only explode at serve-compile time without this check;
+//! - **model artifacts** — packed `*.dpz` deployables re-validated under
+//!   the strict [`crate::artifact::Artifact`] codec (magic/version, the
+//!   trailing whole-file CRC, per-field stream checksums, topology/format
+//!   agreement), with every weighted layer's Eq. (2) quire width re-derived
+//!   independently of the parser — a corrupted or overflowing artifact is
+//!   caught at rest, not at serve-boot;
 //! - **obs artifacts** — dumped `*.obs.json` snapshots and `*.trace.jsonl`
 //!   flight-recorder traces re-validated against the strict exporter /
 //!   recorder codecs ([`crate::obs::ObsSnapshot::from_json`],
@@ -30,6 +36,7 @@ use std::path::Path;
 
 use super::{Finding, LintRule};
 use crate::accel::NetIr;
+use crate::artifact::Artifact;
 use crate::formats::emac::DecodeLut;
 use crate::formats::{FormatSpec, MixedSpec};
 use crate::obs::recorder::parse_dump;
@@ -326,6 +333,42 @@ fn check_provenance(v: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Audit one packed `.dpz` model artifact against the strict
+/// [`crate::artifact::Artifact`] codec, then re-derive the Eq. (2) quire
+/// width of every weighted layer from the parsed header — the same
+/// recomputation [`audit_plan`] does for tune plans, so the lint's quire
+/// bound cannot silently drift from the parser's.
+pub fn audit_artifact(rel: &str, text: &str) -> Vec<Finding> {
+    let art = match Artifact::parse(text) {
+        Ok(art) => art,
+        Err(e) => {
+            // The parser rejects quire overflows from the header alone (its
+            // message names the quire); every other rejection is framing,
+            // checksum, or field shape.
+            let rule =
+                if e.contains("quire") { LintRule::ArtifactQuireOverflow } else { LintRule::ArtifactInvalid };
+            return vec![Finding::new(rel, 1, rule, e)];
+        }
+    };
+    let mut findings = Vec::new();
+    for (li, (geom, &spec)) in art.ir().geoms().iter().zip(art.mixed().layers()).enumerate() {
+        let k = geom.eq2_k();
+        if k < 2 {
+            continue;
+        }
+        let need = DecodeLut::shared(spec).quire_bits_needed(k);
+        if need > QUIRE_BITS_LIMIT {
+            let msg = format!(
+                "layer {li} ({}) under {}: Eq. (2) quire needs {need} bits for k={k} (> {QUIRE_BITS_LIMIT}) — compile would abort",
+                geom.node_name(),
+                spec.name(),
+            );
+            findings.push(Finding::new(rel, 1, LintRule::ArtifactQuireOverflow, msg));
+        }
+    }
+    findings
+}
+
 /// Audit one dumped obs snapshot (`*.obs.json`) against the strict
 /// exporter codec: pinned schema version, exact key sets at every level,
 /// and p50 ≤ p95 ≤ p99 quantile monotonicity per shard.
@@ -456,6 +499,33 @@ mod tests {
         assert_eq!(fs.len(), 1, "{fs:?}");
         assert_eq!(fs[0].rule, LintRule::ObsTraceInvalid);
         assert!(fs[0].message.contains("phase sum"), "{}", fs[0].message);
+    }
+
+    #[test]
+    fn artifact_audit_delegates_and_rederives_quire() {
+        use crate::accel::{DeepPositron, Mlp};
+        use crate::formats::pack::crc32;
+        use crate::util::Rng;
+        let mlp = Mlp::new(&[4, 6, 3], &mut Rng::new(3));
+        let dp = DeepPositron::compile(&mlp, FormatSpec::Posit { n: 8, es: 1 });
+        let good = Artifact::from_network("iris", &dp).to_text();
+        assert!(audit_artifact("m.dpz", &good).is_empty());
+
+        // Corrupted trailing checksum: a framing finding, not a quire one.
+        let bad = format!("{}crc=00000000\n", good.rsplit_once("crc=").unwrap().0);
+        let fs = audit_artifact("m.dpz", &bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::ArtifactInvalid);
+        assert!(fs[0].message.contains("crc"), "{}", fs[0].message);
+
+        // Header-only overflow: rejected from the ir=/layers= lines alone,
+        // no payload needed — the same bound the plan auditor applies.
+        let body = "deep-positron dpz v1\ndataset=synth\nir=100000:dense10\nlayers=posit16es1\n";
+        let sealed = format!("{body}crc={:08x}\n", crc32(body.as_bytes()));
+        let fs = audit_artifact("m.dpz", &sealed);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, LintRule::ArtifactQuireOverflow);
+        assert!(fs[0].message.contains("quire"), "{}", fs[0].message);
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //!   `serve::router`), plus bench-wiring checks. Boundaries are declared
 //!   in source with `// exact-lint: allow(<rule>, <reason>)`.
 //! - **Layer 2, artifact audit** ([`audit`]): committed `BENCH_*.json`
-//!   baselines and `*.plan` texts re-validated at rest — schema, filename
-//!   agreement, shape inference over the `ir=` line, format names,
-//!   provenance grammar, and Eq. (2) quire widths recomputed per layer.
+//!   baselines, `*.plan` texts, and packed `*.dpz` model artifacts
+//!   re-validated at rest — schema, filename agreement, shape inference
+//!   over the `ir=` line, format names, provenance grammar, framing
+//!   checksums, and Eq. (2) quire widths recomputed per layer.
 //!
 //! The CLI (`repro lint`) exits non-zero on any finding; `repro lint
 //! --corpus rust/tests/lint_corpus` runs the seeded-violation corpus and
@@ -62,6 +63,13 @@ pub enum LintRule {
     /// A dumped `*.trace.jsonl` flight-recorder trace that fails the strict
     /// codec (header, key sets, or the phase-sum invariant).
     ObsTraceInvalid,
+    /// A packed `*.dpz` model artifact that fails the strict
+    /// [`crate::artifact::Artifact`] codec (magic/version, framing or field
+    /// checksums, topology/format agreement, packed-stream shape).
+    ArtifactInvalid,
+    /// A `*.dpz` artifact whose re-derived Eq. (2) quire width exceeds the
+    /// `i128` path — serve-compile from it would abort.
+    ArtifactQuireOverflow,
 }
 
 impl LintRule {
@@ -80,12 +88,14 @@ impl LintRule {
             LintRule::PlanBadProvenance => "plan-bad-provenance",
             LintRule::ObsSnapshotInvalid => "obs-snapshot-invalid",
             LintRule::ObsTraceInvalid => "obs-trace-invalid",
+            LintRule::ArtifactInvalid => "artifact-invalid",
+            LintRule::ArtifactQuireOverflow => "artifact-quire-overflow",
         }
     }
 
     /// Inverse of [`LintRule::slug`].
     pub fn from_slug(s: &str) -> Option<LintRule> {
-        const ALL: [LintRule; 12] = [
+        const ALL: [LintRule; 14] = [
             LintRule::FloatInExactZone,
             LintRule::UnsafeOutsideAllowlist,
             LintRule::PanicOnServePath,
@@ -98,6 +108,8 @@ impl LintRule {
             LintRule::PlanBadProvenance,
             LintRule::ObsSnapshotInvalid,
             LintRule::ObsTraceInvalid,
+            LintRule::ArtifactInvalid,
+            LintRule::ArtifactQuireOverflow,
         ];
         ALL.into_iter().find(|r| r.slug() == s)
     }
@@ -175,6 +187,11 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
         let rel = rel_path(root, &path);
         let text = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
         findings.extend(audit::audit_plan(&rel, &text));
+    }
+    for path in artifact_files(root) {
+        let rel = rel_path(root, &path);
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+        findings.extend(audit::audit_artifact(&rel, &text));
     }
     for path in obs_files(root) {
         let rel = rel_path(root, &path);
@@ -276,6 +293,8 @@ fn check_fixture(root: &Path, path: &Path, name: &str, display: &str) -> Result<
         fs
     } else if name.ends_with(".plan") {
         audit::audit_plan(display, &text)
+    } else if name.ends_with(".dpz") {
+        audit::audit_artifact(display, &text)
     } else {
         return Ok(Err(format!("MISSED {display}: unknown fixture extension")));
     };
@@ -345,6 +364,12 @@ fn obs_files(root: &Path) -> Vec<PathBuf> {
     files_by_suffix(root, &[".obs.json", ".trace.jsonl"])
 }
 
+/// Packed `.dpz` model artifacts: top-level plus anything under `results/`,
+/// the same sweep as plans.
+fn artifact_files(root: &Path) -> Vec<PathBuf> {
+    files_by_suffix(root, &[".dpz"])
+}
+
 /// Top-level files plus everything under `results/` whose name ends with
 /// one of `suffixes`, sorted for stable output.
 fn files_by_suffix(root: &Path, suffixes: &[&str]) -> Vec<PathBuf> {
@@ -406,6 +431,8 @@ mod tests {
             "plan-bad-provenance",
             "obs-snapshot-invalid",
             "obs-trace-invalid",
+            "artifact-invalid",
+            "artifact-quire-overflow",
         ] {
             assert_eq!(LintRule::from_slug(slug).expect(slug).slug(), slug);
         }

@@ -8,6 +8,8 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Result};
+use deep_positron::accel::DeepPositron;
+use deep_positron::artifact::Artifact;
 use deep_positron::coordinator::{experiments, report, trainer, Engine};
 use deep_positron::datasets::{self, Scale};
 use deep_positron::formats::FormatSpec;
@@ -36,11 +38,15 @@ COMMANDS (one per paper artifact):
                                                         [--prune 0.05|off] [--threads N]
                                                         (env TUNE_SMOKE_BUDGET_S=secs fails the run past a wall-clock budget)
   train          PJRT training loop (loss curve)        [--dataset mnist] [--epochs 10]
+  pack           freeze a quantized model into a .dpz   [--dataset iris] [--out FILE] [--model mlp|conv]
+                 deployable artifact (§16)              [--format posit8es1] [--plan FILE]
+                 (--plan packs a tuned plan file: its per-layer assignment + provenance ride along)
   serve          sharded multi-worker inference engine  [--dataset iris] [--formats posit8es1,float8we4]
                                                         [--workers 2] [--requests 200] [--engine sim|xla]
                                                         [--max-queue 1024] [--deadline-ms N] [--model mlp|conv]
-                                                        [--obs-out FILE] [--json]
-                 (--obs-out writes BASE.obs.json + BASE.obs.prom + BASE.trace.jsonl, §15;
+                                                        [--artifact FILE.dpz] [--obs-out FILE] [--json]
+                 (--artifact cold-starts the shard from a packed .dpz — no training, no f64 pass, §16;
+                  --obs-out writes BASE.obs.json + BASE.obs.prom + BASE.trace.jsonl, §15;
                   --json prints the machine-readable obs snapshot to stdout instead of the human report)
   lint           exactness-zone + artifact checker (§14) [--root DIR] [--corpus DIR] [--report FILE]
                  (non-zero exit on any finding; --corpus asserts every seeded fixture is caught)
@@ -320,45 +326,131 @@ fn run(args: &[String]) -> Result<()> {
             s.push_str(&format!("\nf32-trained test accuracy: {:.2}%\n", acc * 100.0));
             emit(&format!("train_{dataset}.md"), &s)?;
         }
-        "serve" => {
+        "pack" => {
+            // Freeze a quantized model into the bit-packed `.dpz` deployable
+            // artifact (DESIGN.md §16): train, compile, serialize the packed
+            // code streams — `serve --artifact` boots from it with no
+            // dataset, trainer, or f64 pass.
             let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
-            let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
-            let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
             let conv = match flags.get("model").map(String::as_str) {
                 None | Some("mlp") => false,
                 Some("conv") => true,
                 Some(other) => bail!("unknown model {other} (mlp | conv)"),
             };
+            let out = flags.get("out").cloned().unwrap_or_else(|| format!("{dataset}.dpz"));
+            let ds = datasets::load(&dataset, c.seed, c.scale);
+            if conv && ds.num_features != 28 * 28 {
+                bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
+            }
+            let mlp = experiments::model_for(&ds, c.seed, conv);
+            let artifact = match flags.get("plan") {
+                Some(path) => {
+                    // A tuned plan carries its own per-layer assignment plus
+                    // the provenance the artifact preserves (accuracy, prune
+                    // line) — `--format` would contradict it.
+                    if flags.contains_key("format") {
+                        bail!("--plan carries its own per-layer formats (drop --format)");
+                    }
+                    let text = std::fs::read_to_string(path)?;
+                    let plan = tune::TunePlan::parse(&text).ok_or_else(|| anyhow!("unparseable tune plan {path}"))?;
+                    if plan.ir != mlp.ir() {
+                        bail!(
+                            "plan topology {} disagrees with the trained {dataset} model {}",
+                            plan.ir.name(),
+                            mlp.ir().name()
+                        );
+                    }
+                    let dp = DeepPositron::compile_mixed(&mlp, plan.assignment.clone());
+                    Artifact::from_network(&dataset, &dp).with_provenance(plan.accuracy, plan.pruned.clone())
+                }
+                None => {
+                    let name = flags.get("format").map(String::as_str).unwrap_or("posit8es1");
+                    let spec = FormatSpec::parse(name)
+                        .filter(FormatSpec::is_supported)
+                        .ok_or_else(|| anyhow!("unparseable or unsupported format {name}"))?;
+                    Artifact::from_network(&dataset, &DeepPositron::compile(&mlp, spec))
+                }
+            };
+            artifact.save(std::path::Path::new(&out))?;
+            let bytes = std::fs::metadata(&out)?.len();
+            println!(
+                "packed {dataset} ({} / {}) into {out}: {bytes} bytes",
+                artifact.ir().name(),
+                artifact.mixed().name()
+            );
+        }
+        "serve" => {
+            let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(200);
+            let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
             let max_queue: usize = flags.get("max-queue").map(|s| s.parse()).transpose()?.unwrap_or(1024);
             let deadline = flags
                 .get("deadline-ms")
                 .map(|s| s.parse::<u64>())
                 .transpose()?
                 .map(std::time::Duration::from_millis);
-            let formats: Vec<FormatSpec> = match flags.get("formats") {
-                Some(list) => list
-                    .split(',')
-                    .map(|name| FormatSpec::parse(name).ok_or_else(|| anyhow!("unparseable format {name}")))
-                    .collect::<Result<Vec<_>>>()?,
-                None => vec![FormatSpec::Posit { n: 8, es: 1 }],
-            };
-            let ds = datasets::load(&dataset, c.seed, c.scale);
-            if conv && ds.num_features != 28 * 28 {
-                bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
-            }
-            let mlp = experiments::model_for(&ds, c.seed, conv);
-            // One shard per requested format, all over the same trained
-            // model — the deployment-time format choice as a routing key.
-            // Conv models serve Sim-native (workers degrade Xla requests).
-            let shards: Vec<ShardConfig> = formats
-                .iter()
-                .map(|&spec| {
-                    ShardConfig::new(&ds, mlp.clone(), spec)
+            let (dataset, ds, shards) = match flags.get("artifact") {
+                Some(path) => {
+                    // Millisecond cold start (DESIGN.md §16): the packed
+                    // artifact IS the execution plan — dataset, topology,
+                    // and per-layer formats all ride inside it, so the
+                    // flags that would pick them are contradictions.
+                    for banned in ["dataset", "formats", "model"] {
+                        if flags.contains_key(banned) {
+                            bail!("--artifact carries its own dataset, topology, and formats (drop --{banned})");
+                        }
+                    }
+                    let t0 = std::time::Instant::now();
+                    let art = Artifact::load(std::path::Path::new(path)).map_err(|e| anyhow!("artifact {path}: {e}"))?;
+                    eprintln!(
+                        "[artifact {path}: {} / {} parsed in {:.2} ms]",
+                        art.ir().name(),
+                        art.mixed().name(),
+                        t0.elapsed().as_secs_f64() * 1e3
+                    );
+                    let dataset = art.dataset().to_string();
+                    // The dataset is loaded only to generate traffic and
+                    // score replies — the shard itself boots from codes.
+                    let ds = datasets::load(&dataset, c.seed, c.scale);
+                    let shard = ShardConfig::from_artifact(std::sync::Arc::new(art))
                         .with_engine(c.engine)
                         .with_workers(workers)
-                        .with_max_queue(max_queue)
-                })
-                .collect();
+                        .with_max_queue(max_queue);
+                    (dataset, ds, vec![shard])
+                }
+                None => {
+                    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("iris").to_string();
+                    let conv = match flags.get("model").map(String::as_str) {
+                        None | Some("mlp") => false,
+                        Some("conv") => true,
+                        Some(other) => bail!("unknown model {other} (mlp | conv)"),
+                    };
+                    let formats: Vec<FormatSpec> = match flags.get("formats") {
+                        Some(list) => list
+                            .split(',')
+                            .map(|name| FormatSpec::parse(name).ok_or_else(|| anyhow!("unparseable format {name}")))
+                            .collect::<Result<Vec<_>>>()?,
+                        None => vec![FormatSpec::Posit { n: 8, es: 1 }],
+                    };
+                    let ds = datasets::load(&dataset, c.seed, c.scale);
+                    if conv && ds.num_features != 28 * 28 {
+                        bail!("--model conv needs a 28x28 raster task (mnist | fashion), not {dataset}");
+                    }
+                    let mlp = experiments::model_for(&ds, c.seed, conv);
+                    // One shard per requested format, all over the same trained
+                    // model — the deployment-time format choice as a routing key.
+                    // Conv models serve Sim-native (workers degrade Xla requests).
+                    let shards: Vec<ShardConfig> = formats
+                        .iter()
+                        .map(|&spec| {
+                            ShardConfig::new(&ds, mlp.clone(), spec)
+                                .with_engine(c.engine)
+                                .with_workers(workers)
+                                .with_max_queue(max_queue)
+                        })
+                        .collect();
+                    (dataset, ds, shards)
+                }
+            };
             let engine = ServeEngine::start(shards).map_err(|e| anyhow!("serve: {e}"))?;
             let keys = engine.shard_keys();
             // Observability outputs (DESIGN.md §15): BASE.obs.json (strict

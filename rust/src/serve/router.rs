@@ -24,6 +24,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::accel::Mlp;
+use crate::artifact::Artifact;
 use crate::coordinator::experiments::Engine;
 use crate::datasets::Dataset;
 use crate::formats::{FormatSpec, MixedSpec};
@@ -84,6 +85,13 @@ pub struct ShardConfig {
     /// carries the assignment's `+`-joined name, and the shard always runs
     /// the bit-exact Sim engine (the AOT artifact is uniform-only).
     pub mixed: Option<MixedSpec>,
+    /// Optional packed `.dpz` model artifact (DESIGN.md §16): when set,
+    /// workers compile their execution plan straight from the packed codes
+    /// — no dataset, no trainer, no f64 weight pass — which is the
+    /// millisecond cold-start path. `mlp` then carries only the topology
+    /// shell ([`Mlp::skeleton`]) for request/response validation, and the
+    /// shard always runs the bit-exact Sim engine.
+    pub artifact: Option<Arc<Artifact>>,
     /// Preferred engine; workers fall back to Sim when PJRT or the compiled
     /// artifact is missing.
     pub engine: Engine,
@@ -104,6 +112,34 @@ impl ShardConfig {
             mlp,
             spec,
             mixed: None,
+            artifact: None,
+            engine: Engine::Sim,
+            workers: 1,
+            worker: WorkerConfig::default(),
+        }
+    }
+
+    /// Shard that serves a packed `.dpz` artifact (DESIGN.md §16): the
+    /// topology shell, feature/class widths, dataset routing key, and the
+    /// format half of the routing key all come from the artifact itself —
+    /// no dataset load, no training, no f64 weights. A uniform assignment
+    /// routes under the plain format name (so artifact shards and
+    /// compile-from-f64 shards of the same config share a [`ShardKey`]); a
+    /// heterogeneous one routes under the `+`-joined assignment name.
+    pub fn from_artifact(artifact: Arc<Artifact>) -> ShardConfig {
+        let ir = artifact.ir();
+        let (spec, mixed) = match artifact.mixed().is_uniform() {
+            Some(spec) => (spec, None),
+            None => (artifact.mixed().layers()[0], Some(artifact.mixed().clone())),
+        };
+        ShardConfig {
+            dataset: artifact.dataset().to_string(),
+            num_features: ir.input().len(),
+            num_classes: ir.output().len(),
+            mlp: Mlp::skeleton(ir),
+            spec,
+            mixed,
+            artifact: Some(artifact),
             engine: Engine::Sim,
             workers: 1,
             worker: WorkerConfig::default(),
@@ -180,6 +216,15 @@ impl ShardConfig {
                     "mixed assignment carries {} formats for a {}-layer model",
                     m.len(),
                     self.mlp.layers.len()
+                )));
+            }
+        }
+        if let Some(art) = &self.artifact {
+            if *art.ir() != ir {
+                return Err(bad(format!(
+                    "artifact topology {} disagrees with the shard model {}",
+                    art.ir().name(),
+                    ir.name()
                 )));
             }
         }
@@ -330,6 +375,7 @@ impl ServeEngine {
                     mlp: cfg.mlp.clone(),
                     spec: cfg.spec,
                     mixed: cfg.mixed.clone(),
+                    artifact: cfg.artifact.clone(),
                     engine: cfg.engine,
                     classes: cfg.num_classes,
                     cfg: cfg.worker.clone(),

@@ -51,6 +51,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::accel::{argmax, DeepPositron, Mlp};
+use crate::artifact::Artifact;
 use crate::coordinator::experiments::Engine;
 use crate::formats::{FormatSpec, MixedSpec};
 use crate::obs::recorder::{FlightRecorder, TraceEvent, TraceId};
@@ -181,6 +182,10 @@ pub(crate) struct WorkerSpec {
     pub spec: FormatSpec,
     /// Per-layer assignment of a tuned shard; `None` = uniform `spec`.
     pub mixed: Option<MixedSpec>,
+    /// Packed `.dpz` artifact of a serve-from-artifact shard; when set, the
+    /// execution plan compiles straight from the packed codes (millisecond
+    /// cold start, DESIGN.md §16) and `mlp` is only the topology shell.
+    pub artifact: Option<Arc<Artifact>>,
     pub engine: Engine,
     pub classes: usize,
     pub cfg: WorkerConfig,
@@ -285,17 +290,22 @@ fn push_pending(pending: &mut BinaryHeap<Pending>, seq: &mut u64, wait: Duration
 }
 
 fn worker_loop(rx: mpsc::Receiver<Control>, ready_tx: mpsc::Sender<bool>, depth: Arc<AtomicUsize>, ws: WorkerSpec) {
-    // A tuned shard compiles the heterogeneous plan; the uniform path is
-    // the classic single-format compile (bit-identical for all-equal
-    // assignments, so either way the batcher executes the same math).
-    let dp = match &ws.mixed {
-        Some(m) => DeepPositron::compile_mixed(&ws.mlp, m.clone()),
-        None => DeepPositron::compile(&ws.mlp, ws.spec),
+    // An artifact shard compiles straight from its packed codes — no f64
+    // weight pass, which is the whole cold-start point. Otherwise a tuned
+    // shard compiles the heterogeneous plan, and the uniform path is the
+    // classic single-format compile (bit-identical for all-equal
+    // assignments, so every arm executes the same math in the batcher).
+    let dp = match (&ws.artifact, &ws.mixed) {
+        (Some(art), _) => art.compile(),
+        (None, Some(m)) => DeepPositron::compile_mixed(&ws.mlp, m.clone()),
+        (None, None) => DeepPositron::compile(&ws.mlp, ws.spec),
     };
-    let xla = if ws.engine == Engine::Xla && ws.mixed.is_none() && ws.mlp.is_dense() {
+    let xla = if ws.engine == Engine::Xla && ws.artifact.is_none() && ws.mixed.is_none() && ws.mlp.is_dense() {
         build_xla(&ws.shard, &ws.dataset, &dp, &ws.mlp, ws.spec)
     } else {
-        if ws.engine == Engine::Xla && ws.mixed.is_some() {
+        if ws.engine == Engine::Xla && ws.artifact.is_some() {
+            eprintln!("serve[{}]: packed-artifact shards are Sim-native (no AOT executable), using Sim", ws.shard);
+        } else if ws.engine == Engine::Xla && ws.mixed.is_some() {
             eprintln!("serve[{}]: mixed-precision plans are Sim-only (uniform AOT artifact), using Sim", ws.shard);
         } else if ws.engine == Engine::Xla {
             eprintln!("serve[{}]: conv layer IR is Sim-native (the AOT artifact is dense-only), using Sim", ws.shard);

@@ -15,7 +15,12 @@
 //!    same name: a drop of more than the tolerance (default
 //!    [`DEFAULT_TOLERANCE`], 10%) **fails the bench**, improvements and
 //!    small noise pass, and a baseline entry whose measurement disappeared
-//!    entirely also fails (a gate must not rot away silently);
+//!    entirely also fails (a gate must not rot away silently). A would-be
+//!    failure is not final on one sample: the bench re-measures (up to
+//!    [`GATE_SAMPLES`] samples total, lazily — a passing first sample pays
+//!    for exactly one run) and gates on the per-entry **best**, so one
+//!    noisy-neighbour run cannot fail CI while a real regression, which is
+//!    slow every time, still does;
 //! 4. on pass, the fresh numbers overwrite the file — committing that diff
 //!    is how the baseline ratchets forward, and git history *is* the
 //!    trajectory across PRs.
@@ -307,35 +312,95 @@ pub fn compare(current: &BenchLog, baseline: &BenchLog, tolerance: f64) -> Resul
     }
 }
 
-/// The bench-side entry point: gate `current` against the committed
-/// baseline at the default repository-root path, then persist the fresh
-/// numbers. Panics (failing the bench, and CI with it) on any regression
-/// beyond `tolerance` or an unreadable/mis-versioned baseline; a missing
-/// baseline is a soft pass that writes one.
-pub fn record_and_gate(current: &BenchLog, tolerance: f64) {
-    match BenchLog::load(&current.bench) {
-        Ok(Some(baseline)) => match compare(current, &baseline, tolerance) {
-            Ok(report) => {
-                for line in report {
-                    println!("bench_log[{}]: {line}", current.bench);
-                }
-            }
-            Err(failures) => {
-                for line in &failures {
-                    eprintln!("bench_log[{}]: REGRESSION {line}", current.bench);
-                }
-                panic!("bench_log[{}]: {} throughput regression(s) beyond tolerance", current.bench, failures.len());
-            }
-        },
-        Ok(None) => println!("bench_log[{}]: no committed baseline — writing one (soft pass)", current.bench),
-        Err(e) => panic!("bench_log[{}]: cannot gate against baseline: {e}", current.bench),
+/// Samples the gate may draw per bench run: a would-be regression is
+/// re-measured up to this many times **total** and gated on the per-entry
+/// best. Sampling is lazy — a clean first measurement never re-runs the
+/// bench, so the common CI case still pays for exactly one run.
+pub const GATE_SAMPLES: usize = 3;
+
+/// Fold one fresh sample into the running best: per entry name, keep the
+/// max samples/s seen so far; entries appearing only in the new sample are
+/// appended (emission order of the first sample wins for shared names).
+fn merge_best(best: &mut BenchLog, sample: BenchLog) {
+    for e in sample.entries {
+        match best.entries.iter_mut().find(|b| b.name == e.name) {
+            Some(b) => b.samples_per_s = b.samples_per_s.max(e.samples_per_s),
+            None => best.entries.push(e),
+        }
     }
+}
+
+/// Best-of-[`GATE_SAMPLES`] gating core: gate the first sample as-is, and
+/// only when it would fail draw further samples from `resample`, merging
+/// per-entry maxima and re-gating, until the gate passes or the sample
+/// budget is spent. Returns the merged best log and the final verdict.
+fn gate_best_of<F: FnMut() -> BenchLog>(
+    first: BenchLog,
+    baseline: &BenchLog,
+    resample: &mut F,
+    tolerance: f64,
+) -> (BenchLog, Result<Vec<String>, Vec<String>>) {
+    let mut best = first;
+    let mut verdict = compare(&best, baseline, tolerance);
+    let mut taken = 1;
+    while verdict.is_err() && taken < GATE_SAMPLES {
+        taken += 1;
+        eprintln!(
+            "bench_log[{}]: below baseline — re-measuring, sample {taken} of up to {GATE_SAMPLES}",
+            best.bench
+        );
+        merge_best(&mut best, resample());
+        verdict = compare(&best, baseline, tolerance);
+    }
+    (best, verdict)
+}
+
+/// The bench-side entry point: gate `current` against the committed
+/// baseline at the default repository-root path, then persist the best
+/// observed numbers. A measurement below tolerance is re-sampled via
+/// `resample` (which must re-run the bench's measurement loop and return a
+/// fresh [`BenchLog`]) up to [`GATE_SAMPLES`] times total, gating the
+/// per-entry best — noise needs one good sample to pass, a real regression
+/// is slow every time. Panics (failing the bench, and CI with it) when the
+/// best-of still regresses beyond `tolerance`, or on an
+/// unreadable/mis-versioned baseline; a missing baseline is a soft pass
+/// that writes one.
+pub fn record_and_gate<F: FnMut() -> BenchLog>(current: BenchLog, mut resample: F, tolerance: f64) {
+    let bench = current.bench.clone();
+    let best = match BenchLog::load(&bench) {
+        Ok(Some(baseline)) => {
+            let (best, verdict) = gate_best_of(current, &baseline, &mut resample, tolerance);
+            match verdict {
+                Ok(report) => {
+                    for line in report {
+                        println!("bench_log[{bench}]: {line}");
+                    }
+                    best
+                }
+                Err(failures) => {
+                    for line in &failures {
+                        eprintln!("bench_log[{bench}]: REGRESSION {line}");
+                    }
+                    panic!(
+                        "bench_log[{bench}]: {} throughput regression(s) beyond tolerance \
+                         after best-of-{GATE_SAMPLES} sampling",
+                        failures.len()
+                    );
+                }
+            }
+        }
+        Ok(None) => {
+            println!("bench_log[{bench}]: no committed baseline — writing one (soft pass)");
+            current
+        }
+        Err(e) => panic!("bench_log[{bench}]: cannot gate against baseline: {e}"),
+    };
     // Stamp the gate's tolerance into the written baseline so the committed
     // file documents its own contract (audited by `repro lint`).
-    let mut stamped = current.clone();
+    let mut stamped = best;
     stamped.tolerance = Some(tolerance);
     let path = stamped.save().expect("bench log write");
-    println!("bench_log[{}]: wrote {}", current.bench, path.display());
+    println!("bench_log[{bench}]: wrote {}", path.display());
 }
 
 /// Time budget for one bench timer, scaled by the `BENCH_BUDGET` env var
@@ -693,6 +758,81 @@ mod tests {
         current.push("mnist/scalar", 3.0).unwrap(); // any real number beats a seed
         let report = compare(&current, &baseline, DEFAULT_TOLERANCE).expect("seeds never fail");
         assert!(report[0].contains("seed baseline armed"), "{report:?}");
+    }
+
+    fn one_entry(sps: f64) -> BenchLog {
+        let mut log = BenchLog::new("unit");
+        log.push("synth/x", sps).unwrap();
+        log
+    }
+
+    #[test]
+    fn gate_never_resamples_a_clean_first_measurement() {
+        let baseline = one_entry(100.0);
+        let mut calls = 0;
+        let (best, verdict) = gate_best_of(
+            one_entry(95.0),
+            &baseline,
+            &mut || {
+                calls += 1;
+                one_entry(1000.0)
+            },
+            DEFAULT_TOLERANCE,
+        );
+        assert!(verdict.is_ok());
+        assert_eq!(calls, 0, "a passing first sample must not pay for re-measurement");
+        assert_eq!(best.entry("synth/x").unwrap().samples_per_s, 95.0);
+    }
+
+    #[test]
+    fn gate_lets_one_good_sample_rescue_a_noisy_first_one() {
+        let baseline = one_entry(100.0);
+        let mut calls = 0;
+        let (best, verdict) = gate_best_of(
+            one_entry(80.0), // 20% below: would fail on its own
+            &baseline,
+            &mut || {
+                calls += 1;
+                one_entry(105.0)
+            },
+            DEFAULT_TOLERANCE,
+        );
+        assert!(verdict.is_ok(), "{verdict:?}");
+        assert_eq!(calls, 1, "the gate stops sampling as soon as the best-of passes");
+        // The persisted baseline carries the best observation, not the blip.
+        assert_eq!(best.entry("synth/x").unwrap().samples_per_s, 105.0);
+    }
+
+    #[test]
+    fn gate_fails_a_consistent_regression_after_all_samples() {
+        let baseline = one_entry(100.0);
+        let mut calls = 0;
+        let (best, verdict) = gate_best_of(
+            one_entry(80.0),
+            &baseline,
+            &mut || {
+                calls += 1;
+                one_entry(78.0)
+            },
+            DEFAULT_TOLERANCE,
+        );
+        assert!(verdict.is_err(), "a real regression is slow every time and must still fail");
+        assert_eq!(calls, GATE_SAMPLES - 1, "the whole sample budget is spent before giving up");
+        assert_eq!(best.entry("synth/x").unwrap().samples_per_s, 80.0, "best-of keeps the max");
+    }
+
+    #[test]
+    fn merge_best_keeps_per_entry_maxima_and_appends_new_entries() {
+        let mut best = sample_log();
+        let mut sample = BenchLog::new("batch_forward");
+        sample.push("mnist/scalar", 900.0).unwrap(); // better
+        sample.push("mnist/forward_batch/B=32", 9000.0).unwrap(); // worse
+        sample.push("mnist/forward_batch/B=64", 15000.0).unwrap(); // new
+        merge_best(&mut best, sample);
+        assert_eq!(best.entry("mnist/scalar").unwrap().samples_per_s, 900.0);
+        assert_eq!(best.entry("mnist/forward_batch/B=32").unwrap().samples_per_s, 9640.0);
+        assert_eq!(best.entry("mnist/forward_batch/B=64").unwrap().samples_per_s, 15000.0);
+        assert_eq!(best.entries.len(), 4);
     }
 
     #[test]

@@ -40,9 +40,9 @@ fn every_corpus_fixture_is_caught() {
         report.missed.join("\n")
     );
     // One line per fixture, and the corpus actually exercises every layer:
-    // token rules, wiring rules, bench-log codec, the plan auditor, and the
-    // obs snapshot/trace codecs.
-    assert!(report.lines.len() >= 13, "corpus shrank to {} fixture(s)", report.lines.len());
+    // token rules, wiring rules, bench-log codec, the plan auditor, the
+    // packed-artifact codec, and the obs snapshot/trace codecs.
+    assert!(report.lines.len() >= 15, "corpus shrank to {} fixture(s)", report.lines.len());
     for slug in [
         "float-in-exact-zone",
         "unsafe-outside-allowlist",
@@ -56,6 +56,8 @@ fn every_corpus_fixture_is_caught() {
         "plan-bad-provenance",
         "obs-snapshot-invalid",
         "obs-trace-invalid",
+        "artifact-invalid",
+        "artifact-quire-overflow",
     ] {
         assert!(
             report.lines.iter().any(|l| l.contains(&format!("{slug}__"))),
